@@ -1,0 +1,59 @@
+//! Intent gating walkthrough: shows the hierarchy the paper argues for —
+//! intent first selects the admissible stream, then resource adaptation
+//! picks the operating point *within* it — across a grid of prompts and
+//! bandwidths, without touching the network simulator.
+//!
+//!     cargo run --release --example intent_gating
+
+use avery::coordinator::{
+    classify_intent, ControllerDecision, ControllerError, Lut, MissionGoal, RuntimeState,
+    SplitController,
+};
+
+fn main() -> anyhow::Result<()> {
+    let mut controller = SplitController::new(Lut::paper(), 0.5, 6.0);
+    let prompts = [
+        "what is happening in this sector",
+        "are there any living beings on the rooftops",
+        "highlight the living beings on that roof",
+        "segment the partially submerged vehicles",
+        "describe the current flood situation",
+        "find and mark anyone who might need rescue",
+    ];
+    let bandwidths = [4.0, 8.0, 11.68, 15.0, 20.0];
+
+    println!(
+        "{:<48} {:>6}  {}",
+        "prompt", "Mbps", "decision (goal = PRIORITIZE_ACCURACY)"
+    );
+    println!("{}", "-".repeat(110));
+    for prompt in prompts {
+        let intent = classify_intent(prompt);
+        for bw in bandwidths {
+            let state = RuntimeState {
+                bandwidth_mbps: bw,
+                power_mode: "MODE_30W_ALL",
+                intent: intent.clone(),
+            };
+            let decision =
+                controller.select_configuration(&state, MissionGoal::PrioritizeAccuracy);
+            let text = match decision {
+                Ok(ControllerDecision::Context { max_pps }) => {
+                    format!("Context stream ({max_pps:.1} PPS)")
+                }
+                Ok(ControllerDecision::Insight { tier, pps }) => {
+                    format!("Insight / {} ({pps:.2} PPS)", tier.display())
+                }
+                Err(ControllerError::NoFeasibleInsightTier) => {
+                    "NO FEASIBLE INSIGHT TIER".to_string()
+                }
+            };
+            println!("{:<48} {:>6.2}  {}", prompt, bw, text);
+        }
+        println!();
+    }
+    println!("note how Context prompts never consume Insight bandwidth, and how the");
+    println!("Insight tier degrades gracefully as bandwidth falls (11.68 Mbps is the");
+    println!("High-Accuracy feasibility threshold from Table 3 at F_I = 0.5 PPS).");
+    Ok(())
+}

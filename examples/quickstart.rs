@@ -1,0 +1,75 @@
+//! Quickstart: load the AOT artifacts, classify two operator prompts, route
+//! each through the admissible stream, and print what the operator sees.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use std::path::Path;
+
+use avery::cloud::CloudServer;
+use avery::coordinator::{classify_intent, IntentLevel, MissionGoal, RuntimeState,
+    SplitController, ControllerDecision};
+use avery::edge::EdgePipeline;
+use avery::eval::mask_iou;
+use avery::mission::Env;
+use avery::runtime::ExecMode;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = avery::find_artifacts(None)?;
+    let env = Env::load(&artifacts, Path::new("out"), ExecMode::PreuploadedBuffers)?;
+    let mut edge = EdgePipeline::new(env.engine.clone(), env.device.clone(), env.lut.clone());
+    let server = CloudServer::new(env.engine.clone());
+    let mut controller = SplitController::new(
+        env.lut.clone(),
+        0.5,
+        1.0 / env.device.context_edge().latency_s,
+    );
+
+    let scene = &env.flood_val.scenes[0];
+    let bandwidth = 14.0; // Mbps, mid-range of the paper's 8–20 envelope
+
+    for prompt in [
+        "are there any living beings on the rooftops",
+        "highlight the people stranded by the flood",
+    ] {
+        let intent = classify_intent(prompt);
+        println!("\noperator> {prompt}");
+        println!("  intent: {:?} (target class {:?})", intent.level, intent.target_class);
+        let state = RuntimeState {
+            bandwidth_mbps: bandwidth,
+            power_mode: "MODE_30W_ALL",
+            intent: intent.clone(),
+        };
+        match controller.select_configuration(&state, MissionGoal::PrioritizeAccuracy) {
+            Ok(ControllerDecision::Context { max_pps }) => {
+                let (pkt, cost) = edge.capture_context(scene, 0.0)?;
+                let resp = server.process(&pkt, &intent.token_ids, "ft")?;
+                println!(
+                    "  context stream ({max_pps:.1} PPS max, {:.1} ms on-device): {}",
+                    cost.latency_s * 1e3,
+                    resp.text_answer(&["person", "vehicle"])
+                );
+            }
+            Ok(ControllerDecision::Insight { tier, pps }) => {
+                let (pkt, cost) = edge.capture_insight(scene, 1, tier, 0.0)?;
+                let resp = server.process(&pkt, &intent.token_ids, "ft")?;
+                let logits = resp.mask_logits.unwrap();
+                let cls = intent.target_class.unwrap_or(0);
+                let s = mask_iou(logits.as_f32()?, &scene.masks[cls], 0.0);
+                let iou = if s.union > 0.0 { s.intersection / s.union } else { 1.0 };
+                println!(
+                    "  insight stream tier {} at {pps:.2} PPS ({:.2} J on-device): \
+                     mask IoU vs GT = {iou:.3}",
+                    tier.display(),
+                    cost.energy_j,
+                );
+            }
+            Err(e) => println!("  controller: {e}"),
+        }
+        assert!(matches!(
+            intent.level,
+            IntentLevel::Context | IntentLevel::Insight
+        ));
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,307 @@
+"""Synthetic Flood-ReasonSeg dataset generator.
+
+The paper's Flood-ReasonSeg is a proprietary ~100-image flood corpus annotated
+in ReasonSeg format (NL instruction + segmentation mask) for two classes:
+stranded individuals and stranded vehicles.  We cannot obtain it, so this
+module procedurally generates the closest synthetic equivalent (see DESIGN.md
+"Substitutions"): flood scenes with a water plane, rooftops, person blobs and
+partially-submerged vehicle rectangles, each paired with per-class GT masks
+and NL instructions in both Context-level and Insight-level phrasings.
+
+A second, "generic" corpus (same classes on dry random backgrounds) plays the
+role of the original ReasonSeg-style training distribution used to train the
+Base/Original model; the flood corpus fine-tunes it, mirroring the paper's
+LoRA fine-tuning protocol (Section 5.1.2: ~100 images, 70/30 split,
+photometric augmentation to ~300 training samples).
+
+Everything is generated from fixed seeds so `make artifacts` is reproducible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import List, Tuple
+
+import numpy as np
+
+IMG = 64  # image side (pixels)
+CLASSES = ("person", "vehicle")
+PERSON, VEHICLE = 0, 1
+
+# Insight-level instruction templates (require grounded masks).
+INSIGHT_PROMPTS = {
+    PERSON: [
+        "find and mark anyone who might need rescue",
+        "detect individuals who may need to be rescued",
+        "highlight the people stranded by the flood",
+        "segment every person visible in the scene",
+        "locate and outline individuals near the water",
+    ],
+    VEHICLE: [
+        "recognize and mark cars stranded during flooding",
+        "highlight the vehicles stranded by floodwater",
+        "segment the partially submerged vehicles",
+        "mark every car trapped in the water",
+        "outline vehicles that are stuck in the flood",
+    ],
+}
+
+# Context-level prompts (text-only triage; no mask needed).
+CONTEXT_PROMPTS = [
+    "what is happening in this sector",
+    "are there any living beings on the rooftops",
+    "is anyone visible in this area",
+    "describe the current flood situation",
+    "are there any stranded vehicles here",
+    "give me a quick status of this scene",
+]
+
+
+@dataclasses.dataclass
+class Scene:
+    image: np.ndarray  # (IMG, IMG, 3) float32 in [0,1]
+    masks: np.ndarray  # (2, IMG, IMG) float32 {0,1}, per class
+    prompts: List[Tuple[int, str]]  # (class_id, insight prompt text)
+
+
+def _disk(mask: np.ndarray, cy: float, cx: float, r: float) -> None:
+    yy, xx = np.mgrid[0:IMG, 0:IMG]
+    mask[(yy - cy) ** 2 + (xx - cx) ** 2 <= r * r] = 1.0
+
+
+def _rect(mask: np.ndarray, y0: int, x0: int, h: int, w: int) -> None:
+    mask[max(0, y0) : min(IMG, y0 + h), max(0, x0) : min(IMG, x0 + w)] = 1.0
+
+
+def _water_line(rng: np.random.Generator) -> np.ndarray:
+    """Wavy horizontal waterline height per column (flood surface)."""
+    base = rng.uniform(0.45, 0.7) * IMG
+    phase = rng.uniform(0, 2 * np.pi)
+    freq = rng.uniform(0.05, 0.15)
+    amp = rng.uniform(1.0, 4.0)
+    cols = np.arange(IMG)
+    return base + amp * np.sin(freq * cols + phase)
+
+
+def _paint_person(img: np.ndarray, masks: np.ndarray, rng: np.random.Generator,
+                  cy: float, cx: float) -> None:
+    """A person is a small bright red/orange blob (life vest) with a head dot."""
+    r = rng.uniform(2.8, 4.2)
+    m = np.zeros((IMG, IMG), np.float32)
+    _disk(m, cy, cx, r)
+    _disk(m, cy - r * 1.2, cx, r * 0.55)  # head
+    color = np.array([rng.uniform(0.75, 1.0), rng.uniform(0.1, 0.35),
+                      rng.uniform(0.05, 0.25)], np.float32)
+    img[m > 0] = color
+    masks[PERSON][m > 0] = 1.0
+
+
+def _paint_vehicle(img: np.ndarray, masks: np.ndarray, rng: np.random.Generator,
+                   y0: int, x0: int, submerge_to: int | None) -> None:
+    """A vehicle is a dark rectangle with a lighter cabin; optionally clipped
+    by the waterline (partially submerged)."""
+    h, w = int(rng.integers(7, 11)), int(rng.integers(12, 19))
+    m = np.zeros((IMG, IMG), np.float32)
+    _rect(m, y0, x0, h, w)
+    _rect(m, y0 - h // 2, x0 + w // 4, h // 2, w // 2)  # cabin
+    if submerge_to is not None:
+        m[submerge_to:, :] = 0.0  # everything below waterline is hidden
+    body = np.array([rng.uniform(0.1, 0.3), rng.uniform(0.1, 0.3),
+                     rng.uniform(0.35, 0.7)], np.float32)
+    img[m > 0] = body
+    masks[VEHICLE][m > 0] = 1.0
+
+
+def make_flood_scene(seed: int) -> Scene:
+    """One synthetic flood scene with GT masks and insight prompts."""
+    rng = np.random.default_rng(seed)
+    img = np.zeros((IMG, IMG, 3), np.float32)
+    masks = np.zeros((2, IMG, IMG), np.float32)
+
+    # Sky / terrain upper region.
+    sky = np.array([0.55, 0.62, 0.55]) + rng.uniform(-0.08, 0.08, 3)
+    img[:, :] = sky.astype(np.float32)
+    # Murky floodwater below the waterline.
+    wl = _water_line(rng)
+    yy = np.arange(IMG)[:, None]
+    water = yy >= wl[None, :]
+    wcol = np.array([0.25, 0.38, 0.55]) + rng.uniform(-0.05, 0.05, 3)
+    img[water] = wcol.astype(np.float32)
+    # Ripples.
+    ripple = 0.03 * np.sin(np.arange(IMG)[None, :] * 0.9 + yy * 0.7)
+    img[..., 2] += np.where(water, ripple, 0.0).astype(np.float32)
+
+    # Rooftops poking above the water (grey quadrilaterals).
+    for _ in range(int(rng.integers(1, 4))):
+        rx = int(rng.integers(4, IMG - 18))
+        rw = int(rng.integers(10, 18))
+        ry = int(np.clip(wl[rx] - rng.integers(4, 10), 2, IMG - 8))
+        roof = np.zeros((IMG, IMG), np.float32)
+        _rect(roof, ry, rx, int(rng.integers(4, 7)), rw)
+        g = rng.uniform(0.42, 0.58)
+        img[roof > 0] = np.array([g, g * 0.95, g * 0.9], np.float32)
+        # Sometimes a person on the roof.
+        if rng.random() < 0.7:
+            _paint_person(img, masks, rng, ry - 1, rx + rng.integers(2, rw - 2))
+
+    # Partially submerged vehicles near the waterline.
+    for _ in range(int(rng.integers(1, 3))):
+        vx = int(rng.integers(2, IMG - 16))
+        vy = int(np.clip(wl[vx] - rng.integers(1, 4), 4, IMG - 10))
+        _paint_vehicle(img, masks, rng, vy, vx, submerge_to=int(wl[vx] + 3))
+
+    # People in the water.
+    for _ in range(int(rng.integers(0, 3))):
+        px = rng.uniform(4, IMG - 4)
+        py = np.clip(wl[int(px)] + rng.uniform(0, 6), 4, IMG - 4)
+        _paint_person(img, masks, rng, py, px)
+
+    np.clip(img, 0.0, 1.0, out=img)
+    prompts = []
+    for cls in (PERSON, VEHICLE):
+        if masks[cls].sum() > 0:
+            t = INSIGHT_PROMPTS[cls][int(rng.integers(len(INSIGHT_PROMPTS[cls])))]
+            prompts.append((cls, t))
+    if not prompts:  # guarantee at least one queryable target
+        _paint_person(img, masks, rng, IMG * 0.3, IMG * 0.5)
+        prompts.append((PERSON, INSIGHT_PROMPTS[PERSON][0]))
+    return Scene(image=img, masks=masks, prompts=prompts)
+
+
+def make_generic_scene(seed: int) -> Scene:
+    """Generic (non-flood) scene: same classes on dry random backgrounds.
+    Plays the role of the original ReasonSeg-style training distribution."""
+    rng = np.random.default_rng(seed + 10_000_019)
+    img = np.zeros((IMG, IMG, 3), np.float32)
+    masks = np.zeros((2, IMG, IMG), np.float32)
+    base = rng.uniform(0.35, 0.7, 3).astype(np.float32)
+    img[:, :] = base
+    # Low-frequency background texture.
+    gx = np.linspace(0, rng.uniform(2, 5) * np.pi, IMG)
+    img += (0.05 * np.sin(gx)[None, :, None]).astype(np.float32)
+    for _ in range(int(rng.integers(1, 4))):
+        _paint_person(img, masks, rng, rng.uniform(6, IMG - 6), rng.uniform(6, IMG - 6))
+    for _ in range(int(rng.integers(1, 3))):
+        _paint_vehicle(img, masks, rng, int(rng.integers(6, IMG - 12)),
+                       int(rng.integers(2, IMG - 16)), submerge_to=None)
+    np.clip(img, 0.0, 1.0, out=img)
+    prompts = []
+    for cls in (PERSON, VEHICLE):
+        if masks[cls].sum() > 0:
+            t = INSIGHT_PROMPTS[cls][int(rng.integers(len(INSIGHT_PROMPTS[cls])))]
+            prompts.append((cls, t))
+    return Scene(image=img, masks=masks, prompts=prompts)
+
+
+def photometric_augment(scene: Scene, seed: int) -> Scene:
+    """Photometric-only augmentation (brightness/contrast/hue jitter + noise),
+    as in the paper — geometry and masks unchanged."""
+    rng = np.random.default_rng(seed + 77_777)
+    img = scene.image.copy()
+    img = img * rng.uniform(0.8, 1.2) + rng.uniform(-0.08, 0.08)
+    img = 0.5 + (img - 0.5) * rng.uniform(0.85, 1.2)  # contrast
+    img = img * (1.0 + rng.uniform(-0.06, 0.06, 3)).astype(np.float32)  # channel tint
+    img = img + rng.normal(0, 0.015, img.shape).astype(np.float32)
+    return Scene(image=np.clip(img, 0, 1).astype(np.float32),
+                 masks=scene.masks, prompts=scene.prompts)
+
+
+def build_corpus(kind: str, n: int, seed0: int) -> List[Scene]:
+    make = make_flood_scene if kind == "flood" else make_generic_scene
+    return [make(seed0 + i) for i in range(n)]
+
+
+def train_val_split(scenes: List[Scene], train_frac: float = 0.7):
+    k = int(round(len(scenes) * train_frac))
+    return scenes[:k], scenes[k:]
+
+
+def expand_training(scenes: List[Scene], factor: int = 3) -> List[Scene]:
+    """70 originals -> ~300 samples via photometric augmentation (paper §5.1.2:
+    originals are kept and each contributes `factor` augmented copies)."""
+    out: List[Scene] = list(scenes)
+    for i, s in enumerate(scenes):
+        for j in range(factor):
+            out.append(photometric_augment(s, seed=i * 31 + j))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Hash tokenizer — MUST stay in exact sync with rust/src/coordinator/intent.rs
+# (FNV-1a 32-bit over lowercase alphanumeric words, vocab 512, id 0 = PAD).
+# ---------------------------------------------------------------------------
+
+VOCAB = 512
+MAX_PROMPT_TOKENS = 16
+
+
+def fnv1a32(s: str) -> int:
+    h = 0x811C9DC5
+    for b in s.encode("utf-8"):
+        h ^= b
+        h = (h * 0x01000193) & 0xFFFFFFFF
+    return h
+
+
+def tokenize(prompt: str) -> np.ndarray:
+    """Prompt -> fixed-length int32 token ids (hashed vocab, PAD=0)."""
+    words, cur = [], []
+    for ch in prompt.lower():
+        if ch.isalnum():
+            cur.append(ch)
+        elif cur:
+            words.append("".join(cur))
+            cur = []
+    if cur:
+        words.append("".join(cur))
+    ids = [1 + fnv1a32(w) % (VOCAB - 1) for w in words[:MAX_PROMPT_TOKENS]]
+    ids += [0] * (MAX_PROMPT_TOKENS - len(ids))
+    return np.asarray(ids, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Binary serialization consumed by rust/src/dataset/loader.rs.
+# Format (little-endian):
+#   magic  u32 = 0x41565259 ("AVRY")
+#   version u32 = 1
+#   n_scenes u32, img u32
+#   per scene:
+#     image  f32[img*img*3]
+#     masks  f32[2*img*img]
+#     n_prompts u32
+#     per prompt: class u32, len u32, utf8 bytes
+# ---------------------------------------------------------------------------
+
+MAGIC = 0x41565259
+
+
+def write_scenes(path: str, scenes: List[Scene]) -> None:
+    with open(path, "wb") as f:
+        f.write(struct.pack("<IIII", MAGIC, 1, len(scenes), IMG))
+        for s in scenes:
+            f.write(s.image.astype("<f4").tobytes())
+            f.write(s.masks.astype("<f4").tobytes())
+            f.write(struct.pack("<I", len(s.prompts)))
+            for cls, text in s.prompts:
+                raw = text.encode("utf-8")
+                f.write(struct.pack("<II", cls, len(raw)))
+                f.write(raw)
+
+
+def read_scenes(path: str) -> List[Scene]:
+    """Python-side reader (used by tests to check round-trip parity)."""
+    scenes = []
+    with open(path, "rb") as f:
+        magic, ver, n, img = struct.unpack("<IIII", f.read(16))
+        assert magic == MAGIC and ver == 1 and img == IMG
+        for _ in range(n):
+            image = np.frombuffer(f.read(img * img * 3 * 4), "<f4").reshape(img, img, 3)
+            masks = np.frombuffer(f.read(2 * img * img * 4), "<f4").reshape(2, img, img)
+            (np_,) = struct.unpack("<I", f.read(4))
+            prompts = []
+            for _ in range(np_):
+                cls, ln = struct.unpack("<II", f.read(8))
+                prompts.append((cls, f.read(ln).decode("utf-8")))
+            scenes.append(Scene(image.copy(), masks.copy(), prompts))
+    return scenes

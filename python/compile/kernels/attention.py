@@ -1,0 +1,48 @@
+"""Pallas fused multi-head attention kernel (L1).
+
+The paper's LISA-7B burns most of its FLOPs in SAM-ViT / LLM attention; on
+the GPU testbed that is a fused flash-style CUDA kernel.  The TPU rethink
+(DESIGN.md §Hardware-Adaptation): grid over heads, keep one head's full
+(T, Dh) Q/K/V tiles resident in VMEM, and express QK^T and PV as MXU
+matmuls.  At the mini-LISA scale (T=64..80, Dh=32) one head's working set is
+~50 KB — far under VMEM, so no online-softmax streaming is needed; the win
+is the fusion (no logits round-trip to HBM).
+
+interpret=True: CPU PJRT cannot run Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref):
+    # One head per grid step; block shapes carry (1, T, Dh).
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    logits = (q @ k.T) * scale                      # MXU matmul (T, T)
+    m = jnp.max(logits, axis=-1, keepdims=True)     # stable softmax in VMEM
+    e = jnp.exp(logits - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = probs @ v                            # MXU matmul (T, Dh)
+
+
+@jax.jit
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Fused full (non-causal) MHA. q, k, v: (H, T, Dh) -> (H, T, Dh)."""
+    h, t, d = q.shape
+    spec = pl.BlockSpec((1, t, d), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _attention_kernel,
+        grid=(h,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((h, t, d), q.dtype),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,91 @@
+"""Pallas fused learned-bottleneck kernels (L1) — the edge hot-spot.
+
+This is AVERY's critical on-UAV computation: compress the split-point SAM
+activation before it leaves the device.  On the paper's GPU stack the
+BottleFit-style encoder is a conv over a 10.49 MB HBM-resident activation;
+the TPU rethink (DESIGN.md §Hardware-Adaptation) expresses it as a single
+fused VMEM pass per token tile:
+
+    LayerNorm -> (T_tile, C) @ (C, M) MXU matmul -> tanh
+
+so the only HBM write is the (T, M) code — r x the input bytes.  That is the
+same "compress before you leave fast memory" insight the paper applies to
+the radio link, applied one level down the memory hierarchy.
+
+The tanh bound lets the rust wire layer quantize the code to int8 with a
+fixed scale (packet.rs), completing the paper's compressed-payload format.
+
+interpret=True: CPU PJRT cannot run Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TOKEN_TILE = 8  # fp32 sublane tile; (8, 128) input tile + (128, M) weights « VMEM
+
+
+def _encode_kernel(h_ref, mu_ref, sigma_ref, w_ref, b_ref, o_ref):
+    x = (h_ref[...] - mu_ref[0]) / sigma_ref[0]
+    o_ref[...] = jnp.tanh(x @ w_ref[...] + b_ref[...])
+
+
+@jax.jit
+def bottleneck_encode(h: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray,
+                      w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Fused global-standardize -> Linear(C->M) -> tanh.
+    h: (T, C), mu/sigma: (1,) scalars, w: (C, M) -> (T, M)."""
+    t, c = h.shape
+    m = w.shape[1]
+    tile = TOKEN_TILE if t % TOKEN_TILE == 0 else t
+    return pl.pallas_call(
+        _encode_kernel,
+        grid=(t // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, c), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((c, m), lambda i: (0, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, m), h.dtype),
+        interpret=True,
+    )(h, mu, sigma, w, b)
+
+
+def _decode_kernel(z_ref, w1_ref, b1_ref, w2_ref, b2_ref, mu_ref, sigma_ref, o_ref):
+    hdn = jnp.maximum(z_ref[...] @ w1_ref[...] + b1_ref[...], 0.0)
+    o_ref[...] = (hdn @ w2_ref[...] + b2_ref[...]) * sigma_ref[0] + mu_ref[0]
+
+
+@jax.jit
+def bottleneck_decode(z: jnp.ndarray, w1: jnp.ndarray, b1: jnp.ndarray,
+                      w2: jnp.ndarray, b2: jnp.ndarray,
+                      mu: jnp.ndarray, sigma: jnp.ndarray) -> jnp.ndarray:
+    """Fused decoder MLP(M->H->C) + un-standardize on the server side.
+    One VMEM pass per token tile: both matmuls hit the MXU back to back."""
+    t, m = z.shape
+    hdim = w1.shape[1]
+    c = w2.shape[1]
+    tile = TOKEN_TILE if t % TOKEN_TILE == 0 else t
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=(t // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, m), lambda i: (i, 0)),
+            pl.BlockSpec((m, hdim), lambda i: (0, 0)),
+            pl.BlockSpec((hdim,), lambda i: (0,)),
+            pl.BlockSpec((hdim, c), lambda i: (0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, c), z.dtype),
+        interpret=True,
+    )(z, w1, b1, w2, b2, mu, sigma)

@@ -1,0 +1,51 @@
+"""Pallas fused LayerNorm kernel (L1).
+
+TPU mental model (see DESIGN.md §Hardware-Adaptation): the token-major tile
+lives in VMEM; mean/var/normalize/affine all happen in one pass without a
+round-trip to HBM, which is the fusion the paper's GPU stack gets from a
+handwritten CUDA LN.  Grid iterates over token tiles so arbitrarily long
+token axes stream through a fixed VMEM footprint.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Token-tile height: 8 sublanes is the fp32 VPU tiling unit on TPU; tiles of
+# (8, C) keep the reduction in-register for C up to a few hundred.
+TOKEN_TILE = 8
+
+
+def _layernorm_kernel(x_ref, gamma_ref, beta_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) / jnp.sqrt(var + eps) * gamma_ref[...] + beta_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def layernorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    """Fused LayerNorm over the last axis of a (T, C) tensor."""
+    t, c = x.shape
+    tile = TOKEN_TILE if t % TOKEN_TILE == 0 else t
+    grid = (t // tile,)
+    return pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, c), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, c), x.dtype),
+        interpret=True,
+    )(x, gamma, beta)

@@ -1,0 +1,61 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: pytest (python/tests/test_kernels.py)
+sweeps shapes/dtypes with hypothesis and asserts each Pallas kernel matches
+its oracle to float tolerance.  The oracles are also used directly by
+model.py when AVERY_USE_PALLAS=0 (debug mode), so they must be exact
+functional equivalents, not approximations.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def softmax_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Numerically-stable softmax over the last axis."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def layernorm_ref(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+                  eps: float = 1e-5) -> jnp.ndarray:
+    """LayerNorm over the last axis. x: (..., C)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Multi-head scaled dot-product attention.
+
+    q, k, v: (H, T, Dh) -> (H, T, Dh).  Full (non-causal) attention, the
+    pattern used by both the SAM-style ViT blocks and the LLM trunk.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    logits = jnp.einsum("htd,hsd->hts", q, k) * scale
+    return jnp.einsum("hts,hsd->htd", softmax_ref(logits), v)
+
+
+def bottleneck_encode_ref(h: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray,
+                          w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Fused learned-bottleneck encoder: global standardize -> Linear -> tanh.
+
+    h: (T, C) split-point activation; w: (C, M) with M = round(r*C);
+    mu/sigma: scalar corpus statistics baked at training time.  The
+    standardization is *global* (not per-token LayerNorm): per-token
+    magnitude is task information the decoder must be able to restore.
+    tanh bounds the code in [-1, 1] so the rust wire layer can int8-quantize
+    with a fixed scale (the paper's compressed-activation payload).
+    """
+    return jnp.tanh((h - mu) / sigma @ w + b)
+
+
+def bottleneck_decode_ref(z: jnp.ndarray, w1: jnp.ndarray, b1: jnp.ndarray,
+                          w2: jnp.ndarray, b2: jnp.ndarray,
+                          mu: jnp.ndarray, sigma: jnp.ndarray) -> jnp.ndarray:
+    """Bottleneck decoder: 2-layer MLP back to the backbone width, then
+    un-standardize. z: (T, M) -> (T, C)."""
+    hdn = jnp.maximum(z @ w1 + b1, 0.0)
+    return (hdn @ w2 + b2) * sigma + mu

@@ -1,0 +1,379 @@
+"""L2 — "mini-LISA": the JAX compute graph AVERY splits.
+
+This is the in-repo stand-in for LISA-7B (see DESIGN.md "Substitutions"):
+the same *structure* — a SAM-style ViT vision backbone that can be split at
+any block depth, a CLIP-style light encoder, a multi-modal LLM trunk fusing
+vision tokens with an NL prompt through a <SEG>-style query token, and a
+promptable mask decoder — at ~1.2 M parameters so it can be trained and
+AOT-lowered inside `make artifacts`.
+
+Everything is written as pure functions over explicit parameter pytrees so
+each execution path (edge head per split point / tier, cloud tail, context
+path, full pipeline) can be independently `jax.jit(...).lower()`-ed to HLO
+text with the parameters exposed as HLO *parameters* (not baked constants);
+the rust runtime feeds the weight binary at load time, which keeps artifacts
+small and lets Original vs Fine-tuned share one HLO per path.
+
+`use_pallas=True` routes LayerNorm / attention / bottleneck through the L1
+Pallas kernels (interpret=True) — used for every exported artifact.
+Training uses the pure-jnp oracles (`use_pallas=False`) because autodiff
+does not flow through pallas_call; test_kernels.py proves the two are
+numerically identical, so the trained weights are valid for both.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.attention import attention as attention_pl
+from .kernels.bottleneck import bottleneck_decode as bn_decode_pl
+from .kernels.bottleneck import bottleneck_encode as bn_encode_pl
+from .kernels.layernorm import layernorm as layernorm_pl
+
+# ----------------------------------------------------------------------------
+# Dimensions (mini-LISA).  Paper's SAM ViT-H has 32 blocks / 1280 dim over
+# 1024x1024 images; we keep the same topology at 8 blocks / 128 dim over
+# 64x64 images, giving an honest depth axis for the Fig 7/8 split sweep.
+# ----------------------------------------------------------------------------
+IMG = 64
+PATCH = 8
+TOKENS = (IMG // PATCH) ** 2          # 64 vision tokens
+DIM = 128                             # backbone width
+HEADS = 4
+DEPTH = 8                             # ViT blocks (split points 1..DEPTH)
+MLP = 256
+NECK = 64                             # SAM neck / decoder width
+
+CLIP_PATCH = 16
+CLIP_TOKENS = (IMG // CLIP_PATCH) ** 2  # 16 tokens
+CLIP_DIM = 64
+CLIP_DEPTH = 2
+CLIP_HEADS = 2
+
+VOCAB = 512                           # hashed-vocab size (data.tokenize)
+PROMPT_TOKENS = 16
+LLM_DIM = 128
+LLM_DEPTH = 3
+LLM_HEADS = 4
+
+NUM_CLASSES = 2                       # person, vehicle
+
+# Bottleneck tiers (Table 3): compression ratio -> code width M = r*DIM.
+TIER_RATIOS = {"high_accuracy": 0.25, "balanced": 0.10, "high_throughput": 0.05}
+
+
+def code_width(ratio: float) -> int:
+    return max(1, int(round(ratio * DIM)))
+
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ----------------------------------------------------------------------------
+# Primitive wrappers: pallas kernel or jnp oracle.
+# ----------------------------------------------------------------------------
+
+def _ln(x, gamma, beta, use_pallas: bool):
+    if use_pallas and x.ndim == 2:
+        return layernorm_pl(x, gamma, beta)
+    return ref.layernorm_ref(x, gamma, beta)
+
+
+def _mha(q, k, v, use_pallas: bool):
+    if use_pallas:
+        return attention_pl(q, k, v)
+    return ref.attention_ref(q, k, v)
+
+
+# ----------------------------------------------------------------------------
+# Initialization
+# ----------------------------------------------------------------------------
+
+def _dense_init(key, fan_in, fan_out):
+    scale = jnp.sqrt(2.0 / fan_in)
+    return jax.random.normal(key, (fan_in, fan_out), jnp.float32) * scale
+
+
+def _block_init(key, dim, heads, mlp):
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1_g": jnp.ones((dim,)), "ln1_b": jnp.zeros((dim,)),
+        "wqkv": _dense_init(ks[0], dim, 3 * dim), "bqkv": jnp.zeros((3 * dim,)),
+        "wo": _dense_init(ks[1], dim, dim), "bo": jnp.zeros((dim,)),
+        "ln2_g": jnp.ones((dim,)), "ln2_b": jnp.zeros((dim,)),
+        "w1": _dense_init(ks[2], dim, mlp), "b1": jnp.zeros((mlp,)),
+        "w2": _dense_init(ks[3], mlp, dim), "b2": jnp.zeros((dim,)),
+    }
+
+
+def _blocks_init(key, depth, dim, heads, mlp):
+    """Stacked block params: every leaf gains a leading `depth` axis so the
+    forward pass can lax.scan over layers (one traced block instead of
+    `depth` unrolled copies — an order of magnitude off XLA compile time,
+    which matters both here and when the rust runtime compiles the HLO)."""
+    per = [_block_init(k, dim, heads, mlp) for k in jax.random.split(key, depth)]
+    return {k: jnp.stack([p[k] for p in per]) for k in per[0]}
+
+
+def run_blocks(p: Params, x: jnp.ndarray, heads: int, use_pallas: bool,
+               start: int, stop: int) -> jnp.ndarray:
+    """Apply stacked transformer blocks [start, stop) via lax.scan."""
+    if stop <= start:
+        return x
+    sliced = {k: v[start:stop] for k, v in p.items()}
+
+    def body(h, layer):
+        return vit_block(layer, h, heads, use_pallas), None
+
+    out, _ = jax.lax.scan(body, x, sliced)
+    return out
+
+
+def init_backbone(key) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "patch_w": _dense_init(ks[0], PATCH * PATCH * 3, DIM),
+        "patch_b": jnp.zeros((DIM,)),
+        "pos": jax.random.normal(ks[1], (TOKENS, DIM)) * 0.02,
+        "neck_g": jnp.ones((DIM,)), "neck_b": jnp.zeros((DIM,)),
+        "neck_w": _dense_init(ks[2], DIM, NECK), "neck_bias": jnp.zeros((NECK,)),
+        "blocks": _blocks_init(ks[3], DEPTH, DIM, HEADS, MLP),
+    }
+
+
+def init_clip(key) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "patch_w": _dense_init(ks[0], CLIP_PATCH * CLIP_PATCH * 3, CLIP_DIM),
+        "patch_b": jnp.zeros((CLIP_DIM,)),
+        "pos": jax.random.normal(ks[1], (CLIP_TOKENS, CLIP_DIM)) * 0.02,
+        "blocks": _blocks_init(ks[2], CLIP_DEPTH, CLIP_DIM, CLIP_HEADS, 2 * CLIP_DIM),
+    }
+
+
+def init_llm(key) -> Params:
+    ks = jax.random.split(key, 7)
+    return {
+        "tok_emb": jax.random.normal(ks[0], (VOCAB, LLM_DIM)) * 0.02,
+        "prompt_pos": jax.random.normal(ks[1], (PROMPT_TOKENS, LLM_DIM)) * 0.02,
+        "clip_proj": _dense_init(ks[2], CLIP_DIM, LLM_DIM),
+        "clip_proj_b": jnp.zeros((LLM_DIM,)),
+        "seg_query": jax.random.normal(ks[3], (1, LLM_DIM)) * 0.02,
+        "out_g": jnp.ones((LLM_DIM,)), "out_b": jnp.zeros((LLM_DIM,)),
+        "seg_w": _dense_init(ks[4], LLM_DIM, NECK), "seg_b": jnp.zeros((NECK,)),
+        "cls_w": _dense_init(ks[5], LLM_DIM, NUM_CLASSES),
+        "cls_b": jnp.zeros((NUM_CLASSES,)),
+        "blocks": _blocks_init(ks[6], LLM_DEPTH, LLM_DIM, LLM_HEADS, 2 * LLM_DIM),
+    }
+
+
+def init_decoder(key) -> Params:
+    ks = jax.random.split(key, 3)
+    hidden = 128
+    return {
+        "w1": _dense_init(ks[0], NECK + NECK, hidden), "b1": jnp.zeros((hidden,)),
+        "w2": _dense_init(ks[1], hidden, hidden), "b2": jnp.zeros((hidden,)),
+        "w3": _dense_init(ks[2], hidden, PATCH * PATCH), "b3": jnp.zeros((PATCH * PATCH,)),
+    }
+
+
+def init_model(seed: int = 0) -> Dict[str, Params]:
+    k = jax.random.PRNGKey(seed)
+    kb, kc, kl, kd = jax.random.split(k, 4)
+    return {
+        "backbone": init_backbone(kb),
+        "clip": init_clip(kc),
+        "llm": init_llm(kl),
+        "decoder": init_decoder(kd),
+    }
+
+
+BN_HIDDEN = 96  # decoder MLP hidden width
+
+
+def init_bottleneck(key, ratio: float) -> Params:
+    """BottleFit-style bottleneck: global standardize -> Linear -> tanh on
+    the edge; MLP decode + un-standardize on the server.  mu/sigma are
+    corpus statistics (set by train.train_bottleneck), exported as weights."""
+    m = code_width(ratio)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu": jnp.zeros((1,)), "sigma": jnp.ones((1,)),
+        "enc_w": _dense_init(k1, DIM, m), "enc_b": jnp.zeros((m,)),
+        "dec_w1": _dense_init(k2, m, BN_HIDDEN), "dec_b1": jnp.zeros((BN_HIDDEN,)),
+        "dec_w2": _dense_init(k3, BN_HIDDEN, DIM), "dec_b2": jnp.zeros((DIM,)),
+    }
+
+
+# ----------------------------------------------------------------------------
+# Forward pieces
+# ----------------------------------------------------------------------------
+
+def _split_heads(x, heads):
+    t, d = x.shape
+    return x.reshape(t, heads, d // heads).transpose(1, 0, 2)
+
+
+def _merge_heads(x):
+    h, t, d = x.shape
+    return x.transpose(1, 0, 2).reshape(t, h * d)
+
+
+def vit_block(p: Params, x: jnp.ndarray, heads: int, use_pallas: bool) -> jnp.ndarray:
+    """Pre-LN transformer block (the unit of the Fig 7/8 split sweep)."""
+    xn = _ln(x, p["ln1_g"], p["ln1_b"], use_pallas)
+    qkv = xn @ p["wqkv"] + p["bqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    o = _mha(_split_heads(q, heads), _split_heads(k, heads),
+             _split_heads(v, heads), use_pallas)
+    x = x + _merge_heads(o) @ p["wo"] + p["bo"]
+    xn = _ln(x, p["ln2_g"], p["ln2_b"], use_pallas)
+    return x + jax.nn.gelu(xn @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+def patchify(img: jnp.ndarray, patch: int) -> jnp.ndarray:
+    """(IMG, IMG, 3) -> (tokens, patch*patch*3), row-major patches."""
+    n = IMG // patch
+    x = img.reshape(n, patch, n, patch, 3).transpose(0, 2, 1, 3, 4)
+    return x.reshape(n * n, patch * patch * 3)
+
+
+def backbone_prefix(p: Params, img: jnp.ndarray, split: int,
+                    use_pallas: bool = True) -> jnp.ndarray:
+    """Edge-side SAM prefix: patch embed + blocks [0, split). -> (TOKENS, DIM)."""
+    x = patchify(img, PATCH) @ p["patch_w"] + p["patch_b"] + p["pos"]
+    nblk = p["blocks"]["wqkv"].shape[0]
+    return run_blocks(p["blocks"], x, HEADS, use_pallas, 0, min(split, nblk))
+
+
+def backbone_suffix(p: Params, h: jnp.ndarray, split: int,
+                    use_pallas: bool = True) -> jnp.ndarray:
+    """Cloud-side SAM suffix: blocks [split, DEPTH) + neck. -> (TOKENS, NECK).
+
+    When `p["blocks"]` holds a pre-sliced suffix stack (artifact export), we
+    run every block present; a missing "blocks" key (split == DEPTH export)
+    means the suffix is just the neck.
+    """
+    if "blocks" in p:
+        nblk = p["blocks"]["wqkv"].shape[0]
+        start = split if nblk == DEPTH else 0
+        x = run_blocks(p["blocks"], h, HEADS, use_pallas, start, nblk)
+    else:
+        x = h
+    x = _ln(x, p["neck_g"], p["neck_b"], use_pallas)
+    return x @ p["neck_w"] + p["neck_bias"]
+
+
+def clip_encode(p: Params, img: jnp.ndarray,
+                use_pallas: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """CLIP-style light encoder -> (tokens (CLIP_TOKENS, CLIP_DIM), pooled)."""
+    x = patchify(img, CLIP_PATCH) @ p["patch_w"] + p["patch_b"] + p["pos"]
+    x = run_blocks(p["blocks"], x, CLIP_HEADS, use_pallas, 0, CLIP_DEPTH)
+    return x, jnp.mean(x, axis=0)
+
+
+def llm_trunk(p: Params, clip_tokens: jnp.ndarray, prompt_ids: jnp.ndarray,
+              use_pallas: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Multi-modal trunk: [clip tokens ; prompt ; <SEG> query] -> (seg_embed,
+    presence_logits).  The <SEG>-query output is LISA's <SEG> token analog."""
+    ct = clip_tokens @ p["clip_proj"] + p["clip_proj_b"]
+    pt = p["tok_emb"][prompt_ids] + p["prompt_pos"]
+    x = jnp.concatenate([ct, pt, p["seg_query"]], axis=0)
+    x = run_blocks(p["blocks"], x, LLM_HEADS, use_pallas, 0, LLM_DEPTH)
+    seg_tok = _ln(x[-1:], p["out_g"], p["out_b"], use_pallas)[0]
+    return seg_tok @ p["seg_w"] + p["seg_b"], seg_tok @ p["cls_w"] + p["cls_b"]
+
+
+def mask_decoder(p: Params, feats: jnp.ndarray, seg_embed: jnp.ndarray) -> jnp.ndarray:
+    """SAM-style promptable decoder: per vision token, an MLP conditioned on
+    the <SEG> embedding emits that token's PATCHxPATCH logit block; blocks are
+    reassembled into the (IMG, IMG) mask logit map."""
+    cond = jnp.broadcast_to(seg_embed, (feats.shape[0], seg_embed.shape[0]))
+    x = jnp.concatenate([feats, cond], axis=-1)
+    x = jax.nn.gelu(x @ p["w1"] + p["b1"])
+    x = jax.nn.gelu(x @ p["w2"] + p["b2"])
+    blocks = x @ p["w3"] + p["b3"]                      # (TOKENS, PATCH*PATCH)
+    n = IMG // PATCH
+    return blocks.reshape(n, n, PATCH, PATCH).transpose(0, 2, 1, 3).reshape(IMG, IMG)
+
+
+# ----------------------------------------------------------------------------
+# Bottleneck (learned compression around the split point)
+# ----------------------------------------------------------------------------
+
+def bottleneck_encode(p: Params, h: jnp.ndarray, use_pallas: bool = True) -> jnp.ndarray:
+    if use_pallas:
+        return bn_encode_pl(h, p["mu"], p["sigma"], p["enc_w"], p["enc_b"])
+    return ref.bottleneck_encode_ref(h, p["mu"], p["sigma"], p["enc_w"], p["enc_b"])
+
+
+def bottleneck_decode(p: Params, z: jnp.ndarray, use_pallas: bool = True) -> jnp.ndarray:
+    if use_pallas:
+        return bn_decode_pl(z, p["dec_w1"], p["dec_b1"], p["dec_w2"], p["dec_b2"],
+                            p["mu"], p["sigma"])
+    return ref.bottleneck_decode_ref(z, p["dec_w1"], p["dec_b1"], p["dec_w2"],
+                                     p["dec_b2"], p["mu"], p["sigma"])
+
+
+# ----------------------------------------------------------------------------
+# End-to-end execution paths (these are what aot.py lowers to HLO)
+# ----------------------------------------------------------------------------
+
+def edge_insight_head(model: Dict[str, Params], bn: Params, img: jnp.ndarray,
+                      split: int, use_pallas: bool = True):
+    """UAV-side Insight path: SAM prefix -> bottleneck code, + CLIP features.
+    Returns (code (TOKENS, M), clip_tokens, clip_pooled)."""
+    h = backbone_prefix(model["backbone"], img, split, use_pallas)
+    code = bottleneck_encode(bn, h, use_pallas)
+    ct, cp = clip_encode(model["clip"], img, use_pallas)
+    return code, ct, cp
+
+
+def cloud_insight_tail(model: Dict[str, Params], bn: Params, code: jnp.ndarray,
+                       clip_tokens: jnp.ndarray, prompt_ids: jnp.ndarray,
+                       split: int, use_pallas: bool = True):
+    """Server-side Insight path: bottleneck decode -> SAM suffix -> LLM trunk
+    -> mask decoder.  Returns (mask_logits (IMG, IMG), presence_logits (2,))."""
+    h = bottleneck_decode(bn, code, use_pallas)
+    feats = backbone_suffix(model["backbone"], h, split, use_pallas)
+    seg_embed, presence = llm_trunk(model["llm"], clip_tokens, prompt_ids, use_pallas)
+    return mask_decoder(model["decoder"], feats, seg_embed), presence
+
+
+def context_edge(model: Dict[str, Params], img: jnp.ndarray, use_pallas: bool = True):
+    """UAV-side Context path: CLIP only (no SAM prefix) — the cheap stream."""
+    return clip_encode(model["clip"], img, use_pallas)
+
+
+def context_respond(model: Dict[str, Params], clip_tokens: jnp.ndarray,
+                    prompt_ids: jnp.ndarray, use_pallas: bool = True):
+    """Server-side Context path: text-level reasoning only (presence logits);
+    no SAM features, no mask decoding."""
+    _, presence = llm_trunk(model["llm"], clip_tokens, prompt_ids, use_pallas)
+    return presence
+
+
+def full_pipeline(model: Dict[str, Params], img: jnp.ndarray,
+                  prompt_ids: jnp.ndarray, use_pallas: bool = True):
+    """Uncompressed end-to-end pipeline (full-edge baseline / teacher /
+    raw-image-compression server side).  Returns (mask_logits, presence)."""
+    h = backbone_prefix(model["backbone"], img, DEPTH, use_pallas)
+    feats = backbone_suffix(model["backbone"], h, DEPTH, use_pallas)
+    ct, _ = clip_encode(model["clip"], img, use_pallas)
+    seg_embed, presence = llm_trunk(model["llm"], ct, prompt_ids, use_pallas)
+    return mask_decoder(model["decoder"], feats, seg_embed), presence
+
+
+def split_pipeline(model: Dict[str, Params], bn: Params, img: jnp.ndarray,
+                   prompt_ids: jnp.ndarray, split: int, use_pallas: bool = True):
+    """Full split path in one graph (training / python-side LUT profiling)."""
+    code, ct, _ = edge_insight_head(model, bn, img, split, use_pallas)
+    return cloud_insight_tail(model, bn, code, ct, prompt_ids, split, use_pallas)
+
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,310 @@
+"""Build-time training for mini-LISA and the learned bottlenecks.
+
+Mirrors the paper's training protocol at mini scale:
+
+1. **Original model** — full training on the generic (ReasonSeg-style)
+   corpus: mask BCE + Dice on the prompted class, plus presence BCE so the
+   Context path (text-only triage) is also learned.
+2. **Fine-tuned model** — starting from Original, the SAM backbone and CLIP
+   encoder are *frozen* (the paper LoRA-tunes only the LLM side) and the LLM
+   trunk + mask decoder are adapted on Flood-ReasonSeg.
+3. **Bottlenecks** — one per (split point, compression ratio), trained with
+   the base model frozen: activation-reconstruction MSE plus a downstream
+   task-distillation term, exactly the BottleFit recipe the paper cites [11].
+   Includes a straight-through int8 quantization step so the trained code is
+   robust to the rust wire layer's quantizer.
+
+Optimizer is a hand-rolled Adam (optax is not in the image).  All training
+uses the pure-jnp oracles (use_pallas=False); the exported artifacts run the
+Pallas kernels, which test_kernels.py proves numerically identical.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import model as M
+
+
+# ----------------------------------------------------------------------------
+# Hand-rolled Adam
+# ----------------------------------------------------------------------------
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda x: x / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda x: x / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(lambda p, a, b: p - lr * a / (jnp.sqrt(b) + eps),
+                                 params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ----------------------------------------------------------------------------
+# Dataset -> arrays
+# ----------------------------------------------------------------------------
+
+def scenes_to_arrays(scenes: List[D.Scene]):
+    """One training sample per (scene, insight prompt): image, prompt ids,
+    class mask target, per-scene presence target."""
+    imgs, pids, masks, pres = [], [], [], []
+    for s in scenes:
+        presence = (s.masks.reshape(2, -1).sum(axis=1) > 0).astype(np.float32)
+        for cls, text in s.prompts:
+            imgs.append(s.image)
+            pids.append(D.tokenize(text))
+            masks.append(s.masks[cls])
+            pres.append(presence)
+    return (jnp.asarray(np.stack(imgs)), jnp.asarray(np.stack(pids)),
+            jnp.asarray(np.stack(masks)), jnp.asarray(np.stack(pres)))
+
+
+# ----------------------------------------------------------------------------
+# Losses
+# ----------------------------------------------------------------------------
+
+def bce_logits(logits, targets, pos_weight: float = 1.0):
+    """Binary cross-entropy on logits with optional positive-class weight
+    (masks are ~2-5% positive pixels; pos_weight counters the imbalance)."""
+    per = (jnp.maximum(logits, 0) - logits * targets +
+           jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    if pos_weight != 1.0:
+        per = per * (1.0 + (pos_weight - 1.0) * targets)
+    return jnp.mean(per)
+
+
+def dice_loss(logits, targets, eps=1.0):
+    p = jax.nn.sigmoid(logits)
+    num = 2.0 * jnp.sum(p * targets) + eps
+    den = jnp.sum(p) + jnp.sum(targets) + eps
+    return 1.0 - num / den
+
+
+def _sample_loss(model, img, pids, mask, presence):
+    logits, pres_logits = M.full_pipeline(model, img, pids, use_pallas=False)
+    return (bce_logits(logits, mask, pos_weight=4.0) + dice_loss(logits, mask)
+            + 0.5 * bce_logits(pres_logits, presence))
+
+
+def batch_loss(model, imgs, pids, masks, pres):
+    losses = jax.vmap(lambda i, p, m, q: _sample_loss(model, i, p, m, q))(
+        imgs, pids, masks, pres)
+    return jnp.mean(losses)
+
+
+# ----------------------------------------------------------------------------
+# Stage 1/2: model training
+# ----------------------------------------------------------------------------
+
+def _batches(n, batch, steps, seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        yield rng.integers(0, n, size=batch)
+
+
+def train_model(model, arrays, steps: int, batch: int, lr: float, seed: int,
+                trainable: Tuple[str, ...], log=print, tag="train"):
+    """Train `trainable` sub-trees of the model; others stay frozen."""
+    imgs, pids, masks, pres = arrays
+
+    frozen = {k: v for k, v in model.items() if k not in trainable}
+    live = {k: v for k, v in model.items() if k in trainable}
+
+    @jax.jit
+    def step_fn(live_p, opt, lr_t, bi, bp, bm, bq):
+        def loss_fn(lp):
+            return batch_loss({**frozen, **lp}, bi, bp, bm, bq)
+        loss, grads = jax.value_and_grad(loss_fn)(live_p)
+        live_n, opt = adam_update(live_p, grads, opt, lr=lr_t)
+        return live_n, opt, loss
+
+    opt = adam_init(live)
+    n = imgs.shape[0]
+    for i, idx in enumerate(_batches(n, batch, steps, seed)):
+        # Cosine decay to 10% — squeezes convergence out of a small budget.
+        lr_t = lr * (0.1 + 0.9 * 0.5 * (1.0 + np.cos(np.pi * i / steps)))
+        live, opt, loss = step_fn(live, opt, lr_t, imgs[idx], pids[idx],
+                                  masks[idx], pres[idx])
+        if i % 50 == 0 or i == steps - 1:
+            log(f"  [{tag}] step {i:4d}/{steps} loss {float(loss):.4f}")
+    return {**frozen, **live}
+
+
+# ----------------------------------------------------------------------------
+# Stage 3: bottleneck training (BottleFit-style, frozen base model)
+# ----------------------------------------------------------------------------
+
+def _st_quant(z):
+    """Straight-through int8 quantization of the tanh-bounded code: forward
+    quantizes exactly like rust/src/packet (round to 127 levels), backward is
+    identity — so the bottleneck trains against real wire error."""
+    q = jnp.round(z * 127.0) / 127.0
+    return z + jax.lax.stop_gradient(q - z)
+
+
+def precompute_activations(model, imgs, split: int, batch: int = 16):
+    """Run the frozen SAM prefix once over the corpus -> (N, TOKENS, DIM).
+    Bottleneck training then never touches the base model again — the single
+    biggest build-time saving on the 1-core CI box."""
+    fwd = jax.jit(jax.vmap(
+        lambda i: M.backbone_prefix(model["backbone"], i, split, use_pallas=False)),
+        static_argnums=())
+    outs = []
+    for s in range(0, imgs.shape[0], batch):
+        outs.append(np.asarray(fwd(imgs[s:s + batch])))
+    return jnp.asarray(np.concatenate(outs, axis=0))
+
+
+def train_bottleneck(model, split: int, ratio: float, arrays, steps: int,
+                     batch: int, lr: float, seed: int, log=print,
+                     activations=None):
+    """BottleFit-style bottleneck at `split` with ratio `ratio`.
+
+    Trained on *normalized* activation reconstruction with straight-through
+    int8 wire quantization.  (The paper's recipe adds task distillation; at
+    mini-LISA scale reconstruction alone recovers the same fidelity ordering
+    and keeps `make artifacts` tractable on one core — noted in DESIGN.md.)
+    """
+    imgs = arrays[0]
+    bn = M.init_bottleneck(jax.random.PRNGKey(seed), ratio)
+    h_all = activations if activations is not None else \
+        precompute_activations(model, imgs, split)
+    # Corpus statistics for the global standardization (information-
+    # preserving, unlike per-token LayerNorm — see kernels/ref.py).
+    bn["mu"] = jnp.asarray([float(jnp.mean(h_all))])
+    bn["sigma"] = jnp.asarray([float(jnp.std(h_all)) + 1e-6])
+    h_scale = jnp.mean(jnp.square(h_all))  # normalize across depths
+
+    @jax.jit
+    def step_fn(bn_p, opt, h):
+        def loss_fn(p):
+            z = M.bottleneck_encode(p, h.reshape(-1, M.DIM), use_pallas=False)
+            h_hat = M.bottleneck_decode(p, _st_quant(z), use_pallas=False)
+            return jnp.mean(jnp.square(h_hat - h.reshape(-1, M.DIM))) / h_scale
+        loss, grads = jax.value_and_grad(loss_fn)(bn_p)
+        bn_n, opt = adam_update(bn_p, grads, opt, lr=lr)
+        return bn_n, opt, loss
+
+    opt = adam_init(bn)
+    n = h_all.shape[0]
+    for i, idx in enumerate(_batches(n, batch, steps, seed + 11)):
+        bn, opt, loss = step_fn(bn, opt, h_all[idx])
+        if i % 200 == 0 or i == steps - 1:
+            log(f"  [bn sp{split} r{ratio:.2f}] step {i:4d}/{steps} "
+                f"nmse {float(loss):.4f}")
+    return bn
+
+
+def distill_bottleneck(model_targets, bn, split: int, h_all, masks, steps: int,
+                       batch: int, lr: float, seed: int, log=print):
+    """Task-distillation fine-tune of a recon-pretrained bottleneck (the
+    BottleFit recipe [11] the paper uses): with the base models frozen, push
+    gradients through the frozen SAM suffix + decoder so the bottleneck keeps
+    the information the *mask head* needs, not just what MSE needs.
+
+    model_targets: list of (model, seg_all) — the bottleneck is shared
+      between the Original and Fine-tuned deployments (the SAM backbone is
+      frozen across both), so distillation alternates between both models'
+      decoders to avoid over-fitting the code to one of them.
+    h_all: (N, TOKENS, DIM) precomputed split activations (shared backbone)
+    masks: (N, IMG, IMG) GT masks for the prompted class
+    """
+
+    def make_step(model):
+        def path(bn_p, h, seg):
+            z = M.bottleneck_encode(bn_p, h, use_pallas=False)
+            h_hat = M.bottleneck_decode(bn_p, _st_quant(z), use_pallas=False)
+            feats = M.backbone_suffix(model["backbone"], h_hat, split,
+                                      use_pallas=False)
+            return M.mask_decoder(model["decoder"], feats, seg)
+
+        @jax.jit
+        def step_fn(bn_p, opt, bh, bs, bm):
+            def loss_fn(p):
+                logits = jax.vmap(lambda h, s: path(p, h, s))(bh, bs)
+                return bce_logits(logits, bm, pos_weight=4.0) + dice_loss(logits, bm)
+            loss, grads = jax.value_and_grad(loss_fn)(bn_p)
+            bn_n, opt = adam_update(bn_p, grads, opt, lr=lr)
+            return bn_n, opt, loss
+
+        return step_fn
+
+    steps_fns = [make_step(m) for m, _ in model_targets]
+    opt = adam_init(bn)
+    n = h_all.shape[0]
+    for i, idx in enumerate(_batches(n, batch, steps, seed + 31)):
+        which = i % len(model_targets)
+        seg_all = model_targets[which][1]
+        bn, opt, loss = steps_fns[which](bn, opt, h_all[idx], seg_all[idx], masks[idx])
+        if i % 40 == 0 or i == steps - 1:
+            log(f"  [distill sp{split}] step {i:4d}/{steps} loss {float(loss):.4f}")
+    return bn
+
+
+def precompute_seg_embeds(model, imgs, pids, batch: int = 32):
+    """Frozen prompt-side pass: CLIP + LLM trunk -> (N, NECK) seg embeds."""
+    def one(img, pid):
+        ct, _ = M.clip_encode(model["clip"], img, use_pallas=False)
+        seg, _ = M.llm_trunk(model["llm"], ct, pid, use_pallas=False)
+        return seg
+    fwd = jax.jit(jax.vmap(one))
+    outs = []
+    for s in range(0, imgs.shape[0], batch):
+        outs.append(np.asarray(fwd(imgs[s:s + batch], pids[s:s + batch])))
+    return jnp.asarray(np.concatenate(outs, axis=0))
+
+
+# ----------------------------------------------------------------------------
+# Evaluation: gIoU / cIoU (LISA's metrics; "Average IoU" = their mean)
+# ----------------------------------------------------------------------------
+
+def iou_stats(pred_masks: np.ndarray, gt_masks: np.ndarray) -> Dict[str, float]:
+    """pred/gt: (N, IMG, IMG) binary. gIoU = mean per-sample IoU; cIoU =
+    cumulative-intersection / cumulative-union (as in LISA [17])."""
+    inter = (pred_masks * gt_masks).reshape(len(pred_masks), -1).sum(axis=1)
+    union = ((pred_masks + gt_masks) > 0).reshape(len(pred_masks), -1).sum(axis=1)
+    per = np.where(union > 0, inter / np.maximum(union, 1), 1.0)
+    giou = float(per.mean())
+    ciou = float(inter.sum() / max(union.sum(), 1))
+    return {"giou": giou, "ciou": ciou, "avg_iou": 0.5 * (giou + ciou)}
+
+
+def eval_split_tier(model, bn, split: int, arrays, quantize: bool = True):
+    """Run the compressed split pipeline (with wire int8 quantization, like
+    the rust runtime does) over a val set and return IoU stats."""
+    imgs, pids, masks, _ = arrays
+
+    def fwd(img, pid):
+        h = M.backbone_prefix(model["backbone"], img, split, use_pallas=False)
+        z = M.bottleneck_encode(bn, h, use_pallas=False)
+        if quantize:
+            z = jnp.round(z * 127.0) / 127.0
+        h_hat = M.bottleneck_decode(bn, z, use_pallas=False)
+        feats = M.backbone_suffix(model["backbone"], h_hat, split, use_pallas=False)
+        ct, _ = M.clip_encode(model["clip"], img, use_pallas=False)
+        seg_embed, _ = M.llm_trunk(model["llm"], ct, pid, use_pallas=False)
+        return M.mask_decoder(model["decoder"], feats, seg_embed)
+
+    logits = jax.jit(jax.vmap(fwd))(imgs, pids)
+    preds = (np.asarray(logits) > 0.0).astype(np.float32)
+    return iou_stats(preds, np.asarray(masks))
+
+
+def eval_full(model, arrays):
+    imgs, pids, masks, _ = arrays
+    fwd = lambda img, pid: M.full_pipeline(model, img, pid, use_pallas=False)[0]
+    logits = jax.jit(jax.vmap(fwd))(imgs, pids)
+    preds = (np.asarray(logits) > 0.0).astype(np.float32)
+    return iou_stats(preds, np.asarray(masks))

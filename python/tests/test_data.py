@@ -1,0 +1,98 @@
+"""Synthetic Flood-ReasonSeg generator: invariants, serialization round-trip,
+and tokenizer behaviour (the rust side re-verifies parity from fixtures)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data as D
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+
+@given(seed=st.integers(0, 10_000))
+def test_flood_scene_invariants(seed):
+    s = D.make_flood_scene(seed)
+    assert s.image.shape == (D.IMG, D.IMG, 3)
+    assert s.image.dtype == np.float32
+    assert 0.0 <= s.image.min() and s.image.max() <= 1.0
+    assert s.masks.shape == (2, D.IMG, D.IMG)
+    assert set(np.unique(s.masks)).issubset({0.0, 1.0})
+    assert len(s.prompts) >= 1
+    for cls, text in s.prompts:
+        assert cls in (D.PERSON, D.VEHICLE)
+        # A prompt only exists if its class is present in the scene.
+        assert s.masks[cls].sum() > 0
+        assert len(text) > 5
+
+
+@given(seed=st.integers(0, 10_000))
+def test_generic_scene_invariants(seed):
+    s = D.make_generic_scene(seed)
+    assert s.image.shape == (D.IMG, D.IMG, 3)
+    assert 0.0 <= s.image.min() and s.image.max() <= 1.0
+
+
+def test_scene_determinism():
+    a, b = D.make_flood_scene(42), D.make_flood_scene(42)
+    np.testing.assert_array_equal(a.image, b.image)
+    np.testing.assert_array_equal(a.masks, b.masks)
+    assert a.prompts == b.prompts
+
+
+def test_augment_preserves_masks():
+    s = D.make_flood_scene(3)
+    aug = D.photometric_augment(s, 9)
+    np.testing.assert_array_equal(aug.masks, s.masks)
+    assert aug.prompts == s.prompts
+    assert not np.array_equal(aug.image, s.image)
+    assert 0.0 <= aug.image.min() and aug.image.max() <= 1.0
+
+
+def test_split_and_expand_protocol():
+    scenes = D.build_corpus("flood", 100, seed0=0)
+    train, val = D.train_val_split(scenes)
+    assert len(train) == 70 and len(val) == 30
+    expanded = D.expand_training(train)
+    assert len(expanded) == 70 * 4  # originals + 3 augmented copies (~300)
+
+
+def test_serialization_roundtrip(tmp_path):
+    scenes = D.build_corpus("flood", 5, seed0=11)
+    path = str(tmp_path / "scenes.bin")
+    D.write_scenes(path, scenes)
+    back = D.read_scenes(path)
+    assert len(back) == 5
+    for a, b in zip(scenes, back):
+        np.testing.assert_allclose(a.image, b.image, rtol=1e-6)
+        np.testing.assert_array_equal(a.masks, b.masks)
+        assert a.prompts == b.prompts
+
+
+# ---------------------------------------------------------------------------
+# Tokenizer (python half of the parity pair)
+# ---------------------------------------------------------------------------
+
+def test_tokenize_shape_and_pad():
+    ids = D.tokenize("find people")
+    assert ids.shape == (D.MAX_PROMPT_TOKENS,)
+    assert ids.dtype == np.int32
+    assert ids[0] > 0 and ids[1] > 0 and (ids[2:] == 0).all()
+
+
+def test_tokenize_case_punct():
+    np.testing.assert_array_equal(D.tokenize("Find, People!"), D.tokenize("find people"))
+
+
+@given(text=st.text(min_size=0, max_size=200))
+def test_tokenize_never_crashes_and_bounded(text):
+    ids = D.tokenize(text)
+    assert ids.shape == (D.MAX_PROMPT_TOKENS,)
+    assert (0 <= ids).all() and (ids < D.VOCAB).all()
+
+
+def test_fnv_reference_values():
+    # Pinned values — the rust tokenizer must match (util::fnv1a32 tests).
+    assert D.fnv1a32("") == 0x811C9DC5
+    assert D.fnv1a32("a") == 0xE40C292C

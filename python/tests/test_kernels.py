@@ -1,0 +1,132 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, swept over
+shapes/dtypes with hypothesis.  This is the core correctness signal for the
+exported artifacts: model.py routes through these kernels when lowering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention
+from compile.kernels.bottleneck import bottleneck_decode, bottleneck_encode
+from compile.kernels.layernorm import layernorm
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm
+# ---------------------------------------------------------------------------
+
+@given(t=st.integers(1, 96), c=st.sampled_from([8, 16, 64, 128, 160]),
+       seed=st.integers(0, 2**16))
+def test_layernorm_matches_ref(t, c, seed):
+    x = rand(seed, (t, c), scale=3.0)
+    g = rand(seed + 1, (c,), scale=0.5) + 1.0
+    b = rand(seed + 2, (c,), scale=0.5)
+    np.testing.assert_allclose(
+        layernorm(x, g, b), ref.layernorm_ref(x, g, b), rtol=1e-4, atol=1e-5)
+
+
+def test_layernorm_non_divisible_tokens():
+    # 33 tokens (the LLM trunk's shape) exercises the tile-fallback path.
+    x = rand(0, (33, 128))
+    g, b = jnp.ones(128), jnp.zeros(128)
+    np.testing.assert_allclose(
+        layernorm(x, g, b), ref.layernorm_ref(x, g, b), rtol=1e-4, atol=1e-5)
+
+
+def test_layernorm_extreme_values():
+    x = jnp.asarray([[1e4, -1e4, 1.0, 0.0] * 4] * 8, jnp.float32)
+    g, b = jnp.ones(16), jnp.zeros(16)
+    out = layernorm(x, g, b)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(out, ref.layernorm_ref(x, g, b), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+@given(h=st.sampled_from([1, 2, 4]), t=st.sampled_from([8, 16, 33, 64, 80]),
+       d=st.sampled_from([8, 16, 32]), seed=st.integers(0, 2**16))
+def test_attention_matches_ref(h, t, d, seed):
+    q = rand(seed, (h, t, d))
+    k = rand(seed + 1, (h, t, d))
+    v = rand(seed + 2, (h, t, d))
+    np.testing.assert_allclose(
+        attention(q, k, v), ref.attention_ref(q, k, v), rtol=1e-4, atol=1e-5)
+
+
+def test_attention_softmax_rows_bounded():
+    q = rand(0, (4, 64, 32), scale=5.0)
+    out = attention(q, q, q)
+    # Attention output is a convex combination of V rows.
+    assert float(jnp.max(jnp.abs(out))) <= float(jnp.max(jnp.abs(q))) + 1e-4
+
+
+def test_attention_uniform_when_keys_identical():
+    # Identical keys => probs uniform => output = mean of values.
+    q = rand(0, (2, 16, 8))
+    k = jnp.ones((2, 16, 8))
+    v = rand(1, (2, 16, 8))
+    out = attention(q, k, v)
+    want = jnp.broadcast_to(v.mean(axis=1, keepdims=True), v.shape)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Bottleneck encode/decode (the edge hot-spot)
+# ---------------------------------------------------------------------------
+
+@given(t=st.sampled_from([8, 64]), c=st.sampled_from([32, 128]),
+       m=st.sampled_from([3, 6, 13, 32]), seed=st.integers(0, 2**16))
+def test_bottleneck_encode_matches_ref(t, c, m, seed):
+    h = rand(seed, (t, c), scale=2.0)
+    mu = jnp.asarray([0.3])
+    sigma = jnp.asarray([1.7])
+    w = rand(seed + 1, (c, m), scale=0.2)
+    bb = rand(seed + 2, (m,), scale=0.1)
+    np.testing.assert_allclose(
+        bottleneck_encode(h, mu, sigma, w, bb),
+        ref.bottleneck_encode_ref(h, mu, sigma, w, bb), rtol=1e-4, atol=1e-5)
+
+
+@given(t=st.sampled_from([8, 64]), m=st.sampled_from([6, 13, 32]),
+       c=st.sampled_from([64, 128]), seed=st.integers(0, 2**16))
+def test_bottleneck_decode_matches_ref(t, m, c, seed):
+    z = jnp.tanh(rand(seed, (t, m)))
+    hdim = 96
+    w1 = rand(seed + 1, (m, hdim), scale=0.2)
+    b1 = rand(seed + 2, (hdim,), scale=0.1)
+    w2 = rand(seed + 3, (hdim, c), scale=0.2)
+    b2 = rand(seed + 4, (c,), scale=0.1)
+    mu = jnp.asarray([-0.2])
+    sigma = jnp.asarray([2.1])
+    np.testing.assert_allclose(
+        bottleneck_decode(z, w1, b1, w2, b2, mu, sigma),
+        ref.bottleneck_decode_ref(z, w1, b1, w2, b2, mu, sigma),
+        rtol=1e-4, atol=1e-5)
+
+
+def test_bottleneck_code_is_tanh_bounded():
+    h = rand(3, (64, 128), scale=50.0)
+    w = rand(4, (128, 13), scale=1.0)
+    code = bottleneck_encode(h, jnp.asarray([0.0]), jnp.asarray([1.0]), w, jnp.zeros(13))
+    assert float(jnp.max(jnp.abs(code))) <= 1.0
+
+
+def test_bottleneck_int8_wire_roundtrip_error():
+    # The rust wire layer quantizes at scale 127; error must stay below 1 LSB.
+    h = rand(5, (64, 128))
+    w = rand(6, (128, 32), scale=0.2)
+    code = bottleneck_encode(h, jnp.asarray([0.0]), jnp.asarray([1.0]), w, jnp.zeros(32))
+    q = jnp.round(code * 127.0) / 127.0
+    assert float(jnp.max(jnp.abs(q - code))) <= 0.5 / 127.0 + 1e-7

@@ -1,0 +1,125 @@
+"""L2 correctness: mini-LISA shapes, pallas/oracle equivalence of every
+execution path, and split-consistency invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def model():
+    return M.init_model(seed=1)
+
+
+@pytest.fixture(scope="module")
+def img():
+    return jnp.asarray(D.make_flood_scene(7).image)
+
+
+@pytest.fixture(scope="module")
+def pids():
+    return jnp.asarray(D.tokenize("highlight the stranded people"))
+
+
+def test_param_count_reasonable(model):
+    n = M.count_params(model)
+    assert 8e5 < n < 5e6, n
+
+
+def test_shapes_full_pipeline(model, img, pids):
+    mask, pres = M.full_pipeline(model, img, pids, use_pallas=False)
+    assert mask.shape == (M.IMG, M.IMG)
+    assert pres.shape == (M.NUM_CLASSES,)
+
+
+def test_prefix_suffix_shapes(model, img):
+    for split in (1, 4, M.DEPTH):
+        h = M.backbone_prefix(model["backbone"], img, split, use_pallas=False)
+        assert h.shape == (M.TOKENS, M.DIM)
+        feats = M.backbone_suffix(model["backbone"], h, split, use_pallas=False)
+        assert feats.shape == (M.TOKENS, M.NECK)
+
+
+def test_split_consistency(model, img, pids):
+    """prefix(k) then suffix(k) must equal the full backbone for every k —
+    the invariant that makes depth-wise splitting semantically lossless
+    (before compression)."""
+    full = M.backbone_suffix(
+        model["backbone"],
+        M.backbone_prefix(model["backbone"], img, M.DEPTH, use_pallas=False),
+        M.DEPTH, use_pallas=False)
+    for split in range(1, M.DEPTH + 1):
+        h = M.backbone_prefix(model["backbone"], img, split, use_pallas=False)
+        feats = M.backbone_suffix(model["backbone"], h, split, use_pallas=False)
+        np.testing.assert_allclose(feats, full, rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_oracle_equivalence_full(model, img, pids):
+    """The exported artifacts run the Pallas kernels; training ran the
+    oracles.  They must agree to float tolerance end to end."""
+    m_p, p_p = M.full_pipeline(model, img, pids, use_pallas=True)
+    m_r, p_r = M.full_pipeline(model, img, pids, use_pallas=False)
+    np.testing.assert_allclose(m_p, m_r, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(p_p, p_r, rtol=1e-3, atol=1e-3)
+
+
+def test_pallas_oracle_equivalence_split(model, img, pids):
+    bn = M.init_bottleneck(jax.random.PRNGKey(0), 0.25)
+    m_p, _ = M.split_pipeline(model, bn, img, pids, split=1, use_pallas=True)
+    m_r, _ = M.split_pipeline(model, bn, img, pids, split=1, use_pallas=False)
+    np.testing.assert_allclose(m_p, m_r, rtol=1e-3, atol=1e-3)
+
+
+def test_bottleneck_code_width():
+    assert M.code_width(0.25) == 32
+    assert M.code_width(0.10) == 13
+    assert M.code_width(0.05) == 6
+
+
+def test_bottleneck_shapes(model, img):
+    for ratio in M.TIER_RATIOS.values():
+        bn = M.init_bottleneck(jax.random.PRNGKey(3), ratio)
+        h = M.backbone_prefix(model["backbone"], img, 1, use_pallas=False)
+        z = M.bottleneck_encode(bn, h, use_pallas=False)
+        assert z.shape == (M.TOKENS, M.code_width(ratio))
+        assert float(jnp.max(jnp.abs(z))) <= 1.0
+        h_hat = M.bottleneck_decode(bn, z, use_pallas=False)
+        assert h_hat.shape == h.shape
+
+
+def test_context_paths(model, img, pids):
+    ct, cp = M.context_edge(model, img, use_pallas=False)
+    assert ct.shape == (M.CLIP_TOKENS, M.CLIP_DIM)
+    assert cp.shape == (M.CLIP_DIM,)
+    pres = M.context_respond(model, ct, pids, use_pallas=False)
+    assert pres.shape == (M.NUM_CLASSES,)
+
+
+def test_prompt_conditioning_changes_output(model, img):
+    """Different prompts must produce different masks (the promptable-seg
+    property LISA's <SEG> token provides)."""
+    p1 = jnp.asarray(D.tokenize("highlight the people stranded by the flood"))
+    p2 = jnp.asarray(D.tokenize("mark every car trapped in the water"))
+    m1, _ = M.full_pipeline(model, img, p1, use_pallas=False)
+    m2, _ = M.full_pipeline(model, img, p2, use_pallas=False)
+    assert float(jnp.max(jnp.abs(m1 - m2))) > 1e-3
+
+
+def test_deterministic_init():
+    a = M.init_model(seed=5)
+    b = M.init_model(seed=5)
+    for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(la, lb)
+
+
+def test_patchify_blocks():
+    img = jnp.arange(M.IMG * M.IMG * 3, dtype=jnp.float32).reshape(M.IMG, M.IMG, 3)
+    p = M.patchify(img, M.PATCH)
+    assert p.shape == (M.TOKENS, M.PATCH * M.PATCH * 3)
+    # First patch row-major: img[0:8, 0:8, :].
+    np.testing.assert_array_equal(
+        p[0], img[: M.PATCH, : M.PATCH, :].reshape(-1))

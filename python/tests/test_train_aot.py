@@ -1,0 +1,128 @@
+"""Training utilities + a quick end-to-end AOT build smoke test (tiny
+budget).  The full-budget build is exercised by `make artifacts`."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import model as M
+from compile import train as T
+
+
+def small_arrays(n=6, kind="flood"):
+    scenes = D.build_corpus(kind, n, seed0=50)
+    return T.scenes_to_arrays(scenes)
+
+
+def test_scenes_to_arrays_shapes():
+    imgs, pids, masks, pres = small_arrays()
+    n = imgs.shape[0]
+    assert imgs.shape == (n, D.IMG, D.IMG, 3)
+    assert pids.shape == (n, D.MAX_PROMPT_TOKENS)
+    assert masks.shape == (n, D.IMG, D.IMG)
+    assert pres.shape == (n, 2)
+
+
+def test_adam_reduces_quadratic():
+    p = {"w": jnp.asarray([5.0, -3.0])}
+    opt = T.adam_init(p)
+    for _ in range(300):
+        g = {"w": 2.0 * p["w"]}
+        p, opt = T.adam_update(p, g, opt, lr=0.05)
+    assert float(jnp.abs(p["w"]).max()) < 0.2
+
+
+def test_losses_sane():
+    logits = jnp.asarray([[10.0, -10.0]])
+    targets = jnp.asarray([[1.0, 0.0]])
+    assert float(T.bce_logits(logits, targets)) < 1e-3
+    assert float(T.dice_loss(logits, targets)) < 0.5
+    # Wrong predictions cost more.
+    assert float(T.bce_logits(-logits, targets)) > 1.0
+
+
+def test_pos_weight_scales_positive_errors():
+    logits = jnp.asarray([[-5.0]])
+    targets = jnp.asarray([[1.0]])
+    plain = float(T.bce_logits(logits, targets, pos_weight=1.0))
+    heavy = float(T.bce_logits(logits, targets, pos_weight=4.0))
+    assert abs(heavy - 4.0 * plain) < 1e-5
+
+
+def test_iou_stats_matches_rust_convention():
+    pred = np.zeros((2, 4, 4), np.float32)
+    gt = np.zeros((2, 4, 4), np.float32)
+    pred[0, :2, :2] = 1.0
+    gt[0, :2, :2] = 1.0  # perfect
+    gt[1, 2:, 2:] = 1.0  # fully missed
+    st = T.iou_stats(pred, gt)
+    assert abs(st["giou"] - 0.5) < 1e-9
+    assert abs(st["ciou"] - 4.0 / 8.0) < 1e-9
+
+
+def test_one_train_step_decreases_loss():
+    arrays = small_arrays(4)
+    model = M.init_model(seed=2)
+    before = float(T.batch_loss(model, *arrays))
+    model = T.train_model(model, arrays, steps=8, batch=4, lr=2e-3, seed=3,
+                          trainable=("decoder",), log=lambda *_: None)
+    after = float(T.batch_loss(model, *arrays))
+    assert after < before
+
+
+def test_bottleneck_training_improves_reconstruction():
+    arrays = small_arrays(4)
+    model = M.init_model(seed=2)
+    h = T.precompute_activations(model, arrays[0], split=1)
+
+    def recon_err(bn):
+        z = M.bottleneck_encode(bn, h.reshape(-1, M.DIM), use_pallas=False)
+        h_hat = M.bottleneck_decode(bn, z, use_pallas=False)
+        return float(jnp.mean(jnp.square(h_hat - h.reshape(-1, M.DIM))))
+
+    bn0 = M.init_bottleneck(jax.random.PRNGKey(7), 0.25)
+    err0 = recon_err(bn0)
+    bn = T.train_bottleneck(model, 1, 0.25, arrays, steps=60, batch=8, lr=3e-3,
+                            seed=7, log=lambda *_: None, activations=h)
+    assert recon_err(bn) < err0 * 0.8
+
+
+def test_tier_ratio_orders_reconstruction():
+    """More aggressive compression must reconstruct worse — the LUT's
+    fidelity ordering is an emergent property, assert it at train level."""
+    arrays = small_arrays(4)
+    model = M.init_model(seed=2)
+    h = T.precompute_activations(model, arrays[0], split=1)
+    errs = []
+    for ratio in (0.25, 0.05):
+        bn = T.train_bottleneck(model, 1, ratio, arrays, steps=80, batch=8,
+                                lr=3e-3, seed=11, log=lambda *_: None,
+                                activations=h)
+        z = M.bottleneck_encode(bn, h.reshape(-1, M.DIM), use_pallas=False)
+        h_hat = M.bottleneck_decode(bn, z, use_pallas=False)
+        errs.append(float(jnp.mean(jnp.square(h_hat - h.reshape(-1, M.DIM)))))
+    assert errs[0] < errs[1], errs
+
+
+@pytest.mark.slow
+def test_quick_aot_build(tmp_path):
+    """End-to-end tiny-budget build: datasets, training, bottlenecks, HLO
+    export, manifests.  ~4 minutes on one core; run with -m slow."""
+    from compile.aot import build
+    out = str(tmp_path / "artifacts")
+    build(out, quick=True, log=lambda *_: None)
+    for f in ("manifest.txt", "lut.txt", "manifest.json",
+              "data/flood_val.bin", "fixtures/tokenizer.txt"):
+        assert os.path.exists(os.path.join(out, f)), f
+    # Every artifact's weight binary exists and has the manifest's size.
+    import json
+    man = json.load(open(os.path.join(out, "manifest.json")))
+    assert len(man["artifacts"]) >= 20
+    for name, a in man["artifacts"].items():
+        want = sum(int(np.prod(p["shape"])) for p in a["params"]) * 4
+        for rel in a["weights"].values():
+            assert os.path.getsize(os.path.join(out, rel)) == want, name

@@ -1,0 +1,11 @@
+//! Bench: regenerate Figure 10 (accuracy vs throughput trade-off scatter,
+//! including the Prioritize-Throughput operating point).
+
+use avery::mission::{run_fig10, Env, Fig9Options};
+use avery::runtime::ExecMode;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = avery::find_artifacts(None)?;
+    let env = Env::load(&artifacts, std::path::Path::new("out"), ExecMode::PreuploadedBuffers)?;
+    run_fig10(&env, &Fig9Options { exec_every: 4, ..Fig9Options::default() })
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Figure 7 (split-point accuracy sweep at r = 0.10).
+
+use avery::mission::{run_fig7, Env};
+use avery::runtime::ExecMode;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = avery::find_artifacts(None)?;
+    let env = Env::load(&artifacts, std::path::Path::new("out"), ExecMode::PreuploadedBuffers)?;
+    run_fig7(&env)
+}

@@ -1,0 +1,29 @@
+//! Bench: regenerate Figure 8 (latency/energy per split point on the
+//! calibrated Jetson model) and time the real edge-head execution per split
+//! (CPU PJRT wallclock — structure check, not a Jetson proxy).
+
+use avery::bench::{bench_result, header};
+use avery::coordinator::TierId;
+use avery::mission::{run_fig8, Env};
+use avery::runtime::ExecMode;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = avery::find_artifacts(None)?;
+    let env = Env::load(&artifacts, std::path::Path::new("out"), ExecMode::PreuploadedBuffers)?;
+    run_fig8(&env)?;
+
+    header("real edge-head execution per split (CPU PJRT)");
+    let scene = &env.flood_val.scenes[0];
+    for split in 1..=env.manifest_meta.depth {
+        let mut edge = avery::edge::EdgePipeline::new(
+            env.engine.clone(),
+            env.device.clone(),
+            env.lut.clone(),
+        );
+        bench_result(&format!("edge head sp{split} (balanced)"), 1, 5, || {
+            edge.capture_insight(scene, split, TierId::Balanced, 0.0)?;
+            Ok(())
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Bench: L3 hot-path microbenchmarks — the §Perf instrumentation.
+//!
+//! * controller decision latency (Algorithm 1 must be negligible)
+//! * packet encode/decode + quantization
+//! * head/tail artifact execution in both weight-delivery modes
+//!   (LiteralsEachCall vs PreuploadedBuffers — the §Perf lever)
+
+use avery::bench::{bench, bench_result, header};
+use avery::coordinator::{
+    classify_intent, Lut, MissionGoal, RuntimeState, SplitController,
+};
+use avery::mission::Env;
+use avery::packet::Packet;
+use avery::runtime::ExecMode;
+
+fn main() -> anyhow::Result<()> {
+    header("controller decision (Algorithm 1)");
+    let mut controller = SplitController::new(Lut::paper(), 0.5, 6.0);
+    let intent = classify_intent("highlight the stranded vehicle");
+    let mut bw = 8.0;
+    bench("select_configuration", 1000, 100_000, || {
+        bw = if bw > 19.0 { 8.0 } else { bw + 0.01 };
+        let state = RuntimeState {
+            bandwidth_mbps: bw,
+            power_mode: "MODE_30W_ALL",
+            intent: intent.clone(),
+        };
+        let _ = controller.select_configuration(&state, MissionGoal::PrioritizeAccuracy);
+    });
+    bench("classify_intent + tokenize", 100, 50_000, || {
+        let _ = classify_intent("highlight individuals near submerged vehicles");
+    });
+
+    header("packet wire path");
+    let artifacts = avery::find_artifacts(None)?;
+    let env = Env::load(&artifacts, std::path::Path::new("out"), ExecMode::PreuploadedBuffers)?;
+    let scene = &env.flood_val.scenes[0];
+    let mut edge =
+        avery::edge::EdgePipeline::new(env.engine.clone(), env.device.clone(), env.lut.clone());
+    let (pkt, _) = edge.capture_insight(scene, 1, avery::coordinator::TierId::HighAccuracy, 0.0)?;
+    let encoded = pkt.encode();
+    println!("insight packet real size: {} bytes (wire model {} MB)",
+        encoded.len(), pkt.wire_bytes / 1e6);
+    bench("packet encode", 100, 20_000, || {
+        let _ = pkt.encode();
+    });
+    bench("packet decode", 100, 20_000, || {
+        let _ = Packet::decode(&encoded).unwrap();
+    });
+
+    header("artifact execution: weight-delivery modes (the §Perf lever)");
+    for (mode, label) in [
+        (ExecMode::LiteralsEachCall, "literals-each-call"),
+        (ExecMode::PreuploadedBuffers, "preuploaded-buffers"),
+    ] {
+        let env = Env::load(&artifacts, std::path::Path::new("out"), mode)?;
+        let mut edge = avery::edge::EdgePipeline::new(
+            env.engine.clone(),
+            env.device.clone(),
+            env.lut.clone(),
+        );
+        let server = avery::cloud::CloudServer::new(env.engine.clone());
+        let intent = classify_intent("highlight the stranded people");
+        let scene = &env.flood_val.scenes[0];
+        bench_result(&format!("head sp1 HA [{label}]"), 3, 15, || {
+            edge.capture_insight(scene, 1, avery::coordinator::TierId::HighAccuracy, 0.0)?;
+            Ok(())
+        });
+        let (pkt, _) =
+            edge.capture_insight(scene, 1, avery::coordinator::TierId::HighAccuracy, 0.0)?;
+        bench_result(&format!("tail sp1 HA [{label}]"), 3, 15, || {
+            server.process(&pkt, &intent.token_ids, "ft")?;
+            Ok(())
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! Bench: regenerate Table 3 (per-tier accuracy through the runtime path)
+//! and time the per-packet split pipeline at each tier.
+
+use avery::bench::{bench_result, header};
+use avery::coordinator::{classify_intent, TierId};
+use avery::mission::{run_table3, Env};
+use avery::runtime::ExecMode;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = avery::find_artifacts(None)?;
+    let env = Env::load(&artifacts, std::path::Path::new("out"), ExecMode::PreuploadedBuffers)?;
+    header("Table 3 — System LUT regeneration");
+    run_table3(&env)?;
+
+    header("per-packet split pipeline latency by tier (head+tail, CPU PJRT)");
+    let scene = &env.flood_val.scenes[0];
+    let intent = classify_intent("highlight the stranded people");
+    for tier in TierId::ALL {
+        let mut edge = avery::edge::EdgePipeline::new(
+            env.engine.clone(),
+            env.device.clone(),
+            env.lut.clone(),
+        );
+        let server = avery::cloud::CloudServer::new(env.engine.clone());
+        bench_result(&format!("split@1 {}", tier.name()), 2, 10, || {
+            let (pkt, _) = edge.capture_insight(scene, 1, tier, 0.0)?;
+            server.process(&pkt, &intent.token_ids, "ft")?;
+            Ok(())
+        });
+    }
+    Ok(())
+}

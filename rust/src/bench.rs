@@ -1,0 +1,96 @@
+//! Minimal benchmark harness (criterion is not in the offline crate set).
+//! Provides warmup + timed iterations with mean/p50/p95 reporting, used by
+//! every `cargo bench` target under rust/benches/.
+
+use std::time::Instant;
+
+use crate::util::Stats;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub stats: Stats,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        let s = &self.stats;
+        println!(
+            "{:<44} {:>5} iters  mean {:>10}  p50 {:>10}  p95 {:>10}  min {:>10}",
+            self.name,
+            self.iters,
+            fmt_secs(s.mean),
+            fmt_secs(s.p50),
+            fmt_secs(s.p95),
+            fmt_secs(s.min),
+        );
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let r = BenchResult { name: name.to_string(), iters, stats: Stats::from(&samples) };
+    r.print();
+    r
+}
+
+/// Time a fallible closure, panicking on error (bench setup bugs should be
+/// loud, not silently timed).
+pub fn bench_result<F: FnMut() -> anyhow::Result<()>>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) -> BenchResult {
+    bench(name, warmup, iters, || f().expect("bench case failed"))
+}
+
+/// Standard bench header so `cargo bench` output is self-describing.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut n = 0u64;
+        let r = bench("noop", 2, 10, || n += 1);
+        assert_eq!(r.iters, 10);
+        assert_eq!(n, 12);
+        assert!(r.stats.mean >= 0.0);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(2e-3).ends_with(" ms"));
+        assert!(fmt_secs(2e-6).ends_with(" us"));
+        assert!(fmt_secs(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,101 @@
+//! Cloud (server-side) processing: unpack a received packet, run the
+//! matching tail artifact (bottleneck decode -> SAM suffix -> LLM trunk ->
+//! mask decoder, or the text-only context responder), and produce the
+//! operator-facing response (paper §4.2).
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::TierId;
+use crate::edge::tail_artifact;
+use crate::packet::{dequantize_code, dequantize_scaled, Packet, StreamKind};
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+/// Operator-facing response.
+#[derive(Clone, Debug)]
+pub struct CloudResponse {
+    /// Insight: (img, img) mask logits. Context: None.
+    pub mask_logits: Option<Tensor>,
+    /// Per-class presence logits (person, vehicle) — the text-level answer.
+    pub presence: Vec<f32>,
+}
+
+impl CloudResponse {
+    /// Render the text answer the operator sees for a Context query
+    /// ("Yes, two possible life signs detected ..." in the paper's example).
+    pub fn text_answer(&self, class_names: &[&str]) -> String {
+        let mut found = Vec::new();
+        for (i, &logit) in self.presence.iter().enumerate() {
+            if logit > 0.0 {
+                found.push(*class_names.get(i).unwrap_or(&"object"));
+            }
+        }
+        if found.is_empty() {
+            "No critical targets detected in this sector.".to_string()
+        } else {
+            format!("Possible {} detected — escalate with an Insight query.", found.join(" and "))
+        }
+    }
+}
+
+/// The remote server: owns an engine handle and serves packets.
+pub struct CloudServer {
+    pub engine: Engine,
+}
+
+impl CloudServer {
+    pub fn new(engine: Engine) -> Self {
+        Self { engine }
+    }
+
+    /// Process one packet with the operator prompt (token ids) against a
+    /// weight set ("orig"/"ft" — which fine-tune serves the query).
+    pub fn process(&self, pkt: &Packet, prompt_ids: &[i32], set: &str) -> Result<CloudResponse> {
+        let clip = dequantize_scaled(&pkt.clip_q, pkt.clip_shape, pkt.clip_scale)?;
+        let pids = Tensor::i32(vec![prompt_ids.len()], prompt_ids.to_vec())?;
+        match pkt.kind {
+            StreamKind::Context => {
+                let outs = self
+                    .engine
+                    .execute("context_respond", set, vec![clip, pids])
+                    .context("running context_respond")?;
+                Ok(CloudResponse { mask_logits: None, presence: outs[0].as_f32()?.to_vec() })
+            }
+            StreamKind::Insight => {
+                if pkt.code_q.is_empty() {
+                    bail!("insight packet without code");
+                }
+                let tier = match pkt.tier {
+                    0 => TierId::HighAccuracy,
+                    1 => TierId::Balanced,
+                    2 => TierId::HighThroughput,
+                    other => bail!("bad tier index {other}"),
+                };
+                let code = dequantize_code(&pkt.code_q, pkt.code_shape)?;
+                let artifact = tail_artifact(pkt.split as usize, tier);
+                let outs = self
+                    .engine
+                    .execute(&artifact, set, vec![code, clip, pids])
+                    .with_context(|| format!("running {artifact}"))?;
+                Ok(CloudResponse {
+                    mask_logits: Some(outs[0].clone()),
+                    presence: outs[1].as_f32()?.to_vec(),
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_answer_formats() {
+        let r = CloudResponse { mask_logits: None, presence: vec![1.2, -0.5] };
+        let s = r.text_answer(&["person", "vehicle"]);
+        assert!(s.contains("person") && !s.contains("vehicle"));
+        let none = CloudResponse { mask_logits: None, presence: vec![-1.0, -1.0] };
+        assert!(none.text_answer(&["person", "vehicle"]).contains("No critical"));
+    }
+}

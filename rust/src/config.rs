@@ -1,0 +1,191 @@
+//! Configuration: a small `key = value` file format (TOML subset — no tables,
+//! comments with `#`) plus CLI `--key value` overrides.  The offline crate
+//! set has no clap/serde, so this is the hand-rolled equivalent; every
+//! mission binary and example goes through [`RunConfig`].
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::MissionGoal;
+use crate::runtime::ExecMode;
+
+/// Flat key-value configuration store with typed getters.
+#[derive(Clone, Debug, Default)]
+pub struct Kv {
+    map: BTreeMap<String, String>,
+}
+
+impl Kv {
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("config line {}: expected key = value", lineno + 1);
+            };
+            map.insert(k.trim().to_string(), v.trim().trim_matches('"').to_string());
+        }
+        Ok(Self { map })
+    }
+
+    /// Apply CLI overrides of the form `--key value` (also accepts
+    /// `--key=value`); returns unconsumed positional args.
+    pub fn apply_cli(&mut self, args: &[String]) -> Result<Vec<String>> {
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    self.map.insert(k.to_string(), v.to_string());
+                } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    self.map.insert(rest.to_string(), args[i + 1].clone());
+                    i += 1;
+                } else {
+                    // bare flag -> boolean true
+                    self.map.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(positional)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key}={v} not a number")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key}={v} not an integer")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key}={v} not an integer")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.map.get(key).map(|s| s.as_str()) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("config {key}={v} not a bool"),
+        }
+    }
+}
+
+/// Fully-resolved run configuration shared by the CLI and examples.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub artifacts: Option<String>,
+    pub out_dir: String,
+    pub duration_secs: f64,
+    pub goal: MissionGoal,
+    pub exec_every: usize,
+    pub seed: u64,
+    pub hysteresis: Option<f64>,
+    pub exec_mode: ExecMode,
+}
+
+impl RunConfig {
+    pub fn from_kv(kv: &Kv) -> Result<Self> {
+        let goal = match kv.get("goal").unwrap_or("accuracy") {
+            "accuracy" => MissionGoal::PrioritizeAccuracy,
+            "throughput" => MissionGoal::PrioritizeThroughput,
+            other => bail!("goal must be accuracy|throughput, got {other}"),
+        };
+        let exec_mode = match kv.get("exec-mode").unwrap_or("buffers") {
+            "buffers" => ExecMode::PreuploadedBuffers,
+            "literals" => ExecMode::LiteralsEachCall,
+            other => bail!("exec-mode must be buffers|literals, got {other}"),
+        };
+        Ok(Self {
+            artifacts: kv.get("artifacts").map(|s| s.to_string()),
+            out_dir: kv.get("out").unwrap_or("out").to_string(),
+            duration_secs: kv.get_f64("duration", 1200.0)?,
+            goal,
+            exec_every: kv.get_usize("exec-every", 1)?,
+            seed: kv.get_u64("seed", 7)?,
+            hysteresis: match kv.get("hysteresis") {
+                None => None,
+                Some(v) => Some(v.parse().context("hysteresis not a number")?),
+            },
+            exec_mode,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_kv_file() {
+        let kv = Kv::parse("a = 1\n# comment\nb = \"two\"  # inline\n\n").unwrap();
+        assert_eq!(kv.get("a"), Some("1"));
+        assert_eq!(kv.get("b"), Some("two"));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Kv::parse("not a pair\n").is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut kv = Kv::parse("duration = 10\n").unwrap();
+        let pos = kv
+            .apply_cli(&[
+                "fig9".to_string(),
+                "--duration".to_string(),
+                "300".to_string(),
+                "--goal=throughput".to_string(),
+                "--verbose".to_string(),
+            ])
+            .unwrap();
+        assert_eq!(pos, vec!["fig9"]);
+        assert_eq!(kv.get("duration"), Some("300"));
+        assert_eq!(kv.get("goal"), Some("throughput"));
+        assert_eq!(kv.get_bool("verbose", false).unwrap(), true);
+    }
+
+    #[test]
+    fn run_config_defaults() {
+        let kv = Kv::default();
+        let rc = RunConfig::from_kv(&kv).unwrap();
+        assert_eq!(rc.duration_secs, 1200.0);
+        assert_eq!(rc.goal, MissionGoal::PrioritizeAccuracy);
+        assert_eq!(rc.exec_mode, ExecMode::PreuploadedBuffers);
+    }
+
+    #[test]
+    fn run_config_rejects_bad_goal() {
+        let kv = Kv::parse("goal = fastest\n").unwrap();
+        assert!(RunConfig::from_kv(&kv).is_err());
+    }
+}

@@ -1,0 +1,325 @@
+//! The self-aware Split Controller — paper Algorithm 1 (§4.4.2), operating
+//! the hierarchical decision model of §3.2–3.3:
+//!
+//! * **Sense** — acquire the current bandwidth estimate (EWMA over goodput).
+//! * **Gate**  — operator intent selects the admissible stream; Context
+//!   intents return immediately with the Context configuration.
+//! * **Evaluate** — for Insight intents, filter LUT tiers by the timeliness
+//!   requirement `f_max(B, tier) >= F_I`.
+//! * **Select** — among feasible tiers, pick per the mission goal
+//!   (PRIORITIZE_ACCURACY -> highest fidelity, PRIORITIZE_THROUGHPUT ->
+//!   highest update rate).
+//!
+//! Extension over the paper's pseudocode (flagged as such): an optional
+//! switching-hysteresis margin so the tier doesn't flap when bandwidth
+//! hovers exactly at a feasibility threshold; the ablation bench
+//! (`fig9_dynamic --ablate-hysteresis`) quantifies its effect.  With the
+//! margin at 0 the controller is literally Algorithm 1.
+
+use super::intent::{Intent, IntentLevel};
+use super::lut::{Lut, TierId};
+
+/// Mission goal G_mission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MissionGoal {
+    PrioritizeAccuracy,
+    PrioritizeThroughput,
+}
+
+/// UAV runtime state x_t = (B_t, P_t, I_t).
+#[derive(Clone, Debug)]
+pub struct RuntimeState {
+    /// Sensed bandwidth estimate B_t (Mbps).
+    pub bandwidth_mbps: f64,
+    /// Onboard compute-power budget P_t — fixed operating mode in the
+    /// prototype (paper: MODE_30W_ALL), carried for the formal model.
+    pub power_mode: &'static str,
+    /// Operator intent I_t.
+    pub intent: Intent,
+}
+
+/// C* — the configuration Algorithm 1 returns.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ControllerDecision {
+    /// Context-level intent: lightweight stream, max context throughput.
+    Context { max_pps: f64 },
+    /// Insight-level intent: selected tier and its induced throughput f*.
+    Insight { tier: TierId, pps: f64 },
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ControllerError {
+    /// Algorithm 1 lines 26–28: no tier satisfies F_I at current bandwidth.
+    NoFeasibleInsightTier,
+}
+
+impl std::fmt::Display for ControllerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ControllerError::NoFeasibleInsightTier => {
+                write!(f, "no feasible Insight tier under current runtime condition")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ControllerError {}
+
+/// The onboard controller: LUT + policy knobs.
+#[derive(Clone, Debug)]
+pub struct SplitController {
+    lut: Lut,
+    /// F_I for Insight intents (paper deployment: 0.5 PPS).
+    pub min_insight_pps: f64,
+    /// Context stream max update rate (bounded by on-device CLIP latency;
+    /// §5.2.2: 6.4x faster than the Insight head).
+    pub max_context_pps: f64,
+    /// Hysteresis margin (fraction of F_I) a *new* tier must clear before
+    /// the controller switches away from the current one. 0 = Algorithm 1.
+    pub hysteresis: f64,
+    /// Last Insight tier selected (hysteresis state).
+    last_tier: Option<TierId>,
+    /// Decision counters (telemetry).
+    pub decisions: u64,
+    pub switches: u64,
+}
+
+impl SplitController {
+    pub fn new(lut: Lut, min_insight_pps: f64, max_context_pps: f64) -> Self {
+        Self {
+            lut,
+            min_insight_pps,
+            max_context_pps,
+            hysteresis: 0.0,
+            last_tier: None,
+            decisions: 0,
+            switches: 0,
+        }
+    }
+
+    pub fn lut(&self) -> &Lut {
+        &self.lut
+    }
+
+    /// Algorithm 1 `SelectConfiguration`.
+    pub fn select_configuration(
+        &mut self,
+        state: &RuntimeState,
+        goal: MissionGoal,
+    ) -> Result<ControllerDecision, ControllerError> {
+        self.decisions += 1;
+        // ---- Stage 2: Gate (lines 11–18) ----
+        if state.intent.level == IntentLevel::Context {
+            return Ok(ControllerDecision::Context { max_pps: self.max_context_pps });
+        }
+        // ---- Stage 3: Evaluate feasible Insight tiers (lines 19–28) ----
+        let b = state.bandwidth_mbps;
+        let mut feasible: Vec<(TierId, f64)> = Vec::with_capacity(3);
+        for e in &self.lut.tiers {
+            let f_max = e.max_pps(b); // line 21
+            let need = if Some(e.tier) == self.last_tier {
+                self.min_insight_pps
+            } else {
+                // A switch target must clear F_I by the hysteresis margin.
+                self.min_insight_pps * (1.0 + self.hysteresis)
+            };
+            if f_max >= need {
+                feasible.push((e.tier, f_max));
+            }
+        }
+        if feasible.is_empty() {
+            self.last_tier = None;
+            return Err(ControllerError::NoFeasibleInsightTier); // lines 26–28
+        }
+        // ---- Stage 4: Select by mission goal (lines 29–35) ----
+        let (tier, pps) = match goal {
+            MissionGoal::PrioritizeAccuracy => {
+                // Highest-fidelity tier: TierId orders by fidelity desc.
+                *feasible.iter().min_by_key(|(t, _)| t.index()).unwrap()
+            }
+            MissionGoal::PrioritizeThroughput => {
+                *feasible
+                    .iter()
+                    .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .unwrap()
+            }
+        };
+        if self.last_tier.is_some() && self.last_tier != Some(tier) {
+            self.switches += 1;
+        }
+        self.last_tier = Some(tier);
+        Ok(ControllerDecision::Insight { tier, pps })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::intent::classify_intent;
+    use crate::util::Rng;
+
+    fn controller() -> SplitController {
+        SplitController::new(Lut::paper(), 0.5, 6.0)
+    }
+
+    fn state(bw: f64, prompt: &str) -> RuntimeState {
+        RuntimeState {
+            bandwidth_mbps: bw,
+            power_mode: "MODE_30W_ALL",
+            intent: classify_intent(prompt),
+        }
+    }
+
+    #[test]
+    fn context_intent_gates_early() {
+        let mut c = controller();
+        let d = c
+            .select_configuration(
+                &state(15.0, "what is happening in this sector"),
+                MissionGoal::PrioritizeAccuracy,
+            )
+            .unwrap();
+        assert!(matches!(d, ControllerDecision::Context { .. }));
+    }
+
+    #[test]
+    fn high_bandwidth_accuracy_mode_picks_high_accuracy() {
+        let mut c = controller();
+        let d = c
+            .select_configuration(
+                &state(18.0, "highlight the stranded vehicle"),
+                MissionGoal::PrioritizeAccuracy,
+            )
+            .unwrap();
+        assert_eq!(d, ControllerDecision::Insight {
+            tier: TierId::HighAccuracy,
+            pps: Lut::paper().entry(TierId::HighAccuracy).max_pps(18.0)
+        });
+    }
+
+    #[test]
+    fn below_ha_threshold_falls_to_balanced() {
+        // Paper §3.3: below 11.68 Mbps High-Accuracy is infeasible but
+        // Balanced still satisfies 0.5 PPS -> switch, don't stall.
+        let mut c = controller();
+        let d = c
+            .select_configuration(
+                &state(10.0, "highlight the stranded vehicle"),
+                MissionGoal::PrioritizeAccuracy,
+            )
+            .unwrap();
+        assert!(matches!(d, ControllerDecision::Insight { tier: TierId::Balanced, .. }));
+    }
+
+    #[test]
+    fn throughput_mode_picks_smallest_payload() {
+        let mut c = controller();
+        let d = c
+            .select_configuration(
+                &state(18.0, "segment the submerged cars"),
+                MissionGoal::PrioritizeThroughput,
+            )
+            .unwrap();
+        assert!(matches!(d, ControllerDecision::Insight { tier: TierId::HighThroughput, .. }));
+    }
+
+    #[test]
+    fn no_feasible_tier_reported() {
+        let mut c = controller();
+        // 0.83 MB needs 3.32 Mbps for 0.5 PPS; go far below.
+        let r = c.select_configuration(
+            &state(1.0, "highlight the people on the roof"),
+            MissionGoal::PrioritizeAccuracy,
+        );
+        assert_eq!(r.unwrap_err(), ControllerError::NoFeasibleInsightTier);
+    }
+
+    #[test]
+    fn induced_pps_matches_line_21() {
+        let mut c = controller();
+        let d = c
+            .select_configuration(
+                &state(11.68, "mark the survivors"),
+                MissionGoal::PrioritizeAccuracy,
+            )
+            .unwrap();
+        if let ControllerDecision::Insight { tier, pps } = d {
+            assert_eq!(tier, TierId::HighAccuracy);
+            assert!((pps - 0.5).abs() < 1e-9);
+        } else {
+            panic!("expected insight");
+        }
+    }
+
+    #[test]
+    fn hysteresis_suppresses_flapping() {
+        let mut with_h = controller();
+        with_h.hysteresis = 0.10;
+        let mut without_h = controller();
+        // Bandwidth oscillating tightly around the HA threshold.
+        let mut rng = Rng::new(3);
+        let (mut sw_with, mut sw_without) = (0u64, 0u64);
+        for _ in 0..200 {
+            let bw = 11.68 + rng.normal() * 0.25;
+            let s = state(bw, "highlight the stranded vehicle");
+            let _ = with_h.select_configuration(&s, MissionGoal::PrioritizeAccuracy);
+            let _ = without_h.select_configuration(&s, MissionGoal::PrioritizeAccuracy);
+            sw_with = with_h.switches;
+            sw_without = without_h.switches;
+        }
+        assert!(
+            sw_with < sw_without,
+            "hysteresis {sw_with} switches vs {sw_without} without"
+        );
+    }
+
+    /// Property: over random bandwidths/goals, every Insight decision is
+    /// feasible (pps >= F_I) and matches the goal's argmax over the LUT.
+    #[test]
+    fn property_decisions_feasible_and_goal_optimal() {
+        let mut rng = Rng::new(99);
+        let lut = Lut::paper();
+        for _ in 0..2000 {
+            let bw = rng.range(0.5, 25.0);
+            let goal = if rng.f64() < 0.5 {
+                MissionGoal::PrioritizeAccuracy
+            } else {
+                MissionGoal::PrioritizeThroughput
+            };
+            let mut c = controller();
+            match c.select_configuration(&state(bw, "segment the people"), goal) {
+                Ok(ControllerDecision::Insight { tier, pps }) => {
+                    assert!(pps >= 0.5 - 1e-12, "infeasible pps {pps} at bw {bw}");
+                    // Goal-optimality among feasible tiers.
+                    let feas: Vec<TierId> = TierId::ALL
+                        .iter()
+                        .copied()
+                        .filter(|&t| lut.entry(t).max_pps(bw) >= 0.5)
+                        .collect();
+                    let want = match goal {
+                        MissionGoal::PrioritizeAccuracy => {
+                            *feas.iter().min_by_key(|t| t.index()).unwrap()
+                        }
+                        MissionGoal::PrioritizeThroughput => *feas
+                            .iter()
+                            .max_by(|a, b| {
+                                lut.entry(**a)
+                                    .max_pps(bw)
+                                    .partial_cmp(&lut.entry(**b).max_pps(bw))
+                                    .unwrap()
+                            })
+                            .unwrap(),
+                    };
+                    assert_eq!(tier, want, "bw {bw} goal {goal:?}");
+                }
+                Ok(ControllerDecision::Context { .. }) => panic!("insight prompt gated"),
+                Err(ControllerError::NoFeasibleInsightTier) => {
+                    // Must truly be infeasible for every tier.
+                    for t in TierId::ALL {
+                        assert!(lut.entry(t).max_pps(bw) < 0.5, "bw {bw} tier {t:?}");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Operator-intent classification and prompt tokenization.
+//!
+//! Intent is the *first-class* input of AVERY's hierarchy: a Context-level
+//! intent (coarse triage, text answer suffices) admits only the Context
+//! Stream, an Insight-level intent (grounded masks) requires the Insight
+//! Stream (paper §3.1-3.2).  The paper treats intent as given by the
+//! operator's phrasing; we implement the natural reading: a lightweight
+//! lexical classifier over the prompt, plus target-class extraction so the
+//! mission knows which GT mask to score against.
+//!
+//! The tokenizer MUST stay in exact sync with python/compile/data.py
+//! (FNV-1a 32-bit hashed vocab, 512 entries, PAD=0, 16 tokens) — verified by
+//! the tokenizer-parity integration test against artifacts/fixtures.
+
+use crate::util::fnv1a32;
+
+pub const VOCAB: u32 = 512;
+pub const PROMPT_TOKENS: usize = 16;
+
+/// Semantic level an operator query demands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IntentLevel {
+    /// Coarse awareness / triage — a text-level response suffices.
+    Context,
+    /// Fine-grained spatial grounding — requires segmentation masks.
+    Insight,
+}
+
+/// A classified operator query.
+#[derive(Clone, Debug)]
+pub struct Intent {
+    pub level: IntentLevel,
+    /// Target class if the prompt names one (0 = person, 1 = vehicle).
+    pub target_class: Option<usize>,
+    /// Hashed token ids, PAD=0 — the prompt tensor fed to the LLM trunk.
+    pub token_ids: Vec<i32>,
+}
+
+/// Lowercase-alphanumeric word split (identical to python's tokenize()).
+fn words(prompt: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for ch in prompt.to_lowercase().chars() {
+        if ch.is_alphanumeric() {
+            cur.push(ch);
+        } else if !cur.is_empty() {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Prompt -> fixed-length token ids (hashed vocab, PAD=0).
+pub fn tokenize(prompt: &str) -> Vec<i32> {
+    let mut ids: Vec<i32> = words(prompt)
+        .iter()
+        .take(PROMPT_TOKENS)
+        .map(|w| (1 + fnv1a32(w) % (VOCAB - 1)) as i32)
+        .collect();
+    ids.resize(PROMPT_TOKENS, 0);
+    ids
+}
+
+/// Verbs/phrases that demand spatially grounded output (Insight-level).
+const INSIGHT_CUES: &[&str] = &[
+    "highlight", "mark", "segment", "outline", "locate", "localize", "pinpoint",
+    "draw", "mask", "detect", "find", "identify", "recognize", "trace", "show",
+];
+
+/// Cues of coarse awareness queries (Context-level).
+const CONTEXT_CUES: &[&str] = &[
+    "what", "describe", "status", "overview", "happening", "situation", "any",
+    "anyone", "anything", "is", "are", "how", "summary", "report", "visible",
+];
+
+const PERSON_WORDS: &[&str] = &[
+    "person", "people", "individual", "individuals", "anyone", "survivor",
+    "survivors", "human", "humans", "victim", "victims", "being", "beings",
+];
+
+const VEHICLE_WORDS: &[&str] = &[
+    "vehicle", "vehicles", "car", "cars", "truck", "trucks", "automobile",
+];
+
+/// Classify an operator prompt into AVERY's two intent levels and extract
+/// the target class.  Scoring: grounded-output verbs vote Insight,
+/// awareness interrogatives vote Context; question-shaped prompts lean
+/// Context, imperative prompts lean Insight.  Ties fall to Context (the
+/// cheap stream — escalation is one prompt away, §4.3).
+pub fn classify_intent(prompt: &str) -> Intent {
+    let ws = words(prompt);
+    let mut insight = 0i32;
+    let mut context = 0i32;
+    for w in &ws {
+        if INSIGHT_CUES.contains(&w.as_str()) {
+            insight += 2;
+        }
+        if CONTEXT_CUES.contains(&w.as_str()) {
+            context += 1;
+        }
+    }
+    // Interrogative shape => awareness; imperative leading verb => grounding.
+    if prompt.trim_end().ends_with('?') {
+        context += 2;
+    }
+    if let Some(first) = ws.first() {
+        if INSIGHT_CUES.contains(&first.as_str()) {
+            insight += 2;
+        }
+    }
+    let mut target_class = None;
+    for w in &ws {
+        if PERSON_WORDS.contains(&w.as_str()) {
+            target_class = Some(0);
+            break;
+        }
+        if VEHICLE_WORDS.contains(&w.as_str()) {
+            target_class = Some(1);
+        }
+    }
+    Intent {
+        level: if insight > context { IntentLevel::Insight } else { IntentLevel::Context },
+        target_class,
+        token_ids: tokenize(prompt),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_insight_examples_classify_insight() {
+        for p in [
+            "highlight the living beings on that roof",
+            "find and mark anyone who might need rescue",
+            "segment the partially submerged vehicles",
+            "recognize and mark cars stranded during flooding",
+            "locate and outline individuals near the water",
+        ] {
+            assert_eq!(classify_intent(p).level, IntentLevel::Insight, "{p}");
+        }
+    }
+
+    #[test]
+    fn paper_context_examples_classify_context() {
+        for p in [
+            "what is happening in this sector",
+            "are there any living beings on the rooftops?",
+            "describe the current flood situation",
+            "give me a quick status of this scene",
+        ] {
+            assert_eq!(classify_intent(p).level, IntentLevel::Context, "{p}");
+        }
+    }
+
+    #[test]
+    fn target_class_extraction() {
+        assert_eq!(
+            classify_intent("highlight the people stranded by the flood").target_class,
+            Some(0)
+        );
+        assert_eq!(
+            classify_intent("mark every car trapped in the water").target_class,
+            Some(1)
+        );
+        assert_eq!(classify_intent("what is happening here").target_class, None);
+    }
+
+    #[test]
+    fn person_outranks_vehicle_when_both_present() {
+        let i = classify_intent("highlight individuals near submerged vehicles");
+        assert_eq!(i.target_class, Some(0));
+    }
+
+    #[test]
+    fn tokenizer_shape_and_padding() {
+        let ids = tokenize("find people");
+        assert_eq!(ids.len(), PROMPT_TOKENS);
+        assert!(ids[0] > 0 && ids[1] > 0);
+        assert!(ids[2..].iter().all(|&i| i == 0));
+        for &i in &ids {
+            assert!((0..VOCAB as i32).contains(&i));
+        }
+    }
+
+    #[test]
+    fn tokenizer_case_and_punct_insensitive() {
+        assert_eq!(tokenize("Find, People!"), tokenize("find people"));
+    }
+
+    #[test]
+    fn tokenizer_truncates_long_prompts() {
+        let long = vec!["word"; 40].join(" ");
+        assert_eq!(tokenize(&long).len(), PROMPT_TOKENS);
+    }
+}

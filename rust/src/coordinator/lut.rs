@@ -1,0 +1,271 @@
+//! The pre-profiled System Configuration LUT (paper Table 3 + §4.4.1).
+//!
+//! Each Insight operating tier stores its compression ratio, expected
+//! segmentation quality (Average IoU, for both the Original and Fine-tuned
+//! models), and the compressed payload size used by the wire model.  The
+//! accuracy columns are **measured at artifact-build time** by
+//! python/compile/aot.py over the validation sets (the paper profiles
+//! offline on its testbed); payload sizes are the paper's (2.92/1.35/0.83
+//! MB).  `artifacts/lut.txt` carries the measurements; `Lut::paper()`
+//! provides Table 3's published values for comparisons/tests.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Insight tier identity, ordered by fidelity (descending).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TierId {
+    HighAccuracy = 0,
+    Balanced = 1,
+    HighThroughput = 2,
+}
+
+impl TierId {
+    pub const ALL: [TierId; 3] =
+        [TierId::HighAccuracy, TierId::Balanced, TierId::HighThroughput];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TierId::HighAccuracy => "high_accuracy",
+            TierId::Balanced => "balanced",
+            TierId::HighThroughput => "high_throughput",
+        }
+    }
+
+    pub fn display(self) -> &'static str {
+        match self {
+            TierId::HighAccuracy => "High Accuracy",
+            TierId::Balanced => "Balanced",
+            TierId::HighThroughput => "High Throughput",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        match s {
+            "high_accuracy" => Ok(TierId::HighAccuracy),
+            "balanced" => Ok(TierId::Balanced),
+            "high_throughput" => Ok(TierId::HighThroughput),
+            other => bail!("unknown tier {other}"),
+        }
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// One LUT row.
+#[derive(Clone, Copy, Debug)]
+pub struct LutEntry {
+    pub tier: TierId,
+    pub ratio: f64,
+    /// Bottleneck code width M = round(ratio * DIM).
+    pub code_width: usize,
+    /// Average IoU of the Original model at this tier.
+    pub acc_orig: f64,
+    /// Average IoU of the Fine-tuned model at this tier.
+    pub acc_ft: f64,
+    /// Paper-scale compressed payload (bytes) — drives the link model.
+    pub wire_bytes: f64,
+    /// Actual mini-LISA payload bytes (reported, not used for timing).
+    pub real_payload_bytes: usize,
+}
+
+impl LutEntry {
+    /// Max achievable Insight update rate (PPS) at bandwidth `mbps` —
+    /// Algorithm 1 line 21: f_max = (B/8) / data_size.
+    pub fn max_pps(&self, mbps: f64) -> f64 {
+        (mbps * 1e6 / 8.0) / self.wire_bytes
+    }
+
+    /// Minimum bandwidth (Mbps) needed to sustain `pps` updates per second.
+    pub fn min_mbps_for(&self, pps: f64) -> f64 {
+        pps * self.wire_bytes * 8.0 / 1e6
+    }
+}
+
+/// Fig 7 sweep rows (accuracy per split point at r = 0.10).
+#[derive(Clone, Copy, Debug)]
+pub struct SweepEntry {
+    pub split: usize,
+    pub giou: f64,
+    pub ciou: f64,
+}
+
+/// The full knowledge base loaded from artifacts/lut.txt.
+#[derive(Clone, Debug)]
+pub struct Lut {
+    pub tiers: Vec<LutEntry>,
+    pub sweep: Vec<SweepEntry>,
+    /// Full uncompressed pipeline accuracy (orig, ft) — baselines.
+    pub full_orig: f64,
+    pub full_ft: f64,
+    /// Paper's uncompressed SAM split@1 activation size (10.49 MB).
+    pub sam_activation_bytes: f64,
+}
+
+impl Lut {
+    /// Table 3 as published (for comparisons and unit tests).
+    pub fn paper() -> Self {
+        let mk = |tier, ratio, acc_o: f64, acc_f: f64, mb: f64, m| LutEntry {
+            tier,
+            ratio,
+            code_width: m,
+            acc_orig: acc_o,
+            acc_ft: acc_f,
+            wire_bytes: mb * 1e6,
+            real_payload_bytes: 0,
+        };
+        Lut {
+            tiers: vec![
+                mk(TierId::HighAccuracy, 0.25, 0.8442, 0.8112, 2.92, 32),
+                mk(TierId::Balanced, 0.10, 0.8289, 0.7920, 1.35, 13),
+                mk(TierId::HighThroughput, 0.05, 0.8067, 0.7848, 0.83, 6),
+            ],
+            sweep: Vec::new(),
+            full_orig: 0.8442,
+            full_ft: 0.8112,
+            sam_activation_bytes: 10.49e6,
+        }
+    }
+
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("lut.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut lut = Lut {
+            tiers: Vec::new(),
+            sweep: Vec::new(),
+            full_orig: 0.0,
+            full_ft: 0.0,
+            sam_activation_bytes: 10.49e6,
+        };
+        for (lineno, line) in text.lines().enumerate() {
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            if toks.is_empty() {
+                continue;
+            }
+            let ctx = || format!("lut.txt line {}", lineno + 1);
+            let get = |key: &str| -> Result<f64> {
+                toks.iter()
+                    .position(|&t| t == key)
+                    .and_then(|i| toks.get(i + 1))
+                    .with_context(|| format!("{}: missing {key}", ctx()))?
+                    .parse::<f64>()
+                    .with_context(ctx)
+            };
+            match toks[0] {
+                "sam_activation_mb" => {
+                    lut.sam_activation_bytes =
+                        toks[1].parse::<f64>().with_context(ctx)? * 1e6;
+                }
+                "tier" => {
+                    let tier = TierId::from_name(toks[1])?;
+                    lut.tiers.push(LutEntry {
+                        tier,
+                        ratio: get("ratio")?,
+                        code_width: get("code_width")? as usize,
+                        acc_orig: 0.5 * (get("orig_giou")? + get("orig_ciou")?),
+                        acc_ft: 0.5 * (get("ft_giou")? + get("ft_ciou")?),
+                        wire_bytes: get("data_mb")? * 1e6,
+                        real_payload_bytes: get("payload_bytes")? as usize,
+                    });
+                }
+                "sweep" => {
+                    lut.sweep.push(SweepEntry {
+                        split: toks[1].parse().with_context(ctx)?,
+                        giou: get("giou")?,
+                        ciou: get("ciou")?,
+                    });
+                }
+                "full" => {
+                    let acc = 0.5 * (get("giou")? + get("ciou")?);
+                    match toks[1] {
+                        "orig" => lut.full_orig = acc,
+                        "ft" => lut.full_ft = acc,
+                        other => bail!("{}: unknown full set {other}", ctx()),
+                    }
+                }
+                other => bail!("{}: unknown tag {other}", ctx()),
+            }
+        }
+        if lut.tiers.is_empty() {
+            bail!("lut.txt has no tiers");
+        }
+        lut.tiers.sort_by_key(|e| e.tier);
+        Ok(lut)
+    }
+
+    pub fn entry(&self, tier: TierId) -> &LutEntry {
+        self.tiers.iter().find(|e| e.tier == tier).expect("tier present")
+    }
+
+    /// Accuracy column for a given weight set name ("orig"/"ft").
+    pub fn accuracy(&self, tier: TierId, set: &str) -> f64 {
+        let e = self.entry(tier);
+        if set == "ft" {
+            e.acc_ft
+        } else {
+            e.acc_orig
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_lut_feasibility_threshold() {
+        // Paper §3.3: High-Accuracy needs >= 11.68 Mbps for 0.5 PPS.
+        let lut = Lut::paper();
+        let ha = lut.entry(TierId::HighAccuracy);
+        assert!((ha.min_mbps_for(0.5) - 11.68).abs() < 1e-9);
+        // And exactly 0.5 PPS at that bandwidth.
+        assert!((ha.max_pps(11.68) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_lut_ordering() {
+        let lut = Lut::paper();
+        let accs: Vec<f64> = TierId::ALL.iter().map(|&t| lut.entry(t).acc_orig).collect();
+        assert!(accs[0] > accs[1] && accs[1] > accs[2]);
+        let sizes: Vec<f64> = TierId::ALL.iter().map(|&t| lut.entry(t).wire_bytes).collect();
+        assert!(sizes[0] > sizes[1] && sizes[1] > sizes[2]);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let text = "\
+sam_activation_mb 10.49
+tier high_accuracy ratio 0.25 code_width 32 data_mb 2.92 payload_bytes 3136 orig_giou 0.84 orig_ciou 0.85 ft_giou 0.80 ft_ciou 0.82
+tier balanced ratio 0.10 code_width 13 data_mb 1.35 payload_bytes 1900 orig_giou 0.82 orig_ciou 0.83 ft_giou 0.78 ft_ciou 0.80
+sweep 1 giou 0.82 ciou 0.83
+full orig giou 0.84 ciou 0.85
+";
+        let lut = Lut::parse(text).unwrap();
+        assert_eq!(lut.tiers.len(), 2);
+        assert!((lut.entry(TierId::HighAccuracy).acc_orig - 0.845).abs() < 1e-9);
+        assert!((lut.accuracy(TierId::Balanced, "ft") - 0.79).abs() < 1e-9);
+        assert_eq!(lut.sweep.len(), 1);
+        assert!((lut.full_orig - 0.845).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_rejects_unknown() {
+        assert!(Lut::parse("bogus 1\n").is_err());
+        assert!(Lut::parse("").is_err());
+    }
+
+    #[test]
+    fn tier_names_roundtrip() {
+        for t in TierId::ALL {
+            assert_eq!(TierId::from_name(t.name()).unwrap(), t);
+        }
+    }
+}

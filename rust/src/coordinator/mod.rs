@@ -1,0 +1,14 @@
+//! The paper's system contribution (L3): operator-intent classification,
+//! the pre-profiled System LUT (Table 3), and the self-aware Split
+//! Controller implementing Algorithm 1's Sense -> Gate -> Evaluate -> Select
+//! pipeline, wrapped in hierarchical runtime adaptation (Section 3).
+
+mod controller;
+mod intent;
+mod lut;
+
+pub use controller::{
+    ControllerDecision, ControllerError, MissionGoal, RuntimeState, SplitController,
+};
+pub use intent::{classify_intent, tokenize, Intent, IntentLevel, PROMPT_TOKENS, VOCAB};
+pub use lut::{Lut, LutEntry, SweepEntry, TierId};

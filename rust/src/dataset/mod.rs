@@ -1,0 +1,226 @@
+//! Loader for the synthetic Flood-ReasonSeg / generic corpora emitted by
+//! `python/compile/data.py::write_scenes` (binary format documented there),
+//! plus the round-robin scene streamer the missions consume (the paper
+//! streams "both Original and flood-related datasets in round-robin
+//! fashion", §5.3.1).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+pub const MAGIC: u32 = 0x41565259;
+
+/// Which corpus a scene came from (selects the LUT accuracy column and the
+/// tail weight set: Original vs Fine-tuned).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Corpus {
+    Generic,
+    Flood,
+}
+
+impl Corpus {
+    /// The weight-set name for the cloud tail / responder.
+    pub fn weight_set(self) -> &'static str {
+        match self {
+            Corpus::Generic => "orig",
+            Corpus::Flood => "ft",
+        }
+    }
+}
+
+/// One annotated scene: image, per-class GT masks, insight prompts.
+#[derive(Clone, Debug)]
+pub struct Scene {
+    /// (img, img, 3) f32 in [0,1].
+    pub image: Tensor,
+    /// per-class flattened (img*img) masks, indexed by class id.
+    pub masks: Vec<Vec<f32>>,
+    /// (class id, instruction text).
+    pub prompts: Vec<(usize, String)>,
+}
+
+/// A loaded corpus file.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub img: usize,
+    pub scenes: Vec<Scene>,
+    pub corpus: Corpus,
+}
+
+impl Dataset {
+    pub fn load(path: &Path, corpus: Corpus) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading dataset {}", path.display()))?;
+        Self::parse(&bytes, corpus)
+    }
+
+    pub fn parse(bytes: &[u8], corpus: Corpus) -> Result<Self> {
+        let mut off = 0usize;
+        let u32_at = |o: &mut usize| -> Result<u32> {
+            if *o + 4 > bytes.len() {
+                bail!("dataset truncated at offset {o}");
+            }
+            let v = u32::from_le_bytes(bytes[*o..*o + 4].try_into().unwrap());
+            *o += 4;
+            Ok(v)
+        };
+        let magic = u32_at(&mut off)?;
+        if magic != MAGIC {
+            bail!("bad dataset magic {magic:08x}");
+        }
+        let version = u32_at(&mut off)?;
+        if version != 1 {
+            bail!("unsupported dataset version {version}");
+        }
+        let n = u32_at(&mut off)? as usize;
+        let img = u32_at(&mut off)? as usize;
+        let mut scenes = Vec::with_capacity(n);
+        let f32_block = |bytes: &[u8], off: &mut usize, count: usize| -> Result<Vec<f32>> {
+            let need = count * 4;
+            if *off + need > bytes.len() {
+                bail!("dataset truncated reading {count} f32s at {off}");
+            }
+            let v = bytes[*off..*off + need]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            *off += need;
+            Ok(v)
+        };
+        for _ in 0..n {
+            let image = f32_block(bytes, &mut off, img * img * 3)?;
+            let mask_all = f32_block(bytes, &mut off, 2 * img * img)?;
+            let masks = vec![
+                mask_all[..img * img].to_vec(),
+                mask_all[img * img..].to_vec(),
+            ];
+            let np = u32_at(&mut off)? as usize;
+            let mut prompts = Vec::with_capacity(np);
+            for _ in 0..np {
+                let cls = u32_at(&mut off)? as usize;
+                let len = u32_at(&mut off)? as usize;
+                if off + len > bytes.len() {
+                    bail!("dataset truncated reading prompt");
+                }
+                let text = std::str::from_utf8(&bytes[off..off + len])
+                    .context("prompt utf8")?
+                    .to_string();
+                off += len;
+                prompts.push((cls, text));
+            }
+            scenes.push(Scene {
+                image: Tensor::f32(vec![img, img, 3], image)?,
+                masks,
+                prompts,
+            });
+        }
+        Ok(Dataset { img, scenes, corpus })
+    }
+}
+
+/// Round-robin streamer over two corpora (paper §5.3.1): generic, flood,
+/// generic, flood, ... wrapping each corpus independently.
+pub struct RoundRobin<'a> {
+    sets: Vec<&'a Dataset>,
+    next_set: usize,
+    cursors: Vec<usize>,
+}
+
+/// One streamed work item: a scene plus one of its insight prompts.
+pub struct WorkItem<'a> {
+    pub scene: &'a Scene,
+    pub corpus: Corpus,
+    pub class_id: usize,
+    pub prompt: &'a str,
+}
+
+impl<'a> RoundRobin<'a> {
+    pub fn new(sets: Vec<&'a Dataset>) -> Self {
+        let cursors = vec![0; sets.len()];
+        Self { sets, next_set: 0, cursors }
+    }
+
+    pub fn next_item(&mut self) -> Option<WorkItem<'a>> {
+        if self.sets.is_empty() {
+            return None;
+        }
+        for _ in 0..self.sets.len() {
+            let si = self.next_set;
+            self.next_set = (self.next_set + 1) % self.sets.len();
+            let ds = self.sets[si];
+            if ds.scenes.is_empty() {
+                continue;
+            }
+            // Walk scene-prompt pairs; cursor indexes into the flat list.
+            let total: usize = ds.scenes.iter().map(|s| s.prompts.len().max(1)).sum();
+            let mut idx = self.cursors[si] % total.max(1);
+            self.cursors[si] = (self.cursors[si] + 1) % total.max(1);
+            for scene in &ds.scenes {
+                let np = scene.prompts.len().max(1);
+                if idx < np {
+                    let (class_id, prompt) = scene
+                        .prompts
+                        .get(idx)
+                        .map(|(c, p)| (*c, p.as_str()))
+                        .unwrap_or((0, ""));
+                    return Some(WorkItem { scene, corpus: ds.corpus, class_id, prompt });
+                }
+                idx -= np;
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dataset(corpus: Corpus, n: usize) -> Dataset {
+        let img = 4;
+        let scenes = (0..n)
+            .map(|i| Scene {
+                image: Tensor::zeros_f32(vec![img, img, 3]),
+                masks: vec![vec![0.0; img * img], vec![0.0; img * img]],
+                prompts: vec![(i % 2, format!("prompt {i}"))],
+            })
+            .collect();
+        Dataset { img, scenes, corpus }
+    }
+
+    #[test]
+    fn round_robin_alternates() {
+        let a = tiny_dataset(Corpus::Generic, 2);
+        let b = tiny_dataset(Corpus::Flood, 2);
+        let mut rr = RoundRobin::new(vec![&a, &b]);
+        let c1 = rr.next_item().unwrap().corpus;
+        let c2 = rr.next_item().unwrap().corpus;
+        let c3 = rr.next_item().unwrap().corpus;
+        assert_eq!(c1, Corpus::Generic);
+        assert_eq!(c2, Corpus::Flood);
+        assert_eq!(c3, Corpus::Generic);
+    }
+
+    #[test]
+    fn round_robin_wraps() {
+        let a = tiny_dataset(Corpus::Generic, 1);
+        let mut rr = RoundRobin::new(vec![&a]);
+        for _ in 0..5 {
+            assert!(rr.next_item().is_some());
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Dataset::parse(&[0u8; 8], Corpus::Flood).is_err());
+        assert!(Dataset::parse(&[], Corpus::Flood).is_err());
+    }
+
+    #[test]
+    fn weight_set_mapping() {
+        assert_eq!(Corpus::Generic.weight_set(), "orig");
+        assert_eq!(Corpus::Flood.weight_set(), "ft");
+    }
+}

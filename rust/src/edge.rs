@@ -1,0 +1,105 @@
+//! Edge (UAV-side) pipeline: turns a captured scene into a transmissible
+//! packet for the selected stream/tier, running the AOT head artifacts
+//! through the PJRT engine and charging device-model costs.
+//!
+//! Wire sizing (DESIGN.md "Substitutions" #4): Insight packets carry the
+//! paper's Table 3 payload bytes so feasibility crossovers match the paper;
+//! Context packets carry a fixed 0.1 MB CLIP-feature payload (the paper
+//! gives no number, only "lightweight"; at 8–20 Mbps this keeps the context
+//! stream compute-bound — its rate is limited by the 6.4x-faster on-device
+//! CLIP pass, not the uplink, exactly as §5.2.2 describes).
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Lut, TierId};
+use crate::dataset::Scene;
+use crate::energy::{DeviceModel, StageCost};
+use crate::packet::{quantize_code, quantize_scaled, Packet, StreamKind};
+use crate::runtime::Engine;
+
+/// Paper-scale wire bytes charged for a Context packet.
+pub const CONTEXT_WIRE_BYTES: f64 = 0.1e6;
+
+/// Artifact naming helpers (must match aot.py).
+pub fn head_artifact(split: usize, tier: TierId) -> String {
+    format!("head_sp{split}_{}", tier.name())
+}
+
+pub fn tail_artifact(split: usize, tier: TierId) -> String {
+    format!("tail_sp{split}_{}", tier.name())
+}
+
+/// The UAV-side pipeline.
+pub struct EdgePipeline {
+    pub engine: Engine,
+    pub device: DeviceModel,
+    pub lut: Lut,
+    seq: u64,
+}
+
+impl EdgePipeline {
+    pub fn new(engine: Engine, device: DeviceModel, lut: Lut) -> Self {
+        Self { engine, device, lut, seq: 0 }
+    }
+
+    fn next_seq(&mut self) -> u64 {
+        self.seq += 1;
+        self.seq
+    }
+
+    /// Run the Insight head at (split, tier) on a scene and packetize.
+    /// Returns the packet plus the on-device cost charged by the Jetson model.
+    pub fn capture_insight(
+        &mut self,
+        scene: &Scene,
+        split: usize,
+        tier: TierId,
+        t_capture: f64,
+    ) -> Result<(Packet, StageCost)> {
+        let artifact = head_artifact(split, tier);
+        let outs = self
+            .engine
+            .execute(&artifact, "shared", vec![scene.image.clone()])
+            .with_context(|| format!("running {artifact}"))?;
+        // outputs: code, clip_tokens, clip_pooled
+        let (code_q, code_shape) = quantize_code(&outs[0])?;
+        let (clip_q, clip_shape, clip_scale) = quantize_scaled(&outs[1])?;
+        let pkt = Packet {
+            kind: StreamKind::Insight,
+            seq: self.next_seq(),
+            t_capture,
+            tier: tier.index() as u8,
+            split: split as u8,
+            code_q,
+            code_shape,
+            clip_q,
+            clip_shape,
+            clip_scale,
+            wire_bytes: self.lut.entry(tier).wire_bytes,
+        };
+        Ok((pkt, self.device.insight_edge(split)))
+    }
+
+    /// Run the Context (CLIP-only) path and packetize.
+    pub fn capture_context(&mut self, scene: &Scene, t_capture: f64) -> Result<(Packet, StageCost)> {
+        let outs = self
+            .engine
+            .execute("context_edge", "shared", vec![scene.image.clone()])
+            .context("running context_edge")?;
+        let (clip_q, clip_shape, clip_scale) = quantize_scaled(&outs[0])?;
+        let pkt = Packet {
+            kind: StreamKind::Context,
+            seq: self.next_seq(),
+            t_capture,
+            tier: 0,
+            split: 0,
+            code_q: Vec::new(),
+            code_shape: (0, 0),
+            clip_q,
+            clip_shape,
+            clip_scale,
+            wire_bytes: CONTEXT_WIRE_BYTES,
+        };
+        Ok((pkt, self.device.context_edge()))
+    }
+}

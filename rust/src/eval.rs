@@ -1,0 +1,126 @@
+//! Segmentation-quality metrics, matching LISA's protocol [17] as the paper
+//! uses it: **gIoU** (mean of per-image IoU) and **cIoU** (cumulative
+//! intersection over cumulative union), with "Average IoU" their mean.
+//! Must agree with python/compile/train.py::iou_stats (cross-checked by the
+//! parity integration test).
+
+/// Accumulates per-image IoU across a run.
+#[derive(Clone, Debug, Default)]
+pub struct IouAccumulator {
+    per_image: Vec<f64>,
+    inter_sum: f64,
+    union_sum: f64,
+}
+
+/// Binary-mask IoU components for one image.
+#[derive(Clone, Copy, Debug)]
+pub struct IouSample {
+    pub intersection: f64,
+    pub union: f64,
+}
+
+/// Compute intersection/union between a predicted logit map (mask = logits >
+/// threshold) and a binary GT mask.
+pub fn mask_iou(pred_logits: &[f32], gt: &[f32], threshold: f32) -> IouSample {
+    debug_assert_eq!(pred_logits.len(), gt.len());
+    let mut inter = 0.0f64;
+    let mut union = 0.0f64;
+    for (&p, &g) in pred_logits.iter().zip(gt) {
+        let pm = p > threshold;
+        let gm = g > 0.5;
+        if pm && gm {
+            inter += 1.0;
+        }
+        if pm || gm {
+            union += 1.0;
+        }
+    }
+    IouSample { intersection: inter, union }
+}
+
+impl IouAccumulator {
+    pub fn push(&mut self, s: IouSample) {
+        // Empty-GT-and-empty-pred counts as perfect (matches python).
+        let iou = if s.union > 0.0 { s.intersection / s.union } else { 1.0 };
+        self.per_image.push(iou);
+        self.inter_sum += s.intersection;
+        self.union_sum += s.union;
+    }
+
+    pub fn n(&self) -> usize {
+        self.per_image.len()
+    }
+
+    /// Mean per-image IoU.
+    pub fn giou(&self) -> f64 {
+        if self.per_image.is_empty() {
+            return 0.0;
+        }
+        self.per_image.iter().sum::<f64>() / self.per_image.len() as f64
+    }
+
+    /// Cumulative-intersection / cumulative-union.
+    pub fn ciou(&self) -> f64 {
+        if self.union_sum <= 0.0 {
+            return 0.0;
+        }
+        self.inter_sum / self.union_sum
+    }
+
+    /// The paper's "Average IoU" = mean(gIoU, cIoU).
+    pub fn avg_iou(&self) -> f64 {
+        0.5 * (self.giou() + self.ciou())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_prediction_is_one() {
+        let gt = vec![0.0, 1.0, 1.0, 0.0];
+        let logits = vec![-5.0, 5.0, 5.0, -5.0];
+        let mut acc = IouAccumulator::default();
+        acc.push(mask_iou(&logits, &gt, 0.0));
+        assert!((acc.giou() - 1.0).abs() < 1e-12);
+        assert!((acc.ciou() - 1.0).abs() < 1e-12);
+        assert!((acc.avg_iou() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_prediction_is_zero() {
+        let gt = vec![1.0, 1.0, 0.0, 0.0];
+        let logits = vec![-5.0, -5.0, 5.0, 5.0];
+        let mut acc = IouAccumulator::default();
+        acc.push(mask_iou(&logits, &gt, 0.0));
+        assert_eq!(acc.giou(), 0.0);
+        assert_eq!(acc.ciou(), 0.0);
+    }
+
+    #[test]
+    fn half_overlap() {
+        let gt = vec![1.0, 1.0, 0.0, 0.0];
+        let logits = vec![5.0, -5.0, -5.0, -5.0];
+        let mut acc = IouAccumulator::default();
+        acc.push(mask_iou(&logits, &gt, 0.0));
+        assert!((acc.giou() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn giou_vs_ciou_weighting_differs() {
+        // Image A: tiny mask, perfect. Image B: big mask, half right.
+        let mut acc = IouAccumulator::default();
+        acc.push(IouSample { intersection: 1.0, union: 1.0 });
+        acc.push(IouSample { intersection: 50.0, union: 100.0 });
+        assert!((acc.giou() - 0.75).abs() < 1e-12);
+        assert!((acc.ciou() - 51.0 / 101.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_gt_empty_pred_is_perfect() {
+        let mut acc = IouAccumulator::default();
+        acc.push(mask_iou(&[-1.0, -1.0], &[0.0, 0.0], 0.0));
+        assert_eq!(acc.giou(), 1.0);
+    }
+}

@@ -1,0 +1,72 @@
+//! AVERY — Intent-Driven Adaptive VLM Split Computing (rust coordinator, L3).
+//!
+//! This crate is the runtime half of the three-layer reproduction described
+//! in `DESIGN.md`: python/JAX trains and AOT-lowers the "mini-LISA" VLM into
+//! HLO-text artifacts (`make artifacts`); this crate loads those artifacts
+//! through the PJRT CPU client (`runtime`), and implements the paper's
+//! system contribution on top:
+//!
+//! * [`coordinator`] — operator-intent classification, the System LUT
+//!   (Table 3) and the Split Controller (Algorithm 1).
+//! * [`streams`] — the dual-stream scheduler: a high-frequency Context loop
+//!   and a low-frequency Insight loop over a shared virtual clock.
+//! * [`netsim`] — the scripted disaster-zone bandwidth trace and link model
+//!   (8–20 Mbps, stable / volatile / sustained-drop phases).
+//! * [`energy`] — the Jetson AGX Xavier (MODE_30W_ALL) latency/energy model
+//!   calibrated to the paper's published split-point profile.
+//! * [`packet`] — the wire format: int8-quantized bottleneck codes + CLIP
+//!   features with CRC32 integrity.
+//! * [`baselines`] — static tiers, raw-image-compression offload, full-edge
+//!   and cloud-only execution.
+//! * [`mission`] — drivers that regenerate every table and figure of the
+//!   paper's evaluation (Table 3, Figures 7–10, headline claims).
+//!
+//! Python never runs on any path in this crate; the binary is self-contained
+//! once `artifacts/` exists.
+
+pub mod baselines;
+pub mod bench;
+pub mod cloud;
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod edge;
+pub mod energy;
+pub mod eval;
+pub mod manifest;
+pub mod mission;
+pub mod netsim;
+pub mod packet;
+pub mod runtime;
+pub mod streams;
+pub mod telemetry;
+pub mod tensor;
+pub mod transport;
+pub mod util;
+
+/// Repo-relative default artifact directory (overridable via `--artifacts`).
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";
+
+/// Locate the artifacts directory: explicit arg, `AVERY_ARTIFACTS` env var,
+/// or walk up from the current directory looking for `artifacts/manifest.txt`.
+pub fn find_artifacts(explicit: Option<&str>) -> anyhow::Result<std::path::PathBuf> {
+    if let Some(p) = explicit {
+        return Ok(std::path::PathBuf::from(p));
+    }
+    if let Ok(p) = std::env::var("AVERY_ARTIFACTS") {
+        return Ok(std::path::PathBuf::from(p));
+    }
+    let mut dir = std::env::current_dir()?;
+    loop {
+        let cand = dir.join(DEFAULT_ARTIFACTS);
+        if cand.join("manifest.txt").exists() {
+            return Ok(cand);
+        }
+        if !dir.pop() {
+            anyhow::bail!(
+                "artifacts/manifest.txt not found — run `make artifacts` first \
+                 (or set AVERY_ARTIFACTS)"
+            );
+        }
+    }
+}

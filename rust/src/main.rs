@@ -1,0 +1,92 @@
+//! AVERY CLI — the leader entrypoint.
+//!
+//! Subcommands regenerate the paper's tables/figures through the real
+//! three-layer stack (see DESIGN.md experiment index):
+//!
+//! ```text
+//! avery table3     # Table 3 — System LUT (per-tier accuracy/payload)
+//! avery fig7       # Fig 7  — split-point accuracy sweep (r = 0.10)
+//! avery fig8       # Fig 8  — latency/energy per split point
+//! avery fig9       # Fig 9  — 20-min dynamic run, AVERY vs static tiers
+//! avery fig10      # Fig 10 — accuracy/throughput trade-off scatter
+//! avery headline   # abstract claims H1..H4
+//! avery streams    # §5.2.2 dual-stream characterization + §4.3 demo
+//! avery all        # everything above
+//! ```
+//!
+//! Common options: `--artifacts DIR`, `--out DIR`, `--duration SECS`,
+//! `--goal accuracy|throughput`, `--exec-every N`, `--seed N`,
+//! `--hysteresis H`, `--exec-mode buffers|literals`, `--config FILE`.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use avery::config::{Kv, RunConfig};
+use avery::mission::{
+    run_fig10, run_fig7, run_fig8, run_fig9, run_headline, run_streams, run_table3, Env,
+    Fig9Options,
+};
+
+const USAGE: &str = "usage: avery <table3|fig7|fig8|fig9|fig10|headline|streams|all> [--options]
+  --artifacts DIR      artifact directory (default: discover ./artifacts)
+  --out DIR            CSV output directory (default: out)
+  --duration SECS      mission length for fig9/fig10/headline (default 1200)
+  --goal MODE          accuracy | throughput (default accuracy)
+  --exec-every N       execute HLO every Nth packet (default 1)
+  --seed N             trace/workload seed (default 7)
+  --hysteresis H       also run the hysteresis ablation at margin H
+  --exec-mode M        buffers | literals (default buffers)
+  --config FILE        key = value config file (CLI overrides it)";
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut kv = Kv::default();
+    // Config file first (if named), then CLI overrides.
+    if let Some(i) = args.iter().position(|a| a == "--config") {
+        if let Some(path) = args.get(i + 1) {
+            kv = Kv::from_file(Path::new(path))?;
+        }
+    }
+    let positional = kv.apply_cli(&args)?;
+    let cfg = RunConfig::from_kv(&kv)?;
+    let Some(cmd) = positional.first().map(|s| s.as_str()) else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+
+    let artifacts = avery::find_artifacts(cfg.artifacts.as_deref())?;
+    eprintln!("artifacts: {}", artifacts.display());
+    let env = Env::load(&artifacts, Path::new(&cfg.out_dir), cfg.exec_mode)?;
+
+    let fig9_opts = Fig9Options {
+        duration_secs: cfg.duration_secs,
+        goal: cfg.goal,
+        exec_every: cfg.exec_every,
+        ablate_hysteresis: cfg.hysteresis,
+        seed: cfg.seed,
+    };
+
+    match cmd {
+        "table3" => run_table3(&env)?,
+        "fig7" => run_fig7(&env)?,
+        "fig8" => run_fig8(&env)?,
+        "fig9" => {
+            run_fig9(&env, &fig9_opts)?;
+        }
+        "fig10" => run_fig10(&env, &fig9_opts)?,
+        "headline" => run_headline(&env, &fig9_opts)?,
+        "streams" => run_streams(&env)?,
+        "all" => {
+            run_table3(&env)?;
+            run_fig7(&env)?;
+            run_fig8(&env)?;
+            run_fig9(&env, &fig9_opts)?;
+            run_fig10(&env, &fig9_opts)?;
+            run_headline(&env, &fig9_opts)?;
+            run_streams(&env)?;
+        }
+        other => bail!("unknown command `{other}`\n{USAGE}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,259 @@
+//! Parser for `artifacts/manifest.txt` and `artifacts/lut.txt` — the
+//! line-based metadata emitted by `python/compile/aot.py` (the offline crate
+//! set has no serde/JSON, so the build path emits both JSON for humans and
+//! this trivially-parsable form for the runtime).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::parse_dims;
+
+/// Element dtype of a parameter or input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" | "f32" => Ok(DType::F32),
+            "int32" | "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// One leading HLO parameter (a weight leaf, in exact pytree order).
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One runtime input (follows all weight parameters in HLO parameter order).
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+/// One AOT-compiled execution path.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo: PathBuf,
+    /// weight-set name ("shared" / "orig" / "ft") -> weight binary path.
+    pub weights: BTreeMap<String, PathBuf>,
+    pub params: Vec<ParamSpec>,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<String>,
+    pub golden: BTreeMap<String, PathBuf>,
+}
+
+impl ArtifactSpec {
+    pub fn weight_numel(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+}
+
+/// The artifact index produced by `make artifacts`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub img: usize,
+    pub tokens: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub clip_tokens: usize,
+    pub clip_dim: usize,
+    pub prompt_tokens: usize,
+    pub vocab: usize,
+    pub num_classes: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, artifacts_dir)
+    }
+
+    pub fn parse(text: &str, root: &Path) -> Result<Self> {
+        let mut m = Manifest {
+            root: root.to_path_buf(),
+            img: 0,
+            tokens: 0,
+            dim: 0,
+            depth: 0,
+            clip_tokens: 0,
+            clip_dim: 0,
+            prompt_tokens: 0,
+            vocab: 0,
+            num_classes: 0,
+            artifacts: BTreeMap::new(),
+        };
+        let mut cur: Option<ArtifactSpec> = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let mut it = line.split_whitespace();
+            let Some(tag) = it.next() else { continue };
+            let ctx = || format!("manifest.txt line {}", lineno + 1);
+            match tag {
+                "meta" => {
+                    let kv: Vec<&str> = it.collect();
+                    for pair in kv.chunks(2) {
+                        let [k, v] = pair else { bail!("{}: odd meta pairs", ctx()) };
+                        let v: usize = v.parse().with_context(ctx)?;
+                        match *k {
+                            "img" => m.img = v,
+                            "tokens" => m.tokens = v,
+                            "dim" => m.dim = v,
+                            "depth" => m.depth = v,
+                            "clip_tokens" => m.clip_tokens = v,
+                            "clip_dim" => m.clip_dim = v,
+                            "prompt_tokens" => m.prompt_tokens = v,
+                            "vocab" => m.vocab = v,
+                            "num_classes" => m.num_classes = v,
+                            _ => {}
+                        }
+                    }
+                }
+                "artifact" => {
+                    if cur.is_some() {
+                        bail!("{}: nested artifact", ctx());
+                    }
+                    cur = Some(ArtifactSpec {
+                        name: it.next().context("artifact name")?.to_string(),
+                        hlo: PathBuf::new(),
+                        weights: BTreeMap::new(),
+                        params: Vec::new(),
+                        inputs: Vec::new(),
+                        outputs: Vec::new(),
+                        golden: BTreeMap::new(),
+                    });
+                }
+                "hlo" => {
+                    cur.as_mut().with_context(ctx)?.hlo =
+                        root.join(it.next().context("hlo path")?);
+                }
+                "weights" => {
+                    let a = cur.as_mut().with_context(ctx)?;
+                    let set = it.next().context("weights set")?.to_string();
+                    a.weights.insert(set, root.join(it.next().context("weights path")?));
+                }
+                "param" => {
+                    let a = cur.as_mut().with_context(ctx)?;
+                    a.params.push(ParamSpec {
+                        name: it.next().context("param name")?.to_string(),
+                        dtype: DType::parse(it.next().context("param dtype")?)?,
+                        dims: parse_dims(it.next().context("param dims")?),
+                    });
+                }
+                "input" => {
+                    let a = cur.as_mut().with_context(ctx)?;
+                    a.inputs.push(InputSpec {
+                        name: it.next().context("input name")?.to_string(),
+                        dtype: DType::parse(it.next().context("input dtype")?)?,
+                        dims: parse_dims(it.next().context("input dims")?),
+                    });
+                }
+                "output" => {
+                    let a = cur.as_mut().with_context(ctx)?;
+                    a.outputs.push(it.next().context("output name")?.to_string());
+                }
+                "golden" => {
+                    let a = cur.as_mut().with_context(ctx)?;
+                    let set = it.next().context("golden set")?.to_string();
+                    a.golden.insert(set, root.join(it.next().context("golden path")?));
+                }
+                "end" => {
+                    let a = cur.take().with_context(ctx)?;
+                    m.artifacts.insert(a.name.clone(), a);
+                }
+                other => bail!("{}: unknown tag {other}", ctx()),
+            }
+        }
+        if cur.is_some() {
+            bail!("manifest.txt: unterminated artifact record");
+        }
+        if m.artifacts.is_empty() {
+            bail!("manifest.txt: no artifacts — rerun `make artifacts`");
+        }
+        Ok(m)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact `{name}` not in manifest"))
+    }
+
+    /// Names of all Insight head artifacts, sorted.
+    pub fn head_names(&self) -> Vec<String> {
+        self.artifacts.keys().filter(|k| k.starts_with("head_")).cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+meta img 64 tokens 64 dim 128 depth 8 clip_tokens 16 clip_dim 64 prompt_tokens 16 vocab 512 num_classes 2
+artifact head_sp1_balanced
+hlo hlo/head_sp1_balanced.hlo.txt
+weights shared weights/head_sp1_balanced.shared.bin
+param w0.patch_w float32 192,128
+param w0.blocks.wqkv float32 1,128,384
+input img float32 64,64,3
+output code
+output clip_tokens
+golden shared golden/head_sp1_balanced.shared.bin
+end
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.img, 64);
+        assert_eq!(m.depth, 8);
+        let a = m.artifact("head_sp1_balanced").unwrap();
+        assert_eq!(a.params.len(), 2);
+        assert_eq!(a.params[1].dims, vec![1, 128, 384]);
+        assert_eq!(a.weight_numel(), 192 * 128 + 128 * 384);
+        assert_eq!(a.inputs[0].name, "img");
+        assert_eq!(a.outputs.len(), 2);
+        assert!(a.golden.contains_key("shared"));
+    }
+
+    #[test]
+    fn rejects_unterminated() {
+        let bad = "artifact x\nhlo h.txt\n";
+        assert!(Manifest::parse(bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_tag() {
+        let bad = "meta img 64\nbogus line here\n";
+        assert!(Manifest::parse(bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_lookup_fails() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+}

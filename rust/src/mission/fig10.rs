@@ -1,0 +1,46 @@
+//! Figure 10 — the trade-off scatter: average accuracy vs average throughput
+//! for the three static tiers and AVERY ("Prioritize Accuracy", Original
+//! model), plus the "Prioritize Throughput" operating point quoted in the
+//! text (1.85 PPS).
+
+use anyhow::Result;
+
+use crate::coordinator::MissionGoal;
+use crate::telemetry::{f, pct, Csv, Table};
+
+use super::fig9::{run_fig9, Fig9Options};
+use super::Env;
+
+pub fn run_fig10(env: &Env, opts: &Fig9Options) -> Result<()> {
+    let runs = run_fig9(env, opts)?;
+    let mut table = Table::new(
+        "Figure 10 — Avg Accuracy vs Avg Throughput (Original model)",
+        &["Config", "Avg PPS", "Avg IoU (orig)"],
+    );
+    let mut csv = Csv::create(
+        &env.out_dir.join("fig10_tradeoff.csv"),
+        &["config", "avg_pps", "avg_iou_orig"],
+    )?;
+    for run in &runs {
+        let s = &run.summary;
+        table.row(&[s.policy.clone(), f(s.avg_pps, 3), pct(s.avg_iou_orig)]);
+        csv.row(&[s.policy.clone(), f(s.avg_pps, 4), f(s.avg_iou_orig, 6)])?;
+    }
+
+    // The throughput-mode operating point (paper text: 1.85 PPS).
+    let tp = run_fig9(
+        env,
+        &Fig9Options { goal: MissionGoal::PrioritizeThroughput, ..opts.clone() },
+    )?;
+    let s = &tp[0].summary;
+    table.row(&[
+        "AVERY (Prioritize Throughput)".to_string(),
+        f(s.avg_pps, 3),
+        pct(s.avg_iou_orig),
+    ]);
+    csv.row(&["avery_throughput".to_string(), f(s.avg_pps, 4), f(s.avg_iou_orig, 6)])?;
+    table.print();
+    println!("paper: AVERY 0.74 PPS (accuracy mode), 1.85 PPS (throughput mode)");
+    println!("csv: {}", csv.path.display());
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Figure 8 — on-device latency and energy per image across split points on
+//! the calibrated Jetson AGX Xavier model (MODE_30W_ALL), plus the
+//! full-SAM-onboard reference (the 11.8x / 16.6x comparator).
+
+use anyhow::Result;
+
+use crate::telemetry::{f, Csv, Table};
+
+use super::Env;
+
+pub fn run_fig8(env: &Env) -> Result<()> {
+    let mut table = Table::new(
+        "Figure 8 — on-device latency & energy per image (Jetson MODE_30W_ALL model)",
+        &["Split", "Paper depth", "Latency (s)", "Energy (J)"],
+    );
+    let mut csv = Csv::create(
+        &env.out_dir.join("fig8_latency_energy.csv"),
+        &["split", "paper_depth", "latency_s", "energy_j"],
+    )?;
+    for split in 1..=env.manifest_meta.depth {
+        let c = env.device.insight_edge(split);
+        let pd = env.device.paper_depth_of(split);
+        table.row(&[
+            format!("sp{split}"),
+            f(pd, 1),
+            f(c.latency_s, 4),
+            f(c.energy_j, 2),
+        ]);
+        csv.rowf(&[split as f64, pd, c.latency_s, c.energy_j])?;
+    }
+    let full = env.device.full_edge();
+    table.row(&[
+        "Full SAM onboard".to_string(),
+        "-".to_string(),
+        f(full.latency_s, 4),
+        f(full.energy_j, 2),
+    ]);
+    csv.rowf(&[-1.0, -1.0, full.latency_s, full.energy_j])?;
+    table.print();
+    let sp1 = env.device.insight_edge(1);
+    println!(
+        "full vs sp1: latency {:.1}x, energy {:.1}x  (paper caption: 11.8x / 16.6x)",
+        full.latency_s / sp1.latency_s,
+        full.energy_j / sp1.energy_j
+    );
+    println!(
+        "energy saving of split@1 vs full edge: {:.2}%  (paper headline: 93.98%)",
+        (1.0 - sp1.energy_j / full.energy_j) * 100.0
+    );
+    println!("csv: {}", csv.path.display());
+    Ok(())
+}

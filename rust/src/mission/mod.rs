@@ -1,0 +1,77 @@
+//! Mission drivers: one per table/figure in the paper's evaluation
+//! (DESIGN.md experiment index).  Each driver runs the real system through
+//! the PJRT artifacts and prints the same rows/series the paper reports,
+//! plus CSVs for plotting under `out/`.
+
+mod context;
+mod fig10;
+mod fig7;
+mod fig8;
+mod fig9;
+mod headline;
+mod table3;
+
+pub use context::run_streams;
+pub use fig10::run_fig10;
+pub use fig7::run_fig7;
+pub use fig8::run_fig8;
+pub use fig9::{run_fig9, Fig9Options};
+pub use headline::run_headline;
+pub use table3::run_table3;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::coordinator::Lut;
+use crate::dataset::{Corpus, Dataset};
+use crate::energy::DeviceModel;
+use crate::manifest::Manifest;
+use crate::runtime::{Engine, ExecMode};
+
+/// Shared environment every mission needs.
+pub struct Env {
+    pub engine: Engine,
+    pub manifest_meta: ManifestMeta,
+    pub lut: Lut,
+    pub device: DeviceModel,
+    pub generic_val: Dataset,
+    pub flood_val: Dataset,
+    pub out_dir: PathBuf,
+}
+
+/// The manifest fields missions need after the Engine has consumed it.
+#[derive(Clone, Copy, Debug)]
+pub struct ManifestMeta {
+    pub img: usize,
+    pub depth: usize,
+}
+
+impl Env {
+    /// Load artifacts, datasets and LUT; spawn the engine.
+    pub fn load(artifacts_dir: &Path, out_dir: &Path, mode: ExecMode) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let meta = ManifestMeta { img: manifest.img, depth: manifest.depth };
+        let lut = Lut::load(artifacts_dir)?;
+        let device = DeviceModel::jetson_mode_30w(meta.depth);
+        let generic_val =
+            Dataset::load(&artifacts_dir.join("data/generic_val.bin"), Corpus::Generic)?;
+        let flood_val =
+            Dataset::load(&artifacts_dir.join("data/flood_val.bin"), Corpus::Flood)?;
+        let engine = Engine::start(manifest, mode)?;
+        std::fs::create_dir_all(out_dir).ok();
+        Ok(Self {
+            engine,
+            manifest_meta: meta,
+            lut,
+            device,
+            generic_val,
+            flood_val,
+            out_dir: out_dir.to_path_buf(),
+        })
+    }
+
+    pub fn datasets(&self) -> Vec<&Dataset> {
+        vec![&self.generic_val, &self.flood_val]
+    }
+}

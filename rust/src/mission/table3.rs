@@ -1,0 +1,54 @@
+//! Table 3 — the System LUT: per-tier compression ratio, Average IoU for
+//! the Original and Fine-tuned models, and payload size.  Accuracy is
+//! re-measured here through the *runtime* path (PJRT artifacts + int8 wire
+//! quantization), independently of the python-side profiling that produced
+//! lut.txt; the two must agree (that agreement is itself a parity check,
+//! reported in the last two columns).
+
+use anyhow::Result;
+
+use crate::baselines::eval_split_path;
+use crate::coordinator::TierId;
+use crate::telemetry::{f, pct, Csv, Table};
+
+use super::Env;
+
+pub fn run_table3(env: &Env) -> Result<()> {
+    let mut table = Table::new(
+        "Table 3 — AVERY System Lookup Table (measured through the rust runtime)",
+        &["Tier", "Ratio r", "IoU orig", "IoU ft", "Wire MB", "LUT orig", "LUT ft"],
+    );
+    let mut csv = Csv::create(
+        &env.out_dir.join("table3_lut.csv"),
+        &["tier", "ratio", "iou_orig", "iou_ft", "wire_mb", "lut_orig", "lut_ft"],
+    )?;
+    for tier in TierId::ALL {
+        let e = *env.lut.entry(tier);
+        let (acc_o, _) =
+            eval_split_path(&env.engine, &env.generic_val, &env.lut, &env.device, 1, tier)?;
+        let (acc_f, _) =
+            eval_split_path(&env.engine, &env.flood_val, &env.lut, &env.device, 1, tier)?;
+        table.row(&[
+            tier.display().to_string(),
+            f(e.ratio, 2),
+            pct(acc_o),
+            pct(acc_f),
+            f(e.wire_bytes / 1e6, 2),
+            pct(e.acc_orig),
+            pct(e.acc_ft),
+        ]);
+        csv.row(&[
+            tier.name().to_string(),
+            f(e.ratio, 2),
+            f(acc_o, 6),
+            f(acc_f, 6),
+            f(e.wire_bytes / 1e6, 2),
+            f(e.acc_orig, 6),
+            f(e.acc_ft, 6),
+        ])?;
+    }
+    table.print();
+    println!("paper Table 3: 84.42/81.12 @0.25, 82.89/79.20 @0.10, 80.67/78.48 @0.05 (%)");
+    println!("csv: {}", csv.path.display());
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Network substrate: the scripted disaster-zone bandwidth trace, the link
+//! model that turns payload bytes into transmission delay, and the EWMA
+//! bandwidth estimator that feeds the controller's **Sense** stage.
+//!
+//! The paper (§5.3.1) evaluates over a 20-minute scripted trace "with stable
+//! periods, high volatility, and sustained drops, all within an 8–20 Mbps
+//! range" as a proxy for degraded 5G uplink in disaster zones.  We model the
+//! same three phase kinds over a virtual clock; everything is deterministic
+//! given the seed.
+
+mod link;
+mod trace;
+
+pub use link::{Link, LinkConfig, TxOutcome};
+pub use trace::{BandwidthTrace, Phase, PhaseKind, TraceConfig};
+
+use crate::util::Ewma;
+
+/// EWMA bandwidth estimator — the controller's Sense stage observes link
+/// goodput samples rather than the (unknowable) ground-truth trace.
+#[derive(Clone, Debug)]
+pub struct BandwidthEstimator {
+    ewma: Ewma,
+    last_mbps: f64,
+}
+
+impl BandwidthEstimator {
+    pub fn new(alpha: f64) -> Self {
+        Self { ewma: Ewma::new(alpha), last_mbps: 0.0 }
+    }
+
+    /// Feed one goodput observation (payload bits / measured tx seconds).
+    pub fn observe(&mut self, mbps: f64) -> f64 {
+        self.last_mbps = self.ewma.update(mbps);
+        self.last_mbps
+    }
+
+    /// Current estimate in Mbps (0 until the first observation).
+    pub fn estimate_mbps(&self) -> f64 {
+        self.ewma.get().unwrap_or(self.last_mbps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimator_tracks_step_change() {
+        let mut e = BandwidthEstimator::new(0.3);
+        for _ in 0..50 {
+            e.observe(16.0);
+        }
+        assert!((e.estimate_mbps() - 16.0).abs() < 0.1);
+        for _ in 0..50 {
+            e.observe(9.0);
+        }
+        assert!((e.estimate_mbps() - 9.0).abs() < 0.1);
+    }
+}

@@ -1,0 +1,180 @@
+//! Scripted bandwidth trace generator (paper §5.3.1).
+//!
+//! A trace is a sequence of phases; each phase has a kind that controls how
+//! bandwidth evolves second-by-second:
+//! * `Stable`   — small jitter around a level,
+//! * `Volatile` — large random-walk swings (clamped to the global range),
+//! * `Drop`     — a sustained fall to a low level, held, then recovery.
+//!
+//! The default 20-minute script mirrors the paper's: stable opening,
+//! volatility in the middle, two sustained drops (one dipping below the
+//! High-Accuracy tier's 11.68 Mbps feasibility threshold so the controller
+//! demonstrably switches to Balanced), and a stable tail.
+
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PhaseKind {
+    Stable,
+    Volatile,
+    Drop,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Phase {
+    pub kind: PhaseKind,
+    /// Duration in seconds (virtual time).
+    pub secs: f64,
+    /// Anchor level in Mbps (for Drop: the floor reached).
+    pub level_mbps: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    pub phases: Vec<Phase>,
+    /// Global clamp range (paper: 8–20 Mbps).
+    pub min_mbps: f64,
+    pub max_mbps: f64,
+    /// Trace sampling resolution in seconds.
+    pub dt: f64,
+    pub seed: u64,
+}
+
+impl TraceConfig {
+    /// The paper's 20-minute disaster-zone script.
+    pub fn paper_20min(seed: u64) -> Self {
+        Self {
+            phases: vec![
+                Phase { kind: PhaseKind::Stable, secs: 180.0, level_mbps: 17.0 },
+                Phase { kind: PhaseKind::Volatile, secs: 240.0, level_mbps: 14.0 },
+                Phase { kind: PhaseKind::Drop, secs: 150.0, level_mbps: 8.5 },
+                Phase { kind: PhaseKind::Stable, secs: 120.0, level_mbps: 16.0 },
+                Phase { kind: PhaseKind::Drop, secs: 180.0, level_mbps: 9.5 },
+                Phase { kind: PhaseKind::Volatile, secs: 180.0, level_mbps: 13.0 },
+                Phase { kind: PhaseKind::Stable, secs: 150.0, level_mbps: 18.0 },
+            ],
+            min_mbps: 8.0,
+            max_mbps: 20.0,
+            dt: 1.0,
+            seed,
+        }
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.phases.iter().map(|p| p.secs).sum()
+    }
+}
+
+/// A fully materialized trace: bandwidth (Mbps) sampled every `dt` seconds.
+#[derive(Clone, Debug)]
+pub struct BandwidthTrace {
+    pub dt: f64,
+    pub samples_mbps: Vec<f64>,
+}
+
+impl BandwidthTrace {
+    pub fn generate(cfg: &TraceConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let mut samples = Vec::new();
+        let mut level = cfg.phases.first().map(|p| p.level_mbps).unwrap_or(15.0);
+        for phase in &cfg.phases {
+            let n = (phase.secs / cfg.dt).round() as usize;
+            match phase.kind {
+                PhaseKind::Stable => {
+                    // Ease toward the anchor, then jitter +-0.4 Mbps.
+                    for i in 0..n {
+                        let pull = (phase.level_mbps - level) * 0.2;
+                        level += pull + rng.normal() * 0.25;
+                        level = level.clamp(cfg.min_mbps, cfg.max_mbps);
+                        let _ = i;
+                        samples.push(level);
+                    }
+                }
+                PhaseKind::Volatile => {
+                    for _ in 0..n {
+                        let pull = (phase.level_mbps - level) * 0.05;
+                        level += pull + rng.normal() * 1.4;
+                        level = level.clamp(cfg.min_mbps, cfg.max_mbps);
+                        samples.push(level);
+                    }
+                }
+                PhaseKind::Drop => {
+                    // Fall over the first quarter, hold at the floor for half,
+                    // recover over the last quarter.
+                    let fall = n / 4;
+                    let hold = n / 2;
+                    let start = level;
+                    for i in 0..n {
+                        level = if i < fall {
+                            start + (phase.level_mbps - start) * (i as f64 / fall.max(1) as f64)
+                        } else if i < fall + hold {
+                            phase.level_mbps + rng.normal() * 0.2
+                        } else {
+                            let k = (i - fall - hold) as f64 / (n - fall - hold).max(1) as f64;
+                            phase.level_mbps + (start - phase.level_mbps) * k
+                        };
+                        level = level.clamp(cfg.min_mbps, cfg.max_mbps);
+                        samples.push(level);
+                    }
+                }
+            }
+        }
+        BandwidthTrace { dt: cfg.dt, samples_mbps: samples }
+    }
+
+    /// Ground-truth bandwidth at virtual time `t` seconds.
+    pub fn at(&self, t: f64) -> f64 {
+        if self.samples_mbps.is_empty() {
+            return 0.0;
+        }
+        let idx = ((t / self.dt) as usize).min(self.samples_mbps.len() - 1);
+        self.samples_mbps[idx]
+    }
+
+    pub fn duration_secs(&self) -> f64 {
+        self.samples_mbps.len() as f64 * self.dt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_trace_is_20min_and_bounded() {
+        let cfg = TraceConfig::paper_20min(7);
+        assert!((cfg.total_secs() - 1200.0).abs() < 1e-9);
+        let tr = BandwidthTrace::generate(&cfg);
+        assert_eq!(tr.samples_mbps.len(), 1200);
+        for &b in &tr.samples_mbps {
+            assert!((8.0..=20.0).contains(&b), "bandwidth {b} out of range");
+        }
+    }
+
+    #[test]
+    fn trace_deterministic_per_seed() {
+        let a = BandwidthTrace::generate(&TraceConfig::paper_20min(3));
+        let b = BandwidthTrace::generate(&TraceConfig::paper_20min(3));
+        assert_eq!(a.samples_mbps, b.samples_mbps);
+        let c = BandwidthTrace::generate(&TraceConfig::paper_20min(4));
+        assert_ne!(a.samples_mbps, c.samples_mbps);
+    }
+
+    #[test]
+    fn drop_phase_reaches_floor() {
+        let tr = BandwidthTrace::generate(&TraceConfig::paper_20min(7));
+        // First drop phase spans [420, 570): must dip below 11.68 Mbps (the
+        // High-Accuracy feasibility threshold) so Fig 9 shows a tier switch.
+        let min_in_drop = tr.samples_mbps[440..560]
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        assert!(min_in_drop < 11.68, "drop floor {min_in_drop}");
+    }
+
+    #[test]
+    fn at_clamps_past_end() {
+        let tr = BandwidthTrace::generate(&TraceConfig::paper_20min(7));
+        assert_eq!(tr.at(1e9), *tr.samples_mbps.last().unwrap());
+    }
+}

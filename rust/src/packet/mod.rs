@@ -1,0 +1,250 @@
+//! Wire format for UAV -> server packets.
+//!
+//! The Insight payload is the tanh-bounded bottleneck code quantized to int8
+//! (fixed scale 127 — matching the straight-through quantizer the bottleneck
+//! was trained with in python/compile/train.py), plus the CLIP tokens, also
+//! int8-quantized with a per-packet scale.  A CRC32 protects the payload.
+//!
+//! `wire_bytes` carries the paper-scale payload size used by the link model
+//! (Table 3: 2.92 / 1.35 / 0.83 MB) — see netsim::link for why.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+pub const MAGIC: u32 = 0x41565259; // "AVRY"
+pub const VERSION: u16 = 1;
+
+/// Which stream this packet belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamKind {
+    Context = 0,
+    Insight = 1,
+}
+
+/// A UAV->server packet before/after wire serialization.
+#[derive(Clone, Debug)]
+pub struct Packet {
+    pub kind: StreamKind,
+    /// Sequence number assigned by the edge pipeline.
+    pub seq: u64,
+    /// Virtual capture timestamp (seconds).
+    pub t_capture: f64,
+    /// Insight only: tier index into the LUT (identifies the tail artifact).
+    pub tier: u8,
+    /// Insight only: split point k.
+    pub split: u8,
+    /// Insight only: quantized bottleneck code (tokens x M).
+    pub code_q: Vec<i8>,
+    pub code_shape: (usize, usize),
+    /// Quantized CLIP tokens (clip_tokens x clip_dim) + their scale.
+    pub clip_q: Vec<i8>,
+    pub clip_shape: (usize, usize),
+    pub clip_scale: f32,
+    /// Paper-scale bytes the link model charges for this packet.
+    pub wire_bytes: f64,
+}
+
+/// Quantize a tanh-bounded f32 tensor to int8 at fixed scale 127.
+pub fn quantize_code(t: &Tensor) -> Result<(Vec<i8>, (usize, usize))> {
+    let data = t.as_f32()?;
+    let shape = t.shape();
+    if shape.len() != 2 {
+        bail!("code must be rank 2, got {:?}", shape);
+    }
+    let q = data.iter().map(|&x| (x.clamp(-1.0, 1.0) * 127.0).round() as i8).collect();
+    Ok((q, (shape[0], shape[1])))
+}
+
+/// Dequantize a fixed-scale int8 code back to f32.
+pub fn dequantize_code(q: &[i8], shape: (usize, usize)) -> Result<Tensor> {
+    let data: Vec<f32> = q.iter().map(|&v| v as f32 / 127.0).collect();
+    Tensor::f32(vec![shape.0, shape.1], data)
+}
+
+/// Quantize an arbitrary-range f32 tensor with a per-tensor scale.
+pub fn quantize_scaled(t: &Tensor) -> Result<(Vec<i8>, (usize, usize), f32)> {
+    let data = t.as_f32()?;
+    let shape = t.shape();
+    if shape.len() != 2 {
+        bail!("tensor must be rank 2, got {:?}", shape);
+    }
+    let max = data.iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(1e-12);
+    let scale = max / 127.0;
+    let q = data.iter().map(|&x| (x / scale).round().clamp(-127.0, 127.0) as i8).collect();
+    Ok((q, (shape[0], shape[1]), scale))
+}
+
+pub fn dequantize_scaled(q: &[i8], shape: (usize, usize), scale: f32) -> Result<Tensor> {
+    let data: Vec<f32> = q.iter().map(|&v| v as f32 * scale).collect();
+    Tensor::f32(vec![shape.0, shape.1], data)
+}
+
+impl Packet {
+    /// Actual (mini-scale) serialized payload size in bytes.
+    pub fn real_bytes(&self) -> usize {
+        32 + self.code_q.len() + self.clip_q.len()
+    }
+
+    /// Serialize to the length-prefixed wire encoding (used by the TCP
+    /// transport and by tests; the in-process transport passes `Packet`
+    /// structs directly).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.real_bytes() + 64);
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.push(self.kind as u8);
+        out.push(self.tier);
+        out.push(self.split);
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(&self.t_capture.to_le_bytes());
+        out.extend_from_slice(&self.wire_bytes.to_le_bytes());
+        out.extend_from_slice(&(self.code_shape.0 as u32).to_le_bytes());
+        out.extend_from_slice(&(self.code_shape.1 as u32).to_le_bytes());
+        out.extend_from_slice(&(self.clip_shape.0 as u32).to_le_bytes());
+        out.extend_from_slice(&(self.clip_shape.1 as u32).to_le_bytes());
+        out.extend_from_slice(&self.clip_scale.to_le_bytes());
+        let code_bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(self.code_q.as_ptr() as *const u8, self.code_q.len())
+        };
+        let clip_bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(self.clip_q.as_ptr() as *const u8, self.clip_q.len())
+        };
+        out.extend_from_slice(code_bytes);
+        out.extend_from_slice(clip_bytes);
+        let crc = crc32fast::hash(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Packet> {
+        if buf.len() < 57 {
+            bail!("packet too short: {} bytes", buf.len());
+        }
+        let (body, crc_bytes) = buf.split_at(buf.len() - 4);
+        let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+        let got = crc32fast::hash(body);
+        if want != got {
+            bail!("packet CRC mismatch: want {want:08x} got {got:08x}");
+        }
+        let mut off = 0usize;
+        let mut take = |n: usize| -> Result<&[u8]> {
+            if off + n > body.len() {
+                bail!("packet truncated at offset {off}");
+            }
+            let s = &body[off..off + n];
+            off += n;
+            Ok(s)
+        };
+        let magic = u32::from_le_bytes(take(4)?.try_into().unwrap());
+        if magic != MAGIC {
+            bail!("bad packet magic {magic:08x}");
+        }
+        let version = u16::from_le_bytes(take(2)?.try_into().unwrap());
+        if version != VERSION {
+            bail!("unsupported packet version {version}");
+        }
+        let kind = match take(1)?[0] {
+            0 => StreamKind::Context,
+            1 => StreamKind::Insight,
+            other => bail!("bad stream kind {other}"),
+        };
+        let tier = take(1)?[0];
+        let split = take(1)?[0];
+        let seq = u64::from_le_bytes(take(8)?.try_into().unwrap());
+        let t_capture = f64::from_le_bytes(take(8)?.try_into().unwrap());
+        let wire_bytes = f64::from_le_bytes(take(8)?.try_into().unwrap());
+        let c0 = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+        let c1 = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+        let k0 = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+        let k1 = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+        let clip_scale = f32::from_le_bytes(take(4)?.try_into().unwrap());
+        let code_raw = take(c0 * c1)?;
+        let code_q: Vec<i8> = code_raw.iter().map(|&b| b as i8).collect();
+        let clip_raw = take(k0 * k1)?;
+        let clip_q: Vec<i8> = clip_raw.iter().map(|&b| b as i8).collect();
+        Ok(Packet {
+            kind,
+            seq,
+            t_capture,
+            tier,
+            split,
+            code_q,
+            code_shape: (c0, c1),
+            clip_q,
+            clip_shape: (k0, k1),
+            clip_scale,
+            wire_bytes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_packet() -> Packet {
+        Packet {
+            kind: StreamKind::Insight,
+            seq: 42,
+            t_capture: 3.5,
+            tier: 1,
+            split: 1,
+            code_q: vec![-127, 0, 64, 127, 1, -3],
+            code_shape: (2, 3),
+            clip_q: vec![5, -5, 100, -100],
+            clip_shape: (2, 2),
+            clip_scale: 0.031,
+            wire_bytes: 1.35e6,
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let p = sample_packet();
+        let buf = p.encode();
+        let q = Packet::decode(&buf).unwrap();
+        assert_eq!(q.seq, 42);
+        assert_eq!(q.kind, StreamKind::Insight);
+        assert_eq!(q.code_q, p.code_q);
+        assert_eq!(q.clip_q, p.clip_q);
+        assert_eq!(q.code_shape, (2, 3));
+        assert!((q.wire_bytes - 1.35e6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn corrupted_crc_rejected() {
+        let mut buf = sample_packet().encode();
+        let n = buf.len();
+        buf[n / 2] ^= 0xFF;
+        assert!(Packet::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let buf = sample_packet().encode();
+        assert!(Packet::decode(&buf[..buf.len() - 9]).is_err());
+        assert!(Packet::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        let t = Tensor::f32(vec![2, 4], vec![-1.0, -0.5, -0.1, 0.0, 0.1, 0.5, 0.9, 1.0])
+            .unwrap();
+        let (q, shape) = quantize_code(&t).unwrap();
+        let back = dequantize_code(&q, shape).unwrap();
+        for (a, b) in t.as_f32().unwrap().iter().zip(back.as_f32().unwrap()) {
+            assert!((a - b).abs() <= 0.5 / 127.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn scaled_quantize_roundtrip() {
+        let t = Tensor::f32(vec![1, 4], vec![-8.0, 2.0, 0.0, 7.5]).unwrap();
+        let (q, shape, scale) = quantize_scaled(&t).unwrap();
+        let back = dequantize_scaled(&q, shape, scale).unwrap();
+        for (a, b) in t.as_f32().unwrap().iter().zip(back.as_f32().unwrap()) {
+            assert!((a - b).abs() <= scale * 0.5 + 1e-6, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! The PJRT engine thread and its cloneable [`Engine`] handle.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::manifest::Manifest;
+use crate::tensor::Tensor;
+
+use super::loader::load_weight_tensors;
+
+/// How weights reach the device each call — the §Perf lever.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Re-marshal weight literals on every execute (naive baseline).
+    LiteralsEachCall,
+    /// Upload weights once per (artifact, set) as device buffers; each call
+    /// uploads only the runtime inputs (steady-state mode).
+    PreuploadedBuffers,
+}
+
+/// Wall-clock execution statistics per artifact (perf pass instrumentation).
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}
+
+enum Request {
+    Execute {
+        artifact: String,
+        set: String,
+        inputs: Vec<Tensor>,
+        reply: Sender<Result<Vec<Tensor>>>,
+    },
+    Preload {
+        artifact: String,
+        set: String,
+        reply: Sender<Result<()>>,
+    },
+    Stats {
+        reply: Sender<BTreeMap<String, ExecStats>>,
+    },
+    SetMode(ExecMode),
+    Shutdown,
+}
+
+/// Cloneable handle to the engine thread.
+#[derive(Clone)]
+pub struct Engine {
+    tx: Sender<Request>,
+    // Keep the join handle so drop of the *last* Engine shuts the thread down.
+    _shared: Arc<EngineShared>,
+}
+
+struct EngineShared {
+    tx: Sender<Request>,
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for EngineShared {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Engine {
+    /// Spawn the engine thread over a manifest. Artifacts compile lazily.
+    pub fn start(manifest: Manifest, mode: ExecMode) -> Result<Self> {
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("avery-pjrt".into())
+            .spawn(move || worker(manifest, mode, rx, ready_tx))
+            .context("spawning engine thread")?;
+        ready_rx.recv().context("engine thread died during init")??;
+        let shared = Arc::new(EngineShared { tx: tx.clone(), join: Mutex::new(Some(join)) });
+        Ok(Engine { tx, _shared: shared })
+    }
+
+    /// Execute one artifact synchronously with the given weight set.
+    pub fn execute(&self, artifact: &str, set: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Execute {
+                artifact: artifact.to_string(),
+                set: set.to_string(),
+                inputs,
+                reply,
+            })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped reply"))?
+    }
+
+    /// Compile an artifact and upload its weights ahead of time.
+    pub fn preload(&self, artifact: &str, set: &str) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Preload { artifact: artifact.to_string(), set: set.to_string(), reply })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped reply"))?
+    }
+
+    /// Per-artifact wall-clock stats (perf pass).
+    pub fn stats(&self) -> BTreeMap<String, ExecStats> {
+        let (reply, rx) = channel();
+        if self.tx.send(Request::Stats { reply }).is_err() {
+            return BTreeMap::new();
+        }
+        rx.recv().unwrap_or_default()
+    }
+
+    /// Switch weight-delivery mode (affects artifacts loaded afterwards).
+    pub fn set_mode(&self, mode: ExecMode) {
+        let _ = self.tx.send(Request::SetMode(mode));
+    }
+}
+
+/// Engine-thread-local state for one compiled artifact.
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+    /// set name -> weight literals (LiteralsEachCall mode).
+    literals: BTreeMap<String, Vec<xla::Literal>>,
+    /// set name -> pre-uploaded device buffers (PreuploadedBuffers mode).
+    buffers: BTreeMap<String, Vec<xla::PjRtBuffer>>,
+}
+
+fn worker(
+    manifest: Manifest,
+    mode: ExecMode,
+    rx: std::sync::mpsc::Receiver<Request>,
+    ready: Sender<Result<()>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("PjRtClient::cpu failed: {e}")));
+            return;
+        }
+    };
+    let mut mode = mode;
+    let mut cache: BTreeMap<String, Loaded> = BTreeMap::new();
+    let mut stats: BTreeMap<String, ExecStats> = BTreeMap::new();
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::SetMode(m) => mode = m,
+            Request::Stats { reply } => {
+                let _ = reply.send(stats.clone());
+            }
+            Request::Preload { artifact, set, reply } => {
+                let r = ensure_loaded(&client, &manifest, &mut cache, &mut stats, &artifact, &set, mode)
+                    .map(|_| ());
+                let _ = reply.send(r);
+            }
+            Request::Execute { artifact, set, inputs, reply } => {
+                let r = (|| -> Result<Vec<Tensor>> {
+                    ensure_loaded(&client, &manifest, &mut cache, &mut stats, &artifact, &set, mode)?;
+                    let loaded = cache.get(&artifact).unwrap();
+                    let t0 = Instant::now();
+                    let outs = run_one(&client, loaded, &set, &inputs, mode)?;
+                    let st = stats.entry(artifact.clone()).or_default();
+                    st.calls += 1;
+                    st.total_secs += t0.elapsed().as_secs_f64();
+                    Ok(outs)
+                })();
+                let _ = reply.send(r);
+            }
+        }
+    }
+}
+
+fn ensure_loaded(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    cache: &mut BTreeMap<String, Loaded>,
+    stats: &mut BTreeMap<String, ExecStats>,
+    artifact: &str,
+    set: &str,
+    mode: ExecMode,
+) -> Result<()> {
+    if !cache.contains_key(artifact) {
+        let spec = manifest.artifact(artifact)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.hlo.to_str().context("hlo path utf8")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", spec.hlo.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {artifact}: {e}"))?;
+        stats.entry(artifact.to_string()).or_default().compile_secs +=
+            t0.elapsed().as_secs_f64();
+        cache.insert(
+            artifact.to_string(),
+            Loaded { exe, literals: BTreeMap::new(), buffers: BTreeMap::new() },
+        );
+    }
+    // Load + (optionally) upload the requested weight set.
+    let spec = manifest.artifact(artifact)?;
+    let loaded = cache.get_mut(artifact).unwrap();
+    if !loaded.literals.contains_key(set) {
+        let path = spec
+            .weights
+            .get(set)
+            .with_context(|| format!("artifact {artifact} has no weight set `{set}`"))?;
+        let wf = load_weight_tensors(spec, path)?;
+        let lits: Vec<xla::Literal> =
+            wf.tensors.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        loaded.literals.insert(set.to_string(), lits);
+    }
+    if mode == ExecMode::PreuploadedBuffers && !loaded.buffers.contains_key(set) {
+        let lits = loaded.literals.get(set).unwrap();
+        let bufs: Vec<xla::PjRtBuffer> = lits
+            .iter()
+            .map(|l| {
+                let b = client
+                    .buffer_from_host_literal(None, l)
+                    .map_err(|e| anyhow!("uploading weights for {artifact}: {e}"))?;
+                // Force the async host->device transfer to complete before the
+                // buffer is used: the crate exposes no GetReadyFuture, and
+                // in-flight transfers racing later compile/execute calls
+                // crash inside XLA (ShapeUtil CHECK). One-time cost per
+                // (artifact, set).
+                b.to_literal_sync()
+                    .map_err(|e| anyhow!("syncing weight upload for {artifact}: {e}"))?;
+                Ok(b)
+            })
+            .collect::<Result<_>>()?;
+        loaded.buffers.insert(set.to_string(), bufs);
+    }
+    Ok(())
+}
+
+fn run_one(
+    client: &xla::PjRtClient,
+    loaded: &Loaded,
+    set: &str,
+    inputs: &[Tensor],
+    mode: ExecMode,
+) -> Result<Vec<Tensor>> {
+    let result = match mode {
+        ExecMode::LiteralsEachCall => {
+            let mut args: Vec<xla::Literal> = Vec::new();
+            for l in loaded.literals.get(set).into_iter().flatten() {
+                // Literal has no cheap clone; convert via reshape to same dims.
+                let shape = l.array_shape()?;
+                args.push(l.reshape(shape.dims())?);
+            }
+            for t in inputs {
+                args.push(t.to_literal()?);
+            }
+            loaded.exe.execute::<xla::Literal>(&args)?
+        }
+        ExecMode::PreuploadedBuffers => {
+            let weight_bufs = loaded
+                .buffers
+                .get(set)
+                .with_context(|| format!("weight set `{set}` not uploaded"))?;
+            let mut args: Vec<&xla::PjRtBuffer> = weight_bufs.iter().collect();
+            // The H2D transfer behind buffer_from_host_literal is async and
+            // captures a LiteralSlice into OUR literal; neither execute_b
+            // nor buffer drop awaits it (the vendored literal-path `execute`
+            // does, which is why LiteralsEachCall is unconditionally safe).
+            // Dropping the literal while the copy lambda is pending reads a
+            // dangling Shape and aborts inside ShapeUtil. Force readiness of
+            // every input buffer before releasing its source literal —
+            // inputs are small (<= 48 KB), so the extra sync is noise next
+            // to the 5 MB weight re-marshal this mode avoids.
+            let input_lits: Vec<xla::Literal> =
+                inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+            let input_bufs: Vec<xla::PjRtBuffer> = input_lits
+                .iter()
+                .map(|lit| {
+                    let b = client
+                        .buffer_from_host_literal(None, lit)
+                        .map_err(|e| anyhow!("uploading input: {e}"))?;
+                    b.to_literal_sync()
+                        .map_err(|e| anyhow!("syncing input upload: {e}"))?;
+                    Ok(b)
+                })
+                .collect::<Result<Vec<_>>>()?;
+            for b in &input_bufs {
+                args.push(b);
+            }
+            let out = loaded.exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+            drop(input_bufs);
+            drop(input_lits);
+            out
+        }
+    };
+    // return_tuple=True => single tuple output literal.
+    let lit = result[0][0].to_literal_sync()?;
+    let parts = lit.to_tuple()?;
+    let mut outs = Vec::with_capacity(parts.len());
+    for p in parts {
+        let shape = p.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        outs.push(Tensor::from_literal(&p, dims)?);
+    }
+    Ok(outs)
+}

@@ -1,0 +1,111 @@
+//! Weight-binary loading: `weights/<artifact>.<set>.bin` is the f32
+//! little-endian concatenation of every parameter leaf in exact HLO
+//! parameter order (see aot.py `Exporter.export`).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::manifest::{ArtifactSpec, DType};
+use crate::tensor::Tensor;
+
+/// A parsed weight file: one tensor per leading HLO parameter, in order.
+#[derive(Debug)]
+pub struct WeightFile {
+    pub tensors: Vec<Tensor>,
+    pub total_bytes: usize,
+}
+
+/// Read and split a weight binary according to the artifact's param specs.
+pub fn load_weight_tensors(spec: &ArtifactSpec, path: &Path) -> Result<WeightFile> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading weights {}", path.display()))?;
+    let want: usize = spec.weight_numel() * 4;
+    if bytes.len() != want {
+        bail!(
+            "weight file {} has {} bytes, manifest wants {} ({} params)",
+            path.display(),
+            bytes.len(),
+            want,
+            spec.params.len()
+        );
+    }
+    let mut tensors = Vec::with_capacity(spec.params.len());
+    let mut off = 0usize;
+    for p in &spec.params {
+        let n = p.numel();
+        let slice = &bytes[off..off + n * 4];
+        off += n * 4;
+        match p.dtype {
+            DType::F32 => {
+                let data: Vec<f32> = slice
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                tensors.push(Tensor::f32(p.dims.clone(), data)?);
+            }
+            DType::I32 => {
+                let data: Vec<i32> = slice
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                tensors.push(Tensor::i32(p.dims.clone(), data)?);
+            }
+        }
+    }
+    Ok(WeightFile { tensors, total_bytes: bytes.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::ParamSpec;
+    use std::collections::BTreeMap;
+    use std::io::Write;
+
+    fn spec_with(params: Vec<ParamSpec>) -> ArtifactSpec {
+        ArtifactSpec {
+            name: "t".into(),
+            hlo: "t.hlo.txt".into(),
+            weights: BTreeMap::new(),
+            params,
+            inputs: vec![],
+            outputs: vec![],
+            golden: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn splits_in_order() {
+        let spec = spec_with(vec![
+            ParamSpec { name: "a".into(), dtype: DType::F32, dims: vec![2] },
+            ParamSpec { name: "b".into(), dtype: DType::F32, dims: vec![1, 3] },
+        ]);
+        let dir = std::env::temp_dir().join("avery_loader_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let mut f = std::fs::File::create(&path).unwrap();
+        for v in [1.0f32, 2.0, 3.0, 4.0, 5.0] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        drop(f);
+        let w = load_weight_tensors(&spec, &path).unwrap();
+        assert_eq!(w.tensors.len(), 2);
+        assert_eq!(w.tensors[0].as_f32().unwrap(), &[1.0, 2.0]);
+        assert_eq!(w.tensors[1].as_f32().unwrap(), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let spec = spec_with(vec![ParamSpec {
+            name: "a".into(),
+            dtype: DType::F32,
+            dims: vec![4],
+        }]);
+        let dir = std::env::temp_dir().join("avery_loader_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        std::fs::write(&path, [0u8; 8]).unwrap();
+        assert!(load_weight_tensors(&spec, &path).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the L3 hot path.
+//!
+//! XLA handles (`PjRtClient`, `PjRtLoadedExecutable`, `Literal`) are
+//! `Rc`-based and therefore `!Send`, so all PJRT state lives on a dedicated
+//! **engine thread**; the rest of the system talks to it through an mpsc
+//! request channel via the cloneable [`Engine`] handle.  Artifacts are
+//! compiled lazily on first use and cached; weight binaries are uploaded to
+//! device buffers once per (artifact, weight-set) and reused by every call
+//! (`execute_b`), so the steady-state request path moves only the runtime
+//! inputs.
+
+mod engine;
+mod loader;
+
+pub use engine::{Engine, ExecMode, ExecStats};
+pub use loader::{load_weight_tensors, WeightFile};

@@ -1,0 +1,129 @@
+//! Telemetry sinks: CSV writers for the figure-regenerating missions and a
+//! compact fixed-width table printer for terminal summaries.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A CSV writer with a fixed header.
+pub struct Csv {
+    file: std::fs::File,
+    pub path: PathBuf,
+    cols: usize,
+}
+
+impl Csv {
+    pub fn create(path: &Path, header: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut file = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(Self { file, path: path.to_path_buf(), cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> Result<()> {
+        debug_assert_eq!(values.len(), self.cols, "csv column mismatch");
+        writeln!(self.file, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    pub fn rowf(&mut self, values: &[f64]) -> Result<()> {
+        let vs: Vec<String> = values.iter().map(|v| format!("{v:.6}")).collect();
+        self.row(&vs)
+    }
+}
+
+/// Fixed-width terminal table (the "same rows the paper reports").
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let total: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        println!("\n{}", self.title);
+        println!("{}", "-".repeat(total.min(120)));
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let w = widths.get(i).copied().unwrap_or(c.len());
+                s.push_str(&format!(" {c:>w$} |"));
+            }
+            s
+        };
+        println!("{}", fmt_row(&self.header));
+        println!("{}", "-".repeat(total.min(120)));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+        println!("{}", "-".repeat(total.min(120)));
+    }
+}
+
+/// Format a float cell.
+pub fn f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+/// Format a percentage cell.
+pub fn pct(v: f64) -> String {
+    format!("{:.2}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_writes_rows() {
+        let dir = std::env::temp_dir().join("avery_telemetry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        let mut c = Csv::create(&path, &["a", "b"]).unwrap();
+        c.rowf(&[1.0, 2.0]).unwrap();
+        c.row(&["x".into(), "y".into()]).unwrap();
+        drop(c);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("a,b\n"));
+        assert!(text.contains("1.000000,2.000000"));
+        assert!(text.contains("x,y"));
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new("demo", &["col1", "col2"]);
+        t.row(&["a".into(), "b".into()]);
+        t.print();
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f(1.23456, 2), "1.23");
+        assert_eq!(pct(0.9398), "93.98%");
+    }
+}

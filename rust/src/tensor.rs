@@ -1,0 +1,115 @@
+//! Host tensors exchanged with the PJRT runtime and across the (simulated)
+//! radio link.  Deliberately minimal: row-major `f32`/`i32` with shape.
+
+use anyhow::{bail, Result};
+
+/// A row-major host tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor::F32 { shape, data })
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor::I32 { shape, data })
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor::F32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    /// Bytes on the (real) wire before the paper-scale wire model is applied.
+    pub fn nbytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    /// Convert to an XLA literal for execution.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    /// Read back from an XLA literal (f32 or i32 arrays).
+    pub fn from_literal(lit: &xla::Literal, shape: Vec<usize>) -> Result<Self> {
+        match lit.ty()? {
+            xla::ElementType::F32 => Tensor::f32(shape, lit.to_vec::<f32>()?),
+            xla::ElementType::S32 => Tensor::i32(shape, lit.to_vec::<i32>()?),
+            other => bail!("unsupported literal element type {:?}", other),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::i32(vec![2], vec![1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn roundtrip_shapes() {
+        let t = Tensor::f32(vec![4, 2], (0..8).map(|i| i as f32).collect()).unwrap();
+        assert_eq!(t.shape(), &[4, 2]);
+        assert_eq!(t.len(), 8);
+        assert_eq!(t.nbytes(), 32);
+    }
+
+    #[test]
+    fn zeros_builder() {
+        let t = Tensor::zeros_f32(vec![3, 3]);
+        assert_eq!(t.len(), 9);
+        assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,172 @@
+//! Byte transports between the UAV edge process and the cloud server.
+//!
+//! The virtual-time missions call edge/cloud directly (the link simulator
+//! supplies timing), but the system also runs as two real processes: the
+//! `distributed_serve` example wires `EdgePipeline` to `CloudServer` over
+//! TCP loopback with this length-prefixed framing.  No tokio in the offline
+//! crate set — blocking std::net + threads.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::{bail, Context, Result};
+
+/// Maximum frame we will accept (guards against corrupt length prefixes).
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// A bidirectional message transport.
+pub trait Transport {
+    fn send(&mut self, frame: &[u8]) -> Result<()>;
+    fn recv(&mut self) -> Result<Vec<u8>>;
+}
+
+/// In-process transport (paired mpsc byte channels).
+pub struct InProc {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+}
+
+impl InProc {
+    /// Create a connected pair (a <-> b).
+    pub fn pair() -> (InProc, InProc) {
+        let (atx, brx) = channel();
+        let (btx, arx) = channel();
+        (InProc { tx: atx, rx: arx }, InProc { tx: btx, rx: brx })
+    }
+}
+
+impl Transport for InProc {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        self.tx.send(frame.to_vec()).map_err(|_| anyhow::anyhow!("peer closed"))
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        self.rx.recv().map_err(|_| anyhow::anyhow!("peer closed"))
+    }
+}
+
+/// TCP transport with u32-LE length-prefixed frames.
+pub struct Tcp {
+    stream: TcpStream,
+}
+
+impl Tcp {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connecting")?;
+        stream.set_nodelay(true).ok();
+        Ok(Self { stream })
+    }
+
+    pub fn from_stream(stream: TcpStream) -> Self {
+        stream.set_nodelay(true).ok();
+        Self { stream }
+    }
+
+    /// Bind + accept one peer (the example server's accept loop).
+    pub fn accept_one<A: ToSocketAddrs>(addr: A) -> Result<(Self, std::net::SocketAddr)> {
+        let listener = TcpListener::bind(addr).context("binding")?;
+        let local = listener.local_addr()?;
+        let (stream, _) = listener.accept().context("accepting")?;
+        Ok((Self::from_stream(stream), local))
+    }
+}
+
+impl Transport for Tcp {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        if frame.len() > MAX_FRAME {
+            bail!("frame too large: {}", frame.len());
+        }
+        self.stream.write_all(&(frame.len() as u32).to_le_bytes())?;
+        self.stream.write_all(frame)?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        let mut len_bytes = [0u8; 4];
+        self.stream.read_exact(&mut len_bytes).context("reading frame length")?;
+        let len = u32::from_le_bytes(len_bytes) as usize;
+        if len > MAX_FRAME {
+            bail!("incoming frame too large: {len}");
+        }
+        let mut buf = vec![0u8; len];
+        self.stream.read_exact(&mut buf).context("reading frame body")?;
+        Ok(buf)
+    }
+}
+
+/// A request frame for the distributed example: packet bytes + prompt + set.
+pub fn encode_request(packet_bytes: &[u8], prompt: &str, set: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(packet_bytes.len() + prompt.len() + 16);
+    out.extend_from_slice(&(packet_bytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(packet_bytes);
+    out.extend_from_slice(&(prompt.len() as u32).to_le_bytes());
+    out.extend_from_slice(prompt.as_bytes());
+    out.extend_from_slice(&(set.len() as u32).to_le_bytes());
+    out.extend_from_slice(set.as_bytes());
+    out
+}
+
+pub fn decode_request(frame: &[u8]) -> Result<(Vec<u8>, String, String)> {
+    let mut off = 0usize;
+    let mut take = |n: usize| -> Result<&[u8]> {
+        if off + n > frame.len() {
+            bail!("request truncated");
+        }
+        let s = &frame[off..off + n];
+        off += n;
+        Ok(s)
+    };
+    let plen = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+    let pkt = take(plen)?.to_vec();
+    let slen = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+    let prompt = String::from_utf8(take(slen)?.to_vec()).context("prompt utf8")?;
+    let klen = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+    let set = String::from_utf8(take(klen)?.to_vec()).context("set utf8")?;
+    Ok((pkt, prompt, set))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inproc_roundtrip() {
+        let (mut a, mut b) = InProc::pair();
+        a.send(b"hello").unwrap();
+        assert_eq!(b.recv().unwrap(), b"hello");
+        b.send(b"world").unwrap();
+        assert_eq!(a.recv().unwrap(), b"world");
+    }
+
+    #[test]
+    fn tcp_roundtrip_loopback() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = Tcp::from_stream(stream);
+            let msg = t.recv().unwrap();
+            t.send(&msg).unwrap();
+        });
+        let mut c = Tcp::connect(addr).unwrap();
+        c.send(b"ping-pong-payload").unwrap();
+        assert_eq!(c.recv().unwrap(), b"ping-pong-payload");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let frame = encode_request(b"\x01\x02\x03", "find people", "ft");
+        let (pkt, prompt, set) = decode_request(&frame).unwrap();
+        assert_eq!(pkt, vec![1, 2, 3]);
+        assert_eq!(prompt, "find people");
+        assert_eq!(set, "ft");
+    }
+
+    #[test]
+    fn truncated_request_rejected() {
+        let frame = encode_request(b"abc", "p", "s");
+        assert!(decode_request(&frame[..frame.len() - 2]).is_err());
+    }
+}

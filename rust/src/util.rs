@@ -1,0 +1,199 @@
+//! Small self-contained utilities: a deterministic PRNG (the offline crate
+//! set has no `rand`), line-record parsing helpers for the artifact metadata,
+//! and a tiny stats toolkit used by telemetry and the bench harness.
+
+/// xorshift64* — deterministic, seedable, good enough for workload generation
+/// and property-test case generation. Never used for anything cryptographic.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.max(1).wrapping_mul(0x9E3779B97F4A7C15) | 1 }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n.max(1) as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+/// FNV-1a 32-bit — MUST stay in exact sync with python/compile/data.py.
+pub fn fnv1a32(s: &str) -> u32 {
+    let mut h: u32 = 0x811C9DC5;
+    for b in s.as_bytes() {
+        h ^= *b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Parse "a,b,c" into dims; "scalar" -> [].
+pub fn parse_dims(s: &str) -> Vec<usize> {
+    if s == "scalar" {
+        return vec![];
+    }
+    s.split(',').filter(|t| !t.is_empty()).map(|t| t.parse().unwrap_or(0)).collect()
+}
+
+/// Summary statistics over a sample of f64s.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Stats {
+    pub fn from(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return Self::default();
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n.max(1) as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| sorted[(((n - 1) as f64) * p).round() as usize];
+        Self {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+        }
+    }
+}
+
+/// An exponentially-weighted moving average (bandwidth estimator helper).
+#[derive(Clone, Copy, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        Self { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => self.alpha * x + (1.0 - self.alpha) * v,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_uniform_bounds() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.range(3.0, 9.0);
+            assert!((3.0..9.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn rng_below_in_range() {
+        let mut r = Rng::new(9);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn fnv_matches_python_reference() {
+        // Golden values from python: fnv1a32("flood") etc.
+        assert_eq!(fnv1a32(""), 0x811C9DC5);
+        assert_eq!(fnv1a32("a"), 0xE40C292C);
+    }
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        e.update(10.0);
+        for _ in 0..64 {
+            e.update(20.0);
+        }
+        assert!((e.get().unwrap() - 20.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn parse_dims_ok() {
+        assert_eq!(parse_dims("64,128"), vec![64, 128]);
+        assert!(parse_dims("scalar").is_empty());
+    }
+
+    #[test]
+    fn normal_mean_near_zero() {
+        let mut r = Rng::new(11);
+        let m: f64 = (0..20_000).map(|_| r.normal()).sum::<f64>() / 20_000.0;
+        assert!(m.abs() < 0.05, "mean {m}");
+    }
+}
