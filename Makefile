@@ -1,0 +1,16 @@
+# Build entrypoints documented in README.md / DESIGN.md.
+
+.PHONY: artifacts build test bench
+
+# Train mini-LISA, profile the LUT, AOT-lower every path to artifacts/.
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo build --release && cargo test -q
+
+bench:
+	cargo bench

@@ -8,51 +8,30 @@
 use std::net::TcpListener;
 use std::path::Path;
 
-use avery::cloud::CloudServer;
-use avery::coordinator::{classify_intent, TierId};
+use avery::cloud::{decode_response, CloudPool};
+use avery::coordinator::TierId;
 use avery::edge::EdgePipeline;
 use avery::eval::mask_iou;
 use avery::mission::Env;
-use avery::packet::Packet;
 use avery::runtime::ExecMode;
-use avery::transport::{decode_request, encode_request, Tcp, Transport};
+use avery::transport::{encode_request, Tcp, Transport};
 
 fn main() -> anyhow::Result<()> {
     let artifacts = avery::find_artifacts(None)?;
 
     // ---- server process (thread here; identical over a real network) ----
+    // A two-worker CloudPool session loop: the same code path `avery fleet`
+    // uses in-process, here behind the TCP framing.
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
     let server_artifacts = artifacts.clone();
     let server = std::thread::spawn(move || -> anyhow::Result<()> {
         let env = Env::load(&server_artifacts, Path::new("out"), ExecMode::PreuploadedBuffers)?;
-        let cloud = CloudServer::new(env.engine.clone());
+        let pool = CloudPool::new(vec![env.engine.clone(), env.engine.clone()]);
         let (stream, _) = listener.accept()?;
         let mut t = Tcp::from_stream(stream);
-        loop {
-            let frame = match t.recv() {
-                Ok(f) => f,
-                Err(_) => break, // client closed
-            };
-            if frame == b"shutdown" {
-                break;
-            }
-            let (pkt_bytes, prompt, set) = decode_request(&frame)?;
-            let pkt = Packet::decode(&pkt_bytes)?;
-            let intent = classify_intent(&prompt);
-            let resp = cloud.process(&pkt, &intent.token_ids, &set)?;
-            let mut out = Vec::new();
-            let mask = resp.mask_logits.map(|m| m.as_f32().unwrap().to_vec()).unwrap_or_default();
-            out.extend_from_slice(&(resp.presence.len() as u32).to_le_bytes());
-            for p in &resp.presence {
-                out.extend_from_slice(&p.to_le_bytes());
-            }
-            out.extend_from_slice(&(mask.len() as u32).to_le_bytes());
-            for v in &mask {
-                out.extend_from_slice(&v.to_le_bytes());
-            }
-            t.send(&out)?;
-        }
+        let served = pool.serve_session(&mut t, "ft")?;
+        eprintln!("cloud session closed after {served} requests");
         Ok(())
     });
 
@@ -70,15 +49,7 @@ fn main() -> anyhow::Result<()> {
         let pkt_bytes = pkt.encode();
         t.send(&encode_request(&pkt_bytes, prompt, "ft"))?;
         let resp = t.recv()?;
-        // decode response
-        let np = u32::from_le_bytes(resp[0..4].try_into().unwrap()) as usize;
-        let mut off = 4 + np * 4;
-        let nm = u32::from_le_bytes(resp[off..off + 4].try_into().unwrap()) as usize;
-        off += 4;
-        let mask: Vec<f32> = resp[off..off + nm * 4]
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
+        let (_presence, mask) = decode_response(&resp)?;
         let s = mask_iou(&mask, &scene.masks[*class_id], 0.0);
         let iou = if s.union > 0.0 { s.intersection / s.union } else { 1.0 };
         iou_sum += iou;

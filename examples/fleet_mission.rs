@@ -1,0 +1,44 @@
+//! Fleet demo: six heterogeneous UAVs (mixed Insight/Context intents,
+//! staggered launches) contending for one disaster-zone uplink while a
+//! two-worker cloud pool serves every session — the `avery fleet`
+//! subsystem in miniature (see DESIGN.md "Fleet subsystem").
+//!
+//!     cargo run --release --example fleet_mission
+
+use std::path::Path;
+
+use avery::coordinator::MissionGoal;
+use avery::mission::{run_fleet, Env, FleetOptions};
+use avery::runtime::ExecMode;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = avery::find_artifacts(None)?;
+    let env = Env::load(&artifacts, Path::new("out"), ExecMode::PreuploadedBuffers)?;
+
+    let opts = FleetOptions {
+        uavs: 6,
+        workers: 2,
+        duration_secs: 180.0,
+        goal: MissionGoal::PrioritizeAccuracy,
+        exec_every: 4, // subsample HLO execution to keep the demo quick
+        seed: 7,
+    };
+    let run = run_fleet(&env, &opts)?;
+
+    println!("\nWhat to look for:");
+    println!(
+        "  * contention: each Insight UAV senses roughly a 1/{} slice of the \
+         8-20 Mbps trace and its controller drops tiers accordingly",
+        opts.uavs
+    );
+    println!(
+        "  * fairness: Jain index {:.3} across Insight UAVs (1.0 = perfectly even)",
+        run.jain_pps
+    );
+    println!(
+        "  * the cloud pool served {} packets at {:.1}% virtual utilization",
+        run.delivered_total,
+        run.server_utilization * 100.0
+    );
+    Ok(())
+}

@@ -337,7 +337,7 @@ def build(out_dir: str, quick: bool = False, log=print):
     # by default: after the global-standardization fix the reconstruction-
     # trained bottleneck is already near-lossless (HA within ~4 IoU points of
     # the uncompressed pipeline), and distilling toward one model's decoder
-    # measurably hurt the other's accuracy. See EXPERIMENTS.md.
+    # measurably hurt the other's accuracy. See DESIGN.md "Substitutions" #5.
     act_cache = {}
     steps_distill = 0
     seg_o = T.precompute_seg_embeds(model_o, arr_mixed[0], arr_mixed[1])

@@ -2,14 +2,31 @@
 //! matching tail artifact (bottleneck decode -> SAM suffix -> LLM trunk ->
 //! mask decoder, or the text-only context responder), and produce the
 //! operator-facing response (paper §4.2).
+//!
+//! Two server shapes share the same request path:
+//! * [`CloudServer`] — the original single-session server; synchronous
+//!   `process` over one engine handle.
+//! * [`CloudPool`] — a concurrent multi-session server (DESIGN.md "Fleet
+//!   subsystem"): a worker pool draining a shared job queue, with
+//!   per-session weight-set routing over the [`crate::transport`] framing
+//!   and an in-process fast path ([`CloudPool::process_sync`]) the fleet
+//!   simulator uses.  Pass one engine handle per worker: clones of a single
+//!   engine serialize at its thread (queueing model), independent engines
+//!   execute truly in parallel.
 
-use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
-use crate::coordinator::TierId;
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::{classify_intent, TierId};
 use crate::edge::tail_artifact;
 use crate::packet::{dequantize_code, dequantize_scaled, Packet, StreamKind};
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
+use crate::transport::{decode_request, Transport};
 
 /// Operator-facing response.
 #[derive(Clone, Debug)]
@@ -38,6 +55,51 @@ impl CloudResponse {
     }
 }
 
+/// Anything that can serve UAV packets — the seam between the mission state
+/// machines and the server implementation (single-session or pooled).
+pub trait ServePackets {
+    fn serve(&self, pkt: &Packet, prompt_ids: &[i32], set: &str) -> Result<CloudResponse>;
+}
+
+/// Shared request path: dequantize, pick the artifact, execute.
+fn process_packet(
+    engine: &Engine,
+    pkt: &Packet,
+    prompt_ids: &[i32],
+    set: &str,
+) -> Result<CloudResponse> {
+    let clip = dequantize_scaled(&pkt.clip_q, pkt.clip_shape, pkt.clip_scale)?;
+    let pids = Tensor::i32(vec![prompt_ids.len()], prompt_ids.to_vec())?;
+    match pkt.kind {
+        StreamKind::Context => {
+            let outs = engine
+                .execute("context_respond", set, vec![clip, pids])
+                .context("running context_respond")?;
+            Ok(CloudResponse { mask_logits: None, presence: outs[0].as_f32()?.to_vec() })
+        }
+        StreamKind::Insight => {
+            if pkt.code_q.is_empty() {
+                bail!("insight packet without code");
+            }
+            let tier = match pkt.tier {
+                0 => TierId::HighAccuracy,
+                1 => TierId::Balanced,
+                2 => TierId::HighThroughput,
+                other => bail!("bad tier index {other}"),
+            };
+            let code = dequantize_code(&pkt.code_q, pkt.code_shape)?;
+            let artifact = tail_artifact(pkt.split as usize, tier);
+            let outs = engine
+                .execute(&artifact, set, vec![code, clip, pids])
+                .with_context(|| format!("running {artifact}"))?;
+            Ok(CloudResponse {
+                mask_logits: Some(outs[0].clone()),
+                presence: outs[1].as_f32()?.to_vec(),
+            })
+        }
+    }
+}
+
 /// The remote server: owns an engine handle and serves packets.
 pub struct CloudServer {
     pub engine: Engine,
@@ -51,39 +113,235 @@ impl CloudServer {
     /// Process one packet with the operator prompt (token ids) against a
     /// weight set ("orig"/"ft" — which fine-tune serves the query).
     pub fn process(&self, pkt: &Packet, prompt_ids: &[i32], set: &str) -> Result<CloudResponse> {
-        let clip = dequantize_scaled(&pkt.clip_q, pkt.clip_shape, pkt.clip_scale)?;
-        let pids = Tensor::i32(vec![prompt_ids.len()], prompt_ids.to_vec())?;
-        match pkt.kind {
-            StreamKind::Context => {
-                let outs = self
-                    .engine
-                    .execute("context_respond", set, vec![clip, pids])
-                    .context("running context_respond")?;
-                Ok(CloudResponse { mask_logits: None, presence: outs[0].as_f32()?.to_vec() })
-            }
-            StreamKind::Insight => {
-                if pkt.code_q.is_empty() {
-                    bail!("insight packet without code");
-                }
-                let tier = match pkt.tier {
-                    0 => TierId::HighAccuracy,
-                    1 => TierId::Balanced,
-                    2 => TierId::HighThroughput,
-                    other => bail!("bad tier index {other}"),
-                };
-                let code = dequantize_code(&pkt.code_q, pkt.code_shape)?;
-                let artifact = tail_artifact(pkt.split as usize, tier);
-                let outs = self
-                    .engine
-                    .execute(&artifact, set, vec![code, clip, pids])
-                    .with_context(|| format!("running {artifact}"))?;
-                Ok(CloudResponse {
-                    mask_logits: Some(outs[0].clone()),
-                    presence: outs[1].as_f32()?.to_vec(),
-                })
-            }
+        process_packet(&self.engine, pkt, prompt_ids, set)
+    }
+}
+
+impl ServePackets for CloudServer {
+    fn serve(&self, pkt: &Packet, prompt_ids: &[i32], set: &str) -> Result<CloudResponse> {
+        self.process(pkt, prompt_ids, set)
+    }
+}
+
+/// One queued job for the pool.
+struct Job {
+    pkt: Packet,
+    prompt_ids: Vec<i32>,
+    set: String,
+    reply: Sender<Result<CloudResponse>>,
+}
+
+/// Aggregate pool counters (wall-clock; the simulator's *virtual* server
+/// utilization is derived by the fleet driver from tail latencies).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    pub workers: usize,
+    pub completed: u64,
+    /// Summed wall-clock seconds workers spent inside artifact execution.
+    pub busy_secs: f64,
+}
+
+impl PoolStats {
+    /// Fraction of worker capacity used over a wall-clock window.
+    pub fn utilization(&self, wall_secs: f64) -> f64 {
+        if self.workers == 0 || wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.busy_secs / (self.workers as f64 * wall_secs)
+    }
+}
+
+/// Pending response handle returned by [`CloudPool::submit`].
+pub struct Ticket {
+    rx: Receiver<Result<CloudResponse>>,
+}
+
+impl Ticket {
+    pub fn wait(self) -> Result<CloudResponse> {
+        self.rx.recv().map_err(|_| anyhow!("cloud pool worker dropped reply"))?
+    }
+}
+
+/// Concurrent multi-session cloud server: a fixed worker pool draining a
+/// shared job queue.
+pub struct CloudPool {
+    jobs: Sender<Job>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    n_workers: usize,
+    completed: Arc<AtomicU64>,
+    busy_micros: Arc<AtomicU64>,
+}
+
+impl CloudPool {
+    /// Spawn one worker per engine handle.  Handles may be clones of one
+    /// engine (shared execution thread — models a queueing server) or
+    /// independently started engines (true parallel execution).
+    pub fn new(engines: Vec<Engine>) -> Self {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let completed = Arc::new(AtomicU64::new(0));
+        let busy_micros = Arc::new(AtomicU64::new(0));
+        let n_workers = engines.len();
+        let workers = engines
+            .into_iter()
+            .enumerate()
+            .map(|(i, engine)| {
+                let rx = Arc::clone(&rx);
+                let completed = Arc::clone(&completed);
+                let busy = Arc::clone(&busy_micros);
+                std::thread::Builder::new()
+                    .name(format!("avery-cloud-{i}"))
+                    .spawn(move || loop {
+                        // Hold the lock only while popping, never while serving.
+                        let job = match rx.lock().unwrap().recv() {
+                            Ok(j) => j,
+                            Err(_) => break, // pool dropped
+                        };
+                        let t0 = Instant::now();
+                        let r = process_packet(&engine, &job.pkt, &job.prompt_ids, &job.set);
+                        busy.fetch_add(
+                            t0.elapsed().as_micros() as u64,
+                            Ordering::Relaxed,
+                        );
+                        completed.fetch_add(1, Ordering::Relaxed);
+                        let _ = job.reply.send(r);
+                    })
+                    .expect("spawning cloud worker")
+            })
+            .collect();
+        Self { jobs: tx, workers, n_workers, completed, busy_micros }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Enqueue one request; the returned [`Ticket`] resolves when a worker
+    /// finishes it.
+    pub fn submit(&self, pkt: &Packet, prompt_ids: &[i32], set: &str) -> Result<Ticket> {
+        let (reply, rx) = channel();
+        self.jobs
+            .send(Job {
+                pkt: pkt.clone(),
+                prompt_ids: prompt_ids.to_vec(),
+                set: set.to_string(),
+                reply,
+            })
+            .map_err(|_| anyhow!("cloud pool shut down"))?;
+        Ok(Ticket { rx })
+    }
+
+    /// In-process fast path: enqueue and block for the response.  This is
+    /// what the fleet simulator calls — virtual time is charged by the
+    /// mission's timing model, so only the numerics flow through here.
+    pub fn process_sync(&self, pkt: &Packet, prompt_ids: &[i32], set: &str) -> Result<CloudResponse> {
+        self.submit(pkt, prompt_ids, set)?.wait()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            workers: self.n_workers,
+            completed: self.completed.load(Ordering::Relaxed),
+            busy_secs: self.busy_micros.load(Ordering::Relaxed) as f64 / 1e6,
         }
     }
+
+    /// Serve one transport session until the peer closes or sends
+    /// `shutdown`.  Per-session weight-set routing: a `hello <set>` frame
+    /// pins the session's default weight set; individual requests may still
+    /// override it by naming a non-empty set (see
+    /// [`crate::transport::encode_request`]).  Responses use
+    /// [`encode_response`]/[`decode_response`] framing.
+    pub fn serve_session<T: Transport>(&self, transport: &mut T, default_set: &str) -> Result<u64> {
+        let mut session_set = default_set.to_string();
+        let mut served = 0u64;
+        loop {
+            let frame = match transport.recv() {
+                Ok(f) => f,
+                Err(_) => break, // peer closed
+            };
+            if frame == b"shutdown" {
+                break;
+            }
+            if let Some(set) = frame.strip_prefix(b"hello ") {
+                session_set = String::from_utf8_lossy(set).trim().to_string();
+                transport.send(b"ok")?;
+                continue;
+            }
+            let (pkt_bytes, prompt, set) = decode_request(&frame)?;
+            let pkt = Packet::decode(&pkt_bytes)?;
+            let intent = classify_intent(&prompt);
+            let set = if set.is_empty() { session_set.as_str() } else { set.as_str() };
+            let resp = self.process_sync(&pkt, &intent.token_ids, set)?;
+            transport.send(&encode_response(&resp))?;
+            served += 1;
+        }
+        Ok(served)
+    }
+}
+
+impl Drop for CloudPool {
+    fn drop(&mut self) {
+        // Closing the job channel unblocks every worker's recv.
+        let (dead_tx, _) = channel::<Job>();
+        drop(std::mem::replace(&mut self.jobs, dead_tx));
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl ServePackets for CloudPool {
+    fn serve(&self, pkt: &Packet, prompt_ids: &[i32], set: &str) -> Result<CloudResponse> {
+        self.process_sync(pkt, prompt_ids, set)
+    }
+}
+
+/// Serialize a [`CloudResponse`] for the transport layer: presence logits
+/// then the (possibly empty) flattened mask logits.
+pub fn encode_response(resp: &CloudResponse) -> Vec<u8> {
+    let mask: Vec<f32> = resp
+        .mask_logits
+        .as_ref()
+        .and_then(|m| m.as_f32().ok().map(|s| s.to_vec()))
+        .unwrap_or_default();
+    let mut out = Vec::with_capacity(8 + 4 * (resp.presence.len() + mask.len()));
+    out.extend_from_slice(&(resp.presence.len() as u32).to_le_bytes());
+    for p in &resp.presence {
+        out.extend_from_slice(&p.to_le_bytes());
+    }
+    out.extend_from_slice(&(mask.len() as u32).to_le_bytes());
+    for v in &mask {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`encode_response`]: (presence, mask) — mask empty for Context.
+pub fn decode_response(frame: &[u8]) -> Result<(Vec<f32>, Vec<f32>)> {
+    let f32s = |bytes: &[u8]| -> Vec<f32> {
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    };
+    if frame.len() < 4 {
+        bail!("response truncated");
+    }
+    let np = u32::from_le_bytes(frame[0..4].try_into().unwrap()) as usize;
+    let mut off = 4;
+    if off + np * 4 + 4 > frame.len() {
+        bail!("response truncated reading presence");
+    }
+    let presence = f32s(&frame[off..off + np * 4]);
+    off += np * 4;
+    let nm = u32::from_le_bytes(frame[off..off + 4].try_into().unwrap()) as usize;
+    off += 4;
+    if off + nm * 4 > frame.len() {
+        bail!("response truncated reading mask");
+    }
+    let mask = f32s(&frame[off..off + nm * 4]);
+    Ok((presence, mask))
 }
 
 #[cfg(test)]
@@ -97,5 +355,28 @@ mod tests {
         assert!(s.contains("person") && !s.contains("vehicle"));
         let none = CloudResponse { mask_logits: None, presence: vec![-1.0, -1.0] };
         assert!(none.text_answer(&["person", "vehicle"]).contains("No critical"));
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = CloudResponse {
+            mask_logits: Some(Tensor::f32(vec![2, 2], vec![0.5, -0.5, 1.0, -1.0]).unwrap()),
+            presence: vec![1.5, -2.5],
+        };
+        let (presence, mask) = decode_response(&encode_response(&r)).unwrap();
+        assert_eq!(presence, vec![1.5, -2.5]);
+        assert_eq!(mask, vec![0.5, -0.5, 1.0, -1.0]);
+        let ctx = CloudResponse { mask_logits: None, presence: vec![0.1] };
+        let (p, m) = decode_response(&encode_response(&ctx)).unwrap();
+        assert_eq!(p.len(), 1);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn truncated_response_rejected() {
+        let r = CloudResponse { mask_logits: None, presence: vec![1.0, 2.0] };
+        let frame = encode_response(&r);
+        assert!(decode_response(&frame[..frame.len() - 2]).is_err());
+        assert!(decode_response(&[]).is_err());
     }
 }

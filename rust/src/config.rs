@@ -110,6 +110,10 @@ pub struct RunConfig {
     pub seed: u64,
     pub hysteresis: Option<f64>,
     pub exec_mode: ExecMode,
+    /// Fleet size for `avery fleet`.
+    pub uavs: usize,
+    /// Cloud pool worker count for `avery fleet`.
+    pub workers: usize,
 }
 
 impl RunConfig {
@@ -136,6 +140,8 @@ impl RunConfig {
                 Some(v) => Some(v.parse().context("hysteresis not a number")?),
             },
             exec_mode,
+            uavs: kv.get_usize("uavs", 4)?,
+            workers: kv.get_usize("workers", 2)?,
         })
     }
 }
@@ -181,6 +187,16 @@ mod tests {
         assert_eq!(rc.duration_secs, 1200.0);
         assert_eq!(rc.goal, MissionGoal::PrioritizeAccuracy);
         assert_eq!(rc.exec_mode, ExecMode::PreuploadedBuffers);
+        assert_eq!(rc.uavs, 4);
+        assert_eq!(rc.workers, 2);
+    }
+
+    #[test]
+    fn fleet_keys_parse() {
+        let kv = Kv::parse("uavs = 16\nworkers = 8\n").unwrap();
+        let rc = RunConfig::from_kv(&kv).unwrap();
+        assert_eq!(rc.uavs, 16);
+        assert_eq!(rc.workers, 8);
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //! The full-SAM anchor uses the Fig 8 caption ratios (11.8x / 16.6x), which
 //! are consistent with the 93.98% energy-saving headline (1 - 1/16.6);
 //! §5.2.1's prose "12.75 J and 12.7262 s" contradicts both and is treated
-//! as a typo — see EXPERIMENTS.md.
+//! as a typo — see DESIGN.md "Substitutions" #3.
 //!
 //! Our mini-LISA backbone has 8 blocks; split k in [1,8] maps onto the
 //! paper's 31-deep profile by depth fraction: p(k) = 1 + (k-1)*30/7.

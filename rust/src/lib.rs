@@ -8,10 +8,13 @@
 //!
 //! * [`coordinator`] — operator-intent classification, the System LUT
 //!   (Table 3) and the Split Controller (Algorithm 1).
-//! * [`streams`] — the dual-stream scheduler: a high-frequency Context loop
-//!   and a low-frequency Insight loop over a shared virtual clock.
+//! * [`streams`] — the dual-stream scheduler: per-UAV mission state
+//!   machines (a high-frequency Context loop and a low-frequency Insight
+//!   loop) over a shared virtual clock, plus the fleet scheduler that
+//!   drives N heterogeneous UAVs in global event order.
 //! * [`netsim`] — the scripted disaster-zone bandwidth trace and link model
-//!   (8–20 Mbps, stable / volatile / sustained-drop phases).
+//!   (8–20 Mbps, stable / volatile / sustained-drop phases), including the
+//!   contended multi-UAV shared uplink.
 //! * [`energy`] — the Jetson AGX Xavier (MODE_30W_ALL) latency/energy model
 //!   calibrated to the paper's published split-point profile.
 //! * [`packet`] — the wire format: int8-quantized bottleneck codes + CLIP
@@ -19,7 +22,9 @@
 //! * [`baselines`] — static tiers, raw-image-compression offload, full-edge
 //!   and cloud-only execution.
 //! * [`mission`] — drivers that regenerate every table and figure of the
-//!   paper's evaluation (Table 3, Figures 7–10, headline claims).
+//!   paper's evaluation (Table 3, Figures 7–10, headline claims), plus the
+//!   fleet-scale mission (`avery fleet`) served by the concurrent
+//!   [`cloud`] worker pool.
 //!
 //! Python never runs on any path in this crate; the binary is self-contained
 //! once `artifacts/` exists.

@@ -11,12 +11,14 @@
 //! avery fig10      # Fig 10 — accuracy/throughput trade-off scatter
 //! avery headline   # abstract claims H1..H4
 //! avery streams    # §5.2.2 dual-stream characterization + §4.3 demo
+//! avery fleet      # multi-UAV contended-uplink mission (beyond the paper)
 //! avery all        # everything above
 //! ```
 //!
 //! Common options: `--artifacts DIR`, `--out DIR`, `--duration SECS`,
 //! `--goal accuracy|throughput`, `--exec-every N`, `--seed N`,
-//! `--hysteresis H`, `--exec-mode buffers|literals`, `--config FILE`.
+//! `--hysteresis H`, `--exec-mode buffers|literals`, `--config FILE`,
+//! `--uavs N`, `--workers N` (fleet).
 
 use std::path::Path;
 
@@ -24,19 +26,21 @@ use anyhow::{bail, Result};
 
 use avery::config::{Kv, RunConfig};
 use avery::mission::{
-    run_fig10, run_fig7, run_fig8, run_fig9, run_headline, run_streams, run_table3, Env,
-    Fig9Options,
+    run_fig10, run_fig7, run_fig8, run_fig9, run_fleet, run_headline, run_streams,
+    run_table3, Env, Fig9Options, FleetOptions,
 };
 
-const USAGE: &str = "usage: avery <table3|fig7|fig8|fig9|fig10|headline|streams|all> [--options]
+const USAGE: &str = "usage: avery <table3|fig7|fig8|fig9|fig10|headline|streams|fleet|all> [--options]
   --artifacts DIR      artifact directory (default: discover ./artifacts)
   --out DIR            CSV output directory (default: out)
-  --duration SECS      mission length for fig9/fig10/headline (default 1200)
+  --duration SECS      mission length for fig9/fig10/headline/fleet (default 1200)
   --goal MODE          accuracy | throughput (default accuracy)
   --exec-every N       execute HLO every Nth packet (default 1)
   --seed N             trace/workload seed (default 7)
   --hysteresis H       also run the hysteresis ablation at margin H
   --exec-mode M        buffers | literals (default buffers)
+  --uavs N             fleet size for `avery fleet` (default 4)
+  --workers N          cloud pool workers for `avery fleet` (default 2)
   --config FILE        key = value config file (CLI overrides it)";
 
 fn main() -> Result<()> {
@@ -66,6 +70,14 @@ fn main() -> Result<()> {
         ablate_hysteresis: cfg.hysteresis,
         seed: cfg.seed,
     };
+    let fleet_opts = FleetOptions {
+        uavs: cfg.uavs,
+        workers: cfg.workers,
+        duration_secs: cfg.duration_secs,
+        goal: cfg.goal,
+        exec_every: cfg.exec_every,
+        seed: cfg.seed,
+    };
 
     match cmd {
         "table3" => run_table3(&env)?,
@@ -77,6 +89,9 @@ fn main() -> Result<()> {
         "fig10" => run_fig10(&env, &fig9_opts)?,
         "headline" => run_headline(&env, &fig9_opts)?,
         "streams" => run_streams(&env)?,
+        "fleet" => {
+            run_fleet(&env, &fleet_opts)?;
+        }
         "all" => {
             run_table3(&env)?;
             run_fig7(&env)?;
@@ -85,6 +100,7 @@ fn main() -> Result<()> {
             run_fig10(&env, &fig9_opts)?;
             run_headline(&env, &fig9_opts)?;
             run_streams(&env)?;
+            run_fleet(&env, &fleet_opts)?;
         }
         other => bail!("unknown command `{other}`\n{USAGE}"),
     }

@@ -8,17 +8,11 @@ use crate::cloud::CloudServer;
 use crate::coordinator::{classify_intent, IntentLevel, TierId};
 use crate::edge::EdgePipeline;
 use crate::eval::mask_iou;
+use crate::streams::fleet::CONTEXT_PROMPTS;
 use crate::streams::run_context_mission;
 use crate::telemetry::{f, pct, Table};
 
 use super::Env;
-
-const CONTEXT_PROMPTS: &[&str] = &[
-    "what is happening in this sector",
-    "are there any living beings on the rooftops",
-    "are there any stranded vehicles here",
-    "give me a quick status of this scene",
-];
 
 pub fn run_streams(env: &Env) -> Result<()> {
     let run = run_context_mission(
@@ -27,7 +21,7 @@ pub fn run_streams(env: &Env) -> Result<()> {
         &env.lut,
         &env.device,
         60.0,
-        CONTEXT_PROMPTS,
+        &CONTEXT_PROMPTS,
     )?;
     let mut table = Table::new(
         "Dual-stream characterization (§5.2.2)",

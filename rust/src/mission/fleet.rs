@@ -1,0 +1,212 @@
+//! `avery fleet` — the multi-UAV mission driver (DESIGN.md "Fleet
+//! subsystem"): N heterogeneous UAVs (mixed Insight/Context intents,
+//! staggered starts, per-UAV seeds) contend for the scripted disaster-zone
+//! uplink while a concurrent cloud pool serves every session.  Emits
+//! per-UAV and aggregate CSV telemetry: tier occupancy, switches, Jain
+//! fairness over per-UAV throughput, and server utilization.
+
+use anyhow::Result;
+
+use crate::cloud::CloudPool;
+use crate::coordinator::MissionGoal;
+use crate::netsim::{BandwidthTrace, LinkConfig, SharedLink, TraceConfig};
+use crate::streams::fleet::{run_fleet_mission, FleetConfig, FleetRun};
+use crate::streams::{MissionConfig, UavRole};
+use crate::telemetry::{f, pct, Csv, Table};
+
+use super::Env;
+
+#[derive(Clone, Debug)]
+pub struct FleetOptions {
+    /// Fleet size N.
+    pub uavs: usize,
+    /// Cloud pool worker count.
+    pub workers: usize,
+    pub duration_secs: f64,
+    pub goal: MissionGoal,
+    /// Execute HLO on every Nth delivered packet (1 = all; raise to speed up).
+    pub exec_every: usize,
+    pub seed: u64,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        Self {
+            uavs: 4,
+            workers: 2,
+            duration_secs: 1200.0,
+            goal: MissionGoal::PrioritizeAccuracy,
+            exec_every: 1,
+            seed: 7,
+        }
+    }
+}
+
+pub fn run_fleet(env: &Env, opts: &FleetOptions) -> Result<FleetRun> {
+    // Same scripted trace as fig9, scaled if a shorter mission was asked for.
+    let mut trace_cfg = TraceConfig::paper_20min(opts.seed);
+    let scale = opts.duration_secs / trace_cfg.total_secs();
+    if (scale - 1.0).abs() > 1e-9 {
+        for p in &mut trace_cfg.phases {
+            p.secs *= scale;
+        }
+    }
+    let trace = BandwidthTrace::generate(&trace_cfg);
+    let mut link = SharedLink::new(
+        trace,
+        LinkConfig { seed: opts.seed, ..LinkConfig::default() },
+        opts.uavs,
+    );
+
+    let fleet_cfg = FleetConfig {
+        n_uavs: opts.uavs,
+        mission: MissionConfig {
+            duration_secs: opts.duration_secs,
+            goal: opts.goal,
+            exec_every: opts.exec_every,
+            seed: opts.seed,
+            ..MissionConfig::default()
+        },
+        workers: opts.workers,
+        ..FleetConfig::default()
+    };
+
+    let pool = CloudPool::new(vec![env.engine.clone(); opts.workers.max(1)]);
+    let wall0 = std::time::Instant::now();
+    let run = run_fleet_mission(
+        &env.engine,
+        &env.datasets(),
+        &env.lut,
+        &env.device,
+        &mut link,
+        &fleet_cfg,
+        &pool,
+    )?;
+    let wall = wall0.elapsed().as_secs_f64();
+
+    // ---- CSVs ----
+    let mut pu = Csv::create(
+        &env.out_dir.join("fleet_per_uav.csv"),
+        &[
+            "uav", "role", "start_t", "seed", "delivered", "executed", "avg_pps",
+            "avg_iou", "energy_j", "ha_secs", "bal_secs", "ht_secs", "switches",
+            "infeasible_s", "context_acc",
+        ],
+    )?;
+    for o in &run.per_uav {
+        let s = &o.summary;
+        pu.row(&[
+            o.id.to_string(),
+            o.role.name().to_string(),
+            f(o.start_t, 1),
+            o.seed.to_string(),
+            s.delivered.to_string(),
+            s.executed.to_string(),
+            f(s.avg_pps, 4),
+            f(s.avg_iou, 6),
+            f(s.total_energy_j, 2),
+            f(s.tier_secs[0], 1),
+            f(s.tier_secs[1], 1),
+            f(s.tier_secs[2], 1),
+            s.switches.to_string(),
+            s.infeasible_epochs.to_string(),
+            f(o.context_accuracy, 4),
+        ])?;
+    }
+
+    let mut ep = Csv::create(
+        &env.out_dir.join("fleet_epochs.csv"),
+        &["uav", "t", "share_true_mbps", "bandwidth_est_mbps", "tier"],
+    )?;
+    for (uav, e) in &run.epochs {
+        ep.row(&[
+            uav.to_string(),
+            f(e.t, 1),
+            f(e.bandwidth_true_mbps, 4),
+            f(e.bandwidth_est_mbps, 4),
+            e.tier.map(|t| t.index() as i64).unwrap_or(-1).to_string(),
+        ])?;
+    }
+
+    let mut sm = Csv::create(
+        &env.out_dir.join("fleet_summary.csv"),
+        &[
+            "uavs", "workers", "delivered", "executed", "aggregate_pps", "jain_pps",
+            "avg_iou", "switches", "infeasible_s", "server_utilization",
+            "total_energy_j",
+        ],
+    )?;
+    sm.row(&[
+        opts.uavs.to_string(),
+        opts.workers.to_string(),
+        run.delivered_total.to_string(),
+        run.executed_total.to_string(),
+        f(run.aggregate_pps, 4),
+        f(run.jain_pps, 4),
+        f(run.avg_iou, 6),
+        run.switches_total.to_string(),
+        run.infeasible_total.to_string(),
+        f(run.server_utilization, 4),
+        f(run.total_energy_j, 1),
+    ])?;
+
+    // ---- Terminal summary ----
+    let mut table = Table::new(
+        &format!(
+            "Fleet mission — {} UAVs, {:.0} min, {:?}, contended uplink",
+            opts.uavs,
+            opts.duration_secs / 60.0,
+            opts.goal
+        ),
+        &[
+            "UAV", "Role", "Start", "Delivered", "Avg PPS", "Avg IoU / Ctx Acc",
+            "HA/BAL/HT (s)", "Switches", "Infeasible s",
+        ],
+    );
+    for o in &run.per_uav {
+        let s = &o.summary;
+        let quality = match o.role {
+            UavRole::Insight => pct(s.avg_iou),
+            UavRole::Context => format!("{} ctx", pct(o.context_accuracy)),
+        };
+        table.row(&[
+            o.id.to_string(),
+            o.role.name().to_string(),
+            f(o.start_t, 0),
+            s.delivered.to_string(),
+            f(s.avg_pps, 3),
+            quality,
+            format!(
+                "{:.0}/{:.0}/{:.0}",
+                s.tier_secs[0], s.tier_secs[1], s.tier_secs[2]
+            ),
+            s.switches.to_string(),
+            s.infeasible_epochs.to_string(),
+        ]);
+    }
+    table.print();
+
+    let pool_stats = pool.stats();
+    println!(
+        "fleet aggregate: {:.2} PPS over {} UAVs, Jain fairness {:.3}, avg IoU {}",
+        run.aggregate_pps,
+        opts.uavs,
+        run.jain_pps,
+        pct(run.avg_iou)
+    );
+    println!(
+        "cloud: {} workers, virtual utilization {:.1}%, {} requests served, wall busy {:.1}s / {:.1}s run",
+        opts.workers,
+        run.server_utilization * 100.0,
+        pool_stats.completed,
+        pool_stats.busy_secs,
+        wall
+    );
+    println!(
+        "csv: {} / {} / {}",
+        pu.path.display(),
+        ep.path.display(),
+        sm.path.display()
+    );
+    Ok(run)
+}

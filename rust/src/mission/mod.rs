@@ -1,13 +1,15 @@
 //! Mission drivers: one per table/figure in the paper's evaluation
-//! (DESIGN.md experiment index).  Each driver runs the real system through
-//! the PJRT artifacts and prints the same rows/series the paper reports,
-//! plus CSVs for plotting under `out/`.
+//! (DESIGN.md experiment index), plus the fleet-scale driver (`avery
+//! fleet`).  Each driver runs the real system through the PJRT artifacts
+//! and prints the same rows/series the paper reports, plus CSVs for
+//! plotting under `out/`.
 
 mod context;
 mod fig10;
 mod fig7;
 mod fig8;
 mod fig9;
+mod fleet;
 mod headline;
 mod table3;
 
@@ -16,6 +18,7 @@ pub use fig10::run_fig10;
 pub use fig7::run_fig7;
 pub use fig8::run_fig8;
 pub use fig9::{run_fig9, Fig9Options};
+pub use fleet::{run_fleet, FleetOptions};
 pub use headline::run_headline;
 pub use table3::run_table3;
 

@@ -1,6 +1,7 @@
 //! Network substrate: the scripted disaster-zone bandwidth trace, the link
-//! model that turns payload bytes into transmission delay, and the EWMA
-//! bandwidth estimator that feeds the controller's **Sense** stage.
+//! model that turns payload bytes into transmission delay, the contended
+//! multi-UAV [`SharedLink`] (fleet missions), and the EWMA bandwidth
+//! estimator that feeds the controller's **Sense** stage.
 //!
 //! The paper (§5.3.1) evaluates over a 20-minute scripted trace "with stable
 //! periods, high volatility, and sustained drops, all within an 8–20 Mbps
@@ -9,12 +10,47 @@
 //! given the seed.
 
 mod link;
+mod shared;
 mod trace;
 
 pub use link::{Link, LinkConfig, TxOutcome};
+pub use shared::SharedLink;
 pub use trace::{BandwidthTrace, Phase, PhaseKind, TraceConfig};
 
 use crate::util::Ewma;
+
+/// An uplink as seen by one UAV — implemented by the dedicated [`Link`]
+/// (single-UAV missions; the `uav` id is ignored) and the contended
+/// [`SharedLink`] (fleet missions; each UAV senses its fair share).
+/// The [`crate::streams::UavAgent`] state machine is generic over this, so
+/// the same Sense→Gate→Evaluate→Select loop runs unmodified in both worlds.
+pub trait Uplink {
+    /// Ground-truth bandwidth available to `uav` at virtual time `t` (Mbps)
+    /// — the quantity its periodic probe samples (with noise).
+    fn ground_truth(&self, uav: usize, t: f64) -> f64;
+    /// Transmit `wire_bytes` for `uav` starting at `t`.
+    fn transmit(&mut self, uav: usize, t: f64, wire_bytes: f64) -> TxOutcome;
+}
+
+impl Uplink for Link {
+    fn ground_truth(&self, _uav: usize, t: f64) -> f64 {
+        self.bandwidth_at(t)
+    }
+
+    fn transmit(&mut self, _uav: usize, t: f64, wire_bytes: f64) -> TxOutcome {
+        Link::transmit(self, t, wire_bytes)
+    }
+}
+
+impl Uplink for SharedLink {
+    fn ground_truth(&self, uav: usize, t: f64) -> f64 {
+        self.share_at(uav, t)
+    }
+
+    fn transmit(&mut self, uav: usize, t: f64, wire_bytes: f64) -> TxOutcome {
+        SharedLink::transmit(self, uav, t, wire_bytes)
+    }
+}
 
 /// EWMA bandwidth estimator — the controller's Sense stage observes link
 /// goodput samples rather than the (unknowable) ground-truth trace.

@@ -1,0 +1,230 @@
+//! Contended multi-UAV uplink: N UAVs share the scripted disaster-zone
+//! bandwidth trace, each receiving a fair share of the instantaneous rate
+//! (see DESIGN.md "Fleet subsystem" for the contention model).
+//!
+//! The model is processor-sharing at trace resolution: while k transfers
+//! overlap at time t, each progresses at `trace(t) / k`.  A transfer's
+//! duration is integrated step-by-step against the *current* set of
+//! concurrent transfers, so a UAV that starts uploading while two others are
+//! mid-transfer pays a third of the trace rate until they drain.  Each
+//! controller therefore senses *its slice* of the uplink (through goodput
+//! feedback and probes) and adapts to fleet load exactly as it adapts to
+//! trace dynamics — no explicit coordination channel exists between UAVs,
+//! matching AVERY's self-aware, decentralized controller design.
+//!
+//! Determinism: every UAV owns an independent xorshift stream seeded from
+//! `(seed, uav_id)`, so outcomes depend only on the (deterministic)
+//! event order of the fleet scheduler, never on wall-clock interleaving.
+
+use crate::util::Rng;
+
+use super::link::{LinkConfig, TxOutcome};
+use super::trace::BandwidthTrace;
+
+/// One (possibly already drained) transfer on the shared uplink.  Drained
+/// transfers are retained for [`HISTORY_SECS`] so `share_at` can answer
+/// *historical* queries — agents backfill per-second epoch telemetry for
+/// times inside their last multi-second cycle.
+#[derive(Clone, Copy, Debug)]
+struct InFlight {
+    uav: usize,
+    /// Virtual time the transfer started occupying the uplink.
+    from: f64,
+    /// Virtual time at which this transfer releases its share.
+    until: f64,
+}
+
+/// How long drained transfers stay queryable (far beyond any single cycle).
+const HISTORY_SECS: f64 = 64.0;
+
+/// A contended uplink shared by a fleet of UAVs.
+#[derive(Clone, Debug)]
+pub struct SharedLink {
+    trace: BandwidthTrace,
+    cfg: LinkConfig,
+    /// Per-UAV jitter/loss RNG streams (index = uav id).
+    rngs: Vec<Rng>,
+    inflight: Vec<InFlight>,
+}
+
+impl SharedLink {
+    pub fn new(trace: BandwidthTrace, cfg: LinkConfig, n_uavs: usize) -> Self {
+        let rngs = (0..n_uavs)
+            .map(|i| Rng::new(cfg.seed ^ (0xF1EE7 + i as u64).wrapping_mul(0x9E37)))
+            .collect();
+        Self { trace, cfg, rngs, inflight: Vec::new() }
+    }
+
+    pub fn trace(&self) -> &BandwidthTrace {
+        &self.trace
+    }
+
+    /// Number of transfers (other than `uav`'s own) occupying the uplink at
+    /// virtual time `t` — answers historical `t` within [`HISTORY_SECS`].
+    fn others_active(&self, uav: usize, t: f64) -> usize {
+        self.inflight
+            .iter()
+            .filter(|f| f.uav != uav && f.from <= t && f.until > t)
+            .count()
+    }
+
+    /// Drop transfers that drained more than [`HISTORY_SECS`] before `t`.
+    fn reap(&mut self, t: f64) {
+        self.inflight.retain(|f| f.until > t - HISTORY_SECS);
+    }
+
+    /// Ground-truth fair share `uav` received (or would receive) at `t`
+    /// (Mbps) — the quantity its probe senses; also valid for recent past
+    /// times, which epoch-telemetry backfill relies on.
+    pub fn share_at(&self, uav: usize, t: f64) -> f64 {
+        let n = 1 + self.others_active(uav, t);
+        self.trace.at(t) / n as f64
+    }
+
+    /// Full (uncontended) trace bandwidth at `t` — telemetry only.
+    pub fn bandwidth_at(&self, t: f64) -> f64 {
+        self.trace.at(t)
+    }
+
+    /// Transmit `wire_bytes` for `uav` starting at virtual time `t`,
+    /// sharing the trace rate with every concurrent transfer.
+    pub fn transmit(&mut self, uav: usize, t: f64, wire_bytes: f64) -> TxOutcome {
+        self.reap(t);
+        let mut attempts = 1u32;
+        let mut total_secs = self.transfer_secs(uav, t, wire_bytes);
+        let mut delivered = true;
+        let loss = self.cfg.loss_prob;
+        if loss > 0.0 && self.rngs[uav].f64() < loss {
+            attempts = 2;
+            let retry = self.transfer_secs(uav, t + total_secs, wire_bytes);
+            if self.rngs[uav].f64() < loss {
+                delivered = false;
+            }
+            total_secs += retry;
+        }
+        self.inflight.push(InFlight { uav, from: t, until: t + total_secs });
+        let goodput = if total_secs > 0.0 {
+            wire_bytes * 8.0 / 1e6 / total_secs
+        } else {
+            f64::INFINITY
+        };
+        TxOutcome { tx_secs: total_secs, goodput_mbps: goodput, delivered, attempts }
+    }
+
+    /// Integrate the fair-share rate to find how long `wire_bytes` takes
+    /// from `t`.  Concurrent transfers are frozen at their current
+    /// deadlines during the integration (they were sized under the load
+    /// they observed when they started) — a first-order processor-sharing
+    /// approximation that stays deterministic under event ordering.
+    fn transfer_secs(&mut self, uav: usize, t: f64, wire_bytes: f64) -> f64 {
+        let jitter = 1.0 + self.cfg.jitter_std * self.rngs[uav].normal();
+        let mut bits = wire_bytes * 8.0 * jitter.max(0.5);
+        let mut now = t;
+        let mut secs = 0.0;
+        // Step at trace resolution; cap pathological transfers at 10 minutes
+        // of occupancy (mirrors Link::transfer_secs).
+        for _ in 0..6000 {
+            let n = 1 + self.others_active(uav, now);
+            let bw_bps = self.trace.at(now) * 1e6 / n as f64;
+            let step = self.trace.dt.min(1.0);
+            let can = bw_bps * step;
+            if bits <= can {
+                secs += bits / bw_bps;
+                return secs;
+            }
+            bits -= can;
+            secs += step;
+            now += step;
+        }
+        secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::trace::BandwidthTrace;
+
+    fn flat_trace(mbps: f64, secs: usize) -> BandwidthTrace {
+        BandwidthTrace { dt: 1.0, samples_mbps: vec![mbps; secs] }
+    }
+
+    fn quiet_cfg(seed: u64) -> LinkConfig {
+        LinkConfig { jitter_std: 0.0, loss_prob: 0.0, seed }
+    }
+
+    #[test]
+    fn single_uav_matches_unshared_link() {
+        let mut shared = SharedLink::new(flat_trace(11.68, 600), quiet_cfg(1), 1);
+        // Same arithmetic as Link: 2.92 MB at 11.68 Mbps => 2.0 s.
+        let out = shared.transmit(0, 0.0, 2.92e6);
+        assert!((out.tx_secs - 2.0).abs() < 1e-6, "tx {}", out.tx_secs);
+        assert!((out.goodput_mbps - 11.68).abs() < 1e-6);
+    }
+
+    #[test]
+    fn two_overlapping_transfers_halve_the_rate() {
+        let mut shared = SharedLink::new(flat_trace(16.0, 600), quiet_cfg(1), 2);
+        let a = shared.transmit(0, 0.0, 2e6); // alone: 1 s at 16 Mbps
+        assert!((a.tx_secs - 1.0).abs() < 1e-6);
+        // UAV 1 starts while UAV 0 is mid-transfer: it shares 8 Mbps for the
+        // first trace-resolution step from its start, then gets the full
+        // 16 Mbps — 1 s at 8 Mbps moves 1 MB, the last 1 MB takes 0.5 s.
+        let b = shared.transmit(1, 0.5, 2e6);
+        assert!((b.tx_secs - 1.5).abs() < 1e-6, "tx {}", b.tx_secs);
+    }
+
+    #[test]
+    fn share_at_counts_other_transfers() {
+        let mut shared = SharedLink::new(flat_trace(12.0, 600), quiet_cfg(1), 3);
+        assert!((shared.share_at(0, 0.0) - 12.0).abs() < 1e-9);
+        shared.transmit(1, 0.0, 3e6); // occupies [0, 2)
+        assert!((shared.share_at(0, 1.0) - 6.0).abs() < 1e-9);
+        // After it drains, the full rate returns (the drained transfer stays
+        // in history for past-time queries but is not active at t=5).
+        assert!((shared.share_at(0, 5.0) - 12.0).abs() < 1e-9);
+        // Historical query: the share UAV 0 saw mid-transfer stays queryable.
+        shared.transmit(0, 4.0, 1e6);
+        assert!((shared.share_at(0, 1.0) - 6.0).abs() < 1e-9);
+        // The transmitting UAV itself is the implicit +1, never doubled.
+        assert!((shared.share_at(1, 1.0) - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_order() {
+        let run = |seed: u64| {
+            let mut s = SharedLink::new(
+                flat_trace(14.0, 600),
+                LinkConfig { jitter_std: 0.03, loss_prob: 0.0, seed },
+                4,
+            );
+            let mut out = Vec::new();
+            for k in 0..12 {
+                out.push(s.transmit(k % 4, k as f64 * 0.7, 1.5e6).tx_secs);
+            }
+            out
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9), run(10));
+    }
+
+    #[test]
+    fn contention_slows_late_arrivals() {
+        // 4 UAVs starting together (processor-sharing sizes each transfer
+        // against the load visible when it starts, so the k-th arrival sees
+        // k-1 concurrent transfers): later arrivals pay progressively more,
+        // and the fleet average is well above the solo time.
+        let mut shared = SharedLink::new(flat_trace(16.0, 600), quiet_cfg(2), 4);
+        let solo = {
+            let mut one = SharedLink::new(flat_trace(16.0, 600), quiet_cfg(2), 1);
+            one.transmit(0, 0.0, 2e6).tx_secs
+        };
+        let times: Vec<f64> =
+            (0..4).map(|u| shared.transmit(u, 0.0, 2e6).tx_secs).collect();
+        for w in times.windows(2) {
+            assert!(w[1] > w[0], "arrival order not reflected: {times:?}");
+        }
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        assert!(mean > solo * 1.5, "mean {mean} vs solo {solo}");
+    }
+}

@@ -1,0 +1,279 @@
+//! Fleet scheduler: N heterogeneous [`UavAgent`]s over one contended
+//! [`SharedLink`], driven in global event order by a virtual clock
+//! (DESIGN.md "Fleet subsystem").
+//!
+//! Each scheduling round steps the active agent with the smallest clock
+//! (ties break to the lowest UAV id), so the interleaving of sense/decide/
+//! stream cycles across the fleet is a pure function of the configuration —
+//! same seed and same N always reproduce the same aggregate summary, which
+//! the fleet determinism test pins down.
+//!
+//! Heterogeneity knobs: mixed Insight/Context roles (`context_every`),
+//! staggered mission starts (`stagger_secs`), per-UAV workload seeds, and
+//! alternating standing intents (people vs vehicles) across Insight UAVs.
+
+use anyhow::Result;
+
+use crate::cloud::ServePackets;
+use crate::coordinator::{classify_intent, Lut};
+use crate::dataset::Dataset;
+use crate::energy::DeviceModel;
+use crate::netsim::SharedLink;
+use crate::runtime::Engine;
+
+use super::{EpochRecord, MissionConfig, Policy, RunSummary, UavAgent, UavRole};
+
+/// Standing Insight intents rotated across the fleet (UAV 0 keeps the
+/// single-UAV mission's default so an N=1 fleet reproduces `fig9`).
+const INSIGHT_PROMPTS: [&str; 2] =
+    ["highlight the stranded people", "mark the submerged vehicles"];
+
+/// Awareness prompts cycled by Context-role UAVs — shared with the
+/// single-UAV `avery streams` characterization so both score against the
+/// same query distribution.
+pub const CONTEXT_PROMPTS: [&str; 4] = [
+    "what is happening in this sector",
+    "are there any living beings on the rooftops",
+    "are there any stranded vehicles here",
+    "give me a quick status of this scene",
+];
+
+/// Fleet mission configuration.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Fleet size N.
+    pub n_uavs: usize,
+    /// Per-UAV mission template; each agent gets `seed + id * 7919`.
+    pub mission: MissionConfig,
+    /// Every k-th UAV flies the Context stream (0 = all Insight).  An N=1
+    /// fleet is always pure Insight regardless of this knob.
+    pub context_every: usize,
+    /// Launch separation between consecutive UAVs (virtual seconds).
+    pub stagger_secs: f64,
+    /// Cloud worker count (server-utilization denominator).
+    pub workers: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            n_uavs: 4,
+            mission: MissionConfig::default(),
+            context_every: 4,
+            stagger_secs: 5.0,
+            workers: 2,
+        }
+    }
+}
+
+/// One UAV's outcome within a fleet run.
+#[derive(Clone, Debug)]
+pub struct UavOutcome {
+    pub id: usize,
+    pub role: UavRole,
+    pub start_t: f64,
+    pub seed: u64,
+    pub summary: RunSummary,
+    /// Presence accuracy (Context role; 0 for Insight).
+    pub context_accuracy: f64,
+}
+
+/// Aggregate result of a fleet mission.
+#[derive(Clone, Debug)]
+pub struct FleetRun {
+    pub per_uav: Vec<UavOutcome>,
+    /// Per-UAV epoch telemetry (uav id, record) — Insight agents only.
+    pub epochs: Vec<(usize, EpochRecord)>,
+    /// Jain fairness index over Insight UAVs' delivered PPS.
+    pub jain_pps: f64,
+    /// Fleet-wide delivered packets per virtual second.
+    pub aggregate_pps: f64,
+    pub delivered_total: u64,
+    pub executed_total: u64,
+    pub switches_total: u64,
+    pub infeasible_total: u64,
+    /// Executed-weighted mean IoU over Insight UAVs.
+    pub avg_iou: f64,
+    /// Virtual server utilization: induced tail-seconds / (duration x workers).
+    pub server_utilization: f64,
+    pub total_energy_j: f64,
+}
+
+/// Jain's fairness index: (Σx)² / (n · Σx²) — 1.0 when every UAV gets an
+/// equal share, → 1/n under maximal starvation.
+pub fn jain_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq <= 0.0 {
+        return 1.0;
+    }
+    sum * sum / (xs.len() as f64 * sq)
+}
+
+/// Role of UAV `i` under a fleet configuration.
+pub fn role_of(cfg: &FleetConfig, i: usize) -> UavRole {
+    if cfg.n_uavs > 1 && cfg.context_every > 0 && i % cfg.context_every == cfg.context_every - 1
+    {
+        UavRole::Context
+    } else {
+        UavRole::Insight
+    }
+}
+
+/// Per-UAV workload seed derivation — the single source of truth; telemetry
+/// reads the seed back from the agent (`UavAgent::seed`).
+fn uav_seed(cfg: &FleetConfig, i: usize) -> u64 {
+    cfg.mission.seed.wrapping_add(i as u64 * 7919)
+}
+
+/// Build the heterogeneous agent fleet.
+fn build_agents<'a>(
+    engine: &Engine,
+    datasets: &[&'a Dataset],
+    lut: &Lut,
+    device: &DeviceModel,
+    cfg: &FleetConfig,
+) -> Vec<UavAgent<'a>> {
+    // Clamp the launch stagger so the whole fleet is airborne within the
+    // first half of the mission — otherwise a large N at a short duration
+    // would leave late UAVs unlaunched, polluting fairness/throughput
+    // aggregates with phantom zero-PPS agents.
+    let stagger = cfg
+        .stagger_secs
+        .min(0.5 * cfg.mission.duration_secs / cfg.n_uavs.max(1) as f64);
+    (0..cfg.n_uavs)
+        .map(|i| {
+            let mut mission = cfg.mission.clone();
+            mission.seed = uav_seed(cfg, i);
+            let start_t = i as f64 * stagger;
+            match role_of(cfg, i) {
+                UavRole::Context => UavAgent::context(
+                    i, engine, datasets, lut, device, &mission, &CONTEXT_PROMPTS, start_t,
+                ),
+                UavRole::Insight => UavAgent::insight(
+                    i,
+                    engine,
+                    datasets,
+                    lut,
+                    device,
+                    &mission,
+                    Policy::Avery,
+                    classify_intent(INSIGHT_PROMPTS[i % INSIGHT_PROMPTS.len()]),
+                    start_t,
+                ),
+            }
+        })
+        .collect()
+}
+
+/// Run a fleet mission: event-ordered stepping of N agents over the shared
+/// uplink, serving packets through `server` (the pool's in-process fast
+/// path in the CLI driver).
+pub fn run_fleet_mission(
+    engine: &Engine,
+    datasets: &[&Dataset],
+    lut: &Lut,
+    device: &DeviceModel,
+    link: &mut SharedLink,
+    cfg: &FleetConfig,
+    server: &dyn ServePackets,
+) -> Result<FleetRun> {
+    let duration = cfg.mission.duration_secs;
+    let mut agents = build_agents(engine, datasets, lut, device, cfg);
+    for a in &mut agents {
+        a.prime(link);
+    }
+
+    // ---- Global event loop: always step the earliest active agent. ----
+    loop {
+        let mut best: Option<usize> = None;
+        for (i, a) in agents.iter().enumerate() {
+            if a.active(duration) && best.map_or(true, |b| a.t < agents[b].t) {
+                best = Some(i);
+            }
+        }
+        let Some(i) = best else { break };
+        agents[i].step(link, server)?;
+    }
+
+    // ---- Fold per-UAV outcomes into the fleet aggregate. ----
+    let mut per_uav = Vec::with_capacity(agents.len());
+    let mut epochs = Vec::new();
+    let mut server_secs = 0.0f64;
+    for a in &agents {
+        epochs.extend(a.epochs.iter().map(|&e| (a.id, e)));
+        server_secs += a.server_secs;
+        per_uav.push(UavOutcome {
+            id: a.id,
+            role: a.role,
+            start_t: a.start_t,
+            seed: a.seed(),
+            summary: a.finish(duration),
+            context_accuracy: match a.role {
+                UavRole::Context => a.context_accuracy(),
+                UavRole::Insight => 0.0,
+            },
+        });
+    }
+
+    let insight: Vec<&UavOutcome> =
+        per_uav.iter().filter(|o| o.role == UavRole::Insight).collect();
+    let pps: Vec<f64> = insight.iter().map(|o| o.summary.avg_pps).collect();
+    let delivered_total: u64 = per_uav.iter().map(|o| o.summary.delivered).sum();
+    let executed_insight: u64 = insight.iter().map(|o| o.summary.executed).sum();
+    let avg_iou = if executed_insight > 0 {
+        insight
+            .iter()
+            .map(|o| o.summary.avg_iou * o.summary.executed as f64)
+            .sum::<f64>()
+            / executed_insight as f64
+    } else {
+        0.0
+    };
+
+    Ok(FleetRun {
+        jain_pps: jain_index(&pps),
+        aggregate_pps: delivered_total as f64 / duration.max(1e-9),
+        delivered_total,
+        executed_total: per_uav.iter().map(|o| o.summary.executed).sum(),
+        switches_total: insight.iter().map(|o| o.summary.switches).sum(),
+        infeasible_total: insight.iter().map(|o| o.summary.infeasible_epochs).sum(),
+        avg_iou,
+        server_utilization: server_secs / (duration.max(1e-9) * cfg.workers.max(1) as f64),
+        total_energy_j: per_uav.iter().map(|o| o.summary.total_energy_j).sum(),
+        per_uav,
+        epochs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jain_index_bounds() {
+        assert!((jain_index(&[1.0, 1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+        // One UAV hogging everything: index -> 1/n.
+        let j = jain_index(&[4.0, 0.0, 0.0, 0.0]);
+        assert!((j - 0.25).abs() < 1e-12, "jain {j}");
+        let mid = jain_index(&[2.0, 1.0, 1.0, 1.0]);
+        assert!(mid > 0.25 && mid < 1.0);
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn role_assignment_mixes_streams() {
+        let cfg = FleetConfig { n_uavs: 8, context_every: 4, ..FleetConfig::default() };
+        let roles: Vec<UavRole> = (0..8).map(|i| role_of(&cfg, i)).collect();
+        assert_eq!(roles.iter().filter(|r| **r == UavRole::Context).count(), 2);
+        assert_eq!(roles[3], UavRole::Context);
+        assert_eq!(roles[0], UavRole::Insight);
+        // N=1 fleets are always pure Insight (fig9 parity).
+        let solo = FleetConfig { n_uavs: 1, context_every: 1, ..FleetConfig::default() };
+        assert_eq!(role_of(&solo, 0), UavRole::Insight);
+    }
+}

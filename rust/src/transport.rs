@@ -95,7 +95,9 @@ impl Transport for Tcp {
     }
 }
 
-/// A request frame for the distributed example: packet bytes + prompt + set.
+/// A request frame for distributed serving: packet bytes + prompt + weight
+/// set.  An empty `set` defers to the session default pinned by a
+/// `hello <set>` frame (see `CloudPool::serve_session`).
 pub fn encode_request(packet_bytes: &[u8], prompt: &str, set: &str) -> Vec<u8> {
     let mut out = Vec::with_capacity(packet_bytes.len() + prompt.len() + 16);
     out.extend_from_slice(&(packet_bytes.len() as u32).to_le_bytes());
@@ -153,6 +155,80 @@ mod tests {
         c.send(b"ping-pong-payload").unwrap();
         assert_eq!(c.recv().unwrap(), b"ping-pong-payload");
         server.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_many_concurrent_clients() {
+        // The fleet-serving shape: one listener, a session thread per
+        // client, many clients hammering frames concurrently.  Every frame
+        // must come back intact on its own session — no cross-talk.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        const CLIENTS: usize = 8;
+        const FRAMES: usize = 50;
+        let server = std::thread::spawn(move || {
+            let mut sessions = Vec::new();
+            for _ in 0..CLIENTS {
+                let (stream, _) = listener.accept().unwrap();
+                sessions.push(std::thread::spawn(move || {
+                    let mut t = Tcp::from_stream(stream);
+                    while let Ok(frame) = t.recv() {
+                        if frame == b"bye" {
+                            break;
+                        }
+                        t.send(&frame).unwrap();
+                    }
+                }));
+            }
+            for s in sessions {
+                s.join().unwrap();
+            }
+        });
+        let clients: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                std::thread::spawn(move || {
+                    let mut t = Tcp::connect(addr).unwrap();
+                    for i in 0..FRAMES {
+                        let msg = format!("client {c} frame {i} {}", "x".repeat(c * 17 + i));
+                        t.send(msg.as_bytes()).unwrap();
+                        assert_eq!(t.recv().unwrap(), msg.as_bytes(), "c{c} f{i}");
+                    }
+                    t.send(b"bye").unwrap();
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().unwrap();
+        }
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn inproc_concurrent_sessions() {
+        // Multiple independent InProc sessions driven from worker threads;
+        // each pair stays isolated.
+        const SESSIONS: usize = 6;
+        let mut handles = Vec::new();
+        for s in 0..SESSIONS {
+            let (mut client, mut server) = InProc::pair();
+            let srv = std::thread::spawn(move || {
+                for _ in 0..20 {
+                    let f = server.recv().unwrap();
+                    server.send(&f).unwrap();
+                }
+            });
+            handles.push(std::thread::spawn(move || {
+                for i in 0..20 {
+                    let msg = format!("s{s}-{i}");
+                    client.send(msg.as_bytes()).unwrap();
+                    assert_eq!(client.recv().unwrap(), msg.as_bytes());
+                }
+                srv.join().unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]
