@@ -22,6 +22,7 @@ fn main() -> anyhow::Result<()> {
         goal: MissionGoal::PrioritizeAccuracy,
         exec_every: 4, // subsample HLO execution to keep the demo quick
         seed: 7,
+        scenario: None,
     };
     let run = run_fleet(&env, &opts)?;
 

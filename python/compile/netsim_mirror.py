@@ -1,0 +1,216 @@
+"""Cross-language mirror of rust/src/netsim/trace.rs + the scenario traces.
+
+Reimplements the deterministic xorshift64* RNG and the bandwidth-trace
+generator bit-for-bit (integer ops and IEEE-754 arithmetic are exact across
+languages; only `normal()` touches libm, which the golden tolerances
+absorb), then prints the per-scenario trace summaries that
+rust/tests/scenario.rs pins as golden snapshots.
+
+Regenerate the golden block after any intentional generator change:
+
+    python -m compile.netsim_mirror
+"""
+
+import math
+
+MASK = (1 << 64) - 1
+
+STABLE, VOLATILE, DROP, OUTAGE, SAWTOOTH = range(5)
+OUTAGE_FLOOR = 0.01
+SAWTOOTH_HANDOFFS = 5.0
+
+
+class Rng:
+    """rust/src/util.rs::Rng (xorshift64*)."""
+
+    def __init__(self, seed):
+        self.state = ((max(seed, 1) * 0x9E3779B97F4A7C15) & MASK) | 1
+
+    def next_u64(self):
+        x = self.state
+        x ^= x >> 12
+        x = (x ^ (x << 25)) & MASK
+        x ^= x >> 27
+        self.state = x
+        return (x * 0x2545F4914F6CDD1D) & MASK
+
+    def f64(self):
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+    def range(self, lo, hi):
+        return lo + (hi - lo) * self.f64()
+
+    def below(self, n):
+        return self.next_u64() % max(n, 1)
+
+    def normal(self):
+        u1 = max(self.f64(), 1e-12)
+        u2 = self.f64()
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+
+def clamp(x, lo, hi):
+    return min(max(x, lo), hi)
+
+
+def markov_modulated(seed, duration, min_mbps, max_mbps, mean_dwell, kinds):
+    rng = Rng(seed ^ 0x4D41524B4F56)
+    phases = []
+    ki = 0
+    t = 0.0
+    while t < duration:
+        kind = kinds[ki % max(len(kinds), 1)]
+        rem = duration - t
+        dwell = max(mean_dwell * (0.5 + rng.f64()), 1.0)
+        if rem - dwell < 2.0:
+            dwell = rem
+        if kind == STABLE:
+            level = min_mbps + (max_mbps - min_mbps) * rng.range(0.6, 0.95)
+        elif kind == VOLATILE:
+            level = min_mbps + (max_mbps - min_mbps) * rng.range(0.4, 0.8)
+        elif kind == DROP:
+            level = min_mbps + (max_mbps - min_mbps) * rng.range(0.0, 0.15)
+        elif kind == OUTAGE:
+            level = OUTAGE_FLOOR
+        else:
+            level = min_mbps + (max_mbps - min_mbps) * rng.range(0.0, 0.3)
+        phases.append((kind, dwell, level))
+        t += dwell
+        if len(kinds) > 1:
+            ki = (ki + 1 + rng.below(len(kinds) - 1)) % len(kinds)
+    return dict(phases=phases, min=min_mbps, max=max_mbps, dt=1.0, seed=seed)
+
+
+def rust_round(x):
+    """f64::round — half away from zero (x is always positive here)."""
+    return int(math.floor(x + 0.5))
+
+
+def generate(cfg):
+    rng = Rng(cfg["seed"])
+    lo, hi, dt = cfg["min"], cfg["max"], cfg["dt"]
+    samples = []
+    level = cfg["phases"][0][2] if cfg["phases"] else 15.0
+    for kind, secs, anchor in cfg["phases"]:
+        n = rust_round(secs / dt)
+        if kind == STABLE:
+            for _ in range(n):
+                pull = (anchor - level) * 0.2
+                level = clamp(level + pull + rng.normal() * 0.25, lo, hi)
+                samples.append(level)
+        elif kind == VOLATILE:
+            for _ in range(n):
+                pull = (anchor - level) * 0.05
+                level = clamp(level + pull + rng.normal() * 1.4, lo, hi)
+                samples.append(level)
+        elif kind == OUTAGE:
+            floor = max(anchor, OUTAGE_FLOOR)
+            for _ in range(n):
+                level = clamp(floor + rng.f64() * 0.02, OUTAGE_FLOOR, hi)
+                samples.append(level)
+        elif kind == SAWTOOTH:
+            period = max(secs / SAWTOOTH_HANDOFFS, dt)
+            for i in range(n):
+                pos = ((i * dt) % period) / period
+                v = hi + (anchor - hi) * pos
+                level = clamp(v + rng.normal() * 0.2, lo, hi)
+                samples.append(level)
+        elif kind == DROP:
+            fall = n // 4
+            hold = n // 2
+            start = level
+            for i in range(n):
+                if i < fall:
+                    level = start + (anchor - start) * (i / max(fall, 1))
+                elif i < fall + hold:
+                    level = anchor + rng.normal() * 0.2
+                else:
+                    k = (i - fall - hold) / max(n - fall - hold, 1)
+                    level = anchor + (start - anchor) * k
+                level = clamp(level, lo, hi)
+                samples.append(level)
+    return samples
+
+
+def phases(*rows):
+    return list(rows)
+
+
+def scenario_trace(name, seed, d):
+    """Mirror of rust/src/scenario/mod.rs::build (trace part only)."""
+    if name == "paper-baseline":
+        cfg = dict(
+            phases=phases(
+                (STABLE, 180.0, 17.0), (VOLATILE, 240.0, 14.0), (DROP, 150.0, 8.5),
+                (STABLE, 120.0, 16.0), (DROP, 180.0, 9.5), (VOLATILE, 180.0, 13.0),
+                (STABLE, 150.0, 18.0),
+            ),
+            min=8.0, max=20.0, dt=1.0, seed=seed,
+        )
+        k = d / 1200.0
+        cfg["phases"] = [(kk, s * k, l) for kk, s, l in cfg["phases"]]
+        return cfg
+    if name == "wildfire-ridge":
+        return markov_modulated(seed, d, 8.0, 20.0, max(d / 12.0, 20.0),
+                                [STABLE, VOLATILE, DROP])
+    if name == "urban-flood":
+        return dict(
+            phases=phases(
+                (STABLE, 0.15 * d, 16.0), (VOLATILE, 0.20 * d, 13.0),
+                (DROP, 0.15 * d, 8.5), (STABLE, 0.10 * d, 15.0),
+                (DROP, 0.20 * d, 9.0), (VOLATILE, 0.10 * d, 12.0),
+                (STABLE, 0.10 * d, 17.0),
+            ),
+            min=8.0, max=20.0, dt=1.0, seed=seed,
+        )
+    if name == "earthquake-canyon":
+        return dict(
+            phases=phases(
+                (STABLE, 0.20 * d, 15.0), (OUTAGE, 0.08 * d, 0.05),
+                (VOLATILE, 0.22 * d, 12.0), (OUTAGE, 0.10 * d, 0.05),
+                (DROP, 0.20 * d, 8.5), (STABLE, 0.20 * d, 16.0),
+            ),
+            min=8.0, max=20.0, dt=1.0, seed=seed,
+        )
+    if name == "coastal-satellite":
+        return dict(
+            phases=phases(
+                (SAWTOOTH, 0.30 * d, 9.0), (STABLE, 0.10 * d, 18.0),
+                (SAWTOOTH, 0.30 * d, 8.5), (VOLATILE, 0.10 * d, 12.0),
+                (SAWTOOTH, 0.20 * d, 10.0),
+            ),
+            min=8.0, max=20.0, dt=1.0, seed=seed,
+        )
+    raise ValueError(name)
+
+
+def summarize(cfg, samples):
+    thresh = 0.5 * cfg["min"]
+    return dict(
+        mean=sum(samples) / max(len(samples), 1),
+        min=min(samples),
+        max=max(samples),
+        outage_secs=sum(1 for s in samples if s < thresh) * cfg["dt"],
+        regimes=len(cfg["phases"]),
+        n=len(samples),
+    )
+
+
+NAMES = ["paper-baseline", "wildfire-ridge", "urban-flood",
+         "earthquake-canyon", "coastal-satellite"]
+
+
+def main(seed=7, duration=1200.0):
+    print(f"// Golden trace snapshots @ seed {seed}, duration {duration:.0f} s")
+    print("// (name, mean, min, max, outage_secs, regimes, samples)")
+    for name in NAMES:
+        cfg = scenario_trace(name, seed, duration)
+        s = summarize(cfg, generate(cfg))
+        print(
+            f'    ("{name}", {s["mean"]:.4f}, {s["min"]:.4f}, {s["max"]:.4f}, '
+            f'{s["outage_secs"]:.1f}, {s["regimes"]}, {s["n"]}),'
+        )
+
+
+if __name__ == "__main__":
+    main()

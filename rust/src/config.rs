@@ -114,6 +114,19 @@ pub struct RunConfig {
     pub uavs: usize,
     /// Cloud pool worker count for `avery fleet`.
     pub workers: usize,
+    /// Scenario-library regime for `avery fleet` / `avery fig9`
+    /// (`--scenario NAME`).
+    pub scenario: Option<String>,
+    /// Scenario name for `avery scenario --name NAME`.
+    pub name: Option<String>,
+    /// `avery scenario --list`.
+    pub list: bool,
+    /// True when the user set `--goal` explicitly (scenario runs otherwise
+    /// keep the scenario's own goal).
+    pub goal_explicit: bool,
+    /// True when the user set `--uavs` / `--workers` explicitly.
+    pub uavs_explicit: bool,
+    pub workers_explicit: bool,
 }
 
 impl RunConfig {
@@ -142,6 +155,12 @@ impl RunConfig {
             exec_mode,
             uavs: kv.get_usize("uavs", 4)?,
             workers: kv.get_usize("workers", 2)?,
+            scenario: kv.get("scenario").map(|s| s.to_string()),
+            name: kv.get("name").map(|s| s.to_string()),
+            list: kv.get_bool("list", false)?,
+            goal_explicit: kv.get("goal").is_some(),
+            uavs_explicit: kv.get("uavs").is_some(),
+            workers_explicit: kv.get("workers").is_some(),
         })
     }
 }
@@ -197,6 +216,20 @@ mod tests {
         let rc = RunConfig::from_kv(&kv).unwrap();
         assert_eq!(rc.uavs, 16);
         assert_eq!(rc.workers, 8);
+        assert!(rc.uavs_explicit && rc.workers_explicit);
+        assert!(!rc.goal_explicit);
+    }
+
+    #[test]
+    fn scenario_keys_parse() {
+        let kv = Kv::parse("name = urban-flood\nscenario = coastal-satellite\nlist = true\n")
+            .unwrap();
+        let rc = RunConfig::from_kv(&kv).unwrap();
+        assert_eq!(rc.name.as_deref(), Some("urban-flood"));
+        assert_eq!(rc.scenario.as_deref(), Some("coastal-satellite"));
+        assert!(rc.list);
+        let rc0 = RunConfig::from_kv(&Kv::default()).unwrap();
+        assert!(rc0.name.is_none() && rc0.scenario.is_none() && !rc0.list);
     }
 
     #[test]

@@ -10,11 +10,19 @@
 //!   (PRIORITIZE_ACCURACY -> highest fidelity, PRIORITIZE_THROUGHPUT ->
 //!   highest update rate).
 //!
-//! Extension over the paper's pseudocode (flagged as such): an optional
-//! switching-hysteresis margin so the tier doesn't flap when bandwidth
-//! hovers exactly at a feasibility threshold; the ablation bench
-//! (`fig9_dynamic --ablate-hysteresis`) quantifies its effect.  With the
-//! margin at 0 the controller is literally Algorithm 1.
+//! Extensions over the paper's pseudocode (flagged as such):
+//! * an optional switching-hysteresis margin so the tier doesn't flap when
+//!   bandwidth hovers exactly at a feasibility threshold; the ablation bench
+//!   (`fig9_dynamic --ablate-hysteresis`) quantifies its effect,
+//! * an optional minimum-dwell window: after any tier change, *voluntary*
+//!   switches (the current tier is still feasible but another now scores
+//!   higher) are suppressed for `min_dwell_decisions` decisions.  Forced
+//!   evictions — the current tier dropping below F_I — are always honored
+//!   immediately, so dwell never compromises timeliness.  Scenario missions
+//!   run with dwell 2, which makes "no voluntary flap on consecutive
+//!   epochs" a structural guarantee (pinned by `rust/tests/scenario.rs`).
+//!
+//! With both knobs at 0 the controller is literally Algorithm 1.
 
 use super::intent::{Intent, IntentLevel};
 use super::lut::{Lut, TierId};
@@ -77,8 +85,14 @@ pub struct SplitController {
     /// Hysteresis margin (fraction of F_I) a *new* tier must clear before
     /// the controller switches away from the current one. 0 = Algorithm 1.
     pub hysteresis: f64,
+    /// Minimum decisions to dwell on a tier before another *voluntary*
+    /// switch; forced evictions (current tier infeasible) bypass it.
+    /// 0 = Algorithm 1.
+    pub min_dwell_decisions: u64,
     /// Last Insight tier selected (hysteresis state).
     last_tier: Option<TierId>,
+    /// Decision index of the most recent tier adoption/switch (dwell state).
+    last_switch_decision: u64,
     /// Decision counters (telemetry).
     pub decisions: u64,
     pub switches: u64,
@@ -91,7 +105,9 @@ impl SplitController {
             min_insight_pps,
             max_context_pps,
             hysteresis: 0.0,
+            min_dwell_decisions: 0,
             last_tier: None,
+            last_switch_decision: 0,
             decisions: 0,
             switches: 0,
         }
@@ -132,7 +148,7 @@ impl SplitController {
             return Err(ControllerError::NoFeasibleInsightTier); // lines 26–28
         }
         // ---- Stage 4: Select by mission goal (lines 29–35) ----
-        let (tier, pps) = match goal {
+        let (mut tier, mut pps) = match goal {
             MissionGoal::PrioritizeAccuracy => {
                 // Highest-fidelity tier: TierId orders by fidelity desc.
                 *feasible.iter().min_by_key(|(t, _)| t.index()).unwrap()
@@ -144,8 +160,25 @@ impl SplitController {
                     .unwrap()
             }
         };
-        if self.last_tier.is_some() && self.last_tier != Some(tier) {
-            self.switches += 1;
+        // ---- Dwell extension: hold a freshly adopted tier against
+        // *voluntary* switches while it remains feasible.  A forced switch
+        // (current tier not in the feasible set) is never delayed. ----
+        if let Some(last) = self.last_tier {
+            if tier != last
+                && self.min_dwell_decisions > 0
+                && self.decisions - self.last_switch_decision <= self.min_dwell_decisions
+            {
+                if let Some(&(t, p)) = feasible.iter().find(|(t, _)| *t == last) {
+                    tier = t;
+                    pps = p;
+                }
+            }
+        }
+        if self.last_tier != Some(tier) {
+            if self.last_tier.is_some() {
+                self.switches += 1;
+            }
+            self.last_switch_decision = self.decisions;
         }
         self.last_tier = Some(tier);
         Ok(ControllerDecision::Insight { tier, pps })
@@ -271,6 +304,39 @@ mod tests {
             sw_with < sw_without,
             "hysteresis {sw_with} switches vs {sw_without} without"
         );
+    }
+
+    #[test]
+    fn dwell_suppresses_voluntary_switch_but_not_eviction() {
+        let mut c = controller();
+        c.min_dwell_decisions = 2;
+        let prompt = "highlight the stranded vehicle";
+        // Adopt Balanced at 10 Mbps (HA infeasible below 11.68).
+        let d0 = c
+            .select_configuration(&state(10.0, prompt), MissionGoal::PrioritizeAccuracy)
+            .unwrap();
+        assert!(matches!(d0, ControllerDecision::Insight { tier: TierId::Balanced, .. }));
+        // Bandwidth recovers immediately: the voluntary upgrade to HA must
+        // wait out the dwell window...
+        let d1 = c
+            .select_configuration(&state(18.0, prompt), MissionGoal::PrioritizeAccuracy)
+            .unwrap();
+        assert!(matches!(d1, ControllerDecision::Insight { tier: TierId::Balanced, .. }));
+        let d2 = c
+            .select_configuration(&state(18.0, prompt), MissionGoal::PrioritizeAccuracy)
+            .unwrap();
+        assert!(matches!(d2, ControllerDecision::Insight { tier: TierId::Balanced, .. }));
+        // ...and lands once the window expires.
+        let d3 = c
+            .select_configuration(&state(18.0, prompt), MissionGoal::PrioritizeAccuracy)
+            .unwrap();
+        assert!(matches!(d3, ControllerDecision::Insight { tier: TierId::HighAccuracy, .. }));
+        // Forced eviction bypasses dwell: HA was just adopted, but a
+        // collapse below every HA-feasible bandwidth must switch at once.
+        let d4 = c
+            .select_configuration(&state(6.0, prompt), MissionGoal::PrioritizeAccuracy)
+            .unwrap();
+        assert!(matches!(d4, ControllerDecision::Insight { tier: TierId::Balanced, .. }));
     }
 
     /// Property: over random bandwidths/goals, every Insight decision is

@@ -85,6 +85,25 @@ const VEHICLE_WORDS: &[&str] = &[
     "vehicle", "vehicles", "car", "cars", "truck", "trucks", "automobile",
 ];
 
+/// Recover the target class (0 = person, 1 = vehicle) from *hashed token
+/// ids* — the only prompt view the server side has.  Mirrors
+/// [`classify_intent`]'s word-list precedence (person outranks vehicle) up
+/// to the wire format's inherent lossiness: only the first
+/// [`PROMPT_TOKENS`] words survive tokenization, and the 511-bucket hashed
+/// vocab can collide — the same information boundary the real tail
+/// operates under.  Used by the synthetic cloud tail, which must ground
+/// the mask to the class the mission scores against.
+pub fn target_class_of_tokens(ids: &[i32]) -> Option<usize> {
+    let id_of = |w: &str| (1 + fnv1a32(w) % (VOCAB - 1)) as i32;
+    if PERSON_WORDS.iter().any(|w| ids.contains(&id_of(w))) {
+        return Some(0);
+    }
+    if VEHICLE_WORDS.iter().any(|w| ids.contains(&id_of(w))) {
+        return Some(1);
+    }
+    None
+}
+
 /// Classify an operator prompt into AVERY's two intent levels and extract
 /// the target class.  Scoring: grounded-output verbs vote Insight,
 /// awareness interrogatives vote Context; question-shaped prompts lean
@@ -174,6 +193,23 @@ mod tests {
     fn person_outranks_vehicle_when_both_present() {
         let i = classify_intent("highlight individuals near submerged vehicles");
         assert_eq!(i.target_class, Some(0));
+    }
+
+    #[test]
+    fn token_class_recovery_matches_classifier() {
+        for p in [
+            "highlight the stranded people",
+            "mark every car trapped in the water",
+            "segment the partially submerged vehicles",
+            "highlight individuals near submerged vehicles",
+            "what is happening here",
+        ] {
+            assert_eq!(
+                target_class_of_tokens(&tokenize(p)),
+                classify_intent(p).target_class,
+                "{p}"
+            );
+        }
     }
 
     #[test]

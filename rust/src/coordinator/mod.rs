@@ -10,5 +10,7 @@ mod lut;
 pub use controller::{
     ControllerDecision, ControllerError, MissionGoal, RuntimeState, SplitController,
 };
-pub use intent::{classify_intent, tokenize, Intent, IntentLevel, PROMPT_TOKENS, VOCAB};
+pub use intent::{
+    classify_intent, target_class_of_tokens, tokenize, Intent, IntentLevel, PROMPT_TOKENS, VOCAB,
+};
 pub use lut::{Lut, LutEntry, SweepEntry, TierId};

@@ -13,8 +13,12 @@
 //!   loop) over a shared virtual clock, plus the fleet scheduler that
 //!   drives N heterogeneous UAVs in global event order.
 //! * [`netsim`] — the scripted disaster-zone bandwidth trace and link model
-//!   (8–20 Mbps, stable / volatile / sustained-drop phases), including the
-//!   contended multi-UAV shared uplink.
+//!   (8–20 Mbps, stable / volatile / sustained-drop phases plus blackout
+//!   and satellite-sawtooth regimes), including the contended multi-UAV
+//!   shared uplink.
+//! * [`scenario`] — the scenario library: named disaster/network regimes
+//!   (Markov-modulated switching, outages, satellite handoffs) with timed
+//!   operator intent schedules and fleet composition (`avery scenario`).
 //! * [`energy`] — the Jetson AGX Xavier (MODE_30W_ALL) latency/energy model
 //!   calibrated to the paper's published split-point profile.
 //! * [`packet`] — the wire format: int8-quantized bottleneck codes + CLIP
@@ -27,7 +31,10 @@
 //!   [`cloud`] worker pool.
 //!
 //! Python never runs on any path in this crate; the binary is self-contained
-//! once `artifacts/` exists.
+//! once `artifacts/` exists — and the control plane (controller, netsim,
+//! scheduler, scenario library) additionally runs with **no artifacts at
+//! all** through the synthetic closed-form engine
+//! ([`runtime::Engine::synthetic`] / `Env::synthetic`).
 
 pub mod baselines;
 pub mod bench;
@@ -43,6 +50,7 @@ pub mod mission;
 pub mod netsim;
 pub mod packet;
 pub mod runtime;
+pub mod scenario;
 pub mod streams;
 pub mod telemetry;
 pub mod tensor;

@@ -12,13 +12,19 @@
 //! avery headline   # abstract claims H1..H4
 //! avery streams    # §5.2.2 dual-stream characterization + §4.3 demo
 //! avery fleet      # multi-UAV contended-uplink mission (beyond the paper)
+//! avery scenario   # scenario library: named disaster/network regimes
 //! avery all        # everything above
 //! ```
 //!
 //! Common options: `--artifacts DIR`, `--out DIR`, `--duration SECS`,
 //! `--goal accuracy|throughput`, `--exec-every N`, `--seed N`,
 //! `--hysteresis H`, `--exec-mode buffers|literals`, `--config FILE`,
-//! `--uavs N`, `--workers N` (fleet).
+//! `--uavs N`, `--workers N` (fleet), `--scenario NAME` (fleet/fig9),
+//! `--name NAME` / `--list` (scenario).
+//!
+//! `avery scenario` runs with or without artifacts: when `artifacts/` is
+//! missing it falls back to the synthetic closed-form engine (control plane
+//! exact, numerics simulated), so the scenario matrix also runs in CI.
 
 use std::path::Path;
 
@@ -26,14 +32,14 @@ use anyhow::{bail, Result};
 
 use avery::config::{Kv, RunConfig};
 use avery::mission::{
-    run_fig10, run_fig7, run_fig8, run_fig9, run_fleet, run_headline, run_streams,
-    run_table3, Env, Fig9Options, FleetOptions,
+    run_fig10, run_fig7, run_fig8, run_fig9, run_fleet, run_headline, run_scenario,
+    run_streams, run_table3, Env, Fig9Options, FleetOptions, ScenarioOptions,
 };
 
-const USAGE: &str = "usage: avery <table3|fig7|fig8|fig9|fig10|headline|streams|fleet|all> [--options]
+const USAGE: &str = "usage: avery <table3|fig7|fig8|fig9|fig10|headline|streams|fleet|scenario|all> [--options]
   --artifacts DIR      artifact directory (default: discover ./artifacts)
   --out DIR            CSV output directory (default: out)
-  --duration SECS      mission length for fig9/fig10/headline/fleet (default 1200)
+  --duration SECS      mission length for fig9/fig10/headline/fleet/scenario (default 1200)
   --goal MODE          accuracy | throughput (default accuracy)
   --exec-every N       execute HLO every Nth packet (default 1)
   --seed N             trace/workload seed (default 7)
@@ -41,7 +47,13 @@ const USAGE: &str = "usage: avery <table3|fig7|fig8|fig9|fig10|headline|streams|
   --exec-mode M        buffers | literals (default buffers)
   --uavs N             fleet size for `avery fleet` (default 4)
   --workers N          cloud pool workers for `avery fleet` (default 2)
-  --config FILE        key = value config file (CLI overrides it)";
+  --scenario NAME      run `avery fleet`/`avery fig9` under a scenario regime
+  --name NAME          scenario to run for `avery scenario`
+  --list               list registered scenarios (`avery scenario --list`)
+  --config FILE        key = value config file (CLI overrides it)
+
+`avery scenario` needs no artifacts: without them it runs the synthetic
+closed-form engine (control plane exact, numerics simulated).";
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -59,24 +71,64 @@ fn main() -> Result<()> {
         return Ok(());
     };
 
+    // `avery scenario` is self-sufficient: `--list` needs no environment at
+    // all, and a run falls back to the synthetic engine without artifacts.
+    if cmd == "scenario" {
+        if cfg.list || cfg.name.is_none() {
+            println!("registered scenarios (run with `avery scenario --name NAME`):");
+            for (name, summary) in avery::scenario::list() {
+                println!("  {name:<20} {summary}");
+            }
+            return Ok(());
+        }
+        let env = Env::load_or_synthetic(
+            cfg.artifacts.as_deref(),
+            Path::new(&cfg.out_dir),
+            cfg.exec_mode,
+        )?;
+        let opts = ScenarioOptions {
+            name: cfg.name.clone().unwrap(),
+            duration_secs: cfg.duration_secs,
+            seed: cfg.seed,
+            exec_every: cfg.exec_every,
+            uavs: cfg.uavs_explicit.then_some(cfg.uavs),
+            workers: cfg.workers_explicit.then_some(cfg.workers),
+            goal: cfg.goal_explicit.then_some(cfg.goal),
+        };
+        run_scenario(&env, &opts)?;
+        return Ok(());
+    }
+
     let artifacts = avery::find_artifacts(cfg.artifacts.as_deref())?;
     eprintln!("artifacts: {}", artifacts.display());
     let env = Env::load(&artifacts, Path::new(&cfg.out_dir), cfg.exec_mode)?;
 
+    // Under `--scenario` the regime's own mission goal applies unless the
+    // user passed `--goal` explicitly — keeping `avery fleet --scenario X`
+    // consistent with `avery scenario --name X`.
+    let mut goal = cfg.goal;
+    if !cfg.goal_explicit {
+        if let Some(name) = &cfg.scenario {
+            goal = avery::scenario::build(name, cfg.seed, cfg.duration_secs)?.goal;
+        }
+    }
+
     let fig9_opts = Fig9Options {
         duration_secs: cfg.duration_secs,
-        goal: cfg.goal,
+        goal,
         exec_every: cfg.exec_every,
         ablate_hysteresis: cfg.hysteresis,
         seed: cfg.seed,
+        scenario: cfg.scenario.clone(),
     };
     let fleet_opts = FleetOptions {
         uavs: cfg.uavs,
         workers: cfg.workers,
         duration_secs: cfg.duration_secs,
-        goal: cfg.goal,
+        goal,
         exec_every: cfg.exec_every,
         seed: cfg.seed,
+        scenario: cfg.scenario.clone(),
     };
 
     match cmd {
@@ -101,6 +153,22 @@ fn main() -> Result<()> {
             run_headline(&env, &fig9_opts)?;
             run_streams(&env)?;
             run_fleet(&env, &fleet_opts)?;
+            run_scenario(
+                &env,
+                &ScenarioOptions {
+                    name: cfg
+                        .name
+                        .clone()
+                        .or_else(|| cfg.scenario.clone())
+                        .unwrap_or_else(|| "urban-flood".to_string()),
+                    duration_secs: cfg.duration_secs,
+                    seed: cfg.seed,
+                    exec_every: cfg.exec_every,
+                    uavs: cfg.uavs_explicit.then_some(cfg.uavs),
+                    workers: cfg.workers_explicit.then_some(cfg.workers),
+                    goal: cfg.goal_explicit.then_some(cfg.goal),
+                },
+            )?;
         }
         other => bail!("unknown command `{other}`\n{USAGE}"),
     }

@@ -22,6 +22,9 @@ pub struct Fig9Options {
     /// switch-count delta.
     pub ablate_hysteresis: Option<f64>,
     pub seed: u64,
+    /// Run the dynamic comparison over a scenario-library trace + link
+    /// instead of the paper's script (`--scenario NAME`).
+    pub scenario: Option<String>,
 }
 
 impl Default for Fig9Options {
@@ -32,19 +35,30 @@ impl Default for Fig9Options {
             exec_every: 1,
             ablate_hysteresis: None,
             seed: 7,
+            scenario: None,
         }
     }
 }
 
 pub fn run_fig9(env: &Env, opts: &Fig9Options) -> Result<Vec<InsightRun>> {
-    let mut trace_cfg = TraceConfig::paper_20min(opts.seed);
-    // Scale the scripted phases if a shorter mission was requested.
-    let scale = opts.duration_secs / trace_cfg.total_secs();
-    if (scale - 1.0).abs() > 1e-9 {
-        for p in &mut trace_cfg.phases {
-            p.secs *= scale;
+    // Either the paper's 20-minute script or a scenario-library regime
+    // (trace, link knobs and controller hysteresis/dwell; intent schedules
+    // are a fleet/scenario-driver concern — this comparison keeps the
+    // standing Insight intent fixed so the static-tier baselines stay
+    // comparable).
+    let (trace_cfg, link_cfg, hysteresis, min_dwell) = match &opts.scenario {
+        Some(name) => {
+            let sc = crate::scenario::build(name, opts.seed, opts.duration_secs)?;
+            println!("fig9 over scenario `{}`: {}", sc.name, sc.summary);
+            (sc.trace, sc.link, sc.hysteresis, sc.min_dwell)
         }
-    }
+        None => (
+            TraceConfig::paper_20min(opts.seed).scaled_to(opts.duration_secs),
+            LinkConfig { seed: opts.seed, ..LinkConfig::default() },
+            0.0,
+            0,
+        ),
+    };
     let trace = BandwidthTrace::generate(&trace_cfg);
 
     let mission = MissionConfig {
@@ -52,6 +66,8 @@ pub fn run_fig9(env: &Env, opts: &Fig9Options) -> Result<Vec<InsightRun>> {
         goal: opts.goal,
         exec_every: opts.exec_every,
         seed: opts.seed,
+        hysteresis,
+        min_dwell,
         ..MissionConfig::default()
     };
 
@@ -64,7 +80,7 @@ pub fn run_fig9(env: &Env, opts: &Fig9Options) -> Result<Vec<InsightRun>> {
     let mut runs = Vec::new();
     for policy in policies {
         // Fresh link per run: every policy sees the same trace.
-        let mut link = Link::new(trace.clone(), LinkConfig { seed: opts.seed, ..LinkConfig::default() });
+        let mut link = Link::new(trace.clone(), link_cfg.clone());
         let run = run_insight_mission(
             &env.engine,
             &env.datasets(),
@@ -157,8 +173,7 @@ pub fn run_fig9(env: &Env, opts: &Fig9Options) -> Result<Vec<InsightRun>> {
 
     // Optional hysteresis ablation.
     if let Some(h) = opts.ablate_hysteresis {
-        let mut link =
-            Link::new(trace.clone(), LinkConfig { seed: opts.seed, ..LinkConfig::default() });
+        let mut link = Link::new(trace.clone(), link_cfg.clone());
         let run = run_insight_mission(
             &env.engine,
             &env.datasets(),

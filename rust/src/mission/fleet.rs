@@ -27,6 +27,10 @@ pub struct FleetOptions {
     /// Execute HLO on every Nth delivered packet (1 = all; raise to speed up).
     pub exec_every: usize,
     pub seed: u64,
+    /// Fly the fleet under a scenario-library regime (`--scenario NAME`):
+    /// trace, link knobs and intent schedule come from the scenario; fleet
+    /// size/workers stay the CLI's.
+    pub scenario: Option<String>,
 }
 
 impl Default for FleetOptions {
@@ -38,25 +42,29 @@ impl Default for FleetOptions {
             goal: MissionGoal::PrioritizeAccuracy,
             exec_every: 1,
             seed: 7,
+            scenario: None,
         }
     }
 }
 
 pub fn run_fleet(env: &Env, opts: &FleetOptions) -> Result<FleetRun> {
-    // Same scripted trace as fig9, scaled if a shorter mission was asked for.
-    let mut trace_cfg = TraceConfig::paper_20min(opts.seed);
-    let scale = opts.duration_secs / trace_cfg.total_secs();
-    if (scale - 1.0).abs() > 1e-9 {
-        for p in &mut trace_cfg.phases {
-            p.secs *= scale;
+    // The paper's scripted trace by default, or a scenario-library regime.
+    let (trace_cfg, link_cfg, schedule, hysteresis, min_dwell) = match &opts.scenario {
+        Some(name) => {
+            let sc = crate::scenario::build(name, opts.seed, opts.duration_secs)?;
+            println!("fleet over scenario `{}`: {}", sc.name, sc.summary);
+            (sc.trace, sc.link, sc.schedule, sc.hysteresis, sc.min_dwell)
         }
-    }
+        None => (
+            TraceConfig::paper_20min(opts.seed).scaled_to(opts.duration_secs),
+            LinkConfig { seed: opts.seed, ..LinkConfig::default() },
+            Vec::new(),
+            0.0,
+            0,
+        ),
+    };
     let trace = BandwidthTrace::generate(&trace_cfg);
-    let mut link = SharedLink::new(
-        trace,
-        LinkConfig { seed: opts.seed, ..LinkConfig::default() },
-        opts.uavs,
-    );
+    let mut link = SharedLink::new(trace, link_cfg, opts.uavs);
 
     let fleet_cfg = FleetConfig {
         n_uavs: opts.uavs,
@@ -65,9 +73,12 @@ pub fn run_fleet(env: &Env, opts: &FleetOptions) -> Result<FleetRun> {
             goal: opts.goal,
             exec_every: opts.exec_every,
             seed: opts.seed,
+            hysteresis,
+            min_dwell,
             ..MissionConfig::default()
         },
         workers: opts.workers,
+        schedule,
         ..FleetConfig::default()
     };
 
@@ -90,7 +101,7 @@ pub fn run_fleet(env: &Env, opts: &FleetOptions) -> Result<FleetRun> {
         &[
             "uav", "role", "start_t", "seed", "delivered", "executed", "avg_pps",
             "avg_iou", "energy_j", "ha_secs", "bal_secs", "ht_secs", "switches",
-            "infeasible_s", "context_acc",
+            "intent_switches", "infeasible_s", "context_acc",
         ],
     )?;
     for o in &run.per_uav {
@@ -109,6 +120,7 @@ pub fn run_fleet(env: &Env, opts: &FleetOptions) -> Result<FleetRun> {
             f(s.tier_secs[1], 1),
             f(s.tier_secs[2], 1),
             s.switches.to_string(),
+            s.intent_switches.to_string(),
             s.infeasible_epochs.to_string(),
             f(o.context_accuracy, 4),
         ])?;

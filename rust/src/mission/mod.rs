@@ -11,6 +11,7 @@ mod fig8;
 mod fig9;
 mod fleet;
 mod headline;
+mod scenario;
 mod table3;
 
 pub use context::run_streams;
@@ -20,6 +21,7 @@ pub use fig8::run_fig8;
 pub use fig9::{run_fig9, Fig9Options};
 pub use fleet::{run_fleet, FleetOptions};
 pub use headline::run_headline;
+pub use scenario::{run_scenario, ScenarioOptions};
 pub use table3::run_table3;
 
 use std::path::{Path, PathBuf};
@@ -76,5 +78,51 @@ impl Env {
 
     pub fn datasets(&self) -> Vec<&Dataset> {
         vec![&self.generic_val, &self.flood_val]
+    }
+
+    /// Build an artifact-free environment over the synthetic closed-form
+    /// engine (`runtime::synth`): synthetic corpora whose scenes encode
+    /// their GT masks, the paper's Table 3 LUT, and the calibrated device
+    /// model.  Timing, the controller and the schedulers are *identical* to
+    /// the artifact-backed environment — only the numerics are simulated.
+    pub fn synthetic(out_dir: &Path) -> Result<Self> {
+        let img = 16;
+        let depth = 8;
+        std::fs::create_dir_all(out_dir).ok();
+        Ok(Self {
+            engine: Engine::synthetic(),
+            manifest_meta: ManifestMeta { img, depth },
+            lut: crate::coordinator::Lut::paper(),
+            device: DeviceModel::jetson_mode_30w(depth),
+            generic_val: Dataset::synthetic(Corpus::Generic, 24, img, 0xA5E17),
+            flood_val: Dataset::synthetic(Corpus::Flood, 24, img, 0xF10D0),
+            out_dir: out_dir.to_path_buf(),
+        })
+    }
+
+    /// Load the artifact-backed environment when artifacts can be found,
+    /// else fall back to [`Env::synthetic`].  An *explicitly named*
+    /// artifacts dir that fails to load is an error (the caller asked for
+    /// it); only discovery failure falls through to the sim path.
+    pub fn load_or_synthetic(
+        explicit_artifacts: Option<&str>,
+        out_dir: &Path,
+        mode: ExecMode,
+    ) -> Result<Self> {
+        if explicit_artifacts.is_some() {
+            let dir = crate::find_artifacts(explicit_artifacts)?;
+            return Self::load(&dir, out_dir, mode);
+        }
+        match crate::find_artifacts(None) {
+            Ok(dir) => Self::load(&dir, out_dir, mode),
+            Err(_) => {
+                eprintln!(
+                    "artifacts/ not found — running the synthetic closed-form engine \
+                     (control plane exact, numerics simulated; `make artifacts` for \
+                     the real model)"
+                );
+                Self::synthetic(out_dir)
+            }
+        }
     }
 }

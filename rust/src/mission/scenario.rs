@@ -1,0 +1,231 @@
+//! `avery scenario` — run one named scenario from the library end to end:
+//! scenario trace + link knobs + fleet composition + intent schedule, over
+//! the contended uplink, emitting per-scenario CSV telemetry.
+//!
+//! The driver is deliberately wall-clock-free: every CSV cell is a virtual
+//! quantity, so two runs with the same `(name, seed, duration)` produce
+//! byte-identical summary CSVs (pinned by `rust/tests/scenario.rs`).
+//! Serving goes through the concurrent [`CloudPool`] (one handle per
+//! worker, exactly like `avery fleet`) — real PJRT when artifacts are
+//! loaded, the synthetic closed-form model otherwise; either way responses
+//! are pure functions of the request, so pool scheduling cannot perturb
+//! the virtual-time results.
+
+use anyhow::Result;
+
+use crate::cloud::CloudPool;
+use crate::coordinator::{IntentLevel, MissionGoal};
+use crate::netsim::{BandwidthTrace, SharedLink};
+use crate::scenario::{build, summarize_trace};
+use crate::streams::fleet::{run_fleet_mission, FleetConfig, FleetRun};
+use crate::streams::{MissionConfig, UavRole};
+use crate::telemetry::{f, pct, Csv, Table};
+
+use super::Env;
+
+#[derive(Clone, Debug)]
+pub struct ScenarioOptions {
+    /// Registered scenario name (`avery scenario --list`).
+    pub name: String,
+    pub duration_secs: f64,
+    pub seed: u64,
+    /// Execute HLO on every Nth delivered packet (1 = all).
+    pub exec_every: usize,
+    /// Overrides of the scenario's fleet spec / goal (None = scenario's).
+    pub uavs: Option<usize>,
+    pub workers: Option<usize>,
+    pub goal: Option<MissionGoal>,
+}
+
+impl Default for ScenarioOptions {
+    fn default() -> Self {
+        Self {
+            name: "urban-flood".to_string(),
+            duration_secs: 1200.0,
+            seed: 7,
+            exec_every: 1,
+            uavs: None,
+            workers: None,
+            goal: None,
+        }
+    }
+}
+
+pub fn run_scenario(env: &Env, opts: &ScenarioOptions) -> Result<FleetRun> {
+    let sc = build(&opts.name, opts.seed, opts.duration_secs)?;
+    let n_uavs = opts.uavs.unwrap_or(sc.fleet.n_uavs).max(1);
+    let workers = opts.workers.unwrap_or(sc.fleet.workers).max(1);
+    let goal = opts.goal.unwrap_or(sc.goal);
+
+    let trace = BandwidthTrace::generate(&sc.trace);
+    let tsum = summarize_trace(&sc.trace, &trace);
+    let mut link = SharedLink::new(trace, sc.link.clone(), n_uavs);
+
+    let fleet_cfg = FleetConfig {
+        n_uavs,
+        mission: MissionConfig {
+            duration_secs: opts.duration_secs,
+            goal,
+            exec_every: opts.exec_every,
+            seed: opts.seed,
+            hysteresis: sc.hysteresis,
+            min_dwell: sc.min_dwell,
+            ..MissionConfig::default()
+        },
+        context_every: sc.fleet.context_every,
+        stagger_secs: sc.fleet.stagger_secs,
+        workers,
+        schedule: sc.schedule.clone(),
+    };
+
+    let pool = CloudPool::new(vec![env.engine.clone(); workers]);
+    let run = run_fleet_mission(
+        &env.engine,
+        &env.datasets(),
+        &env.lut,
+        &env.device,
+        &mut link,
+        &fleet_cfg,
+        &pool,
+    )?;
+
+    // ---- CSVs (all virtual-time quantities: byte-stable per seed). ----
+    let stem = format!("scenario_{}", sc.name);
+    let mut sm = Csv::create(
+        &env.out_dir.join(format!("{stem}_summary.csv")),
+        &[
+            "scenario", "seed", "duration_s", "uavs", "workers", "goal", "delivered",
+            "executed", "aggregate_pps", "jain_pps", "avg_iou", "tier_switches",
+            "intent_switches", "infeasible_s", "total_energy_j", "trace_mean_mbps",
+            "trace_min_mbps", "trace_max_mbps", "trace_outage_s", "trace_regimes",
+        ],
+    )?;
+    sm.row(&[
+        sc.name.to_string(),
+        opts.seed.to_string(),
+        f(opts.duration_secs, 0),
+        n_uavs.to_string(),
+        workers.to_string(),
+        format!("{goal:?}"),
+        run.delivered_total.to_string(),
+        run.executed_total.to_string(),
+        f(run.aggregate_pps, 4),
+        f(run.jain_pps, 4),
+        f(run.avg_iou, 6),
+        run.switches_total.to_string(),
+        run.intent_switches_total.to_string(),
+        run.infeasible_total.to_string(),
+        f(run.total_energy_j, 1),
+        f(tsum.mean_mbps, 4),
+        f(tsum.min_mbps, 4),
+        f(tsum.max_mbps, 4),
+        f(tsum.outage_secs, 0),
+        tsum.regimes.to_string(),
+    ])?;
+
+    let mut pu = Csv::create(
+        &env.out_dir.join(format!("{stem}_per_uav.csv")),
+        &[
+            "uav", "launch_role", "start_t", "seed", "delivered", "executed", "avg_pps",
+            "avg_iou", "energy_j", "ha_secs", "bal_secs", "ht_secs", "tier_switches",
+            "intent_switches", "infeasible_s", "context_acc",
+        ],
+    )?;
+    for o in &run.per_uav {
+        let s = &o.summary;
+        pu.row(&[
+            o.id.to_string(),
+            o.role.name().to_string(),
+            f(o.start_t, 1),
+            o.seed.to_string(),
+            s.delivered.to_string(),
+            s.executed.to_string(),
+            f(s.avg_pps, 4),
+            f(s.avg_iou, 6),
+            f(s.total_energy_j, 2),
+            f(s.tier_secs[0], 1),
+            f(s.tier_secs[1], 1),
+            f(s.tier_secs[2], 1),
+            s.switches.to_string(),
+            s.intent_switches.to_string(),
+            s.infeasible_epochs.to_string(),
+            f(o.context_accuracy, 4),
+        ])?;
+    }
+
+    let mut ep = Csv::create(
+        &env.out_dir.join(format!("{stem}_epochs.csv")),
+        &["uav", "t", "share_true_mbps", "bandwidth_est_mbps", "tier", "stream"],
+    )?;
+    for (uav, e) in &run.epochs {
+        ep.row(&[
+            uav.to_string(),
+            f(e.t, 1),
+            f(e.bandwidth_true_mbps, 4),
+            f(e.bandwidth_est_mbps, 4),
+            e.tier.map(|t| t.index() as i64).unwrap_or(-1).to_string(),
+            match e.level {
+                IntentLevel::Insight => "insight".to_string(),
+                IntentLevel::Context => "context".to_string(),
+            },
+        ])?;
+    }
+
+    // ---- Terminal summary ----
+    let mut table = Table::new(
+        &format!(
+            "Scenario `{}` — {} UAVs, {:.0} min, {:?} | {}",
+            sc.name,
+            n_uavs,
+            opts.duration_secs / 60.0,
+            goal,
+            sc.summary
+        ),
+        &[
+            "UAV", "Launch", "Start", "Delivered", "Avg PPS", "Avg IoU / Ctx Acc",
+            "HA/BAL/HT (s)", "Tier sw", "Intent sw", "Infeasible s",
+        ],
+    );
+    for o in &run.per_uav {
+        let s = &o.summary;
+        let quality = match o.role {
+            UavRole::Insight => pct(s.avg_iou),
+            UavRole::Context => format!("{} ctx", pct(o.context_accuracy)),
+        };
+        table.row(&[
+            o.id.to_string(),
+            o.role.name().to_string(),
+            f(o.start_t, 0),
+            s.delivered.to_string(),
+            f(s.avg_pps, 3),
+            quality,
+            format!("{:.0}/{:.0}/{:.0}", s.tier_secs[0], s.tier_secs[1], s.tier_secs[2]),
+            s.switches.to_string(),
+            s.intent_switches.to_string(),
+            s.infeasible_epochs.to_string(),
+        ]);
+    }
+    table.print();
+
+    println!(
+        "trace: mean {:.1} Mbps in [{:.2}, {:.1}], {} regimes, {:.0} s outage",
+        tsum.mean_mbps, tsum.min_mbps, tsum.max_mbps, tsum.regimes, tsum.outage_secs
+    );
+    println!(
+        "fleet: {:.2} PPS aggregate, Jain {:.3}, avg IoU {}, {} tier switches, \
+         {} intent switches, {} infeasible s",
+        run.aggregate_pps,
+        run.jain_pps,
+        pct(run.avg_iou),
+        run.switches_total,
+        run.intent_switches_total,
+        run.infeasible_total
+    );
+    println!(
+        "csv: {} / {} / {}",
+        sm.path.display(),
+        pu.path.display(),
+        ep.path.display()
+    );
+    Ok(run)
+}

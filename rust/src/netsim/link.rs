@@ -20,12 +20,15 @@ pub struct LinkConfig {
     /// Packet loss probability per transmission (lost packets are
     /// retransmitted once; a second loss drops the packet).
     pub loss_prob: f64,
+    /// Fixed per-attempt latency added on top of the bandwidth-derived
+    /// transfer time (propagation / satellite RTT; scenario knob, default 0).
+    pub extra_latency_s: f64,
     pub seed: u64,
 }
 
 impl Default for LinkConfig {
     fn default() -> Self {
-        Self { jitter_std: 0.03, loss_prob: 0.0, seed: 1 }
+        Self { jitter_std: 0.03, loss_prob: 0.0, extra_latency_s: 0.0, seed: 1 }
     }
 }
 
@@ -73,11 +76,12 @@ impl Link {
     /// trace drops mid-mission (paper Fig 9(d)).
     pub fn transmit(&mut self, t: f64, wire_bytes: f64) -> TxOutcome {
         let mut attempts = 1u32;
-        let mut total_secs = self.transfer_secs(t, wire_bytes);
+        let mut total_secs = self.transfer_secs(t, wire_bytes) + self.cfg.extra_latency_s;
         let mut delivered = true;
         if self.cfg.loss_prob > 0.0 && self.rng.f64() < self.cfg.loss_prob {
             attempts = 2;
-            let retry_secs = self.transfer_secs(t + total_secs, wire_bytes);
+            let retry_secs =
+                self.transfer_secs(t + total_secs, wire_bytes) + self.cfg.extra_latency_s;
             if self.rng.f64() < self.cfg.loss_prob {
                 delivered = false;
             }
@@ -127,7 +131,7 @@ mod tests {
     fn delay_matches_bandwidth() {
         let mut link = Link::new(
             flat_trace(11.68, 600),
-            LinkConfig { jitter_std: 0.0, loss_prob: 0.0, seed: 1 },
+            LinkConfig { jitter_std: 0.0, loss_prob: 0.0, seed: 1, ..LinkConfig::default() },
         );
         // Paper: High-Accuracy 2.92 MB at 11.68 Mbps => exactly 0.5 PPS.
         let out = link.transmit(0.0, 2.92e6);
@@ -140,8 +144,10 @@ mod tests {
         let mut samples = vec![20.0; 2];
         samples.extend(vec![8.0; 600]);
         let trace = BandwidthTrace { dt: 1.0, samples_mbps: samples };
-        let mut link =
-            Link::new(trace, LinkConfig { jitter_std: 0.0, loss_prob: 0.0, seed: 1 });
+        let mut link = Link::new(
+            trace,
+            LinkConfig { jitter_std: 0.0, loss_prob: 0.0, seed: 1, ..LinkConfig::default() },
+        );
         // 10 MB from t=0: 2 s at 20 Mbps moves 5 MB, the rest at 8 Mbps.
         let out = link.transmit(0.0, 10e6);
         let expect = 2.0 + (10e6 * 8.0 - 2.0 * 20e6) / 8e6;
@@ -152,11 +158,28 @@ mod tests {
     fn loss_triggers_retry() {
         let mut link = Link::new(
             flat_trace(10.0, 600),
-            LinkConfig { jitter_std: 0.0, loss_prob: 1.0, seed: 2 },
+            LinkConfig { jitter_std: 0.0, loss_prob: 1.0, seed: 2, ..LinkConfig::default() },
         );
         let out = link.transmit(0.0, 1e6);
         assert_eq!(out.attempts, 2);
         assert!(!out.delivered); // loss_prob 1.0 drops the retry too
+    }
+
+    #[test]
+    fn extra_latency_slows_every_attempt() {
+        let mut link = Link::new(
+            flat_trace(11.68, 600),
+            LinkConfig {
+                jitter_std: 0.0,
+                loss_prob: 0.0,
+                extra_latency_s: 0.25,
+                seed: 1,
+            },
+        );
+        let out = link.transmit(0.0, 2.92e6);
+        assert!((out.tx_secs - 2.25).abs() < 1e-6, "tx {}", out.tx_secs);
+        // Goodput reflects the added latency (sender-observed).
+        assert!(out.goodput_mbps < 11.68);
     }
 
     #[test]

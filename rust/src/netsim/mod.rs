@@ -15,7 +15,7 @@ mod trace;
 
 pub use link::{Link, LinkConfig, TxOutcome};
 pub use shared::SharedLink;
-pub use trace::{BandwidthTrace, Phase, PhaseKind, TraceConfig};
+pub use trace::{BandwidthTrace, Phase, PhaseKind, TraceConfig, OUTAGE_FLOOR_MBPS};
 
 use crate::util::Ewma;
 

@@ -91,18 +91,28 @@ impl SharedLink {
     pub fn transmit(&mut self, uav: usize, t: f64, wire_bytes: f64) -> TxOutcome {
         self.reap(t);
         let mut attempts = 1u32;
-        let mut total_secs = self.transfer_secs(uav, t, wire_bytes);
+        // Air time (bits on the channel) and propagation latency are
+        // tracked separately: only air time registers as fair-share
+        // occupancy — a satellite RTT delays the sender without denying
+        // bandwidth to anyone else.
+        let air_secs = self.transfer_secs(uav, t, wire_bytes);
+        let mut total_secs = air_secs + self.cfg.extra_latency_s;
         let mut delivered = true;
         let loss = self.cfg.loss_prob;
+        self.inflight.push(InFlight { uav, from: t, until: t + air_secs });
         if loss > 0.0 && self.rngs[uav].f64() < loss {
             attempts = 2;
-            let retry = self.transfer_secs(uav, t + total_secs, wire_bytes);
+            // The retry goes on the air only after the first attempt's
+            // propagation delay elapses — its occupancy window starts where
+            // its bandwidth integration starts.
+            let retry_from = t + total_secs;
+            let retry = self.transfer_secs(uav, retry_from, wire_bytes);
             if self.rngs[uav].f64() < loss {
                 delivered = false;
             }
-            total_secs += retry;
+            self.inflight.push(InFlight { uav, from: retry_from, until: retry_from + retry });
+            total_secs += retry + self.cfg.extra_latency_s;
         }
-        self.inflight.push(InFlight { uav, from: t, until: t + total_secs });
         let goodput = if total_secs > 0.0 {
             wire_bytes * 8.0 / 1e6 / total_secs
         } else {
@@ -150,7 +160,7 @@ mod tests {
     }
 
     fn quiet_cfg(seed: u64) -> LinkConfig {
-        LinkConfig { jitter_std: 0.0, loss_prob: 0.0, seed }
+        LinkConfig { jitter_std: 0.0, loss_prob: 0.0, seed, ..LinkConfig::default() }
     }
 
     #[test]
@@ -191,11 +201,32 @@ mod tests {
     }
 
     #[test]
+    fn extra_latency_delays_sender_without_occupying_the_channel() {
+        let mut shared = SharedLink::new(
+            flat_trace(16.0, 600),
+            LinkConfig {
+                jitter_std: 0.0,
+                loss_prob: 0.0,
+                extra_latency_s: 0.5,
+                seed: 1,
+            },
+            2,
+        );
+        // 2 MB at 16 Mbps = 1 s of air time + 0.5 s propagation.
+        let out = shared.transmit(0, 0.0, 2e6);
+        assert!((out.tx_secs - 1.5).abs() < 1e-6, "tx {}", out.tx_secs);
+        // While bits are on the air the other UAV shares the channel...
+        assert!((shared.share_at(1, 0.5) - 8.0).abs() < 1e-9);
+        // ...but pure propagation time does not count as occupancy.
+        assert!((shared.share_at(1, 1.2) - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
     fn deterministic_per_seed_and_order() {
         let run = |seed: u64| {
             let mut s = SharedLink::new(
                 flat_trace(14.0, 600),
-                LinkConfig { jitter_std: 0.03, loss_prob: 0.0, seed },
+                LinkConfig { jitter_std: 0.03, loss_prob: 0.0, seed, ..LinkConfig::default() },
                 4,
             );
             let mut out = Vec::new();

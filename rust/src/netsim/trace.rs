@@ -1,15 +1,25 @@
-//! Scripted bandwidth trace generator (paper §5.3.1).
+//! Scripted bandwidth trace generator (paper §5.3.1) plus the richer
+//! regime kinds the scenario library layers on top.
 //!
 //! A trace is a sequence of phases; each phase has a kind that controls how
 //! bandwidth evolves second-by-second:
 //! * `Stable`   — small jitter around a level,
 //! * `Volatile` — large random-walk swings (clamped to the global range),
-//! * `Drop`     — a sustained fall to a low level, held, then recovery.
+//! * `Drop`     — a sustained fall to a low level, held, then recovery,
+//! * `Outage`   — full blackout: bandwidth collapses to a near-zero floor
+//!   (exempt from the `min_mbps` clamp; never below 0.01 Mbps so in-flight
+//!   transfers stall rather than divide by zero),
+//! * `Sawtooth` — satellite-handoff pattern: bandwidth ramps linearly from
+//!   the ceiling down to the phase level as the satellite sinks toward the
+//!   horizon, then snaps back on handoff (five handoffs per phase).
 //!
 //! The default 20-minute script mirrors the paper's: stable opening,
 //! volatility in the middle, two sustained drops (one dipping below the
 //! High-Accuracy tier's 11.68 Mbps feasibility threshold so the controller
-//! demonstrably switches to Balanced), and a stable tail.
+//! demonstrably switches to Balanced), and a stable tail.  The scenario
+//! library (`crate::scenario`) composes the other kinds into named disaster
+//! regimes, including Markov-modulated regime switching
+//! ([`TraceConfig::markov_modulated`]).
 
 use crate::util::Rng;
 
@@ -18,7 +28,17 @@ pub enum PhaseKind {
     Stable,
     Volatile,
     Drop,
+    Outage,
+    Sawtooth,
 }
+
+/// Bandwidth floor during an [`PhaseKind::Outage`] phase (Mbps).  Strictly
+/// positive so transfer integration always terminates; low enough that no
+/// Insight tier is feasible (High-Throughput needs 3.32 Mbps at 0.5 PPS).
+pub const OUTAGE_FLOOR_MBPS: f64 = 0.01;
+
+/// Handoffs (ramp resets) per Sawtooth phase.
+const SAWTOOTH_HANDOFFS: f64 = 5.0;
 
 #[derive(Clone, Copy, Debug)]
 pub struct Phase {
@@ -63,6 +83,81 @@ impl TraceConfig {
     pub fn total_secs(&self) -> f64 {
         self.phases.iter().map(|p| p.secs).sum()
     }
+
+    /// Rescale every phase so the script spans `duration_secs` (the pattern
+    /// every driver used inline before the scenario library needed it too).
+    pub fn scaled_to(mut self, duration_secs: f64) -> Self {
+        let total = self.total_secs();
+        if total > 0.0 && (duration_secs - total).abs() > 1e-9 {
+            let k = duration_secs / total;
+            for p in &mut self.phases {
+                p.secs *= k;
+            }
+        }
+        self
+    }
+
+    /// `(start_sec, end_sec, kind)` for every phase, in script order.
+    pub fn phase_windows(&self) -> Vec<(f64, f64, PhaseKind)> {
+        let mut t = 0.0;
+        self.phases
+            .iter()
+            .map(|p| {
+                let w = (t, t + p.secs, p.kind);
+                t += p.secs;
+                w
+            })
+            .collect()
+    }
+
+    /// Markov-modulated regime switching: dwell in one regime kind for a
+    /// random 0.5–1.5× of `mean_dwell_secs`, then hop to a different kind
+    /// (uniform over the others — a symmetric transition matrix with no
+    /// self-loops).  Anchor levels are drawn per-regime from kind-specific
+    /// bands of the `[min_mbps, max_mbps]` range.  Fully deterministic in
+    /// `seed`; the phase count is the trace's "regime switch count".
+    pub fn markov_modulated(
+        seed: u64,
+        duration_secs: f64,
+        min_mbps: f64,
+        max_mbps: f64,
+        mean_dwell_secs: f64,
+        kinds: &[PhaseKind],
+    ) -> Self {
+        let mut rng = Rng::new(seed ^ 0x4D41524B_4F56u64); // "MARKOV"
+        let mut phases = Vec::new();
+        if kinds.is_empty() {
+            // Degenerate but total: an empty regime set yields an empty
+            // script (generate() then returns an empty trace).
+            return Self { phases, min_mbps, max_mbps, dt: 1.0, seed };
+        }
+        let mut ki = 0usize;
+        let mut t = 0.0;
+        while t < duration_secs {
+            let kind = kinds[ki % kinds.len()];
+            let rem = duration_secs - t;
+            // Floor of one second so a zero/tiny mean dwell still advances
+            // the clock (the loop must terminate for any input).
+            let mut dwell = (mean_dwell_secs * (0.5 + rng.f64())).max(1.0);
+            // Absorb a short tail into the final regime.
+            if rem - dwell < 2.0 {
+                dwell = rem;
+            }
+            let level_mbps = match kind {
+                PhaseKind::Stable => min_mbps + (max_mbps - min_mbps) * rng.range(0.6, 0.95),
+                PhaseKind::Volatile => min_mbps + (max_mbps - min_mbps) * rng.range(0.4, 0.8),
+                PhaseKind::Drop => min_mbps + (max_mbps - min_mbps) * rng.range(0.0, 0.15),
+                PhaseKind::Outage => OUTAGE_FLOOR_MBPS,
+                PhaseKind::Sawtooth => min_mbps + (max_mbps - min_mbps) * rng.range(0.0, 0.3),
+            };
+            phases.push(Phase { kind, secs: dwell, level_mbps });
+            t += dwell;
+            if kinds.len() > 1 {
+                ki = (ki + 1 + rng.below(kinds.len() - 1)) % kinds.len();
+            }
+        }
+        Self { phases, min_mbps, max_mbps, dt: 1.0, seed }
+    }
 }
 
 /// A fully materialized trace: bandwidth (Mbps) sampled every `dt` seconds.
@@ -95,6 +190,27 @@ impl BandwidthTrace {
                         let pull = (phase.level_mbps - level) * 0.05;
                         level += pull + rng.normal() * 1.4;
                         level = level.clamp(cfg.min_mbps, cfg.max_mbps);
+                        samples.push(level);
+                    }
+                }
+                PhaseKind::Outage => {
+                    // Blackout: collapse to the floor immediately; tiny
+                    // positive jitter so the floor is never exactly constant.
+                    let floor = phase.level_mbps.max(OUTAGE_FLOOR_MBPS);
+                    for _ in 0..n {
+                        level = (floor + rng.f64() * 0.02)
+                            .clamp(OUTAGE_FLOOR_MBPS, cfg.max_mbps);
+                        samples.push(level);
+                    }
+                }
+                PhaseKind::Sawtooth => {
+                    // Satellite pass: ramp from the ceiling down to the phase
+                    // level, snap back on handoff.  Five handoffs per phase.
+                    let period = (phase.secs / SAWTOOTH_HANDOFFS).max(cfg.dt);
+                    for i in 0..n {
+                        let pos = ((i as f64 * cfg.dt) % period) / period;
+                        let v = cfg.max_mbps + (phase.level_mbps - cfg.max_mbps) * pos;
+                        level = (v + rng.normal() * 0.2).clamp(cfg.min_mbps, cfg.max_mbps);
                         samples.push(level);
                     }
                 }
@@ -176,5 +292,74 @@ mod tests {
     fn at_clamps_past_end() {
         let tr = BandwidthTrace::generate(&TraceConfig::paper_20min(7));
         assert_eq!(tr.at(1e9), *tr.samples_mbps.last().unwrap());
+    }
+
+    #[test]
+    fn scaled_to_preserves_structure() {
+        let cfg = TraceConfig::paper_20min(7).scaled_to(120.0);
+        assert!((cfg.total_secs() - 120.0).abs() < 1e-9);
+        assert_eq!(cfg.phases.len(), 7);
+        assert_eq!(cfg.phases[0].kind, PhaseKind::Stable);
+    }
+
+    #[test]
+    fn outage_phase_collapses_below_min() {
+        let cfg = TraceConfig {
+            phases: vec![
+                Phase { kind: PhaseKind::Stable, secs: 30.0, level_mbps: 16.0 },
+                Phase { kind: PhaseKind::Outage, secs: 30.0, level_mbps: 0.05 },
+                Phase { kind: PhaseKind::Stable, secs: 30.0, level_mbps: 16.0 },
+            ],
+            min_mbps: 8.0,
+            max_mbps: 20.0,
+            dt: 1.0,
+            seed: 3,
+        };
+        let tr = BandwidthTrace::generate(&cfg);
+        let blackout = &tr.samples_mbps[30..60];
+        assert!(blackout.iter().all(|&b| b < 1.0), "outage not dark: {blackout:?}");
+        assert!(blackout.iter().all(|&b| b >= OUTAGE_FLOOR_MBPS));
+        // Non-outage samples still respect the global clamp.
+        assert!(tr.samples_mbps[..30].iter().all(|&b| (8.0..=20.0).contains(&b)));
+    }
+
+    #[test]
+    fn sawtooth_ramps_and_resets() {
+        let cfg = TraceConfig {
+            phases: vec![Phase { kind: PhaseKind::Sawtooth, secs: 100.0, level_mbps: 9.0 }],
+            min_mbps: 8.0,
+            max_mbps: 20.0,
+            dt: 1.0,
+            seed: 5,
+        };
+        let tr = BandwidthTrace::generate(&cfg);
+        // 5 handoffs over 100 s => 20 s period.  Sample just before and just
+        // after a reset boundary: the snap-back must be large and positive.
+        let before = tr.samples_mbps[19];
+        let after = tr.samples_mbps[20];
+        assert!(after - before > 5.0, "no handoff snap: {before} -> {after}");
+        assert!(tr.samples_mbps.iter().all(|&b| (8.0..=20.0).contains(&b)));
+    }
+
+    #[test]
+    fn markov_modulated_deterministic_and_covers_duration() {
+        let kinds = [PhaseKind::Stable, PhaseKind::Volatile, PhaseKind::Drop];
+        let a = TraceConfig::markov_modulated(9, 600.0, 8.0, 20.0, 60.0, &kinds);
+        let b = TraceConfig::markov_modulated(9, 600.0, 8.0, 20.0, 60.0, &kinds);
+        assert_eq!(a.phases.len(), b.phases.len());
+        assert!((a.total_secs() - 600.0).abs() < 1e-6);
+        assert_eq!(
+            BandwidthTrace::generate(&a).samples_mbps,
+            BandwidthTrace::generate(&b).samples_mbps
+        );
+        let c = TraceConfig::markov_modulated(10, 600.0, 8.0, 20.0, 60.0, &kinds);
+        assert_ne!(
+            BandwidthTrace::generate(&a).samples_mbps,
+            BandwidthTrace::generate(&c).samples_mbps
+        );
+        // No self-loops: consecutive regimes always differ in kind.
+        for w in a.phases.windows(2) {
+            assert_ne!(w[0].kind, w[1].kind);
+        }
     }
 }

@@ -112,7 +112,7 @@ impl Packet {
         };
         out.extend_from_slice(code_bytes);
         out.extend_from_slice(clip_bytes);
-        let crc = crc32fast::hash(&out);
+        let crc = crate::util::crc32(&out);
         out.extend_from_slice(&crc.to_le_bytes());
         out
     }
@@ -123,7 +123,7 @@ impl Packet {
         }
         let (body, crc_bytes) = buf.split_at(buf.len() - 4);
         let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
-        let got = crc32fast::hash(body);
+        let got = crate::util::crc32(body);
         if want != got {
             bail!("packet CRC mismatch: want {want:08x} got {got:08x}");
         }

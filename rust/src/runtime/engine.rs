@@ -72,6 +72,21 @@ impl Drop for EngineShared {
 }
 
 impl Engine {
+    /// Spawn an engine thread backed by the closed-form synthetic model
+    /// (`runtime::synth`) — no artifacts, no PJRT.  Serves the same
+    /// artifact-name surface as the real engine so missions, the cloud
+    /// pool and the fleet scheduler run unmodified; see DESIGN.md
+    /// "Scenario library & artifact-free sim path".
+    pub fn synthetic() -> Self {
+        let (tx, rx) = channel::<Request>();
+        let join = std::thread::Builder::new()
+            .name("avery-synth".into())
+            .spawn(move || synth_worker(rx))
+            .expect("spawning synthetic engine thread");
+        let shared = Arc::new(EngineShared { tx: tx.clone(), join: Mutex::new(Some(join)) });
+        Engine { tx, _shared: shared }
+    }
+
     /// Spawn the engine thread over a manifest. Artifacts compile lazily.
     pub fn start(manifest: Manifest, mode: ExecMode) -> Result<Self> {
         let (tx, rx) = channel::<Request>();
@@ -120,6 +135,32 @@ impl Engine {
     /// Switch weight-delivery mode (affects artifacts loaded afterwards).
     pub fn set_mode(&self, mode: ExecMode) {
         let _ = self.tx.send(Request::SetMode(mode));
+    }
+}
+
+/// Request loop of the synthetic engine thread: every execute is answered
+/// by the deterministic closed-form model; preloads are no-ops.
+fn synth_worker(rx: std::sync::mpsc::Receiver<Request>) {
+    let mut stats: BTreeMap<String, ExecStats> = BTreeMap::new();
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::SetMode(_) => {}
+            Request::Stats { reply } => {
+                let _ = reply.send(stats.clone());
+            }
+            Request::Preload { reply, .. } => {
+                let _ = reply.send(Ok(()));
+            }
+            Request::Execute { artifact, set, inputs, reply } => {
+                let t0 = Instant::now();
+                let r = super::synth::execute_synthetic(&artifact, &set, &inputs);
+                let st = stats.entry(artifact).or_default();
+                st.calls += 1;
+                st.total_secs += t0.elapsed().as_secs_f64();
+                let _ = reply.send(r);
+            }
+        }
     }
 }
 

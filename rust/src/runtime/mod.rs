@@ -9,9 +9,15 @@
 //! device buffers once per (artifact, weight-set) and reused by every call
 //! (`execute_b`), so the steady-state request path moves only the runtime
 //! inputs.
+//!
+//! [`Engine::synthetic`] swaps the PJRT worker for the closed-form model in
+//! [`synth`] — the artifact-free sim path used by `Env::synthetic`, the
+//! scenario CLI fallback and the un-gated control-plane tests.
 
 mod engine;
 mod loader;
+mod synth;
 
 pub use engine::{Engine, ExecMode, ExecStats};
 pub use loader::{load_weight_tensors, WeightFile};
+pub use synth::execute_synthetic;

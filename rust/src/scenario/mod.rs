@@ -1,0 +1,343 @@
+//! The scenario library: named, parameterized disaster/network regimes.
+//!
+//! The paper evaluates over exactly one 20-minute scripted trace with one
+//! fixed operator intent.  Real deployments face many regimes — wildfire
+//! smoke attenuation, urban-canyon flooding, earthquake blackouts,
+//! satellite-relay sawtooths — and operators re-task UAVs mid-mission.
+//! Each [`Scenario`] composes:
+//!
+//! * **network dynamics** — a [`TraceConfig`] built from the scenario's
+//!   phase script or Markov regime model, plus [`LinkConfig`] knobs
+//!   (loss, jitter, fixed extra latency),
+//! * **an intent schedule** — timed operator re-taskings
+//!   ([`IntentSwitch`]) that move agents between the Context and Insight
+//!   streams through the existing controller,
+//! * **fleet composition** — size, Context/Insight mix, staggered starts,
+//!   cloud workers.
+//!
+//! Everything is deterministic in `(name, seed, duration)`; the golden
+//! trace snapshots in `rust/tests/scenario.rs` pin the generators against
+//! silent drift.  Run one with `avery scenario --name <name>`; list them
+//! with `avery scenario --list`.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::MissionGoal;
+use crate::netsim::{BandwidthTrace, LinkConfig, Phase, PhaseKind, TraceConfig};
+use crate::streams::IntentSwitch;
+
+/// Fleet composition of a scenario.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetSpec {
+    pub n_uavs: usize,
+    /// Every k-th UAV launches on the Context stream (0 = all Insight).
+    pub context_every: usize,
+    pub stagger_secs: f64,
+    pub workers: usize,
+}
+
+/// A named disaster/network regime, fully resolved for one (seed, duration).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub trace: TraceConfig,
+    pub link: LinkConfig,
+    pub fleet: FleetSpec,
+    /// Mission-relative operator re-taskings (offset per UAV by its start).
+    pub schedule: Vec<IntentSwitch>,
+    pub goal: MissionGoal,
+    /// Controller hysteresis margin used by scenario missions.
+    pub hysteresis: f64,
+    /// Controller minimum-dwell decisions used by scenario missions.
+    pub min_dwell: u64,
+}
+
+/// `(name, one-line summary)` for every registered scenario, in listing
+/// order — the static registry index (`build` attaches the same summary to
+/// the constructed scenario; pinned by a unit test).
+pub const SCENARIOS: [(&str, &str); 5] = [
+    (
+        "paper-baseline",
+        "the paper's 20-min stable/volatile/drop script, single UAV, fixed Insight intent",
+    ),
+    (
+        "wildfire-ridge",
+        "Markov smoke-attenuation regimes (stable/volatile/drop), 4 UAVs, \
+         triage detour then vehicle re-task",
+    ),
+    (
+        "urban-flood",
+        "drop-heavy urban canyon, 6 UAVs, Context→Insight escalation mid-mission \
+         (the §4.3 triage workflow)",
+    ),
+    (
+        "earthquake-canyon",
+        "two full blackouts between survey legs, lossy link, 2 UAVs — outage \
+         recovery stress",
+    ),
+    (
+        "coastal-satellite",
+        "satellite-handoff sawtooth + 280 ms propagation, 3 UAVs, throughput-first goal",
+    ),
+];
+
+/// Registered scenario names, in listing order.
+pub const SCENARIO_NAMES: [&str; 5] = [
+    SCENARIOS[0].0,
+    SCENARIOS[1].0,
+    SCENARIOS[2].0,
+    SCENARIOS[3].0,
+    SCENARIOS[4].0,
+];
+
+/// One-line summary of a registered scenario name.
+fn summary_of(name: &str) -> &'static str {
+    SCENARIOS
+        .iter()
+        .find(|(n, _)| *n == name)
+        .map(|(_, s)| *s)
+        .unwrap_or("")
+}
+
+/// `(name, one-line summary)` for every registered scenario.
+pub fn list() -> Vec<(&'static str, &'static str)> {
+    SCENARIOS.to_vec()
+}
+
+/// Build a registered scenario for a seed and mission duration (seconds).
+pub fn build(name: &str, seed: u64, duration_secs: f64) -> Result<Scenario> {
+    let d = duration_secs;
+    match name {
+        // The paper's §5.3 reproduction: one 20-minute script, one standing
+        // Insight intent, a dedicated-feeling uplink (N=1).
+        "paper-baseline" => Ok(Scenario {
+            name: "paper-baseline",
+            summary: summary_of("paper-baseline"),
+            trace: TraceConfig::paper_20min(seed).scaled_to(d),
+            link: LinkConfig { seed, ..LinkConfig::default() },
+            fleet: FleetSpec { n_uavs: 1, context_every: 0, stagger_secs: 0.0, workers: 1 },
+            schedule: Vec::new(),
+            goal: MissionGoal::PrioritizeAccuracy,
+            hysteresis: 0.0,
+            min_dwell: 0,
+        }),
+
+        // Smoke plumes drifting across the ridge line: Markov-modulated
+        // switching between calm, turbulent and attenuated regimes, with a
+        // mid-mission triage detour and a late re-tasking onto vehicles.
+        "wildfire-ridge" => Ok(Scenario {
+            name: "wildfire-ridge",
+            summary: summary_of("wildfire-ridge"),
+            trace: TraceConfig::markov_modulated(
+                seed,
+                d,
+                8.0,
+                20.0,
+                (d / 12.0).max(20.0),
+                &[PhaseKind::Stable, PhaseKind::Volatile, PhaseKind::Drop],
+            ),
+            link: LinkConfig { loss_prob: 0.01, jitter_std: 0.04, seed, ..LinkConfig::default() },
+            fleet: FleetSpec { n_uavs: 4, context_every: 4, stagger_secs: 5.0, workers: 2 },
+            schedule: vec![
+                IntentSwitch::new(0.55 * d, "give me a quick status of this scene"),
+                IntentSwitch::new(0.75 * d, "mark the submerged vehicles"),
+            ],
+            goal: MissionGoal::PrioritizeAccuracy,
+            hysteresis: 0.10,
+            min_dwell: 2,
+        }),
+
+        // The §4.3 triage-escalation story on a flooded urban canyon: a
+        // paper-like drop-heavy script, lossier link, and the operator
+        // walking the fleet from awareness into grounded segmentation.
+        "urban-flood" => Ok(Scenario {
+            name: "urban-flood",
+            summary: summary_of("urban-flood"),
+            trace: TraceConfig {
+                phases: vec![
+                    Phase { kind: PhaseKind::Stable, secs: 0.15 * d, level_mbps: 16.0 },
+                    Phase { kind: PhaseKind::Volatile, secs: 0.20 * d, level_mbps: 13.0 },
+                    Phase { kind: PhaseKind::Drop, secs: 0.15 * d, level_mbps: 8.5 },
+                    Phase { kind: PhaseKind::Stable, secs: 0.10 * d, level_mbps: 15.0 },
+                    Phase { kind: PhaseKind::Drop, secs: 0.20 * d, level_mbps: 9.0 },
+                    Phase { kind: PhaseKind::Volatile, secs: 0.10 * d, level_mbps: 12.0 },
+                    Phase { kind: PhaseKind::Stable, secs: 0.10 * d, level_mbps: 17.0 },
+                ],
+                min_mbps: 8.0,
+                max_mbps: 20.0,
+                dt: 1.0,
+                seed,
+            },
+            link: LinkConfig { loss_prob: 0.02, seed, ..LinkConfig::default() },
+            fleet: FleetSpec { n_uavs: 6, context_every: 3, stagger_secs: 8.0, workers: 2 },
+            schedule: vec![
+                IntentSwitch::new(0.40 * d, "are there any living beings on the rooftops"),
+                IntentSwitch::new(0.60 * d, "highlight the stranded people"),
+            ],
+            goal: MissionGoal::PrioritizeAccuracy,
+            hysteresis: 0.10,
+            min_dwell: 2,
+        }),
+
+        // Aftershock terrain: repeated full blackouts between survey legs —
+        // the outage-recovery stress case (infeasible epochs, estimator
+        // collapse and recovery).
+        "earthquake-canyon" => Ok(Scenario {
+            name: "earthquake-canyon",
+            summary: summary_of("earthquake-canyon"),
+            trace: TraceConfig {
+                phases: vec![
+                    Phase { kind: PhaseKind::Stable, secs: 0.20 * d, level_mbps: 15.0 },
+                    Phase { kind: PhaseKind::Outage, secs: 0.08 * d, level_mbps: 0.05 },
+                    Phase { kind: PhaseKind::Volatile, secs: 0.22 * d, level_mbps: 12.0 },
+                    Phase { kind: PhaseKind::Outage, secs: 0.10 * d, level_mbps: 0.05 },
+                    Phase { kind: PhaseKind::Drop, secs: 0.20 * d, level_mbps: 8.5 },
+                    Phase { kind: PhaseKind::Stable, secs: 0.20 * d, level_mbps: 16.0 },
+                ],
+                min_mbps: 8.0,
+                max_mbps: 20.0,
+                dt: 1.0,
+                seed,
+            },
+            link: LinkConfig { loss_prob: 0.03, jitter_std: 0.05, seed, ..LinkConfig::default() },
+            fleet: FleetSpec { n_uavs: 2, context_every: 0, stagger_secs: 10.0, workers: 1 },
+            schedule: Vec::new(),
+            goal: MissionGoal::PrioritizeAccuracy,
+            hysteresis: 0.10,
+            min_dwell: 2,
+        }),
+
+        // Coastal relay through a LEO constellation: per-pass sawtooth
+        // ramps with handoff snap-backs and a fixed propagation latency;
+        // throughput-first tasking with a late vehicle re-task.
+        "coastal-satellite" => Ok(Scenario {
+            name: "coastal-satellite",
+            summary: summary_of("coastal-satellite"),
+            trace: TraceConfig {
+                phases: vec![
+                    Phase { kind: PhaseKind::Sawtooth, secs: 0.30 * d, level_mbps: 9.0 },
+                    Phase { kind: PhaseKind::Stable, secs: 0.10 * d, level_mbps: 18.0 },
+                    Phase { kind: PhaseKind::Sawtooth, secs: 0.30 * d, level_mbps: 8.5 },
+                    Phase { kind: PhaseKind::Volatile, secs: 0.10 * d, level_mbps: 12.0 },
+                    Phase { kind: PhaseKind::Sawtooth, secs: 0.20 * d, level_mbps: 10.0 },
+                ],
+                min_mbps: 8.0,
+                max_mbps: 20.0,
+                dt: 1.0,
+                seed,
+            },
+            link: LinkConfig {
+                loss_prob: 0.01,
+                extra_latency_s: 0.28,
+                seed,
+                ..LinkConfig::default()
+            },
+            fleet: FleetSpec { n_uavs: 3, context_every: 3, stagger_secs: 6.0, workers: 2 },
+            schedule: vec![IntentSwitch::new(0.50 * d, "mark the submerged vehicles")],
+            goal: MissionGoal::PrioritizeThroughput,
+            hysteresis: 0.10,
+            min_dwell: 2,
+        }),
+
+        other => bail!(
+            "unknown scenario `{other}` — run `avery scenario --list` \
+             (registered: {})",
+            SCENARIO_NAMES.join(", ")
+        ),
+    }
+}
+
+/// Summary statistics of a generated scenario trace — the quantities the
+/// golden-trace regression snapshots pin.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSummary {
+    pub mean_mbps: f64,
+    pub min_mbps: f64,
+    pub max_mbps: f64,
+    /// Seconds spent below half the configured floor (outage dwell).
+    pub outage_secs: f64,
+    /// Number of scripted/Markov regimes (phase count).
+    pub regimes: usize,
+}
+
+/// Summarize a generated trace against its config.
+pub fn summarize_trace(cfg: &TraceConfig, trace: &BandwidthTrace) -> TraceSummary {
+    let s = &trace.samples_mbps;
+    let n = s.len().max(1) as f64;
+    let outage_thresh = 0.5 * cfg.min_mbps;
+    TraceSummary {
+        mean_mbps: s.iter().sum::<f64>() / n,
+        min_mbps: s.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_mbps: s.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        outage_secs: s.iter().filter(|&&b| b < outage_thresh).count() as f64 * trace.dt,
+        regimes: cfg.phases.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_builds_every_name() {
+        for name in SCENARIO_NAMES {
+            let sc = build(name, 7, 600.0).unwrap();
+            assert_eq!(sc.name, name);
+            assert!(!sc.summary.is_empty(), "{name} listed without a summary");
+            assert!((sc.trace.total_secs() - 600.0).abs() < 1e-6, "{name}");
+            assert!(sc.fleet.n_uavs >= 1);
+        }
+        assert!(build("nope", 7, 600.0).is_err());
+        assert_eq!(list().len(), SCENARIO_NAMES.len());
+        // The static index and the buildable set stay aligned.
+        for (n, s) in SCENARIOS {
+            assert!(SCENARIO_NAMES.contains(&n));
+            assert!(!s.is_empty());
+        }
+    }
+
+    #[test]
+    fn library_covers_required_diversity() {
+        // At least one registered scenario with a full outage phase...
+        assert!(SCENARIO_NAMES.iter().any(|n| {
+            build(n, 7, 600.0)
+                .unwrap()
+                .trace
+                .phases
+                .iter()
+                .any(|p| p.kind == PhaseKind::Outage)
+        }));
+        // ...at least one with a mid-mission intent switch...
+        assert!(SCENARIO_NAMES
+            .iter()
+            .any(|n| !build(n, 7, 600.0).unwrap().schedule.is_empty()));
+        // ...and at least one satellite sawtooth with extra latency.
+        assert!(SCENARIO_NAMES.iter().any(|n| {
+            let sc = build(n, 7, 600.0).unwrap();
+            sc.link.extra_latency_s > 0.0
+                && sc.trace.phases.iter().any(|p| p.kind == PhaseKind::Sawtooth)
+        }));
+    }
+
+    #[test]
+    fn schedules_fit_inside_the_mission() {
+        for name in SCENARIO_NAMES {
+            let sc = build(name, 7, 600.0).unwrap();
+            for sw in &sc.schedule {
+                assert!(sw.t > 0.0 && sw.t < 600.0, "{name} switch at {}", sw.t);
+            }
+        }
+    }
+
+    #[test]
+    fn trace_summary_counts_outage() {
+        let sc = build("earthquake-canyon", 7, 600.0).unwrap();
+        let tr = BandwidthTrace::generate(&sc.trace);
+        let sum = summarize_trace(&sc.trace, &tr);
+        // 18 % of the mission is scripted blackout.
+        assert!(sum.outage_secs > 0.15 * 600.0 && sum.outage_secs < 0.21 * 600.0);
+        assert!(sum.min_mbps < 1.0);
+        assert_eq!(sum.regimes, 6);
+    }
+}

@@ -21,7 +21,7 @@ use crate::energy::DeviceModel;
 use crate::netsim::SharedLink;
 use crate::runtime::Engine;
 
-use super::{EpochRecord, MissionConfig, Policy, RunSummary, UavAgent, UavRole};
+use super::{EpochRecord, IntentSwitch, MissionConfig, Policy, RunSummary, UavAgent, UavRole};
 
 /// Standing Insight intents rotated across the fleet (UAV 0 keeps the
 /// single-UAV mission's default so an N=1 fleet reproduces `fig9`).
@@ -52,6 +52,10 @@ pub struct FleetConfig {
     pub stagger_secs: f64,
     /// Cloud worker count (server-utilization denominator).
     pub workers: usize,
+    /// Timed operator re-taskings applied to every UAV, expressed in
+    /// mission-relative seconds and offset by each UAV's staggered start —
+    /// the scenario library's intent schedules (see DESIGN.md).
+    pub schedule: Vec<IntentSwitch>,
 }
 
 impl Default for FleetConfig {
@@ -62,6 +66,7 @@ impl Default for FleetConfig {
             context_every: 4,
             stagger_secs: 5.0,
             workers: 2,
+            schedule: Vec::new(),
         }
     }
 }
@@ -70,11 +75,14 @@ impl Default for FleetConfig {
 #[derive(Clone, Debug)]
 pub struct UavOutcome {
     pub id: usize,
+    /// Launch role — intent schedules may have moved the agent between
+    /// streams mid-mission (see `summary.intent_switches`).
     pub role: UavRole,
     pub start_t: f64,
     pub seed: u64,
     pub summary: RunSummary,
-    /// Presence accuracy (Context role; 0 for Insight).
+    /// Presence accuracy over executed Context queries (0 when the agent
+    /// never flew the Context stream).
     pub context_accuracy: f64,
 }
 
@@ -82,7 +90,8 @@ pub struct UavOutcome {
 #[derive(Clone, Debug)]
 pub struct FleetRun {
     pub per_uav: Vec<UavOutcome>,
-    /// Per-UAV epoch telemetry (uav id, record) — Insight agents only.
+    /// Per-UAV epoch telemetry (uav id, record); Context epochs carry
+    /// `tier: None` and `level: Context`.
     pub epochs: Vec<(usize, EpochRecord)>,
     /// Jain fairness index over Insight UAVs' delivered PPS.
     pub jain_pps: f64,
@@ -91,6 +100,8 @@ pub struct FleetRun {
     pub delivered_total: u64,
     pub executed_total: u64,
     pub switches_total: u64,
+    /// Scheduled operator re-taskings applied across the fleet.
+    pub intent_switches_total: u64,
     pub infeasible_total: u64,
     /// Executed-weighted mean IoU over Insight UAVs.
     pub avg_iou: f64,
@@ -149,7 +160,7 @@ fn build_agents<'a>(
             let mut mission = cfg.mission.clone();
             mission.seed = uav_seed(cfg, i);
             let start_t = i as f64 * stagger;
-            match role_of(cfg, i) {
+            let mut agent = match role_of(cfg, i) {
                 UavRole::Context => UavAgent::context(
                     i, engine, datasets, lut, device, &mission, &CONTEXT_PROMPTS, start_t,
                 ),
@@ -164,7 +175,19 @@ fn build_agents<'a>(
                     classify_intent(INSIGHT_PROMPTS[i % INSIGHT_PROMPTS.len()]),
                     start_t,
                 ),
+            };
+            if !cfg.schedule.is_empty() {
+                // Mission-relative schedule, offset by this UAV's launch —
+                // staggered fleets see the same re-tasking at the same point
+                // of their own mission, not at the same wall instant.
+                agent.set_intent_schedule(
+                    cfg.schedule
+                        .iter()
+                        .map(|s| IntentSwitch { t: s.t + start_t, prompt: s.prompt.clone() })
+                        .collect(),
+                );
             }
+            agent
         })
         .collect()
 }
@@ -208,28 +231,31 @@ pub fn run_fleet_mission(
         server_secs += a.server_secs;
         per_uav.push(UavOutcome {
             id: a.id,
-            role: a.role,
+            role: a.launch_role,
             start_t: a.start_t,
             seed: a.seed(),
             summary: a.finish(duration),
-            context_accuracy: match a.role {
-                UavRole::Context => a.context_accuracy(),
-                UavRole::Insight => 0.0,
-            },
+            context_accuracy: a.context_accuracy(),
         });
     }
 
-    let insight: Vec<&UavOutcome> =
-        per_uav.iter().filter(|o| o.role == UavRole::Insight).collect();
-    let pps: Vec<f64> = insight.iter().map(|o| o.summary.avg_pps).collect();
+    // Fairness is a launch-composition metric (Insight-launched UAVs'
+    // delivered rates); quality and controller totals aggregate over every
+    // agent — intent schedules can move any agent onto the Insight stream
+    // mid-mission, and its IoU samples / tier switches must not vanish.
+    let pps: Vec<f64> = per_uav
+        .iter()
+        .filter(|o| o.role == UavRole::Insight)
+        .map(|o| o.summary.avg_pps)
+        .collect();
     let delivered_total: u64 = per_uav.iter().map(|o| o.summary.delivered).sum();
-    let executed_insight: u64 = insight.iter().map(|o| o.summary.executed).sum();
-    let avg_iou = if executed_insight > 0 {
-        insight
+    let insight_executed: u64 = per_uav.iter().map(|o| o.summary.insight_executed).sum();
+    let avg_iou = if insight_executed > 0 {
+        per_uav
             .iter()
-            .map(|o| o.summary.avg_iou * o.summary.executed as f64)
+            .map(|o| o.summary.avg_iou * o.summary.insight_executed as f64)
             .sum::<f64>()
-            / executed_insight as f64
+            / insight_executed as f64
     } else {
         0.0
     };
@@ -239,8 +265,9 @@ pub fn run_fleet_mission(
         aggregate_pps: delivered_total as f64 / duration.max(1e-9),
         delivered_total,
         executed_total: per_uav.iter().map(|o| o.summary.executed).sum(),
-        switches_total: insight.iter().map(|o| o.summary.switches).sum(),
-        infeasible_total: insight.iter().map(|o| o.summary.infeasible_epochs).sum(),
+        switches_total: per_uav.iter().map(|o| o.summary.switches).sum(),
+        intent_switches_total: per_uav.iter().map(|o| o.summary.intent_switches).sum(),
+        infeasible_total: per_uav.iter().map(|o| o.summary.infeasible_epochs).sum(),
         avg_iou,
         server_utilization: server_secs / (duration.max(1e-9) * cfg.workers.max(1) as f64),
         total_energy_j: per_uav.iter().map(|o| o.summary.total_energy_j).sum(),

@@ -85,6 +85,9 @@ pub struct MissionConfig {
     pub exec_every: usize,
     /// Controller hysteresis margin (0 = verbatim Algorithm 1).
     pub hysteresis: f64,
+    /// Controller minimum dwell decisions after a tier switch (0 =
+    /// verbatim Algorithm 1; scenario missions use 2 — see DESIGN.md).
+    pub min_dwell: u64,
     /// Fixed split point (the paper fixes split@1 after §5.2.1).
     pub split: usize,
     pub seed: u64,
@@ -99,9 +102,29 @@ impl Default for MissionConfig {
             max_context_pps: 0.0, // filled from device model when 0
             exec_every: 1,
             hysteresis: 0.0,
+            min_dwell: 0,
             split: 1,
             seed: 7,
         }
+    }
+}
+
+/// One timed operator re-tasking: at mission-relative time `t` the operator
+/// issues a new standing prompt.  The prompt's classified [`IntentLevel`]
+/// drives the agent's stream (Context ↔ Insight) from that point on — the
+/// runtime re-plans through the existing controller, exactly as the paper's
+/// §4.3 triage-escalation workflow describes, but on a schedule.
+#[derive(Clone, Debug)]
+pub struct IntentSwitch {
+    /// Virtual time (seconds) the new intent takes effect.
+    pub t: f64,
+    /// The operator's new standing prompt.
+    pub prompt: String,
+}
+
+impl IntentSwitch {
+    pub fn new(t: f64, prompt: &str) -> Self {
+        Self { t, prompt: prompt.to_string() }
     }
 }
 
@@ -111,8 +134,11 @@ pub struct EpochRecord {
     pub t: f64,
     pub bandwidth_true_mbps: f64,
     pub bandwidth_est_mbps: f64,
-    /// Selected tier (None = no feasible tier this epoch).
+    /// Selected tier (None = Context stream, or no feasible Insight tier).
     pub tier: Option<TierId>,
+    /// The stream the agent was flying this epoch (intent schedules can
+    /// change it mid-mission).
+    pub level: IntentLevel,
 }
 
 /// One per-packet telemetry row (drives Fig 9 c / Fig 10).
@@ -134,6 +160,10 @@ pub struct RunSummary {
     pub policy: String,
     pub delivered: u64,
     pub executed: u64,
+    /// Executions that scored an Insight mask (= IoU sample count) —
+    /// distinct from `executed` once an intent schedule has the agent
+    /// answering Context queries part-time.
+    pub insight_executed: u64,
     pub avg_pps: f64,
     pub avg_iou: f64,
     pub avg_iou_orig: f64,
@@ -145,6 +175,8 @@ pub struct RunSummary {
     /// Virtual seconds spent in each tier (HA, BAL, HT).
     pub tier_secs: [f64; 3],
     pub switches: u64,
+    /// Operator re-taskings applied from the intent schedule.
+    pub intent_switches: u64,
     pub infeasible_epochs: u64,
 }
 
@@ -162,7 +194,10 @@ pub struct InsightRun {
 /// next by comparing agents' clocks.
 pub struct UavAgent<'a> {
     pub id: usize,
+    /// Current stream (follows the intent schedule at runtime).
     pub role: UavRole,
+    /// Stream the agent launched with (fleet composition telemetry).
+    pub launch_role: UavRole,
     pub policy: Policy,
     /// Virtual time the agent joined the mission (staggered fleet starts).
     pub start_t: f64,
@@ -170,6 +205,16 @@ pub struct UavAgent<'a> {
     pub t: f64,
     cfg: MissionConfig,
     intent: Intent,
+    /// Timed operator re-taskings, sorted by time; applied as the agent's
+    /// clock passes each entry.
+    schedule: Vec<IntentSwitch>,
+    sched_i: usize,
+    pub intent_switches: u64,
+    /// True once a scheduled re-tasking has been applied: from then on the
+    /// operator's standing intent (not each dataset item's own prompt)
+    /// drives Insight serving and scoring.  Launch intents keep the
+    /// original per-item behavior so default missions are unchanged.
+    retasked: bool,
     controller: SplitController,
     edge: EdgePipeline,
     device: DeviceModel,
@@ -268,14 +313,20 @@ impl<'a> UavAgent<'a> {
         };
         let mut controller = SplitController::new(lut.clone(), cfg.min_insight_pps, max_ctx);
         controller.hysteresis = cfg.hysteresis;
+        controller.min_dwell_decisions = cfg.min_dwell;
         Self {
             id,
             role,
+            launch_role: role,
             policy,
             start_t,
             t: start_t,
             cfg: cfg.clone(),
             intent,
+            schedule: Vec::new(),
+            sched_i: 0,
+            intent_switches: 0,
+            retasked: false,
             controller,
             edge: EdgePipeline::new(engine.clone(), device.clone(), lut.clone()),
             device: device.clone(),
@@ -307,6 +358,36 @@ impl<'a> UavAgent<'a> {
         self.cfg.seed
     }
 
+    /// Install a timed intent schedule (absolute virtual times).  Entries
+    /// are applied as the agent's clock passes them; see [`IntentSwitch`].
+    pub fn set_intent_schedule(&mut self, mut schedule: Vec<IntentSwitch>) {
+        schedule.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
+        self.schedule = schedule;
+        self.sched_i = 0;
+    }
+
+    /// Apply every scheduled re-tasking due at the agent's current clock.
+    fn apply_due_intents(&mut self) {
+        while self.sched_i < self.schedule.len() && self.schedule[self.sched_i].t <= self.t {
+            let prompt = self.schedule[self.sched_i].prompt.clone();
+            self.sched_i += 1;
+            let intent = classify_intent(&prompt);
+            let new_role = match intent.level {
+                IntentLevel::Context => UavRole::Context,
+                IntentLevel::Insight => UavRole::Insight,
+            };
+            if new_role == UavRole::Context {
+                // The scheduled prompt becomes the standing awareness query.
+                self.ctx_prompts = vec![prompt];
+                self.ctx_pi = 0;
+            }
+            self.intent_switches += 1;
+            self.retasked = true;
+            self.role = new_role;
+            self.intent = intent;
+        }
+    }
+
     /// Prime the estimator with one ground-truth probe so the first decision
     /// is informed (the paper's controller boots from a calibration probe).
     pub fn prime(&mut self, uplink: &dyn Uplink) {
@@ -324,6 +405,7 @@ impl<'a> UavAgent<'a> {
         if self.retired {
             return Ok(false);
         }
+        self.apply_due_intents();
         match self.role {
             UavRole::Insight => self.step_insight(uplink, server),
             UavRole::Context => self.step_context(uplink, server),
@@ -365,6 +447,7 @@ impl<'a> UavAgent<'a> {
                 bandwidth_true_mbps: uplink.ground_truth(self.id, self.next_epoch_log),
                 bandwidth_est_mbps: est,
                 tier: decision,
+                level: IntentLevel::Insight,
             });
             self.next_epoch_log += 1.0;
         }
@@ -380,7 +463,15 @@ impl<'a> UavAgent<'a> {
             self.retired = true;
             return Ok(false);
         };
-        let intent = classify_intent(item.prompt);
+        // Before any scheduled re-tasking, each dataset item's own prompt
+        // drives the query (the paper's round-robin workload); after one,
+        // the operator's standing intent is what the cloud serves and what
+        // the mission scores against.
+        let intent = if self.retasked {
+            self.intent.clone()
+        } else {
+            classify_intent(item.prompt)
+        };
         let class_id = intent.target_class.unwrap_or(item.class_id);
         let (pkt, cost) = self.edge.capture_insight(item.scene, self.cfg.split, tier, t)?;
         let tx = uplink.transmit(self.id, t, pkt.wire_bytes);
@@ -436,6 +527,20 @@ impl<'a> UavAgent<'a> {
         server: &dyn ServePackets,
     ) -> Result<bool> {
         let t = self.t;
+        // Per-second epoch telemetry: Context epochs carry no tier — the
+        // scenario timelines show exactly when a schedule parks the agent on
+        // the lightweight stream (tier occupancy pauses).
+        let est = self.estimator.estimate_mbps();
+        while self.next_epoch_log <= t {
+            self.epochs.push(EpochRecord {
+                t: self.next_epoch_log,
+                bandwidth_true_mbps: uplink.ground_truth(self.id, self.next_epoch_log),
+                bandwidth_est_mbps: est,
+                tier: None,
+                level: IntentLevel::Context,
+            });
+            self.next_epoch_log += 1.0;
+        }
         let Some(item) = self.rr.next_item() else {
             self.retired = true;
             return Ok(false);
@@ -498,6 +603,7 @@ impl<'a> UavAgent<'a> {
             },
             delivered: self.delivered,
             executed: self.executed,
+            insight_executed: self.acc_all.n() as u64,
             avg_pps,
             avg_iou: self.acc_all.avg_iou(),
             avg_iou_orig: self.acc_orig.avg_iou(),
@@ -512,6 +618,7 @@ impl<'a> UavAgent<'a> {
             },
             tier_secs: self.tier_secs,
             switches: self.controller.switches,
+            intent_switches: self.intent_switches,
             infeasible_epochs: self.infeasible,
         }
     }

@@ -46,6 +46,34 @@ impl Rng {
     }
 }
 
+/// CRC-32 lookup table (IEEE 802.3, reflected polynomial 0xEDB88320),
+/// generated at compile time.
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = (c >> 1) ^ (0xEDB8_8320 & (c & 1).wrapping_neg());
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 (IEEE 802.3) — table-driven and self-contained, so the per-packet
+/// wire format has no external-crate dependency on its hot path.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc = (crc >> 8) ^ CRC32_TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
 /// FNV-1a 32-bit — MUST stay in exact sync with python/compile/data.py.
 pub fn fnv1a32(s: &str) -> u32 {
     let mut h: u32 = 0x811C9DC5;
@@ -156,6 +184,13 @@ mod tests {
         for _ in 0..1000 {
             assert!(r.below(17) < 17);
         }
+    }
+
+    #[test]
+    fn crc32_check_value() {
+        // The CRC-32 "check" input from the catalogue of parametrised CRCs.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
     }
 
     #[test]

@@ -1,5 +1,4 @@
-//! Fleet-subsystem integration tests (require `make artifacts`, like
-//! tests/integration.rs):
+//! Fleet-subsystem integration tests:
 //! * determinism — same seed + same N must reproduce the identical
 //!   aggregate summary (the event-ordered scheduler is a pure function of
 //!   the configuration),
@@ -7,6 +6,11 @@
 //!   single-UAV `fig9` mission within jitter tolerance,
 //! * cloud pool — concurrent in-process sessions and transport-framed
 //!   sessions both serve correct responses.
+//!
+//! These are control-plane tests: they run against real artifacts when
+//! `make artifacts` has been built, and otherwise against the synthetic
+//! closed-form engine (`Env::synthetic`) — never skipped.  Golden/PJRT
+//! parity checks live in tests/integration.rs and stay artifact-gated.
 
 use std::path::Path;
 use std::sync::OnceLock;
@@ -21,37 +25,18 @@ use avery::streams::fleet::{run_fleet_mission, FleetConfig, FleetRun};
 use avery::streams::{run_insight_mission, MissionConfig, Policy};
 use avery::transport::{encode_request, InProc, Transport};
 
-/// Shared environment, or None when `make artifacts` has not run — tests
-/// self-skip in that case so `cargo test` stays green on a fresh checkout.
-fn try_env() -> Option<&'static Env> {
-    static ENV: OnceLock<Option<Env>> = OnceLock::new();
+/// Shared environment: artifact-backed when available, synthetic otherwise.
+fn env() -> &'static Env {
+    static ENV: OnceLock<Env> = OnceLock::new();
     ENV.get_or_init(|| {
-        let dir = avery::find_artifacts(None).ok()?;
-        Env::load(&dir, Path::new("target/test-out"), ExecMode::LiteralsEachCall).ok()
+        Env::load_or_synthetic(None, Path::new("target/test-out"), ExecMode::LiteralsEachCall)
+            .expect("environment (synthetic fallback) must load")
     })
-    .as_ref()
-}
-
-macro_rules! env_or_skip {
-    () => {
-        match try_env() {
-            Some(e) => e,
-            None => {
-                eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
-                return;
-            }
-        }
-    };
 }
 
 /// 120-second variant of the paper trace (same phase structure).
 fn short_trace(seed: u64, secs: f64) -> BandwidthTrace {
-    let mut cfg = TraceConfig::paper_20min(seed);
-    let scale = secs / cfg.total_secs();
-    for p in &mut cfg.phases {
-        p.secs *= scale;
-    }
-    BandwidthTrace::generate(&cfg)
+    BandwidthTrace::generate(&TraceConfig::paper_20min(seed).scaled_to(secs))
 }
 
 fn run_fleet_once(e: &Env, n: usize, seed: u64, exec_every: usize, secs: f64) -> FleetRun {
@@ -76,7 +61,7 @@ fn run_fleet_once(e: &Env, n: usize, seed: u64, exec_every: usize, secs: f64) ->
 
 #[test]
 fn fleet_deterministic_under_fixed_seed() {
-    let e = env_or_skip!();
+    let e = env();
     let a = run_fleet_once(e, 4, 11, 1000, 90.0);
     let b = run_fleet_once(e, 4, 11, 1000, 90.0);
     assert_eq!(a.delivered_total, b.delivered_total);
@@ -106,7 +91,7 @@ fn fleet_deterministic_under_fixed_seed() {
 
 #[test]
 fn n1_fleet_matches_single_uav_mission() {
-    let e = env_or_skip!();
+    let e = env();
     let secs = 120.0;
     let seed = 7u64;
     let fleet = run_fleet_once(e, 1, seed, 1000, secs);
@@ -161,7 +146,7 @@ fn n1_fleet_matches_single_uav_mission() {
 fn fleet_contention_reduces_per_uav_throughput() {
     // 8 UAVs on the same trace: each Insight UAV's share must be well below
     // the solo rate, while aggregate throughput exceeds it.
-    let e = env_or_skip!();
+    let e = env();
     let solo = run_fleet_once(e, 1, 7, 1000, 180.0);
     let fleet = run_fleet_once(e, 8, 7, 1000, 180.0);
     let solo_pps = solo.per_uav[0].summary.avg_pps;
@@ -186,7 +171,7 @@ fn fleet_contention_reduces_per_uav_throughput() {
 fn fleet_numerics_flow_through_pool() {
     // Small real-execution fleet: IoU must come out sane through the
     // concurrent pool path (2 workers sharing one engine).
-    let e = env_or_skip!();
+    let e = env();
     let trace = short_trace(7, 40.0);
     let mut link = SharedLink::new(trace, LinkConfig { seed: 7, ..LinkConfig::default() }, 2);
     let cfg = FleetConfig {
@@ -213,7 +198,7 @@ fn fleet_numerics_flow_through_pool() {
 
 #[test]
 fn cloud_pool_serves_concurrent_clients() {
-    let e = env_or_skip!();
+    let e = env();
     let pool = CloudPool::new(vec![e.engine.clone(), e.engine.clone()]);
     let scene = &e.flood_val.scenes[0];
     let mut edge = EdgePipeline::new(e.engine.clone(), e.device.clone(), e.lut.clone());
@@ -244,7 +229,7 @@ fn cloud_pool_serves_concurrent_clients() {
 
 #[test]
 fn pool_session_routes_weight_sets_over_transport() {
-    let e = env_or_skip!();
+    let e = env();
     let pool = CloudPool::new(vec![e.engine.clone()]);
     let scene = &e.flood_val.scenes[0];
     let mut edge = EdgePipeline::new(e.engine.clone(), e.device.clone(), e.lut.clone());

@@ -1,12 +1,14 @@
-//! Integration tests over the real artifacts (require `make artifacts`).
+//! Integration tests.
 //!
-//! The heavyweight cross-layer checks live here:
-//! * golden parity — every artifact executed through PJRT must reproduce the
-//!   outputs python recorded at export time (bit-level path validation of
-//!   HLO text, weight ordering and literal marshalling),
-//! * tokenizer parity — rust tokenizer vs python fixture,
-//! * LUT parity — runtime-measured tier accuracy vs build-time profiling,
-//! * end-to-end mission smoke — controller + netsim + engine together.
+//! Two gates apply:
+//! * **artifact-gated** (golden parity, tokenizer parity, LUT parity,
+//!   fidelity ordering, raw-compression baseline): these validate the real
+//!   PJRT path bit-for-bit against python's build-time measurements, so
+//!   without `make artifacts` they *skip* (they used to panic);
+//! * **control-plane smoke** (context responder, dynamic mission, static-HA
+//!   collapse): these exercise controller + netsim + scheduler + engine
+//!   together and always run — against real artifacts when present, the
+//!   synthetic closed-form engine otherwise.
 
 use std::path::Path;
 use std::sync::OnceLock;
@@ -21,17 +23,41 @@ use avery::runtime::{Engine, ExecMode};
 use avery::streams::{run_insight_mission, MissionConfig, Policy};
 use avery::tensor::Tensor;
 
-fn artifacts_dir() -> &'static Path {
-    static DIR: OnceLock<std::path::PathBuf> = OnceLock::new();
-    DIR.get_or_init(|| avery::find_artifacts(None).expect("run `make artifacts` first"))
+/// Artifacts dir, or None on a fresh checkout (gated tests skip).
+fn try_artifacts_dir() -> Option<&'static Path> {
+    static DIR: OnceLock<Option<std::path::PathBuf>> = OnceLock::new();
+    DIR.get_or_init(|| avery::find_artifacts(None).ok()).as_deref()
 }
 
-/// One shared engine for the whole test binary (PJRT client startup is slow).
+macro_rules! artifacts_or_skip {
+    () => {
+        match try_artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+/// One shared engine for the whole test binary (PJRT client startup is
+/// slow).  Only called by artifact-gated tests, after the skip gate.
 fn engine() -> &'static Engine {
     static ENGINE: OnceLock<Engine> = OnceLock::new();
     ENGINE.get_or_init(|| {
-        let manifest = Manifest::load(artifacts_dir()).unwrap();
+        let manifest = Manifest::load(try_artifacts_dir().expect("gated")).unwrap();
         Engine::start(manifest, ExecMode::PreuploadedBuffers).unwrap()
+    })
+}
+
+/// Mission-smoke environment: artifact-backed when available, synthetic
+/// closed-form otherwise (control-plane behavior is identical).
+fn smoke_env() -> &'static Env {
+    static ENV: OnceLock<Env> = OnceLock::new();
+    ENV.get_or_init(|| {
+        Env::load_or_synthetic(None, Path::new("target/test-out"), ExecMode::LiteralsEachCall)
+            .expect("environment (synthetic fallback) must load")
     })
 }
 
@@ -62,8 +88,6 @@ fn read_golden(path: &Path) -> (Vec<Tensor>, Vec<Vec<f32>>) {
         }
         off += size * 4;
     }
-    let manifest = Manifest::load(artifacts_dir()).unwrap();
-    let _ = manifest;
     let inputs = arrays[..n_in].to_vec();
     let outputs = arrays[n_in..]
         .iter()
@@ -99,7 +123,8 @@ fn reshape_like(t: &Tensor, dims: &[usize]) -> Tensor {
 
 #[test]
 fn golden_parity_every_artifact() {
-    let manifest = Manifest::load(artifacts_dir()).unwrap();
+    let dir = artifacts_or_skip!();
+    let manifest = Manifest::load(dir).unwrap();
     let eng = engine();
     let mut checked = 0;
     for (name, spec) in &manifest.artifacts {
@@ -133,8 +158,8 @@ fn golden_parity_every_artifact() {
 
 #[test]
 fn tokenizer_parity_with_python() {
-    let text =
-        std::fs::read_to_string(artifacts_dir().join("fixtures/tokenizer.txt")).unwrap();
+    let dir = artifacts_or_skip!();
+    let text = std::fs::read_to_string(dir.join("fixtures/tokenizer.txt")).unwrap();
     let mut n = 0;
     for line in text.lines() {
         let (ids_s, prompt) = line.split_once('\t').unwrap();
@@ -150,9 +175,10 @@ fn lut_parity_runtime_vs_buildtime() {
     // Re-measure the High-Accuracy tier through the runtime path and compare
     // to the python-profiled LUT value; they share datasets and quantizer so
     // they must agree closely.
-    let lut = Lut::load(artifacts_dir()).unwrap();
+    let dir = artifacts_or_skip!();
+    let lut = Lut::load(dir).unwrap();
     let env_ds =
-        Dataset::load(&artifacts_dir().join("data/generic_val.bin"), Corpus::Generic).unwrap();
+        Dataset::load(&dir.join("data/generic_val.bin"), Corpus::Generic).unwrap();
     let device = DeviceModel::jetson_mode_30w(8);
     let (acc, _) = avery::baselines::eval_split_path(
         engine(),
@@ -172,7 +198,8 @@ fn lut_parity_runtime_vs_buildtime() {
 
 #[test]
 fn fidelity_ordering_through_runtime() {
-    let lut = Lut::load(artifacts_dir()).unwrap();
+    let dir = artifacts_or_skip!();
+    let lut = Lut::load(dir).unwrap();
     // Emergent Table 3 property: higher ratio => higher accuracy, bigger wire.
     let ha = lut.entry(TierId::HighAccuracy);
     let bal = lut.entry(TierId::Balanced);
@@ -184,8 +211,7 @@ fn fidelity_ordering_through_runtime() {
 
 #[test]
 fn context_responder_runs() {
-    let env = Env::load(artifacts_dir(), Path::new("target/test-out"),
-        ExecMode::LiteralsEachCall).unwrap();
+    let env = smoke_env();
     let mut edge = avery::edge::EdgePipeline::new(
         env.engine.clone(),
         env.device.clone(),
@@ -203,14 +229,8 @@ fn context_responder_runs() {
 
 #[test]
 fn short_dynamic_mission_adapts() {
-    let env = Env::load(artifacts_dir(), Path::new("target/test-out"),
-        ExecMode::LiteralsEachCall).unwrap();
-    let mut cfg = TraceConfig::paper_20min(7);
-    let scale = 120.0 / cfg.total_secs();
-    for p in &mut cfg.phases {
-        p.secs *= scale;
-    }
-    let trace = BandwidthTrace::generate(&cfg);
+    let env = smoke_env();
+    let trace = BandwidthTrace::generate(&TraceConfig::paper_20min(7).scaled_to(120.0));
     let mission = MissionConfig {
         duration_secs: 120.0,
         goal: MissionGoal::PrioritizeAccuracy,
@@ -242,14 +262,8 @@ fn short_dynamic_mission_adapts() {
 fn static_high_accuracy_collapses_under_drop() {
     // Fig 9(d)'s qualitative claim: under the same trace, static HA delivers
     // fewer packets than AVERY.
-    let env = Env::load(artifacts_dir(), Path::new("target/test-out"),
-        ExecMode::LiteralsEachCall).unwrap();
-    let mut cfg = TraceConfig::paper_20min(7);
-    let scale = 120.0 / cfg.total_secs();
-    for p in &mut cfg.phases {
-        p.secs *= scale;
-    }
-    let trace = BandwidthTrace::generate(&cfg);
+    let env = smoke_env();
+    let trace = BandwidthTrace::generate(&TraceConfig::paper_20min(7).scaled_to(120.0));
     let mission = MissionConfig {
         duration_secs: 120.0,
         exec_every: 1000, // throughput check only — skip HLO for speed
@@ -283,8 +297,9 @@ fn static_high_accuracy_collapses_under_drop() {
 fn raw_compression_loses_to_learned_bottleneck() {
     // H2's direction: split@1 + learned bottleneck beats raw image
     // compression at matched payload.
-    let lut = Lut::load(artifacts_dir()).unwrap();
-    let ds = Dataset::load(&artifacts_dir().join("data/generic_val.bin"), Corpus::Generic)
+    let dir = artifacts_or_skip!();
+    let lut = Lut::load(dir).unwrap();
+    let ds = Dataset::load(&dir.join("data/generic_val.bin"), Corpus::Generic)
         .unwrap();
     let device = DeviceModel::jetson_mode_30w(8);
     let (split_acc, _) = avery::baselines::eval_split_path(

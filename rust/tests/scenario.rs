@@ -1,0 +1,379 @@
+//! Scenario-library regression suite — no artifacts required, never skips.
+//!
+//! * **Golden trace snapshots** — per-scenario seeded summary statistics
+//!   (mean/min/max Mbps, outage seconds, regime count, sample count)
+//!   committed with tolerances so the generators can't silently drift.
+//!   Values come from the cross-language mirror
+//!   `python/compile/netsim_mirror.py`; regenerate with
+//!   `python -m compile.netsim_mirror` after any intentional change.
+//! * **Invariants** — every scenario trace respects its clamp band and
+//!   phase durations; `SharedLink` fair shares never exceed trace capacity
+//!   and Jain stays in (0, 1]; the controller with hysteresis + dwell never
+//!   *voluntarily* flaps tiers on consecutive epochs.
+//! * **Artifact-free missions** — full scenario missions over the synthetic
+//!   engine: byte-identical summary CSVs per seed, visible intent-schedule
+//!   effects, and outage-driven infeasible epochs.
+
+use std::path::Path;
+
+use avery::coordinator::{
+    classify_intent, ControllerDecision, MissionGoal, RuntimeState, SplitController, TierId,
+};
+use avery::mission::{run_scenario, Env, ScenarioOptions};
+use avery::netsim::{
+    BandwidthEstimator, BandwidthTrace, LinkConfig, PhaseKind, SharedLink, OUTAGE_FLOOR_MBPS,
+};
+use avery::scenario::{build, summarize_trace, SCENARIO_NAMES};
+use avery::streams::fleet::jain_index;
+use avery::streams::UavRole;
+use avery::util::Rng;
+
+// ---------------------------------------------------------------------------
+// Golden trace snapshots
+// ---------------------------------------------------------------------------
+
+/// Golden trace snapshots @ seed 7, duration 1200 s, from the python mirror.
+/// (name, mean, min, max, outage_secs, regimes, samples)
+const TRACE_GOLDENS: [(&str, f64, f64, f64, f64, usize, usize); 5] = [
+    ("paper-baseline", 13.1524, 8.0000, 19.9226, 0.0, 7, 1200),
+    ("wildfire-ridge", 13.7472, 8.0000, 20.0000, 0.0, 12, 1201),
+    ("urban-flood", 12.1837, 8.0000, 18.5359, 0.0, 7, 1200),
+    ("earthquake-canyon", 10.4726, 0.0501, 20.0000, 216.0, 6, 1200),
+    ("coastal-satellite", 14.4839, 8.0000, 20.0000, 0.0, 5, 1200),
+];
+
+#[test]
+fn golden_trace_snapshots_pin_generators() {
+    assert_eq!(TRACE_GOLDENS.len(), SCENARIO_NAMES.len());
+    for (name, mean, min, max, outage, regimes, samples) in TRACE_GOLDENS {
+        let sc = build(name, 7, 1200.0).unwrap();
+        let tr = BandwidthTrace::generate(&sc.trace);
+        let s = summarize_trace(&sc.trace, &tr);
+        // Sample-value stats tolerate libm (ln/cos) differences between the
+        // python mirror and rust; structure (regimes, counts, outage dwell)
+        // is pure integer/IEEE arithmetic and must match exactly.
+        assert!((s.mean_mbps - mean).abs() < 0.25, "{name} mean {} vs {mean}", s.mean_mbps);
+        assert!((s.min_mbps - min).abs() < 0.25, "{name} min {} vs {min}", s.min_mbps);
+        assert!((s.max_mbps - max).abs() < 0.25, "{name} max {} vs {max}", s.max_mbps);
+        assert!(
+            (s.outage_secs - outage).abs() < 1.0,
+            "{name} outage {} vs {outage}",
+            s.outage_secs
+        );
+        assert_eq!(s.regimes, regimes, "{name} regimes");
+        assert_eq!(tr.samples_mbps.len(), samples, "{name} samples");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_scenario_trace_respects_clamps_and_durations() {
+    for name in SCENARIO_NAMES {
+        let sc = build(name, 11, 900.0).unwrap();
+        let cfg = &sc.trace;
+        assert!((cfg.total_secs() - 900.0).abs() < 1e-6, "{name} duration");
+        let tr = BandwidthTrace::generate(cfg);
+        // Per-phase rounding can drift the sample count by at most one
+        // sample per phase.
+        let n_expected = (900.0 / cfg.dt) as isize;
+        let drift = (tr.samples_mbps.len() as isize - n_expected).unsigned_abs();
+        assert!(drift <= cfg.phases.len(), "{name} sample count drift {drift}");
+        // Walk samples phase by phase with the generator's own rounding, so
+        // every sample is checked against the bounds of the phase that
+        // produced it.
+        let mut idx = 0usize;
+        for p in &cfg.phases {
+            let n = (p.secs / cfg.dt).round() as usize;
+            for i in idx..(idx + n).min(tr.samples_mbps.len()) {
+                let b = tr.samples_mbps[i];
+                match p.kind {
+                    PhaseKind::Outage => assert!(
+                        (OUTAGE_FLOOR_MBPS - 1e-9..=cfg.max_mbps + 1e-9).contains(&b),
+                        "{name} outage sample {b} at {i}"
+                    ),
+                    _ => assert!(
+                        (cfg.min_mbps - 1e-9..=cfg.max_mbps + 1e-9).contains(&b),
+                        "{name} {:?} sample {b} at {i} outside [{}, {}]",
+                        p.kind,
+                        cfg.min_mbps,
+                        cfg.max_mbps
+                    ),
+                }
+            }
+            idx += n;
+        }
+        assert_eq!(idx, tr.samples_mbps.len(), "{name} phase walk covers trace");
+        // Phase windows mirror the script.
+        let windows = cfg.phase_windows();
+        assert_eq!(windows.len(), cfg.phases.len());
+        assert!((windows.last().unwrap().1 - 900.0).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn scenario_traces_deterministic_per_seed() {
+    for name in SCENARIO_NAMES {
+        let a = BandwidthTrace::generate(&build(name, 5, 600.0).unwrap().trace);
+        let b = BandwidthTrace::generate(&build(name, 5, 600.0).unwrap().trace);
+        assert_eq!(a.samples_mbps, b.samples_mbps, "{name} not deterministic");
+        let c = BandwidthTrace::generate(&build(name, 6, 600.0).unwrap().trace);
+        assert_ne!(a.samples_mbps, c.samples_mbps, "{name} ignores seed");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SharedLink fair-share properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fair_share_never_exceeds_trace_capacity() {
+    let sc = build("urban-flood", 9, 600.0).unwrap();
+    let trace = BandwidthTrace::generate(&sc.trace);
+    let n_uavs = 6;
+    let mut link =
+        SharedLink::new(trace.clone(), LinkConfig { seed: 9, ..LinkConfig::default() }, n_uavs);
+    let mut rng = Rng::new(42);
+    let mut t = 0.0;
+    while t < 550.0 {
+        let uav = rng.below(n_uavs);
+        let bytes = 0.3e6 + rng.f64() * 2.6e6;
+        let out = link.transmit(uav, t, bytes);
+        assert!(out.tx_secs > 0.0);
+        // Fair share at any probe point, for any UAV, never exceeds the
+        // uncontended trace rate (processor sharing only divides).
+        for u in 0..n_uavs {
+            for dt in [0.0, 0.5, 1.5, 4.0] {
+                let share = link.share_at(u, t + dt);
+                let cap = trace.at(t + dt);
+                assert!(
+                    share <= cap + 1e-9,
+                    "share {share} above capacity {cap} at t {}",
+                    t + dt
+                );
+                assert!(share > 0.0);
+            }
+        }
+        t += 0.4 + rng.f64() * 2.0;
+    }
+}
+
+#[test]
+fn jain_index_stays_in_unit_interval() {
+    let mut rng = Rng::new(17);
+    for _ in 0..500 {
+        let n = 1 + rng.below(12);
+        let xs: Vec<f64> = (0..n).map(|_| rng.f64() * 4.0).collect();
+        let j = jain_index(&xs);
+        assert!(j > 0.0 && j <= 1.0 + 1e-12, "jain {j} for {xs:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Controller anti-flap invariant
+// ---------------------------------------------------------------------------
+
+/// Drive the controller over a scenario trace exactly as the mission's
+/// Sense stage does (EWMA α=0.4, one observation per decision epoch) and
+/// record (estimate, decision) pairs.
+fn controller_timeline(
+    trace: &BandwidthTrace,
+    hysteresis: f64,
+    dwell: u64,
+) -> Vec<(f64, Option<TierId>)> {
+    let lut = avery::coordinator::Lut::paper();
+    let mut c = SplitController::new(lut, 0.5, 6.0);
+    c.hysteresis = hysteresis;
+    c.min_dwell_decisions = dwell;
+    let mut est = BandwidthEstimator::new(0.4);
+    let intent = classify_intent("highlight the stranded people");
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    while t < trace.duration_secs() {
+        let e = est.observe(trace.at(t));
+        let state = RuntimeState {
+            bandwidth_mbps: e,
+            power_mode: "MODE_30W_ALL",
+            intent: intent.clone(),
+        };
+        let d = match c.select_configuration(&state, MissionGoal::PrioritizeAccuracy) {
+            Ok(ControllerDecision::Insight { tier, .. }) => Some(tier),
+            Ok(ControllerDecision::Context { .. }) => unreachable!("insight intent"),
+            Err(_) => None,
+        };
+        out.push((e, d));
+        t += 1.0;
+    }
+    out
+}
+
+#[test]
+fn controller_with_hysteresis_and_dwell_never_voluntarily_flaps() {
+    let lut = avery::coordinator::Lut::paper();
+    for name in SCENARIO_NAMES {
+        let sc = build(name, 7, 900.0).unwrap();
+        let trace = BandwidthTrace::generate(&sc.trace);
+        let tl = controller_timeline(&trace, 0.15, 2);
+        for w in tl.windows(3) {
+            let (_, a) = w[0];
+            let (_, b) = w[1];
+            let (e2, c2) = w[2];
+            let (Some(a), Some(b), Some(c2)) = (a, b, c2) else { continue };
+            if a != b && c2 == a {
+                // A→B→A on consecutive epochs: legal only as a forced
+                // eviction — B must have become infeasible (dwell suppresses
+                // every voluntary switch this early).
+                let b_pps = lut.entry(b).max_pps(e2);
+                assert!(
+                    b_pps < 0.5,
+                    "{name}: voluntary flap {a:?}->{b:?}->{c2:?} (B still feasible at \
+                     {b_pps:.3} PPS)"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-free scenario missions (synthetic engine)
+// ---------------------------------------------------------------------------
+
+fn sim_env(tag: &str) -> Env {
+    Env::synthetic(Path::new(&format!("target/test-out/scenario-{tag}"))).unwrap()
+}
+
+fn read_summary_csv(env: &Env, name: &str) -> String {
+    std::fs::read_to_string(env.out_dir.join(format!("scenario_{name}_summary.csv")))
+        .expect("summary csv written")
+}
+
+#[test]
+fn scenario_mission_summary_csv_is_deterministic() {
+    let opts = ScenarioOptions {
+        name: "urban-flood".to_string(),
+        duration_secs: 240.0,
+        seed: 7,
+        ..ScenarioOptions::default()
+    };
+    let env_a = sim_env("det-a");
+    let env_b = sim_env("det-b");
+    let a = run_scenario(&env_a, &opts).unwrap();
+    let b = run_scenario(&env_b, &opts).unwrap();
+    assert_eq!(a.delivered_total, b.delivered_total);
+    assert_eq!(a.executed_total, b.executed_total);
+    assert!((a.avg_iou - b.avg_iou).abs() < 1e-12);
+    // The acceptance bar: byte-identical summary CSV across two runs.
+    assert_eq!(
+        read_summary_csv(&env_a, "urban-flood"),
+        read_summary_csv(&env_b, "urban-flood")
+    );
+    assert!(a.delivered_total > 0, "nothing delivered");
+    // A different seed must change the run (energy integrates every jitter
+    // draw, so seed collisions there are measure-zero).
+    let c = run_scenario(
+        &sim_env("det-c"),
+        &ScenarioOptions { seed: 8, ..opts },
+    )
+    .unwrap();
+    assert!(
+        a.delivered_total != c.delivered_total
+            || (a.total_energy_j - c.total_energy_j).abs() > 1e-9,
+        "seed 8 reproduced seed 7's run"
+    );
+}
+
+#[test]
+fn intent_schedule_visibly_moves_agents_between_streams() {
+    let env = sim_env("intent");
+    let opts = ScenarioOptions {
+        name: "urban-flood".to_string(),
+        duration_secs: 240.0,
+        seed: 7,
+        ..ScenarioOptions::default()
+    };
+    let run = run_scenario(&env, &opts).unwrap();
+    // The schedule fired on every UAV (two switches each, offset by start).
+    assert!(run.intent_switches_total >= 2 * run.per_uav.len() as u64 - 2);
+    let insight_launched: Vec<_> =
+        run.per_uav.iter().filter(|o| o.role == UavRole::Insight).collect();
+    assert!(!insight_launched.is_empty());
+    for o in &insight_launched {
+        assert!(o.summary.intent_switches >= 2, "uav {} saw no re-tasking", o.id);
+    }
+    // Tier occupancy visibly pauses: a launch-Insight UAV has epochs on both
+    // streams — Insight epochs with a tier, Context epochs without.
+    let probe = insight_launched[0].id;
+    let mut saw_insight = false;
+    let mut saw_context = false;
+    for (uav, e) in &run.epochs {
+        if *uav != probe {
+            continue;
+        }
+        match e.level {
+            avery::coordinator::IntentLevel::Insight => saw_insight |= e.tier.is_some(),
+            avery::coordinator::IntentLevel::Context => {
+                saw_context = true;
+                assert!(e.tier.is_none(), "context epoch with a tier");
+            }
+        }
+    }
+    assert!(saw_insight, "no insight epochs for uav {probe}");
+    assert!(saw_context, "intent switch never parked uav {probe} on context");
+    // And the switch changed what was scored: the probe UAV answered
+    // context queries mid-mission.
+    assert!(insight_launched[0].context_accuracy > 0.0);
+}
+
+#[test]
+fn outage_scenario_starves_the_controller() {
+    let env = sim_env("outage");
+    let opts = ScenarioOptions {
+        name: "earthquake-canyon".to_string(),
+        duration_secs: 300.0,
+        seed: 7,
+        ..ScenarioOptions::default()
+    };
+    let run = run_scenario(&env, &opts).unwrap();
+    // The mission still delivers outside the blackouts...
+    assert!(run.delivered_total > 0);
+    // ...and the blackouts are visible in the per-second timeline: the
+    // scripted windows cover ~54 s and every active agent backfills them
+    // (either as infeasible no-tier waits or as epochs inside a stalled
+    // transfer — both record the outage-floor ground truth).
+    let dark = run
+        .epochs
+        .iter()
+        .filter(|(_, e)| e.bandwidth_true_mbps < 1.0)
+        .count();
+    assert!(dark >= 20, "only {dark} outage-floor epochs recorded");
+    // Starvation shows up as waits (no feasible tier) or as multi-second
+    // stalled cycles pinning the estimate while the floor persists.
+    let starved = run.infeasible_total > 0
+        || run
+            .epochs
+            .iter()
+            .any(|(_, e)| e.tier.is_none() && e.bandwidth_true_mbps < 1.0)
+        || run.aggregate_pps < 2.0;
+    assert!(starved, "outage left no trace on the control plane");
+}
+
+#[test]
+fn every_scenario_runs_artifact_free() {
+    // Short smoke across the whole registry — the CI scenario matrix in
+    // miniature (cargo test must not depend on artifacts/).
+    for name in SCENARIO_NAMES {
+        let env = sim_env(&format!("smoke-{name}"));
+        let opts = ScenarioOptions {
+            name: name.to_string(),
+            duration_secs: 120.0,
+            seed: 7,
+            exec_every: 10,
+            ..ScenarioOptions::default()
+        };
+        let run = run_scenario(&env, &opts).unwrap();
+        assert!(run.delivered_total > 0, "{name}: nothing delivered");
+        assert!(run.jain_pps > 0.0 && run.jain_pps <= 1.0 + 1e-12, "{name}: jain");
+    }
+}
