@@ -1,36 +1,36 @@
 //! Fleet demo: six heterogeneous UAVs (mixed Insight/Context intents,
 //! staggered launches) contending for one disaster-zone uplink while a
 //! two-worker cloud pool serves every session — the `avery fleet`
-//! subsystem in miniature (see DESIGN.md "Fleet subsystem").
+//! subsystem in miniature (see DESIGN.md "Fleet subsystem"), driven
+//! through the Mission API.
 //!
 //!     cargo run --release --example fleet_mission
 
 use std::path::Path;
 
-use avery::coordinator::MissionGoal;
-use avery::mission::{run_fleet, Env, FleetOptions};
+use avery::mission::{run_fleet, Env, RunOptions};
+use avery::report::emit_text;
 use avery::runtime::ExecMode;
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = avery::find_artifacts(None)?;
-    let env = Env::load(&artifacts, Path::new("out"), ExecMode::PreuploadedBuffers)?;
+    let env = Env::load_or_synthetic(None, Path::new("out"), ExecMode::PreuploadedBuffers)?;
 
-    let opts = FleetOptions {
-        uavs: 6,
-        workers: 2,
+    let uavs = 6;
+    let opts = RunOptions {
+        uavs: Some(uavs),
+        workers: Some(2),
         duration_secs: 180.0,
-        goal: MissionGoal::PrioritizeAccuracy,
         exec_every: 4, // subsample HLO execution to keep the demo quick
         seed: 7,
-        scenario: None,
+        ..RunOptions::default()
     };
-    let run = run_fleet(&env, &opts)?;
+    let (run, report) = run_fleet(&env, &opts)?;
+    emit_text(&report, &env.out_dir)?;
 
     println!("\nWhat to look for:");
     println!(
-        "  * contention: each Insight UAV senses roughly a 1/{} slice of the \
-         8-20 Mbps trace and its controller drops tiers accordingly",
-        opts.uavs
+        "  * contention: each Insight UAV senses roughly a 1/{uavs} slice of the \
+         8-20 Mbps trace and its controller drops tiers accordingly"
     );
     println!(
         "  * fairness: Jain index {:.3} across Insight UAVs (1.0 = perfectly even)",

@@ -1,6 +1,7 @@
 //! Scenario-library mission: run any registered disaster/network regime —
 //! Markov smoke attenuation, urban-flood drops, earthquake blackouts,
-//! satellite sawtooths — with its intent schedule and fleet composition.
+//! satellite sawtooths — with its intent schedule and fleet composition,
+//! driven through the Mission API.
 //!
 //! Needs no artifacts: without `make artifacts` it runs the synthetic
 //! closed-form engine (control plane exact, numerics simulated).
@@ -11,7 +12,8 @@
 use std::path::Path;
 
 use avery::config::Kv;
-use avery::mission::{run_scenario, Env, ScenarioOptions};
+use avery::mission::{run_scenario, Env, RunOptions};
+use avery::report::emit_text;
 use avery::runtime::ExecMode;
 
 fn main() -> anyhow::Result<()> {
@@ -19,16 +21,18 @@ fn main() -> anyhow::Result<()> {
     let mut kv = Kv::default();
     kv.apply_cli(&args)?;
 
-    let opts = ScenarioOptions {
-        name: kv.get("name").unwrap_or("urban-flood").to_string(),
+    let opts = RunOptions {
+        // None falls back to mission::scenario::DEFAULT_SCENARIO.
+        name: kv.get("name").map(String::from),
         duration_secs: kv.get_f64("duration", 300.0)?,
         seed: kv.get_u64("seed", 7)?,
         exec_every: kv.get_usize("exec-every", 4)?,
-        ..ScenarioOptions::default()
+        ..RunOptions::default()
     };
 
     let env = Env::load_or_synthetic(None, Path::new("out"), ExecMode::PreuploadedBuffers)?;
-    let run = run_scenario(&env, &opts)?;
+    let (run, report) = run_scenario(&env, &opts)?;
+    emit_text(&report, &env.out_dir)?;
     println!(
         "\nscenario_mission OK — {} delivered, {} tier switches, {} intent switches",
         run.delivered_total, run.switches_total, run.intent_switches_total

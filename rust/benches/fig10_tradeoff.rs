@@ -1,11 +1,15 @@
 //! Bench: regenerate Figure 10 (accuracy vs throughput trade-off scatter,
-//! including the Prioritize-Throughput operating point).
+//! including the Prioritize-Throughput operating point) through the
+//! Mission API.
 
-use avery::mission::{run_fig10, Env, Fig9Options};
+use avery::mission::{self, Env, RunOptions};
+use avery::report::emit_text;
 use avery::runtime::ExecMode;
 
 fn main() -> anyhow::Result<()> {
     let artifacts = avery::find_artifacts(None)?;
     let env = Env::load(&artifacts, std::path::Path::new("out"), ExecMode::PreuploadedBuffers)?;
-    run_fig10(&env, &Fig9Options { exec_every: 4, ..Fig9Options::default() })
+    let mission = mission::find("fig10").expect("fig10 registered");
+    let report = mission.run(&env, &RunOptions { exec_every: 4, ..RunOptions::default() })?;
+    emit_text(&report, &env.out_dir)
 }

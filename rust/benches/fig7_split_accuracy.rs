@@ -1,10 +1,14 @@
-//! Bench: regenerate Figure 7 (split-point accuracy sweep at r = 0.10).
+//! Bench: regenerate Figure 7 (split-point accuracy sweep at r = 0.10)
+//! through the Mission API.
 
-use avery::mission::{run_fig7, Env};
+use avery::mission::{self, Env, RunOptions};
+use avery::report::emit_text;
 use avery::runtime::ExecMode;
 
 fn main() -> anyhow::Result<()> {
     let artifacts = avery::find_artifacts(None)?;
     let env = Env::load(&artifacts, std::path::Path::new("out"), ExecMode::PreuploadedBuffers)?;
-    run_fig7(&env)
+    let mission = mission::find("fig7").expect("fig7 registered");
+    let report = mission.run(&env, &RunOptions::default())?;
+    emit_text(&report, &env.out_dir)
 }

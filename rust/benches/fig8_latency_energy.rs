@@ -1,16 +1,20 @@
 //! Bench: regenerate Figure 8 (latency/energy per split point on the
-//! calibrated Jetson model) and time the real edge-head execution per split
-//! (CPU PJRT wallclock — structure check, not a Jetson proxy).
+//! calibrated Jetson model, through the Mission API) and time the real
+//! edge-head execution per split (CPU PJRT wallclock — structure check,
+//! not a Jetson proxy).
 
 use avery::bench::{bench_result, header};
 use avery::coordinator::TierId;
-use avery::mission::{run_fig8, Env};
+use avery::mission::{self, Env, RunOptions};
+use avery::report::emit_text;
 use avery::runtime::ExecMode;
 
 fn main() -> anyhow::Result<()> {
     let artifacts = avery::find_artifacts(None)?;
     let env = Env::load(&artifacts, std::path::Path::new("out"), ExecMode::PreuploadedBuffers)?;
-    run_fig8(&env)?;
+    let mission = mission::find("fig8").expect("fig8 registered");
+    let report = mission.run(&env, &RunOptions::default())?;
+    emit_text(&report, &env.out_dir)?;
 
     header("real edge-head execution per split (CPU PJRT)");
     let scene = &env.flood_val.scenes[0];

@@ -1,19 +1,21 @@
 //! Bench: regenerate Figure 9 (20-minute dynamic run, AVERY vs the three
-//! static tiers over the scripted disaster-zone trace) including the
-//! hysteresis ablation called out in DESIGN.md.
+//! static tiers over the scripted disaster-zone trace) through the Mission
+//! API, including the hysteresis ablation called out in DESIGN.md.
 
-use avery::mission::{run_fig9, Env, Fig9Options};
+use avery::mission::{self, Env, RunOptions};
+use avery::report::emit_text;
 use avery::runtime::ExecMode;
 
 fn main() -> anyhow::Result<()> {
     let artifacts = avery::find_artifacts(None)?;
     let env = Env::load(&artifacts, std::path::Path::new("out"), ExecMode::PreuploadedBuffers)?;
-    let opts = Fig9Options {
+    let opts = RunOptions {
         ablate_hysteresis: Some(0.10),
         exec_every: 4, // keep the bench under ~5 min on 1 core; accuracy is
         // a uniform subsample, throughput/energy are exact
-        ..Fig9Options::default()
+        ..RunOptions::default()
     };
-    run_fig9(&env, &opts)?;
-    Ok(())
+    let mission = mission::find("fig9").expect("fig9 registered");
+    let report = mission.run(&env, &opts)?;
+    emit_text(&report, &env.out_dir)
 }

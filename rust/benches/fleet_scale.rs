@@ -1,5 +1,6 @@
 //! Bench: fleet scaling sweep — N UAVs contending for one disaster-zone
-//! uplink, N ∈ {1, 4, 16, 64} (DESIGN.md "Fleet subsystem").
+//! uplink, N ∈ {1, 4, 16, 64} (DESIGN.md "Fleet subsystem"), driven
+//! through the Mission API and consuming each run's structured `Report`.
 //!
 //! Reports, per fleet size: aggregate delivered PPS, mean per-UAV PPS,
 //! Jain fairness, total tier switches, virtual server utilization, and the
@@ -9,13 +10,14 @@
 
 use std::time::Instant;
 
-use avery::mission::{run_fleet, Env, FleetOptions};
+use avery::mission::{self, Env, RunOptions};
 use avery::runtime::ExecMode;
 use avery::telemetry::{f, Table};
 
 fn main() -> anyhow::Result<()> {
     let artifacts = avery::find_artifacts(None)?;
     let env = Env::load(&artifacts, std::path::Path::new("out"), ExecMode::PreuploadedBuffers)?;
+    let mission = mission::find("fleet").expect("fleet registered");
 
     let mut table = Table::new(
         "Fleet scaling sweep (120 s mission, contended uplink)",
@@ -25,32 +27,25 @@ fn main() -> anyhow::Result<()> {
         ],
     );
     for n in [1usize, 4, 16, 64] {
-        let opts = FleetOptions {
-            uavs: n,
-            workers: 2,
+        let opts = RunOptions {
+            uavs: Some(n),
+            workers: Some(2),
             duration_secs: 120.0,
             exec_every: 1000, // throughput/contention sweep — skip most HLO
-            ..FleetOptions::default()
+            ..RunOptions::default()
         };
         let t0 = Instant::now();
-        let run = run_fleet(&env, &opts)?;
+        let report = mission.run(&env, &opts)?;
         let wall = t0.elapsed().as_secs_f64();
-        let insight_pps: Vec<f64> = run
-            .per_uav
-            .iter()
-            .filter(|o| o.role == avery::streams::UavRole::Insight)
-            .map(|o| o.summary.avg_pps)
-            .collect();
-        let mean_uav_pps =
-            insight_pps.iter().sum::<f64>() / insight_pps.len().max(1) as f64;
+        let scalar = |name: &str| report.scalar_value(name).unwrap_or(f64::NAN);
         table.row(&[
             n.to_string(),
-            f(run.aggregate_pps, 3),
-            f(mean_uav_pps, 3),
-            f(run.jain_pps, 3),
-            run.switches_total.to_string(),
-            run.infeasible_total.to_string(),
-            f(run.server_utilization, 3),
+            f(scalar("aggregate_pps"), 3),
+            f(scalar("mean_insight_pps"), 3),
+            f(scalar("jain_pps"), 3),
+            f(scalar("tier_switches"), 0),
+            f(scalar("infeasible_s"), 0),
+            f(scalar("server_utilization"), 3),
             f(wall, 2),
         ]);
     }

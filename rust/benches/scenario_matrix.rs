@@ -1,16 +1,16 @@
 //! Bench: the scenario matrix — every registered scenario-library regime
-//! run end to end (DESIGN.md "Scenario library & artifact-free sim path").
+//! run end to end through the Mission API (DESIGN.md "Scenario library &
+//! artifact-free sim path"), consuming each run's structured `Report`.
 //!
 //! Reports, per scenario: fleet shape, delivered packets, aggregate PPS,
 //! Jain fairness, tier/intent switches, infeasible (outage-starved)
-//! seconds, scripted outage dwell, and the wall-clock cost of simulating
-//! the regime.  Runs against real artifacts when present, else the
-//! synthetic closed-form engine — the matrix itself is what this bench
-//! times, not the numerics.
+//! seconds, and the wall-clock cost of simulating the regime.  Runs
+//! against real artifacts when present, else the synthetic closed-form
+//! engine — the matrix itself is what this bench times, not the numerics.
 
 use std::time::Instant;
 
-use avery::mission::{run_scenario, Env, ScenarioOptions};
+use avery::mission::{self, Env, RunOptions};
 use avery::runtime::ExecMode;
 use avery::scenario::SCENARIO_NAMES;
 use avery::telemetry::{f, Table};
@@ -21,6 +21,7 @@ fn main() -> anyhow::Result<()> {
         std::path::Path::new("out"),
         ExecMode::PreuploadedBuffers,
     )?;
+    let mission = mission::find("scenario").expect("scenario registered");
 
     let mut table = Table::new(
         "Scenario matrix (180 s missions, exec-every 50)",
@@ -30,24 +31,25 @@ fn main() -> anyhow::Result<()> {
         ],
     );
     for name in SCENARIO_NAMES {
-        let opts = ScenarioOptions {
-            name: name.to_string(),
+        let opts = RunOptions {
+            name: Some(name.to_string()),
             duration_secs: 180.0,
             exec_every: 50, // regime/scheduler sweep — subsample the HLO
-            ..ScenarioOptions::default()
+            ..RunOptions::default()
         };
         let t0 = Instant::now();
-        let run = run_scenario(&env, &opts)?;
+        let report = mission.run(&env, &opts)?;
         let wall = t0.elapsed().as_secs_f64();
+        let scalar = |n: &str| report.scalar_value(n).unwrap_or(f64::NAN);
         table.row(&[
             name.to_string(),
-            run.per_uav.len().to_string(),
-            run.delivered_total.to_string(),
-            f(run.aggregate_pps, 3),
-            f(run.jain_pps, 3),
-            run.switches_total.to_string(),
-            run.intent_switches_total.to_string(),
-            run.infeasible_total.to_string(),
+            f(scalar("uavs"), 0),
+            f(scalar("delivered"), 0),
+            f(scalar("aggregate_pps"), 3),
+            f(scalar("jain_pps"), 3),
+            f(scalar("tier_switches"), 0),
+            f(scalar("intent_switches"), 0),
+            f(scalar("infeasible_s"), 0),
             f(wall, 2),
         ]);
     }

@@ -1,16 +1,20 @@
-//! Bench: regenerate Table 3 (per-tier accuracy through the runtime path)
-//! and time the per-packet split pipeline at each tier.
+//! Bench: regenerate Table 3 (per-tier accuracy through the runtime path,
+//! driven through the Mission API) and time the per-packet split pipeline
+//! at each tier.
 
 use avery::bench::{bench_result, header};
 use avery::coordinator::{classify_intent, TierId};
-use avery::mission::{run_table3, Env};
+use avery::mission::{self, Env, RunOptions};
+use avery::report::emit_text;
 use avery::runtime::ExecMode;
 
 fn main() -> anyhow::Result<()> {
     let artifacts = avery::find_artifacts(None)?;
     let env = Env::load(&artifacts, std::path::Path::new("out"), ExecMode::PreuploadedBuffers)?;
     header("Table 3 — System LUT regeneration");
-    run_table3(&env)?;
+    let mission = mission::find("table3").expect("table3 registered");
+    let report = mission.run(&env, &RunOptions::default())?;
+    emit_text(&report, &env.out_dir)?;
 
     header("per-packet split pipeline latency by tier (head+tail, CPU PJRT)");
     let scene = &env.flood_val.scenes[0];

@@ -1,7 +1,9 @@
 //! Configuration: a small `key = value` file format (TOML subset — no tables,
 //! comments with `#`) plus CLI `--key value` overrides.  The offline crate
 //! set has no clap/serde, so this is the hand-rolled equivalent; every
-//! mission binary and example goes through [`RunConfig`].
+//! mission binary and example goes through [`RunConfig`], and the mission
+//! layer consumes it through `mission::RunOptions::from_config` — the one
+//! place config becomes mission options.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -9,6 +11,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::MissionGoal;
+use crate::report::OutputFormat;
 use crate::runtime::ExecMode;
 
 /// Flat key-value configuration store with typed getters.
@@ -100,46 +103,51 @@ impl Kv {
 }
 
 /// Fully-resolved run configuration shared by the CLI and examples.
+/// Optional knobs stay `None` when unset so the mission layer can
+/// distinguish "user asked for this" from "use the mission's (or the
+/// scenario regime's) default" without parallel `*_explicit` flags.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub artifacts: Option<String>,
     pub out_dir: String,
     pub duration_secs: f64,
-    pub goal: MissionGoal,
+    /// `--goal accuracy|throughput`; `None` = mission/scenario default.
+    pub goal: Option<MissionGoal>,
     pub exec_every: usize,
     pub seed: u64,
+    /// fig9 hysteresis ablation margin.
     pub hysteresis: Option<f64>,
     pub exec_mode: ExecMode,
-    /// Fleet size for `avery fleet`.
-    pub uavs: usize,
-    /// Cloud pool worker count for `avery fleet`.
-    pub workers: usize,
-    /// Scenario-library regime for `avery fleet` / `avery fig9`
-    /// (`--scenario NAME`).
+    /// Fleet size; `None` = mission/scenario default.
+    pub uavs: Option<usize>,
+    /// Cloud pool worker count; `None` = mission/scenario default.
+    pub workers: Option<usize>,
+    /// Scenario-library regime overlay (`--scenario NAME`).
     pub scenario: Option<String>,
-    /// Scenario name for `avery scenario --name NAME`.
+    /// Scenario name for the `scenario` mission (`--name NAME`).
     pub name: Option<String>,
     /// `avery scenario --list`.
     pub list: bool,
-    /// True when the user set `--goal` explicitly (scenario runs otherwise
-    /// keep the scenario's own goal).
-    pub goal_explicit: bool,
-    /// True when the user set `--uavs` / `--workers` explicitly.
-    pub uavs_explicit: bool,
-    pub workers_explicit: bool,
+    /// Report rendering (`--format text|json`); CSVs are always written.
+    pub format: OutputFormat,
 }
 
 impl RunConfig {
     pub fn from_kv(kv: &Kv) -> Result<Self> {
-        let goal = match kv.get("goal").unwrap_or("accuracy") {
-            "accuracy" => MissionGoal::PrioritizeAccuracy,
-            "throughput" => MissionGoal::PrioritizeThroughput,
-            other => bail!("goal must be accuracy|throughput, got {other}"),
+        let goal = match kv.get("goal") {
+            None => None,
+            Some("accuracy") => Some(MissionGoal::PrioritizeAccuracy),
+            Some("throughput") => Some(MissionGoal::PrioritizeThroughput),
+            Some(other) => bail!("goal must be accuracy|throughput, got {other}"),
         };
         let exec_mode = match kv.get("exec-mode").unwrap_or("buffers") {
             "buffers" => ExecMode::PreuploadedBuffers,
             "literals" => ExecMode::LiteralsEachCall,
             other => bail!("exec-mode must be buffers|literals, got {other}"),
+        };
+        let format = match kv.get("format") {
+            None => OutputFormat::Text,
+            Some(s) => OutputFormat::parse(s)?,
         };
         Ok(Self {
             artifacts: kv.get("artifacts").map(|s| s.to_string()),
@@ -153,14 +161,22 @@ impl RunConfig {
                 Some(v) => Some(v.parse().context("hysteresis not a number")?),
             },
             exec_mode,
-            uavs: kv.get_usize("uavs", 4)?,
-            workers: kv.get_usize("workers", 2)?,
+            uavs: match kv.get("uavs") {
+                None => None,
+                Some(v) => {
+                    Some(v.parse().with_context(|| format!("config uavs={v} not an integer"))?)
+                }
+            },
+            workers: match kv.get("workers") {
+                None => None,
+                Some(v) => Some(
+                    v.parse().with_context(|| format!("config workers={v} not an integer"))?,
+                ),
+            },
             scenario: kv.get("scenario").map(|s| s.to_string()),
             name: kv.get("name").map(|s| s.to_string()),
             list: kv.get_bool("list", false)?,
-            goal_explicit: kv.get("goal").is_some(),
-            uavs_explicit: kv.get("uavs").is_some(),
-            workers_explicit: kv.get("workers").is_some(),
+            format,
         })
     }
 }
@@ -204,20 +220,20 @@ mod tests {
         let kv = Kv::default();
         let rc = RunConfig::from_kv(&kv).unwrap();
         assert_eq!(rc.duration_secs, 1200.0);
-        assert_eq!(rc.goal, MissionGoal::PrioritizeAccuracy);
+        assert_eq!(rc.goal, None);
         assert_eq!(rc.exec_mode, ExecMode::PreuploadedBuffers);
-        assert_eq!(rc.uavs, 4);
-        assert_eq!(rc.workers, 2);
+        assert_eq!(rc.uavs, None);
+        assert_eq!(rc.workers, None);
+        assert_eq!(rc.format, OutputFormat::Text);
     }
 
     #[test]
     fn fleet_keys_parse() {
         let kv = Kv::parse("uavs = 16\nworkers = 8\n").unwrap();
         let rc = RunConfig::from_kv(&kv).unwrap();
-        assert_eq!(rc.uavs, 16);
-        assert_eq!(rc.workers, 8);
-        assert!(rc.uavs_explicit && rc.workers_explicit);
-        assert!(!rc.goal_explicit);
+        assert_eq!(rc.uavs, Some(16));
+        assert_eq!(rc.workers, Some(8));
+        assert_eq!(rc.goal, None);
     }
 
     #[test]
@@ -236,5 +252,18 @@ mod tests {
     fn run_config_rejects_bad_goal() {
         let kv = Kv::parse("goal = fastest\n").unwrap();
         assert!(RunConfig::from_kv(&kv).is_err());
+    }
+
+    #[test]
+    fn format_key_parses_and_rejects() {
+        let rc = RunConfig::from_kv(&Kv::parse("format = json\n").unwrap()).unwrap();
+        assert_eq!(rc.format, OutputFormat::Json);
+        assert!(RunConfig::from_kv(&Kv::parse("format = yaml\n").unwrap()).is_err());
+    }
+
+    #[test]
+    fn run_config_rejects_bad_fleet_counts() {
+        assert!(RunConfig::from_kv(&Kv::parse("uavs = many\n").unwrap()).is_err());
+        assert!(RunConfig::from_kv(&Kv::parse("workers = -1\n").unwrap()).is_err());
     }
 }

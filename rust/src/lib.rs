@@ -25,10 +25,13 @@
 //!   features with CRC32 integrity.
 //! * [`baselines`] — static tiers, raw-image-compression offload, full-edge
 //!   and cloud-only execution.
-//! * [`mission`] — drivers that regenerate every table and figure of the
-//!   paper's evaluation (Table 3, Figures 7–10, headline claims), plus the
-//!   fleet-scale mission (`avery fleet`) served by the concurrent
-//!   [`cloud`] worker pool.
+//! * [`mission`] — the Mission API: every table/figure of the paper's
+//!   evaluation (Table 3, Figures 7–10, headline claims) plus the
+//!   fleet-scale and scenario missions behind one `Mission` trait and a
+//!   registry (`avery run <name>` / `avery list` / `avery all`), served by
+//!   the concurrent [`cloud`] worker pool.
+//! * [`report`] — the structured `Report` every mission returns (scalars,
+//!   tables, CSV series, notes) with pluggable stdout/CSV/JSON sinks.
 //!
 //! Python never runs on any path in this crate; the binary is self-contained
 //! once `artifacts/` exists — and the control plane (controller, netsim,
@@ -49,6 +52,7 @@ pub mod manifest;
 pub mod mission;
 pub mod netsim;
 pub mod packet;
+pub mod report;
 pub mod runtime;
 pub mod scenario;
 pub mod streams;

@@ -1,67 +1,83 @@
-//! AVERY CLI — the leader entrypoint.
-//!
-//! Subcommands regenerate the paper's tables/figures through the real
-//! three-layer stack (see DESIGN.md experiment index):
+//! AVERY CLI — the leader entrypoint, a thin shell over the Mission API
+//! (`avery::mission`): every subcommand is registry iteration.
 //!
 //! ```text
-//! avery table3     # Table 3 — System LUT (per-tier accuracy/payload)
-//! avery fig7       # Fig 7  — split-point accuracy sweep (r = 0.10)
-//! avery fig8       # Fig 8  — latency/energy per split point
-//! avery fig9       # Fig 9  — 20-min dynamic run, AVERY vs static tiers
-//! avery fig10      # Fig 10 — accuracy/throughput trade-off scatter
-//! avery headline   # abstract claims H1..H4
-//! avery streams    # §5.2.2 dual-stream characterization + §4.3 demo
-//! avery fleet      # multi-UAV contended-uplink mission (beyond the paper)
-//! avery scenario   # scenario library: named disaster/network regimes
-//! avery all        # everything above
+//! avery list            # enumerate registered missions
+//! avery run <mission>   # run one mission by registry name
+//! avery all             # every mission, in registry order
+//! avery <mission>       # legacy alias for `avery run <mission>`
+//! ```
+//!
+//! Missions (registry order — see DESIGN.md experiment index):
+//!
+//! ```text
+//! table3     Table 3 — System LUT (per-tier accuracy/payload)
+//! fig7       Fig 7  — split-point accuracy sweep (r = 0.10)
+//! fig8       Fig 8  — latency/energy per split point
+//! fig9       Fig 9  — 20-min dynamic run, AVERY vs static tiers
+//! fig10      Fig 10 — accuracy/throughput trade-off scatter
+//! headline   abstract claims H1..H4 (needs artifacts)
+//! streams    §5.2.2 dual-stream characterization + §4.3 demo
+//! fleet      multi-UAV contended-uplink mission (beyond the paper)
+//! scenario   scenario library: named disaster/network regimes
 //! ```
 //!
 //! Common options: `--artifacts DIR`, `--out DIR`, `--duration SECS`,
 //! `--goal accuracy|throughput`, `--exec-every N`, `--seed N`,
 //! `--hysteresis H`, `--exec-mode buffers|literals`, `--config FILE`,
 //! `--uavs N`, `--workers N` (fleet), `--scenario NAME` (fleet/fig9),
-//! `--name NAME` / `--list` (scenario).
+//! `--name NAME` / `--list` (scenario), `--format text|json`.
 //!
-//! `avery scenario` runs with or without artifacts: when `artifacts/` is
-//! missing it falls back to the synthetic closed-form engine (control plane
-//! exact, numerics simulated), so the scenario matrix also runs in CI.
+//! Every artifact-free-capable mission (all but `headline`) falls back to
+//! the synthetic closed-form engine when `artifacts/` is missing (control
+//! plane exact, numerics simulated), so the whole evaluation surface runs
+//! in CI.  CSV outputs are always written; `--format json` renders the
+//! structured report as one JSON object on stdout instead of tables.
 
 use std::path::Path;
 
 use anyhow::{bail, Result};
 
 use avery::config::{Kv, RunConfig};
-use avery::mission::{
-    run_fig10, run_fig7, run_fig8, run_fig9, run_fleet, run_headline, run_scenario,
-    run_streams, run_table3, Env, Fig9Options, FleetOptions, ScenarioOptions,
-};
+use avery::mission::{self, Env, Mission, RunOptions};
+use avery::report::{emit_text, CsvSink, JsonSink, OutputFormat, Sink};
 
-const USAGE: &str = "usage: avery <table3|fig7|fig8|fig9|fig10|headline|streams|fleet|scenario|all> [--options]
+const USAGE: &str = "usage: avery <run <mission>|list|all|MISSION> [--options]
+missions: table3 fig7 fig8 fig9 fig10 headline streams fleet scenario
   --artifacts DIR      artifact directory (default: discover ./artifacts)
   --out DIR            CSV output directory (default: out)
   --duration SECS      mission length for fig9/fig10/headline/fleet/scenario (default 1200)
-  --goal MODE          accuracy | throughput (default accuracy)
+  --goal MODE          accuracy | throughput (default: mission/scenario's)
   --exec-every N       execute HLO every Nth packet (default 1)
   --seed N             trace/workload seed (default 7)
   --hysteresis H       also run the hysteresis ablation at margin H
   --exec-mode M        buffers | literals (default buffers)
-  --uavs N             fleet size for `avery fleet` (default 4)
-  --workers N          cloud pool workers for `avery fleet` (default 2)
-  --scenario NAME      run `avery fleet`/`avery fig9` under a scenario regime
-  --name NAME          scenario to run for `avery scenario`
+  --uavs N             fleet size (default 4, or the scenario's)
+  --workers N          cloud pool workers (default 2, or the scenario's)
+  --scenario NAME      run fleet/fig9 under a scenario regime
+  --name NAME          scenario to run for `avery run scenario`
   --list               list registered scenarios (`avery scenario --list`)
+  --format FMT         text | json report rendering (CSVs always written)
   --config FILE        key = value config file (CLI overrides it)
 
-`avery scenario` needs no artifacts: without them it runs the synthetic
-closed-form engine (control plane exact, numerics simulated).";
+Every mission except `headline` needs no artifacts: without them it runs
+the synthetic closed-form engine (control plane exact, numerics simulated).";
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut kv = Kv::default();
-    // Config file first (if named), then CLI overrides.
-    if let Some(i) = args.iter().position(|a| a == "--config") {
-        if let Some(path) = args.get(i + 1) {
+    // Config file first (if named, in either `--config FILE` or
+    // `--config=FILE` form), then CLI overrides.
+    for (i, a) in args.iter().enumerate() {
+        if let Some(path) = a.strip_prefix("--config=") {
             kv = Kv::from_file(Path::new(path))?;
+        } else if a == "--config" {
+            match args.get(i + 1) {
+                Some(path) if !path.starts_with("--") => {
+                    kv = Kv::from_file(Path::new(path))?;
+                }
+                _ => bail!("--config requires a file path"),
+            }
         }
     }
     let positional = kv.apply_cli(&args)?;
@@ -71,106 +87,76 @@ fn main() -> Result<()> {
         return Ok(());
     };
 
-    // `avery scenario` is self-sufficient: `--list` needs no environment at
-    // all, and a run falls back to the synthetic engine without artifacts.
-    if cmd == "scenario" {
-        if cfg.list || cfg.name.is_none() {
-            println!("registered scenarios (run with `avery scenario --name NAME`):");
-            for (name, summary) in avery::scenario::list() {
-                println!("  {name:<20} {summary}");
-            }
-            return Ok(());
-        }
-        let env = Env::load_or_synthetic(
-            cfg.artifacts.as_deref(),
-            Path::new(&cfg.out_dir),
-            cfg.exec_mode,
-        )?;
-        let opts = ScenarioOptions {
-            name: cfg.name.clone().unwrap(),
-            duration_secs: cfg.duration_secs,
-            seed: cfg.seed,
-            exec_every: cfg.exec_every,
-            uavs: cfg.uavs_explicit.then_some(cfg.uavs),
-            workers: cfg.workers_explicit.then_some(cfg.workers),
-            goal: cfg.goal_explicit.then_some(cfg.goal),
-        };
-        run_scenario(&env, &opts)?;
-        return Ok(());
-    }
-
-    let artifacts = avery::find_artifacts(cfg.artifacts.as_deref())?;
-    eprintln!("artifacts: {}", artifacts.display());
-    let env = Env::load(&artifacts, Path::new(&cfg.out_dir), cfg.exec_mode)?;
-
-    // Under `--scenario` the regime's own mission goal applies unless the
-    // user passed `--goal` explicitly — keeping `avery fleet --scenario X`
-    // consistent with `avery scenario --name X`.
-    let mut goal = cfg.goal;
-    if !cfg.goal_explicit {
-        if let Some(name) = &cfg.scenario {
-            goal = avery::scenario::build(name, cfg.seed, cfg.duration_secs)?.goal;
-        }
-    }
-
-    let fig9_opts = Fig9Options {
-        duration_secs: cfg.duration_secs,
-        goal,
-        exec_every: cfg.exec_every,
-        ablate_hysteresis: cfg.hysteresis,
-        seed: cfg.seed,
-        scenario: cfg.scenario.clone(),
-    };
-    let fleet_opts = FleetOptions {
-        uavs: cfg.uavs,
-        workers: cfg.workers,
-        duration_secs: cfg.duration_secs,
-        goal,
-        exec_every: cfg.exec_every,
-        seed: cfg.seed,
-        scenario: cfg.scenario.clone(),
-    };
-
     match cmd {
-        "table3" => run_table3(&env)?,
-        "fig7" => run_fig7(&env)?,
-        "fig8" => run_fig8(&env)?,
-        "fig9" => {
-            run_fig9(&env, &fig9_opts)?;
+        "list" => {
+            print_mission_list();
+            Ok(())
         }
-        "fig10" => run_fig10(&env, &fig9_opts)?,
-        "headline" => run_headline(&env, &fig9_opts)?,
-        "streams" => run_streams(&env)?,
-        "fleet" => {
-            run_fleet(&env, &fleet_opts)?;
+        "run" => {
+            let Some(name) = positional.get(1) else {
+                bail!("usage: avery run <mission>  (see `avery list`)");
+            };
+            if name == "scenario" && cfg.list {
+                print_scenario_list();
+                return Ok(());
+            }
+            let Some(m) = mission::find(name) else {
+                bail!("unknown mission `{name}` — see `avery list`");
+            };
+            run_missions(&[m], &cfg)
         }
-        "all" => {
-            run_table3(&env)?;
-            run_fig7(&env)?;
-            run_fig8(&env)?;
-            run_fig9(&env, &fig9_opts)?;
-            run_fig10(&env, &fig9_opts)?;
-            run_headline(&env, &fig9_opts)?;
-            run_streams(&env)?;
-            run_fleet(&env, &fleet_opts)?;
-            run_scenario(
-                &env,
-                &ScenarioOptions {
-                    name: cfg
-                        .name
-                        .clone()
-                        .or_else(|| cfg.scenario.clone())
-                        .unwrap_or_else(|| "urban-flood".to_string()),
-                    duration_secs: cfg.duration_secs,
-                    seed: cfg.seed,
-                    exec_every: cfg.exec_every,
-                    uavs: cfg.uavs_explicit.then_some(cfg.uavs),
-                    workers: cfg.workers_explicit.then_some(cfg.workers),
-                    goal: cfg.goal_explicit.then_some(cfg.goal),
-                },
-            )?;
+        "all" => run_missions(&mission::registry(), &cfg),
+        // Legacy subcommands are registry aliases.  `avery scenario` with
+        // no name keeps its listing behavior.
+        "scenario" if cfg.list || cfg.name.is_none() => {
+            print_scenario_list();
+            Ok(())
         }
-        other => bail!("unknown command `{other}`\n{USAGE}"),
+        other => match mission::find(other) {
+            Some(m) => run_missions(&[m], &cfg),
+            None => bail!("unknown command `{other}`\n{USAGE}"),
+        },
+    }
+}
+
+fn print_mission_list() {
+    println!("registered missions (run with `avery run NAME`):");
+    for m in mission::registry() {
+        let gate = if m.needs_artifacts() { "artifacts" } else { "artifact-free" };
+        println!("  {:<10} [{gate:>13}] {}", m.name(), m.summary());
+    }
+}
+
+fn print_scenario_list() {
+    println!("registered scenarios (run with `avery scenario --name NAME`):");
+    for (name, summary) in avery::scenario::list() {
+        println!("  {name:<20} {summary}");
+    }
+}
+
+/// Load one environment, then drive each mission through the trait and
+/// render its report: CSVs always, tables+notes or JSON per `--format`.
+fn run_missions(missions: &[Box<dyn Mission>], cfg: &RunConfig) -> Result<()> {
+    let out_dir = Path::new(&cfg.out_dir);
+    let env = if missions.iter().any(|m| m.needs_artifacts()) {
+        let artifacts = avery::find_artifacts(cfg.artifacts.as_deref())?;
+        eprintln!("artifacts: {}", artifacts.display());
+        Env::load(&artifacts, out_dir, cfg.exec_mode)?
+    } else {
+        Env::load_or_synthetic(cfg.artifacts.as_deref(), out_dir, cfg.exec_mode)?
+    };
+    let opts = RunOptions::from_config(cfg);
+    for m in missions {
+        let report = m.run(&env, &opts)?;
+        match cfg.format {
+            OutputFormat::Text => emit_text(&report, &env.out_dir)?,
+            OutputFormat::Json => {
+                // Stdout stays pure JSON (one object per mission); the CSV
+                // files are still written, silently.
+                CsvSink::new(&env.out_dir).announce(false).emit(&report)?;
+                JsonSink.emit(&report)?;
+            }
+        }
     }
     Ok(())
 }

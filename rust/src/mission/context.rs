@@ -8,13 +8,35 @@ use crate::cloud::CloudServer;
 use crate::coordinator::{classify_intent, IntentLevel, TierId};
 use crate::edge::EdgePipeline;
 use crate::eval::mask_iou;
+use crate::report::{Report, ReportTable};
 use crate::streams::fleet::CONTEXT_PROMPTS;
 use crate::streams::run_context_mission;
-use crate::telemetry::{f, pct, Table};
+use crate::telemetry::{f, pct};
 
-use super::Env;
+use super::{Env, Mission, RunOptions};
 
-pub fn run_streams(env: &Env) -> Result<()> {
+/// `avery streams` — the dual-stream characterization + triage demo.
+pub struct StreamsMission;
+
+impl Mission for StreamsMission {
+    fn name(&self) -> &'static str {
+        "streams"
+    }
+
+    fn summary(&self) -> &'static str {
+        "§5.2.2 dual-stream characterization + §4.3 triage demo"
+    }
+
+    fn needs_artifacts(&self) -> bool {
+        false
+    }
+
+    fn run(&self, env: &Env, _opts: &RunOptions) -> Result<Report> {
+        run_streams(env)
+    }
+}
+
+pub fn run_streams(env: &Env) -> Result<Report> {
     let run = run_context_mission(
         &env.engine,
         &env.datasets(),
@@ -23,10 +45,9 @@ pub fn run_streams(env: &Env) -> Result<()> {
         60.0,
         &CONTEXT_PROMPTS,
     )?;
-    let mut table = Table::new(
-        "Dual-stream characterization (§5.2.2)",
-        &["Metric", "Paper", "Measured"],
-    );
+    let title = "Dual-stream characterization (§5.2.2)";
+    let mut report = Report::new("streams", title);
+    let mut table = ReportTable::new("dual_stream", title, &["Metric", "Paper", "Measured"]);
     table.row(&[
         "Context on-device latency (s)".to_string(),
         "-".to_string(),
@@ -48,10 +69,14 @@ pub fn run_streams(env: &Env) -> Result<()> {
         "-".to_string(),
         pct(run.presence_accuracy),
     ]);
-    table.print();
+    report.push_table(table);
+    report.push_scalar("context_edge_latency_s", run.edge_latency_s);
+    report.push_scalar("context_speedup", run.speedup);
+    report.push_scalar("context_achieved_pps", run.achieved_pps);
+    report.push_scalar("context_presence_accuracy", run.presence_accuracy);
 
     // ---- Triage escalation demo (paper §4.3 workflow). ----
-    println!("\nTriage workflow demo (§4.3):");
+    report.push_note("\nTriage workflow demo (§4.3):");
     let scene = &env.flood_val.scenes[0];
     let mut edge = EdgePipeline::new(env.engine.clone(), env.device.clone(), env.lut.clone());
     let server = CloudServer::new(env.engine.clone());
@@ -61,8 +86,8 @@ pub fn run_streams(env: &Env) -> Result<()> {
     assert_eq!(ctx_intent.level, IntentLevel::Context);
     let (pkt, _) = edge.capture_context(scene, 0.0)?;
     let resp = server.process(&pkt, &ctx_intent.token_ids, "ft")?;
-    println!("  operator> {ctx_prompt}");
-    println!("  avery  > {}", resp.text_answer(&["person", "vehicle"]));
+    report.push_note(format!("  operator> {ctx_prompt}"));
+    report.push_note(format!("  avery  > {}", resp.text_answer(&["person", "vehicle"])));
 
     let ins_prompt = "highlight the people stranded by the flood";
     let ins_intent = classify_intent(ins_prompt);
@@ -73,11 +98,12 @@ pub fn run_streams(env: &Env) -> Result<()> {
     let class = ins_intent.target_class.unwrap_or(0);
     let s = mask_iou(logits.as_f32()?, &scene.masks[class], 0.0);
     let iou = if s.union > 0.0 { s.intersection / s.union } else { 1.0 };
-    println!("  operator> {ins_prompt}");
-    println!(
+    report.push_note(format!("  operator> {ins_prompt}"));
+    report.push_note(format!(
         "  avery  > [segmentation mask, {} px, IoU vs GT {:.3}]",
         logits.as_f32()?.iter().filter(|&&v| v > 0.0).count(),
         iou
-    );
-    Ok(())
+    ));
+    report.push_scalar("triage_insight_iou", iou);
+    Ok(report)
 }

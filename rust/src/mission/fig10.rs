@@ -6,41 +6,69 @@
 use anyhow::Result;
 
 use crate::coordinator::MissionGoal;
-use crate::telemetry::{f, pct, Csv, Table};
+use crate::report::{Report, ReportTable, Series};
+use crate::telemetry::{f, pct};
 
-use super::fig9::{run_fig9, Fig9Options};
-use super::Env;
+use super::fig9::run_fig9;
+use super::{Env, Mission, RunOptions};
 
-pub fn run_fig10(env: &Env, opts: &Fig9Options) -> Result<()> {
-    let runs = run_fig9(env, opts)?;
-    let mut table = Table::new(
-        "Figure 10 — Avg Accuracy vs Avg Throughput (Original model)",
-        &["Config", "Avg PPS", "Avg IoU (orig)"],
-    );
-    let mut csv = Csv::create(
-        &env.out_dir.join("fig10_tradeoff.csv"),
-        &["config", "avg_pps", "avg_iou_orig"],
-    )?;
+/// `avery fig10` — accuracy/throughput trade-off scatter (runs fig9 in
+/// both goals and absorbs those sub-reports).
+pub struct Fig10Mission;
+
+impl Mission for Fig10Mission {
+    fn name(&self) -> &'static str {
+        "fig10"
+    }
+
+    fn summary(&self) -> &'static str {
+        "Fig 10 — accuracy/throughput trade-off scatter"
+    }
+
+    fn needs_artifacts(&self) -> bool {
+        false
+    }
+
+    fn run(&self, env: &Env, opts: &RunOptions) -> Result<Report> {
+        run_fig10(env, opts)
+    }
+}
+
+pub fn run_fig10(env: &Env, opts: &RunOptions) -> Result<Report> {
+    let title = "Figure 10 — Avg Accuracy vs Avg Throughput (Original model)";
+    let mut report = Report::new("fig10", title);
+
+    let (runs, sub) = run_fig9(env, opts)?;
+    report.absorb(sub);
+
+    let mut table = ReportTable::new("tradeoff", title, &["Config", "Avg PPS", "Avg IoU (orig)"]);
+    let mut csv = Series::new("fig10_tradeoff", &["config", "avg_pps", "avg_iou_orig"]);
     for run in &runs {
         let s = &run.summary;
         table.row(&[s.policy.clone(), f(s.avg_pps, 3), pct(s.avg_iou_orig)]);
-        csv.row(&[s.policy.clone(), f(s.avg_pps, 4), f(s.avg_iou_orig, 6)])?;
+        csv.row(&[s.policy.clone(), f(s.avg_pps, 4), f(s.avg_iou_orig, 6)]);
     }
 
-    // The throughput-mode operating point (paper text: 1.85 PPS).
-    let tp = run_fig9(
+    // The throughput-mode operating point (paper text: 1.85 PPS).  Its fig9
+    // sub-report overwrites the accuracy-mode fig9 CSVs exactly as the
+    // sequential drivers did.
+    let (tp, sub_tp) = run_fig9(
         env,
-        &Fig9Options { goal: MissionGoal::PrioritizeThroughput, ..opts.clone() },
+        &RunOptions { goal: Some(MissionGoal::PrioritizeThroughput), ..opts.clone() },
     )?;
+    report.absorb(sub_tp);
     let s = &tp[0].summary;
     table.row(&[
         "AVERY (Prioritize Throughput)".to_string(),
         f(s.avg_pps, 3),
         pct(s.avg_iou_orig),
     ]);
-    csv.row(&["avery_throughput".to_string(), f(s.avg_pps, 4), f(s.avg_iou_orig, 6)])?;
-    table.print();
-    println!("paper: AVERY 0.74 PPS (accuracy mode), 1.85 PPS (throughput mode)");
-    println!("csv: {}", csv.path.display());
-    Ok(())
+    csv.row(&["avery_throughput".to_string(), f(s.avg_pps, 4), f(s.avg_iou_orig, 6)]);
+
+    report.push_scalar("avery_throughput_mode_pps", s.avg_pps);
+    report.push_scalar("avery_throughput_mode_iou_orig", s.avg_iou_orig);
+    report.push_table(table);
+    report.push_series(csv);
+    report.push_note("paper: AVERY 0.74 PPS (accuracy mode), 1.85 PPS (throughput mode)");
+    Ok(report)
 }

@@ -6,19 +6,41 @@ use anyhow::Result;
 
 use crate::baselines::eval_split_path;
 use crate::coordinator::TierId;
-use crate::telemetry::{f, Csv, Table};
+use crate::report::{Report, ReportTable, Series};
+use crate::telemetry::f;
 
-use super::Env;
+use super::{Env, Mission, RunOptions};
 
-pub fn run_fig7(env: &Env) -> Result<()> {
-    let mut table = Table::new(
-        "Figure 7 — split-point accuracy at r = 0.10 (Original model, generic val)",
-        &["Split", "gIoU", "cIoU", "Avg IoU", "LUT Avg"],
-    );
-    let mut csv = Csv::create(
-        &env.out_dir.join("fig7_split_accuracy.csv"),
+/// `avery fig7` — the split-point accuracy sweep at r = 0.10.
+pub struct Fig7Mission;
+
+impl Mission for Fig7Mission {
+    fn name(&self) -> &'static str {
+        "fig7"
+    }
+
+    fn summary(&self) -> &'static str {
+        "Fig 7 — split-point accuracy sweep (r = 0.10)"
+    }
+
+    fn needs_artifacts(&self) -> bool {
+        false
+    }
+
+    fn run(&self, env: &Env, _opts: &RunOptions) -> Result<Report> {
+        run_fig7(env)
+    }
+}
+
+pub fn run_fig7(env: &Env) -> Result<Report> {
+    let title = "Figure 7 — split-point accuracy at r = 0.10 (Original model, generic val)";
+    let mut report = Report::new("fig7", title);
+    let mut table =
+        ReportTable::new("split_accuracy", title, &["Split", "gIoU", "cIoU", "Avg IoU", "LUT Avg"]);
+    let mut csv = Series::new(
+        "fig7_split_accuracy",
         &["split", "giou", "ciou", "avg_iou", "lut_avg"],
-    )?;
+    );
     let mut measured = Vec::new();
     for split in 1..=env.manifest_meta.depth {
         let (_, acc) = eval_split_path(
@@ -43,21 +65,24 @@ pub fn run_fig7(env: &Env) -> Result<()> {
             f(acc.avg_iou(), 4),
             f(lut_avg, 4),
         ]);
-        csv.rowf(&[split as f64, acc.giou(), acc.ciou(), acc.avg_iou(), lut_avg])?;
+        csv.rowf(&[split as f64, acc.giou(), acc.ciou(), acc.avg_iou(), lut_avg]);
         measured.push(acc.avg_iou());
     }
-    table.print();
     let first = measured.first().copied().unwrap_or(0.0);
     let last = measured.last().copied().unwrap_or(0.0);
     let min = measured.iter().cloned().fold(f64::INFINITY, f64::min);
-    println!(
+    report.push_table(table);
+    report.push_series(csv);
+    report.push_scalar("sp1_avg_iou", first);
+    report.push_scalar("min_avg_iou", min);
+    report.push_scalar("last_avg_iou", last);
+    report.push_note(format!(
         "shape: sp1 {:.4} -> mid-min {:.4} -> sp{} {:.4}  (paper: 0.8256 -> 0.7615@sp17 \
          -> 0.8267@sp29; early split favored once energy is charged — see Fig 8)",
         first,
         min,
         measured.len(),
         last
-    );
-    println!("csv: {}", csv.path.display());
-    Ok(())
+    ));
+    Ok(report)
 }

@@ -4,19 +4,44 @@
 
 use anyhow::Result;
 
-use crate::telemetry::{f, Csv, Table};
+use crate::report::{Report, ReportTable, Series};
+use crate::telemetry::f;
 
-use super::Env;
+use super::{Env, Mission, RunOptions};
 
-pub fn run_fig8(env: &Env) -> Result<()> {
-    let mut table = Table::new(
-        "Figure 8 — on-device latency & energy per image (Jetson MODE_30W_ALL model)",
+/// `avery fig8` — latency/energy per split point on the device model.
+pub struct Fig8Mission;
+
+impl Mission for Fig8Mission {
+    fn name(&self) -> &'static str {
+        "fig8"
+    }
+
+    fn summary(&self) -> &'static str {
+        "Fig 8 — on-device latency/energy per split point"
+    }
+
+    fn needs_artifacts(&self) -> bool {
+        false
+    }
+
+    fn run(&self, env: &Env, _opts: &RunOptions) -> Result<Report> {
+        run_fig8(env)
+    }
+}
+
+pub fn run_fig8(env: &Env) -> Result<Report> {
+    let title = "Figure 8 — on-device latency & energy per image (Jetson MODE_30W_ALL model)";
+    let mut report = Report::new("fig8", title);
+    let mut table = ReportTable::new(
+        "latency_energy",
+        title,
         &["Split", "Paper depth", "Latency (s)", "Energy (J)"],
     );
-    let mut csv = Csv::create(
-        &env.out_dir.join("fig8_latency_energy.csv"),
+    let mut csv = Series::new(
+        "fig8_latency_energy",
         &["split", "paper_depth", "latency_s", "energy_j"],
-    )?;
+    );
     for split in 1..=env.manifest_meta.depth {
         let c = env.device.insight_edge(split);
         let pd = env.device.paper_depth_of(split);
@@ -26,7 +51,7 @@ pub fn run_fig8(env: &Env) -> Result<()> {
             f(c.latency_s, 4),
             f(c.energy_j, 2),
         ]);
-        csv.rowf(&[split as f64, pd, c.latency_s, c.energy_j])?;
+        csv.rowf(&[split as f64, pd, c.latency_s, c.energy_j]);
     }
     let full = env.device.full_edge();
     table.row(&[
@@ -35,18 +60,22 @@ pub fn run_fig8(env: &Env) -> Result<()> {
         f(full.latency_s, 4),
         f(full.energy_j, 2),
     ]);
-    csv.rowf(&[-1.0, -1.0, full.latency_s, full.energy_j])?;
-    table.print();
+    csv.rowf(&[-1.0, -1.0, full.latency_s, full.energy_j]);
+    report.push_table(table);
+    report.push_series(csv);
     let sp1 = env.device.insight_edge(1);
-    println!(
-        "full vs sp1: latency {:.1}x, energy {:.1}x  (paper caption: 11.8x / 16.6x)",
-        full.latency_s / sp1.latency_s,
-        full.energy_j / sp1.energy_j
-    );
-    println!(
+    let latency_x = full.latency_s / sp1.latency_s;
+    let energy_x = full.energy_j / sp1.energy_j;
+    let saving = 1.0 - sp1.energy_j / full.energy_j;
+    report.push_scalar("full_vs_sp1_latency_x", latency_x);
+    report.push_scalar("full_vs_sp1_energy_x", energy_x);
+    report.push_scalar("sp1_energy_saving", saving);
+    report.push_note(format!(
+        "full vs sp1: latency {latency_x:.1}x, energy {energy_x:.1}x  (paper caption: 11.8x / 16.6x)"
+    ));
+    report.push_note(format!(
         "energy saving of split@1 vs full edge: {:.2}%  (paper headline: 93.98%)",
-        (1.0 - sp1.energy_j / full.energy_j) * 100.0
-    );
-    println!("csv: {}", csv.path.display());
-    Ok(())
+        saving * 100.0
+    ));
+    Ok(report)
 }

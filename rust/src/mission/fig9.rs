@@ -7,63 +7,63 @@ use anyhow::Result;
 
 use crate::coordinator::{MissionGoal, TierId};
 use crate::netsim::{BandwidthTrace, Link, LinkConfig, TraceConfig};
+use crate::report::{Report, ReportTable, Series};
 use crate::streams::{run_insight_mission, InsightRun, MissionConfig, Policy};
-use crate::telemetry::{f, pct, Csv, Table};
+use crate::telemetry::{f, pct};
 
-use super::Env;
+use super::{Env, Mission, RunOptions};
 
-#[derive(Clone, Debug)]
-pub struct Fig9Options {
-    pub duration_secs: f64,
-    pub goal: MissionGoal,
-    /// Execute HLO on every Nth packet (1 = all; raise to speed up).
-    pub exec_every: usize,
-    /// Hysteresis ablation: also run AVERY with this margin and report the
-    /// switch-count delta.
-    pub ablate_hysteresis: Option<f64>,
-    pub seed: u64,
-    /// Run the dynamic comparison over a scenario-library trace + link
-    /// instead of the paper's script (`--scenario NAME`).
-    pub scenario: Option<String>,
-}
+/// `avery fig9` — the dynamic AVERY-vs-static-tiers comparison.
+pub struct Fig9Mission;
 
-impl Default for Fig9Options {
-    fn default() -> Self {
-        Self {
-            duration_secs: 1200.0,
-            goal: MissionGoal::PrioritizeAccuracy,
-            exec_every: 1,
-            ablate_hysteresis: None,
-            seed: 7,
-            scenario: None,
-        }
+impl Mission for Fig9Mission {
+    fn name(&self) -> &'static str {
+        "fig9"
+    }
+
+    fn summary(&self) -> &'static str {
+        "Fig 9 — 20-min dynamic run, AVERY vs static tiers"
+    }
+
+    fn needs_artifacts(&self) -> bool {
+        false
+    }
+
+    fn run(&self, env: &Env, opts: &RunOptions) -> Result<Report> {
+        Ok(run_fig9(env, opts)?.1)
     }
 }
 
-pub fn run_fig9(env: &Env, opts: &Fig9Options) -> Result<Vec<InsightRun>> {
+/// Run the dynamic comparison and build its report.  The raw
+/// [`InsightRun`]s come back alongside so composed missions (fig10,
+/// headline) and programmatic callers can consume the full telemetry.
+pub fn run_fig9(env: &Env, opts: &RunOptions) -> Result<(Vec<InsightRun>, Report)> {
     // Either the paper's 20-minute script or a scenario-library regime
     // (trace, link knobs and controller hysteresis/dwell; intent schedules
     // are a fleet/scenario-driver concern — this comparison keeps the
     // standing Insight intent fixed so the static-tier baselines stay
-    // comparable).
-    let (trace_cfg, link_cfg, hysteresis, min_dwell) = match &opts.scenario {
+    // comparable).  Under a scenario the regime's own goal applies unless
+    // the caller set one explicitly.
+    let (trace_cfg, link_cfg, hysteresis, min_dwell, scenario_goal) = match &opts.scenario {
         Some(name) => {
             let sc = crate::scenario::build(name, opts.seed, opts.duration_secs)?;
-            println!("fig9 over scenario `{}`: {}", sc.name, sc.summary);
-            (sc.trace, sc.link, sc.hysteresis, sc.min_dwell)
+            eprintln!("fig9 over scenario `{}`: {}", sc.name, sc.summary);
+            (sc.trace, sc.link, sc.hysteresis, sc.min_dwell, Some(sc.goal))
         }
         None => (
             TraceConfig::paper_20min(opts.seed).scaled_to(opts.duration_secs),
             LinkConfig { seed: opts.seed, ..LinkConfig::default() },
             0.0,
             0,
+            None,
         ),
     };
+    let goal = opts.goal.or(scenario_goal).unwrap_or(MissionGoal::PrioritizeAccuracy);
     let trace = BandwidthTrace::generate(&trace_cfg);
 
     let mission = MissionConfig {
         duration_secs: opts.duration_secs,
-        goal: opts.goal,
+        goal,
         exec_every: opts.exec_every,
         seed: opts.seed,
         hysteresis,
@@ -93,25 +93,33 @@ pub fn run_fig9(env: &Env, opts: &Fig9Options) -> Result<Vec<InsightRun>> {
         runs.push(run);
     }
 
-    // ---- CSVs ----
+    let title = format!(
+        "Figure 9 — {:.0}-minute dynamic run, {:?} (AVERY vs static tiers)",
+        opts.duration_secs / 60.0,
+        goal
+    );
+    let mut report = Report::new("fig9", &title);
+
     // (a)+(b): per-second bandwidth + AVERY tier timeline.
-    let mut tl = Csv::create(
-        &env.out_dir.join("fig9_timeline.csv"),
+    let mut tl = Series::new(
+        "fig9_timeline",
         &["t", "bandwidth_true_mbps", "bandwidth_est_mbps", "avery_tier"],
-    )?;
+    );
     for e in &runs[0].epochs {
         tl.row(&[
             f(e.t, 1),
             f(e.bandwidth_true_mbps, 4),
             f(e.bandwidth_est_mbps, 4),
             e.tier.map(|t| t.index() as i64).unwrap_or(-1).to_string(),
-        ])?;
+        ]);
     }
+    report.push_series(tl);
+
     // (c)+(d): per-policy packets.
-    let mut pk = Csv::create(
-        &env.out_dir.join("fig9_packets.csv"),
+    let mut pk = Series::new(
+        "fig9_packets",
         &["policy", "t_send", "t_deliver", "tier", "corpus", "iou"],
-    )?;
+    );
     for run in &runs {
         for p in &run.packets {
             pk.row(&[
@@ -121,17 +129,15 @@ pub fn run_fig9(env: &Env, opts: &Fig9Options) -> Result<Vec<InsightRun>> {
                 p.tier.name().to_string(),
                 format!("{:?}", p.corpus),
                 p.iou.map(|v| format!("{v:.6}")).unwrap_or_default(),
-            ])?;
+            ]);
         }
     }
+    report.push_series(pk);
 
     // ---- Summary table (the Fig 9 c/d aggregates). ----
-    let mut table = Table::new(
-        &format!(
-            "Figure 9 — {:.0}-minute dynamic run, {:?} (AVERY vs static tiers)",
-            opts.duration_secs / 60.0,
-            opts.goal
-        ),
+    let mut table = ReportTable::new(
+        "dynamic_run",
+        &title,
         &[
             "Policy", "Delivered", "Avg PPS", "Avg IoU", "IoU orig", "IoU ft",
             "Energy (J)", "Switches", "Infeasible s",
@@ -151,25 +157,31 @@ pub fn run_fig9(env: &Env, opts: &Fig9Options) -> Result<Vec<InsightRun>> {
             s.infeasible_epochs.to_string(),
         ]);
     }
-    table.print();
+    report.push_table(table);
 
     let avery = &runs[0].summary;
     let ha = &runs[1].summary;
     let gap = ha.avg_iou - avery.avg_iou;
-    println!(
+    report.push_scalar("avery_avg_pps", avery.avg_pps);
+    report.push_scalar("avery_avg_iou", avery.avg_iou);
+    report.push_scalar("avery_switches", avery.switches as f64);
+    report.push_scalar("static_ha_avg_pps", ha.avg_pps);
+    report.push_scalar("static_ha_avg_iou", ha.avg_iou);
+    report.push_scalar("iou_gap_vs_static_ha", gap.abs());
+    report.push_note(format!(
         "AVERY avg IoU within {:.2}% of static High-Accuracy ({} vs {}), paper: within 0.75%",
         gap.abs() * 100.0,
         pct(avery.avg_iou),
         pct(ha.avg_iou)
-    );
-    println!(
+    ));
+    report.push_note(format!(
         "AVERY sustained {:.2} PPS vs High-Accuracy {:.2} PPS (paper: 0.74 vs HA collapse)",
         avery.avg_pps, ha.avg_pps
-    );
-    println!(
+    ));
+    report.push_note(format!(
         "AVERY tier residency (s): HA {:.0} / BAL {:.0} / HT {:.0}; switches {}",
         avery.tier_secs[0], avery.tier_secs[1], avery.tier_secs[2], avery.switches
-    );
+    ));
 
     // Optional hysteresis ablation.
     if let Some(h) = opts.ablate_hysteresis {
@@ -183,15 +195,16 @@ pub fn run_fig9(env: &Env, opts: &Fig9Options) -> Result<Vec<InsightRun>> {
             &MissionConfig { hysteresis: h, ..mission.clone() },
             Policy::Avery,
         )?;
-        println!(
+        report.push_scalar("ablation_hysteresis_switches", run.summary.switches as f64);
+        report.push_scalar("ablation_hysteresis_avg_iou", run.summary.avg_iou);
+        report.push_note(format!(
             "ablation: hysteresis {h:.2} -> {} switches (vs {}), avg IoU {} (vs {})",
             run.summary.switches,
             avery.switches,
             pct(run.summary.avg_iou),
             pct(avery.avg_iou)
-        );
+        ));
     }
 
-    println!("csv: {} / {}", tl.path.display(), pk.path.display());
-    Ok(runs)
+    Ok((runs, report))
 }

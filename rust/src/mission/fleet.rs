@@ -10,79 +10,80 @@ use anyhow::Result;
 use crate::cloud::CloudPool;
 use crate::coordinator::MissionGoal;
 use crate::netsim::{BandwidthTrace, LinkConfig, SharedLink, TraceConfig};
+use crate::report::{Report, ReportTable, Series};
 use crate::streams::fleet::{run_fleet_mission, FleetConfig, FleetRun};
 use crate::streams::{MissionConfig, UavRole};
-use crate::telemetry::{f, pct, Csv, Table};
+use crate::telemetry::{f, pct};
 
-use super::Env;
+use super::{Env, Mission, RunOptions, DEFAULT_UAVS, DEFAULT_WORKERS};
 
-#[derive(Clone, Debug)]
-pub struct FleetOptions {
-    /// Fleet size N.
-    pub uavs: usize,
-    /// Cloud pool worker count.
-    pub workers: usize,
-    pub duration_secs: f64,
-    pub goal: MissionGoal,
-    /// Execute HLO on every Nth delivered packet (1 = all; raise to speed up).
-    pub exec_every: usize,
-    pub seed: u64,
-    /// Fly the fleet under a scenario-library regime (`--scenario NAME`):
-    /// trace, link knobs and intent schedule come from the scenario; fleet
-    /// size/workers stay the CLI's.
-    pub scenario: Option<String>,
-}
+/// `avery fleet` — N UAVs over the contended uplink.
+pub struct FleetMission;
 
-impl Default for FleetOptions {
-    fn default() -> Self {
-        Self {
-            uavs: 4,
-            workers: 2,
-            duration_secs: 1200.0,
-            goal: MissionGoal::PrioritizeAccuracy,
-            exec_every: 1,
-            seed: 7,
-            scenario: None,
-        }
+impl Mission for FleetMission {
+    fn name(&self) -> &'static str {
+        "fleet"
+    }
+
+    fn summary(&self) -> &'static str {
+        "multi-UAV contended-uplink mission (beyond the paper)"
+    }
+
+    fn needs_artifacts(&self) -> bool {
+        false
+    }
+
+    fn run(&self, env: &Env, opts: &RunOptions) -> Result<Report> {
+        Ok(run_fleet(env, opts)?.1)
     }
 }
 
-pub fn run_fleet(env: &Env, opts: &FleetOptions) -> Result<FleetRun> {
-    // The paper's scripted trace by default, or a scenario-library regime.
-    let (trace_cfg, link_cfg, schedule, hysteresis, min_dwell) = match &opts.scenario {
-        Some(name) => {
-            let sc = crate::scenario::build(name, opts.seed, opts.duration_secs)?;
-            println!("fleet over scenario `{}`: {}", sc.name, sc.summary);
-            (sc.trace, sc.link, sc.schedule, sc.hysteresis, sc.min_dwell)
-        }
-        None => (
-            TraceConfig::paper_20min(opts.seed).scaled_to(opts.duration_secs),
-            LinkConfig { seed: opts.seed, ..LinkConfig::default() },
-            Vec::new(),
-            0.0,
-            0,
-        ),
-    };
+/// Run the fleet mission and build its report; the raw [`FleetRun`] comes
+/// back alongside for programmatic consumers (benches, examples, tests).
+pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
+    let uavs = opts.uavs.unwrap_or(DEFAULT_UAVS).max(1);
+    let workers = opts.workers.unwrap_or(DEFAULT_WORKERS).max(1);
+
+    // The paper's scripted trace by default, or a scenario-library regime
+    // (whose own goal applies unless the caller set one explicitly; fleet
+    // size/workers stay the caller's).
+    let (trace_cfg, link_cfg, schedule, hysteresis, min_dwell, scenario_goal) =
+        match &opts.scenario {
+            Some(name) => {
+                let sc = crate::scenario::build(name, opts.seed, opts.duration_secs)?;
+                eprintln!("fleet over scenario `{}`: {}", sc.name, sc.summary);
+                (sc.trace, sc.link, sc.schedule, sc.hysteresis, sc.min_dwell, Some(sc.goal))
+            }
+            None => (
+                TraceConfig::paper_20min(opts.seed).scaled_to(opts.duration_secs),
+                LinkConfig { seed: opts.seed, ..LinkConfig::default() },
+                Vec::new(),
+                0.0,
+                0,
+                None,
+            ),
+        };
+    let goal = opts.goal.or(scenario_goal).unwrap_or(MissionGoal::PrioritizeAccuracy);
     let trace = BandwidthTrace::generate(&trace_cfg);
-    let mut link = SharedLink::new(trace, link_cfg, opts.uavs);
+    let mut link = SharedLink::new(trace, link_cfg, uavs);
 
     let fleet_cfg = FleetConfig {
-        n_uavs: opts.uavs,
+        n_uavs: uavs,
         mission: MissionConfig {
             duration_secs: opts.duration_secs,
-            goal: opts.goal,
+            goal,
             exec_every: opts.exec_every,
             seed: opts.seed,
             hysteresis,
             min_dwell,
             ..MissionConfig::default()
         },
-        workers: opts.workers,
+        workers,
         schedule,
         ..FleetConfig::default()
     };
 
-    let pool = CloudPool::new(vec![env.engine.clone(); opts.workers.max(1)]);
+    let pool = CloudPool::new(vec![env.engine.clone(); workers]);
     let wall0 = std::time::Instant::now();
     let run = run_fleet_mission(
         &env.engine,
@@ -95,15 +96,23 @@ pub fn run_fleet(env: &Env, opts: &FleetOptions) -> Result<FleetRun> {
     )?;
     let wall = wall0.elapsed().as_secs_f64();
 
-    // ---- CSVs ----
-    let mut pu = Csv::create(
-        &env.out_dir.join("fleet_per_uav.csv"),
+    let title = format!(
+        "Fleet mission — {} UAVs, {:.0} min, {:?}, contended uplink",
+        uavs,
+        opts.duration_secs / 60.0,
+        goal
+    );
+    let mut report = Report::new("fleet", &title);
+
+    // ---- CSV series ----
+    let mut pu = Series::new(
+        "fleet_per_uav",
         &[
             "uav", "role", "start_t", "seed", "delivered", "executed", "avg_pps",
             "avg_iou", "energy_j", "ha_secs", "bal_secs", "ht_secs", "switches",
             "intent_switches", "infeasible_s", "context_acc",
         ],
-    )?;
+    );
     for o in &run.per_uav {
         let s = &o.summary;
         pu.row(&[
@@ -123,13 +132,14 @@ pub fn run_fleet(env: &Env, opts: &FleetOptions) -> Result<FleetRun> {
             s.intent_switches.to_string(),
             s.infeasible_epochs.to_string(),
             f(o.context_accuracy, 4),
-        ])?;
+        ]);
     }
+    report.push_series(pu);
 
-    let mut ep = Csv::create(
-        &env.out_dir.join("fleet_epochs.csv"),
+    let mut ep = Series::new(
+        "fleet_epochs",
         &["uav", "t", "share_true_mbps", "bandwidth_est_mbps", "tier"],
-    )?;
+    );
     for (uav, e) in &run.epochs {
         ep.row(&[
             uav.to_string(),
@@ -137,20 +147,21 @@ pub fn run_fleet(env: &Env, opts: &FleetOptions) -> Result<FleetRun> {
             f(e.bandwidth_true_mbps, 4),
             f(e.bandwidth_est_mbps, 4),
             e.tier.map(|t| t.index() as i64).unwrap_or(-1).to_string(),
-        ])?;
+        ]);
     }
+    report.push_series(ep);
 
-    let mut sm = Csv::create(
-        &env.out_dir.join("fleet_summary.csv"),
+    let mut sm = Series::new(
+        "fleet_summary",
         &[
             "uavs", "workers", "delivered", "executed", "aggregate_pps", "jain_pps",
             "avg_iou", "switches", "infeasible_s", "server_utilization",
             "total_energy_j",
         ],
-    )?;
+    );
     sm.row(&[
-        opts.uavs.to_string(),
-        opts.workers.to_string(),
+        uavs.to_string(),
+        workers.to_string(),
         run.delivered_total.to_string(),
         run.executed_total.to_string(),
         f(run.aggregate_pps, 4),
@@ -160,16 +171,13 @@ pub fn run_fleet(env: &Env, opts: &FleetOptions) -> Result<FleetRun> {
         run.infeasible_total.to_string(),
         f(run.server_utilization, 4),
         f(run.total_energy_j, 1),
-    ])?;
+    ]);
+    report.push_series(sm);
 
-    // ---- Terminal summary ----
-    let mut table = Table::new(
-        &format!(
-            "Fleet mission — {} UAVs, {:.0} min, {:?}, contended uplink",
-            opts.uavs,
-            opts.duration_secs / 60.0,
-            opts.goal
-        ),
+    // ---- Terminal table ----
+    let mut table = ReportTable::new(
+        "per_uav",
+        &title,
         &[
             "UAV", "Role", "Start", "Delivered", "Avg PPS", "Avg IoU / Ctx Acc",
             "HA/BAL/HT (s)", "Switches", "Infeasible s",
@@ -196,29 +204,47 @@ pub fn run_fleet(env: &Env, opts: &FleetOptions) -> Result<FleetRun> {
             s.infeasible_epochs.to_string(),
         ]);
     }
-    table.print();
+    report.push_table(table);
 
-    let pool_stats = pool.stats();
-    println!(
+    // Scalars: the aggregate surface programmatic consumers want.
+    let insight_pps: Vec<f64> = run
+        .per_uav
+        .iter()
+        .filter(|o| o.role == UavRole::Insight)
+        .map(|o| o.summary.avg_pps)
+        .collect();
+    let mean_insight_pps = insight_pps.iter().sum::<f64>() / insight_pps.len().max(1) as f64;
+    report.push_scalar("uavs", uavs as f64);
+    report.push_scalar("workers", workers as f64);
+    report.push_scalar("delivered", run.delivered_total as f64);
+    report.push_scalar("executed", run.executed_total as f64);
+    report.push_scalar("aggregate_pps", run.aggregate_pps);
+    report.push_scalar("mean_insight_pps", mean_insight_pps);
+    report.push_scalar("jain_pps", run.jain_pps);
+    report.push_scalar("avg_iou", run.avg_iou);
+    report.push_scalar("tier_switches", run.switches_total as f64);
+    report.push_scalar("intent_switches", run.intent_switches_total as f64);
+    report.push_scalar("infeasible_s", run.infeasible_total as f64);
+    report.push_scalar("server_utilization", run.server_utilization);
+    report.push_scalar("total_energy_j", run.total_energy_j);
+
+    report.push_note(format!(
         "fleet aggregate: {:.2} PPS over {} UAVs, Jain fairness {:.3}, avg IoU {}",
         run.aggregate_pps,
-        opts.uavs,
+        uavs,
         run.jain_pps,
         pct(run.avg_iou)
-    );
-    println!(
+    ));
+    // Wall-clock is diagnostic only — it stays out of the report so reports
+    // remain byte-deterministic per seed.
+    let pool_stats = pool.stats();
+    eprintln!(
         "cloud: {} workers, virtual utilization {:.1}%, {} requests served, wall busy {:.1}s / {:.1}s run",
-        opts.workers,
+        workers,
         run.server_utilization * 100.0,
         pool_stats.completed,
         pool_stats.busy_secs,
         wall
     );
-    println!(
-        "csv: {} / {} / {}",
-        pu.path.display(),
-        ep.path.display(),
-        sm.path.display()
-    );
-    Ok(run)
+    Ok((run, report))
 }

@@ -8,16 +8,39 @@ use anyhow::Result;
 
 use crate::baselines::{eval_raw_compression, eval_split_path, matched_side};
 use crate::coordinator::TierId;
-use crate::telemetry::{f, pct, Table};
+use crate::report::{Report, ReportTable};
+use crate::telemetry::{f, pct};
 
-use super::fig9::{run_fig9, Fig9Options};
-use super::Env;
+use super::fig9::run_fig9;
+use super::{Env, Mission, RunOptions};
 
-pub fn run_headline(env: &Env, fig9_opts: &Fig9Options) -> Result<()> {
-    let mut table = Table::new(
-        "Headline claims — paper vs this reproduction",
-        &["Claim", "Paper", "Measured"],
-    );
+/// `avery headline` — the abstract's H1..H4 claims.  Needs artifacts: the
+/// H2 raw-compression baseline runs the `full_pipeline` artifact, which
+/// the synthetic closed-form engine does not serve.
+pub struct HeadlineMission;
+
+impl Mission for HeadlineMission {
+    fn name(&self) -> &'static str {
+        "headline"
+    }
+
+    fn summary(&self) -> &'static str {
+        "headline claims H1..H4 (abstract vs reproduction)"
+    }
+
+    fn needs_artifacts(&self) -> bool {
+        true
+    }
+
+    fn run(&self, env: &Env, opts: &RunOptions) -> Result<Report> {
+        run_headline(env, opts)
+    }
+}
+
+pub fn run_headline(env: &Env, opts: &RunOptions) -> Result<Report> {
+    let title = "Headline claims — paper vs this reproduction";
+    let mut report = Report::new("headline", title);
+    let mut table = ReportTable::new("claims", title, &["Claim", "Paper", "Measured"]);
 
     // H1: energy saving of split@1 vs full edge (device model).
     let sp1 = env.device.insight_edge(1);
@@ -32,12 +55,12 @@ pub fn run_headline(env: &Env, fig9_opts: &Fig9Options) -> Result<()> {
     // H2: split@1 + learned bottleneck vs raw image compression at matched
     // payload, High-Accuracy tier, both corpora pooled.
     let tier = TierId::HighAccuracy;
-    let (split_g, acc_sg) =
+    let (split_g, _) =
         eval_split_path(&env.engine, &env.generic_val, &env.lut, &env.device, 1, tier)?;
-    let (split_f, acc_sf) =
+    let (split_f, _) =
         eval_split_path(&env.engine, &env.flood_val, &env.lut, &env.device, 1, tier)?;
-    let (raw_g, acc_rg) = eval_raw_compression(&env.engine, &env.generic_val, &env.lut, tier)?;
-    let (raw_f, acc_rf) = eval_raw_compression(&env.engine, &env.flood_val, &env.lut, tier)?;
+    let (raw_g, _) = eval_raw_compression(&env.engine, &env.generic_val, &env.lut, tier)?;
+    let (raw_f, _) = eval_raw_compression(&env.engine, &env.flood_val, &env.lut, tier)?;
     let split_acc = 0.5 * (split_g + split_f);
     let raw_acc = 0.5 * (raw_g + raw_f);
     let h2 = split_acc - raw_acc;
@@ -49,10 +72,10 @@ pub fn run_headline(env: &Env, fig9_opts: &Fig9Options) -> Result<()> {
         "+11.2%".to_string(),
         format!("{:+.2}% ({} vs {})", h2 * 100.0, pct(split_acc), pct(raw_acc)),
     ]);
-    let _ = (acc_sg, acc_sf, acc_rg, acc_rf);
 
     // H3 + throughput + H4 come from the dynamic run and the device model.
-    let runs = run_fig9(env, fig9_opts)?;
+    let (runs, sub) = run_fig9(env, opts)?;
+    report.absorb(sub);
     let avery = &runs[0].summary;
     let ha = &runs[1].summary;
     let h3 = (ha.avg_iou - avery.avg_iou).abs();
@@ -74,6 +97,10 @@ pub fn run_headline(env: &Env, fig9_opts: &Fig9Options) -> Result<()> {
         format!("{h4:.1}x"),
     ]);
 
-    table.print();
-    Ok(())
+    report.push_scalar("h1_energy_saving", h1);
+    report.push_scalar("h2_accuracy_gain", h2);
+    report.push_scalar("h3_gap_to_static_ha", h3);
+    report.push_scalar("h4_context_speedup", h4);
+    report.push_table(table);
+    Ok(report)
 }

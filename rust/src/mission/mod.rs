@@ -1,8 +1,14 @@
-//! Mission drivers: one per table/figure in the paper's evaluation
-//! (DESIGN.md experiment index), plus the fleet-scale driver (`avery
-//! fleet`).  Each driver runs the real system through the PJRT artifacts
-//! and prints the same rows/series the paper reports, plus CSVs for
-//! plotting under `out/`.
+//! The Mission API: every table/figure of the paper's evaluation — plus
+//! the fleet and scenario missions that go beyond it — behind one uniform
+//! contract (see DESIGN.md "Mission API").
+//!
+//! A [`Mission`] names itself, declares whether it needs the PJRT
+//! artifacts, and runs against a shared [`Env`] + [`RunOptions`] to a
+//! structured [`Report`] (scalars, tables, CSV series, notes) that the
+//! caller renders through the sinks in [`crate::report`].  The
+//! [`registry`] enumerates all nine missions in the canonical `avery all`
+//! order; `avery run <name>`, the legacy subcommands, the benches and the
+//! integration tests all resolve missions through it.
 
 mod context;
 mod fig10;
@@ -14,25 +20,134 @@ mod headline;
 mod scenario;
 mod table3;
 
-pub use context::run_streams;
-pub use fig10::run_fig10;
-pub use fig7::run_fig7;
-pub use fig8::run_fig8;
-pub use fig9::{run_fig9, Fig9Options};
-pub use fleet::{run_fleet, FleetOptions};
-pub use headline::run_headline;
-pub use scenario::{run_scenario, ScenarioOptions};
-pub use table3::run_table3;
+pub use context::{run_streams, StreamsMission};
+pub use fig10::{run_fig10, Fig10Mission};
+pub use fig7::{run_fig7, Fig7Mission};
+pub use fig8::{run_fig8, Fig8Mission};
+pub use fig9::{run_fig9, Fig9Mission};
+pub use fleet::{run_fleet, FleetMission};
+pub use headline::{run_headline, HeadlineMission};
+pub use scenario::{run_scenario, ScenarioMission};
+pub use table3::{run_table3, Table3Mission};
 
 use std::path::{Path, PathBuf};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::coordinator::Lut;
+use crate::config::RunConfig;
+use crate::coordinator::{Lut, MissionGoal};
 use crate::dataset::{Corpus, Dataset};
 use crate::energy::DeviceModel;
 use crate::manifest::Manifest;
+use crate::report::Report;
 use crate::runtime::{Engine, ExecMode};
+
+/// Default fleet size when neither the CLI nor a scenario specifies one.
+pub const DEFAULT_UAVS: usize = 4;
+/// Default cloud-pool worker count.
+pub const DEFAULT_WORKERS: usize = 2;
+
+/// One mission behind the uniform API: a named, registry-enumerable driver
+/// from `(Env, RunOptions)` to a structured [`Report`].
+pub trait Mission {
+    /// Registry name — also the CLI subcommand (`avery run <name>` and the
+    /// legacy `avery <name>` alias).
+    fn name(&self) -> &'static str;
+    /// One-line description for `avery list`.
+    fn summary(&self) -> &'static str;
+    /// True when the mission touches artifact-only paths (e.g. the
+    /// `full_pipeline` baseline) and cannot fall back to the synthetic
+    /// closed-form engine.
+    fn needs_artifacts(&self) -> bool;
+    /// Run against a loaded environment; pure of rendering — all output
+    /// goes through the returned report's sinks.
+    fn run(&self, env: &Env, opts: &RunOptions) -> Result<Report>;
+}
+
+/// Every registered mission, in the canonical `avery all` order.
+pub fn registry() -> Vec<Box<dyn Mission>> {
+    vec![
+        Box::new(Table3Mission),
+        Box::new(Fig7Mission),
+        Box::new(Fig8Mission),
+        Box::new(Fig9Mission),
+        Box::new(Fig10Mission),
+        Box::new(HeadlineMission),
+        Box::new(StreamsMission),
+        Box::new(FleetMission),
+        Box::new(ScenarioMission),
+    ]
+}
+
+/// Resolve one mission by registry name.
+pub fn find(name: &str) -> Option<Box<dyn Mission>> {
+    registry().into_iter().find(|m| m.name() == name)
+}
+
+/// Consolidated options for every mission (the union of what the old
+/// per-driver option structs carried).  `None` means "the mission's —
+/// or the scenario regime's — default", which is how the scenario-goal
+/// override works uniformly: a mission resolves
+/// `opts.goal.or(scenario_goal).unwrap_or(default)` instead of the CLI
+/// plumbing `*_explicit` flags around.
+#[derive(Clone, Debug)]
+pub struct RunOptions {
+    /// Mission length in virtual seconds.
+    pub duration_secs: f64,
+    /// Mission goal; `None` = PrioritizeAccuracy, or the scenario's goal
+    /// when running under a scenario regime.
+    pub goal: Option<MissionGoal>,
+    /// Execute HLO on every Nth delivered packet (1 = all).
+    pub exec_every: usize,
+    /// Trace/workload seed.
+    pub seed: u64,
+    /// fig9 hysteresis ablation margin (`--hysteresis H`).
+    pub ablate_hysteresis: Option<f64>,
+    /// Fleet size; `None` = [`DEFAULT_UAVS`] (fleet) or the scenario's.
+    pub uavs: Option<usize>,
+    /// Cloud workers; `None` = [`DEFAULT_WORKERS`] (fleet) or the scenario's.
+    pub workers: Option<usize>,
+    /// Scenario regime overlay for fig9/fig10/headline/fleet
+    /// (`--scenario NAME`): trace, link knobs, schedule and default goal
+    /// come from the scenario library.
+    pub scenario: Option<String>,
+    /// Scenario to run for the `scenario` mission (`--name NAME`; falls
+    /// back to `scenario`, then "urban-flood").
+    pub name: Option<String>,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        Self {
+            duration_secs: 1200.0,
+            goal: None,
+            exec_every: 1,
+            seed: 7,
+            ablate_hysteresis: None,
+            uavs: None,
+            workers: None,
+            scenario: None,
+            name: None,
+        }
+    }
+}
+
+impl RunOptions {
+    /// The single place a [`RunConfig`] becomes mission options.
+    pub fn from_config(cfg: &RunConfig) -> Self {
+        Self {
+            duration_secs: cfg.duration_secs,
+            goal: cfg.goal,
+            exec_every: cfg.exec_every,
+            seed: cfg.seed,
+            ablate_hysteresis: cfg.hysteresis,
+            uavs: cfg.uavs,
+            workers: cfg.workers,
+            scenario: cfg.scenario.clone(),
+            name: cfg.name.clone(),
+        }
+    }
+}
 
 /// Shared environment every mission needs.
 pub struct Env {
@@ -64,7 +179,8 @@ impl Env {
         let flood_val =
             Dataset::load(&artifacts_dir.join("data/flood_val.bin"), Corpus::Flood)?;
         let engine = Engine::start(manifest, mode)?;
-        std::fs::create_dir_all(out_dir).ok();
+        std::fs::create_dir_all(out_dir)
+            .with_context(|| format!("creating output dir {}", out_dir.display()))?;
         Ok(Self {
             engine,
             manifest_meta: meta,
@@ -88,7 +204,8 @@ impl Env {
     pub fn synthetic(out_dir: &Path) -> Result<Self> {
         let img = 16;
         let depth = 8;
-        std::fs::create_dir_all(out_dir).ok();
+        std::fs::create_dir_all(out_dir)
+            .with_context(|| format!("creating output dir {}", out_dir.display()))?;
         Ok(Self {
             engine: Engine::synthetic(),
             manifest_meta: ManifestMeta { img, depth },
@@ -124,5 +241,60 @@ impl Env {
                 Self::synthetic(out_dir)
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Kv;
+
+    #[test]
+    fn registry_has_nine_unique_missions() {
+        let reg = registry();
+        assert_eq!(reg.len(), 9);
+        let names: Vec<&str> = reg.iter().map(|m| m.name()).collect();
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate mission names: {names:?}");
+        // Only the headline mission touches artifact-only baselines.
+        for m in &reg {
+            assert_eq!(m.needs_artifacts(), m.name() == "headline", "{}", m.name());
+            assert!(!m.summary().is_empty(), "{} has no summary", m.name());
+        }
+    }
+
+    #[test]
+    fn find_resolves_and_rejects() {
+        assert!(find("fig9").is_some());
+        assert!(find("bogus").is_none());
+    }
+
+    #[test]
+    fn run_options_from_config_maps_every_field() {
+        let kv = Kv::parse(
+            "duration = 300\ngoal = throughput\nexec-every = 4\nseed = 9\n\
+             hysteresis = 0.1\nuavs = 8\nworkers = 3\nscenario = urban-flood\n\
+             name = wildfire-ridge\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_kv(&kv).unwrap();
+        let opts = RunOptions::from_config(&cfg);
+        assert_eq!(opts.duration_secs, 300.0);
+        assert_eq!(opts.goal, Some(MissionGoal::PrioritizeThroughput));
+        assert_eq!(opts.exec_every, 4);
+        assert_eq!(opts.seed, 9);
+        assert_eq!(opts.ablate_hysteresis, Some(0.1));
+        assert_eq!(opts.uavs, Some(8));
+        assert_eq!(opts.workers, Some(3));
+        assert_eq!(opts.scenario.as_deref(), Some("urban-flood"));
+        assert_eq!(opts.name.as_deref(), Some("wildfire-ridge"));
+
+        let defaults = RunOptions::from_config(&RunConfig::from_kv(&Kv::default()).unwrap());
+        assert_eq!(defaults.goal, None);
+        assert_eq!(defaults.uavs, None);
+        assert_eq!(defaults.workers, None);
+        assert_eq!(defaults.duration_secs, 1200.0);
     }
 }

@@ -1,10 +1,12 @@
-//! `avery scenario` — run one named scenario from the library end to end:
-//! scenario trace + link knobs + fleet composition + intent schedule, over
-//! the contended uplink, emitting per-scenario CSV telemetry.
+//! `avery scenario` / `avery run scenario` — run one named scenario from
+//! the library end to end: scenario trace + link knobs + fleet composition
+//! + intent schedule, over the contended uplink, emitting per-scenario CSV
+//! telemetry.
 //!
-//! The driver is deliberately wall-clock-free: every CSV cell is a virtual
-//! quantity, so two runs with the same `(name, seed, duration)` produce
-//! byte-identical summary CSVs (pinned by `rust/tests/scenario.rs`).
+//! The driver is deliberately wall-clock-free: every report cell is a
+//! virtual quantity, so two runs with the same `(name, seed, duration)`
+//! produce byte-identical summary CSVs *and* byte-identical JSON reports
+//! (pinned by `rust/tests/scenario.rs` and `rust/tests/mission_api.rs`).
 //! Serving goes through the concurrent [`CloudPool`] (one handle per
 //! worker, exactly like `avery fleet`) — real PJRT when artifacts are
 //! loaded, the synthetic closed-form model otherwise; either way responses
@@ -14,45 +16,52 @@
 use anyhow::Result;
 
 use crate::cloud::CloudPool;
-use crate::coordinator::{IntentLevel, MissionGoal};
+use crate::coordinator::IntentLevel;
 use crate::netsim::{BandwidthTrace, SharedLink};
+use crate::report::{Report, ReportTable, Series};
 use crate::scenario::{build, summarize_trace};
 use crate::streams::fleet::{run_fleet_mission, FleetConfig, FleetRun};
 use crate::streams::{MissionConfig, UavRole};
-use crate::telemetry::{f, pct, Csv, Table};
+use crate::telemetry::{f, pct};
 
-use super::Env;
+use super::{Env, Mission, RunOptions};
 
-#[derive(Clone, Debug)]
-pub struct ScenarioOptions {
-    /// Registered scenario name (`avery scenario --list`).
-    pub name: String,
-    pub duration_secs: f64,
-    pub seed: u64,
-    /// Execute HLO on every Nth delivered packet (1 = all).
-    pub exec_every: usize,
-    /// Overrides of the scenario's fleet spec / goal (None = scenario's).
-    pub uavs: Option<usize>,
-    pub workers: Option<usize>,
-    pub goal: Option<MissionGoal>,
-}
+/// Scenario the mission falls back to when neither `--name` nor
+/// `--scenario` selects one.
+pub const DEFAULT_SCENARIO: &str = "urban-flood";
 
-impl Default for ScenarioOptions {
-    fn default() -> Self {
-        Self {
-            name: "urban-flood".to_string(),
-            duration_secs: 1200.0,
-            seed: 7,
-            exec_every: 1,
-            uavs: None,
-            workers: None,
-            goal: None,
-        }
+/// `avery scenario` — one named disaster/network regime end to end.
+pub struct ScenarioMission;
+
+impl Mission for ScenarioMission {
+    fn name(&self) -> &'static str {
+        "scenario"
+    }
+
+    fn summary(&self) -> &'static str {
+        "scenario library: named disaster/network regimes (artifact-free capable)"
+    }
+
+    fn needs_artifacts(&self) -> bool {
+        false
+    }
+
+    fn run(&self, env: &Env, opts: &RunOptions) -> Result<Report> {
+        Ok(run_scenario(env, opts)?.1)
     }
 }
 
-pub fn run_scenario(env: &Env, opts: &ScenarioOptions) -> Result<FleetRun> {
-    let sc = build(&opts.name, opts.seed, opts.duration_secs)?;
+/// Run one scenario and build its report; the raw [`FleetRun`] comes back
+/// alongside for programmatic consumers.  The scenario is `opts.name`,
+/// falling back to `opts.scenario`, then [`DEFAULT_SCENARIO`]; fleet
+/// size/workers/goal default to the scenario's own unless overridden.
+pub fn run_scenario(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
+    let name = opts
+        .name
+        .clone()
+        .or_else(|| opts.scenario.clone())
+        .unwrap_or_else(|| DEFAULT_SCENARIO.to_string());
+    let sc = build(&name, opts.seed, opts.duration_secs)?;
     let n_uavs = opts.uavs.unwrap_or(sc.fleet.n_uavs).max(1);
     let workers = opts.workers.unwrap_or(sc.fleet.workers).max(1);
     let goal = opts.goal.unwrap_or(sc.goal);
@@ -89,17 +98,27 @@ pub fn run_scenario(env: &Env, opts: &ScenarioOptions) -> Result<FleetRun> {
         &pool,
     )?;
 
-    // ---- CSVs (all virtual-time quantities: byte-stable per seed). ----
+    let title = format!(
+        "Scenario `{}` — {} UAVs, {:.0} min, {:?} | {}",
+        sc.name,
+        n_uavs,
+        opts.duration_secs / 60.0,
+        goal,
+        sc.summary
+    );
+    let mut report = Report::new("scenario", &title);
+
+    // ---- CSV series (all virtual-time quantities: byte-stable per seed).
     let stem = format!("scenario_{}", sc.name);
-    let mut sm = Csv::create(
-        &env.out_dir.join(format!("{stem}_summary.csv")),
+    let mut sm = Series::new(
+        &format!("{stem}_summary"),
         &[
             "scenario", "seed", "duration_s", "uavs", "workers", "goal", "delivered",
             "executed", "aggregate_pps", "jain_pps", "avg_iou", "tier_switches",
             "intent_switches", "infeasible_s", "total_energy_j", "trace_mean_mbps",
             "trace_min_mbps", "trace_max_mbps", "trace_outage_s", "trace_regimes",
         ],
-    )?;
+    );
     sm.row(&[
         sc.name.to_string(),
         opts.seed.to_string(),
@@ -121,16 +140,17 @@ pub fn run_scenario(env: &Env, opts: &ScenarioOptions) -> Result<FleetRun> {
         f(tsum.max_mbps, 4),
         f(tsum.outage_secs, 0),
         tsum.regimes.to_string(),
-    ])?;
+    ]);
+    report.push_series(sm);
 
-    let mut pu = Csv::create(
-        &env.out_dir.join(format!("{stem}_per_uav.csv")),
+    let mut pu = Series::new(
+        &format!("{stem}_per_uav"),
         &[
             "uav", "launch_role", "start_t", "seed", "delivered", "executed", "avg_pps",
             "avg_iou", "energy_j", "ha_secs", "bal_secs", "ht_secs", "tier_switches",
             "intent_switches", "infeasible_s", "context_acc",
         ],
-    )?;
+    );
     for o in &run.per_uav {
         let s = &o.summary;
         pu.row(&[
@@ -150,13 +170,14 @@ pub fn run_scenario(env: &Env, opts: &ScenarioOptions) -> Result<FleetRun> {
             s.intent_switches.to_string(),
             s.infeasible_epochs.to_string(),
             f(o.context_accuracy, 4),
-        ])?;
+        ]);
     }
+    report.push_series(pu);
 
-    let mut ep = Csv::create(
-        &env.out_dir.join(format!("{stem}_epochs.csv")),
+    let mut ep = Series::new(
+        &format!("{stem}_epochs"),
         &["uav", "t", "share_true_mbps", "bandwidth_est_mbps", "tier", "stream"],
-    )?;
+    );
     for (uav, e) in &run.epochs {
         ep.row(&[
             uav.to_string(),
@@ -168,19 +189,14 @@ pub fn run_scenario(env: &Env, opts: &ScenarioOptions) -> Result<FleetRun> {
                 IntentLevel::Insight => "insight".to_string(),
                 IntentLevel::Context => "context".to_string(),
             },
-        ])?;
+        ]);
     }
+    report.push_series(ep);
 
-    // ---- Terminal summary ----
-    let mut table = Table::new(
-        &format!(
-            "Scenario `{}` — {} UAVs, {:.0} min, {:?} | {}",
-            sc.name,
-            n_uavs,
-            opts.duration_secs / 60.0,
-            goal,
-            sc.summary
-        ),
+    // ---- Terminal table ----
+    let mut table = ReportTable::new(
+        "per_uav",
+        &title,
         &[
             "UAV", "Launch", "Start", "Delivered", "Avg PPS", "Avg IoU / Ctx Acc",
             "HA/BAL/HT (s)", "Tier sw", "Intent sw", "Infeasible s",
@@ -205,13 +221,28 @@ pub fn run_scenario(env: &Env, opts: &ScenarioOptions) -> Result<FleetRun> {
             s.infeasible_epochs.to_string(),
         ]);
     }
-    table.print();
+    report.push_table(table);
 
-    println!(
+    report.push_scalar("uavs", n_uavs as f64);
+    report.push_scalar("workers", workers as f64);
+    report.push_scalar("delivered", run.delivered_total as f64);
+    report.push_scalar("executed", run.executed_total as f64);
+    report.push_scalar("aggregate_pps", run.aggregate_pps);
+    report.push_scalar("jain_pps", run.jain_pps);
+    report.push_scalar("avg_iou", run.avg_iou);
+    report.push_scalar("tier_switches", run.switches_total as f64);
+    report.push_scalar("intent_switches", run.intent_switches_total as f64);
+    report.push_scalar("infeasible_s", run.infeasible_total as f64);
+    report.push_scalar("total_energy_j", run.total_energy_j);
+    report.push_scalar("trace_mean_mbps", tsum.mean_mbps);
+    report.push_scalar("trace_outage_s", tsum.outage_secs);
+    report.push_scalar("trace_regimes", tsum.regimes as f64);
+
+    report.push_note(format!(
         "trace: mean {:.1} Mbps in [{:.2}, {:.1}], {} regimes, {:.0} s outage",
         tsum.mean_mbps, tsum.min_mbps, tsum.max_mbps, tsum.regimes, tsum.outage_secs
-    );
-    println!(
+    ));
+    report.push_note(format!(
         "fleet: {:.2} PPS aggregate, Jain {:.3}, avg IoU {}, {} tier switches, \
          {} intent switches, {} infeasible s",
         run.aggregate_pps,
@@ -220,12 +251,6 @@ pub fn run_scenario(env: &Env, opts: &ScenarioOptions) -> Result<FleetRun> {
         run.switches_total,
         run.intent_switches_total,
         run.infeasible_total
-    );
-    println!(
-        "csv: {} / {} / {}",
-        sm.path.display(),
-        pu.path.display(),
-        ep.path.display()
-    );
-    Ok(run)
+    ));
+    Ok((run, report))
 }

@@ -9,19 +9,44 @@ use anyhow::Result;
 
 use crate::baselines::eval_split_path;
 use crate::coordinator::TierId;
-use crate::telemetry::{f, pct, Csv, Table};
+use crate::report::{Report, ReportTable, Series};
+use crate::telemetry::{f, pct};
 
-use super::Env;
+use super::{Env, Mission, RunOptions};
 
-pub fn run_table3(env: &Env) -> Result<()> {
-    let mut table = Table::new(
-        "Table 3 — AVERY System Lookup Table (measured through the rust runtime)",
+/// `avery table3` — regenerate the System LUT through the runtime path.
+pub struct Table3Mission;
+
+impl Mission for Table3Mission {
+    fn name(&self) -> &'static str {
+        "table3"
+    }
+
+    fn summary(&self) -> &'static str {
+        "Table 3 — System LUT (per-tier accuracy/payload through the runtime)"
+    }
+
+    fn needs_artifacts(&self) -> bool {
+        false
+    }
+
+    fn run(&self, env: &Env, _opts: &RunOptions) -> Result<Report> {
+        run_table3(env)
+    }
+}
+
+pub fn run_table3(env: &Env) -> Result<Report> {
+    let title = "Table 3 — AVERY System Lookup Table (measured through the rust runtime)";
+    let mut report = Report::new("table3", title);
+    let mut table = ReportTable::new(
+        "lut",
+        title,
         &["Tier", "Ratio r", "IoU orig", "IoU ft", "Wire MB", "LUT orig", "LUT ft"],
     );
-    let mut csv = Csv::create(
-        &env.out_dir.join("table3_lut.csv"),
+    let mut csv = Series::new(
+        "table3_lut",
         &["tier", "ratio", "iou_orig", "iou_ft", "wire_mb", "lut_orig", "lut_ft"],
-    )?;
+    );
     for tier in TierId::ALL {
         let e = *env.lut.entry(tier);
         let (acc_o, _) =
@@ -45,10 +70,14 @@ pub fn run_table3(env: &Env) -> Result<()> {
             f(e.wire_bytes / 1e6, 2),
             f(e.acc_orig, 6),
             f(e.acc_ft, 6),
-        ])?;
+        ]);
+        report.push_scalar(&format!("iou_orig_{}", tier.name()), acc_o);
+        report.push_scalar(&format!("iou_ft_{}", tier.name()), acc_f);
     }
-    table.print();
-    println!("paper Table 3: 84.42/81.12 @0.25, 82.89/79.20 @0.10, 80.67/78.48 @0.05 (%)");
-    println!("csv: {}", csv.path.display());
-    Ok(())
+    report.push_table(table);
+    report.push_series(csv);
+    report.push_note(
+        "paper Table 3: 84.42/81.12 @0.25, 82.89/79.20 @0.10, 80.67/78.48 @0.05 (%)",
+    );
+    Ok(report)
 }

@@ -1,0 +1,421 @@
+//! Structured mission reports and pluggable sinks (the Mission API's data
+//! plane — see DESIGN.md "Mission API").
+//!
+//! Every mission driver returns a [`Report`]: named **scalars** (the
+//! headline numbers a programmatic consumer wants), terminal **tables**
+//! (the same rows the paper prints), CSV-bound **series** (timeseries /
+//! per-row telemetry, one per output file), and free-form **notes** (the
+//! paper-comparison one-liners).  Rendering is the caller's choice of
+//! [`Sink`]:
+//!
+//! * [`StdoutSink`] — the classic terminal rendering (fixed-width tables
+//!   then notes), unchanged from the pre-API drivers;
+//! * [`CsvSink`] — writes every series to `<out_dir>/<name>.csv`,
+//!   byte-identical to the files the drivers used to write inline
+//!   (pinned by `rust/tests/scenario.rs`);
+//! * [`JsonSink`] — one schema-stable JSON object on stdout
+//!   (`avery run <mission> --format json`), hand-rolled because the
+//!   offline crate set has no serde.
+//!
+//! Reports are deliberately **wall-clock-free and path-free**: every cell
+//! is a virtual quantity formatted by the mission itself, so a report is
+//! byte-deterministic per `(mission, options, seed)` and two same-seed
+//! runs serialize identically (pinned by `rust/tests/mission_api.rs`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::telemetry::{Csv, Table};
+
+/// Report rendering format selected by the CLI (`--format`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OutputFormat {
+    /// Fixed-width tables + notes on stdout (the classic rendering).
+    #[default]
+    Text,
+    /// One JSON object per report on stdout.
+    Json,
+}
+
+impl OutputFormat {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "text" => Ok(Self::Text),
+            "json" => Ok(Self::Json),
+            other => anyhow::bail!("format must be text|json, got {other}"),
+        }
+    }
+}
+
+/// One named headline number.
+#[derive(Clone, Debug)]
+pub struct Scalar {
+    pub name: String,
+    pub value: f64,
+}
+
+/// A terminal-facing table (title + pre-formatted cells).
+#[derive(Clone, Debug)]
+pub struct ReportTable {
+    /// Machine key (stable across runs; JSON consumers select on it).
+    pub name: String,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl ReportTable {
+    pub fn new(name: &str, title: &str, columns: &[&str]) -> Self {
+        Self {
+            name: name.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        debug_assert_eq!(cells.len(), self.columns.len(), "table column mismatch");
+        self.rows.push(cells.to_vec());
+    }
+}
+
+/// A CSV-bound series: `name` is the output file stem, rows are
+/// pre-formatted cells (the mission owns the numeric formatting so the CSV
+/// bytes cannot drift through a sink change).
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Series {
+    pub fn new(name: &str, columns: &[&str]) -> Self {
+        Self {
+            name: name.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        debug_assert_eq!(cells.len(), self.columns.len(), "series column mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// All-float row with the legacy `Csv::rowf` formatting (`{v:.6}`).
+    pub fn rowf(&mut self, values: &[f64]) {
+        let vs: Vec<String> = values.iter().map(|v| format!("{v:.6}")).collect();
+        self.row(&vs);
+    }
+}
+
+/// The structured result of one mission run.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// Registry name of the mission that produced this report.
+    pub mission: String,
+    pub title: String,
+    pub scalars: Vec<Scalar>,
+    pub tables: Vec<ReportTable>,
+    pub series: Vec<Series>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(mission: &str, title: &str) -> Self {
+        Self {
+            mission: mission.to_string(),
+            title: title.to_string(),
+            ..Self::default()
+        }
+    }
+
+    pub fn push_scalar(&mut self, name: &str, value: f64) {
+        self.scalars.push(Scalar { name: name.to_string(), value });
+    }
+
+    /// First scalar with this name (compositions may repeat names).
+    pub fn scalar_value(&self, name: &str) -> Option<f64> {
+        self.scalars.iter().find(|s| s.name == name).map(|s| s.value)
+    }
+
+    pub fn push_table(&mut self, table: ReportTable) {
+        self.tables.push(table);
+    }
+
+    pub fn push_series(&mut self, series: Series) {
+        self.series.push(series);
+    }
+
+    pub fn push_note(&mut self, note: impl Into<String>) {
+        self.notes.push(note.into());
+    }
+
+    /// Append another report's content (composed missions: fig10 and
+    /// headline absorb the fig9 report they run internally, preserving the
+    /// sub-report's tables, CSV series and notes in order).
+    pub fn absorb(&mut self, other: Report) {
+        self.scalars.extend(other.scalars);
+        self.tables.extend(other.tables);
+        self.series.extend(other.series);
+        self.notes.extend(other.notes);
+    }
+}
+
+/// A report consumer.
+pub trait Sink {
+    fn emit(&mut self, report: &Report) -> Result<()>;
+}
+
+/// Classic terminal rendering: every table through the fixed-width
+/// printer, then the notes.
+pub struct StdoutSink;
+
+impl Sink for StdoutSink {
+    fn emit(&mut self, report: &Report) -> Result<()> {
+        for t in &report.tables {
+            Table {
+                title: t.title.clone(),
+                header: t.columns.clone(),
+                rows: t.rows.clone(),
+            }
+            .print();
+        }
+        for n in &report.notes {
+            println!("{n}");
+        }
+        Ok(())
+    }
+}
+
+/// Writes each series to `<out_dir>/<name>.csv`.  Series are written in
+/// report order, so a composed report that carries the same series twice
+/// (fig10 re-runs fig9) overwrites exactly as the inline drivers did.
+pub struct CsvSink {
+    out_dir: PathBuf,
+    announce: bool,
+}
+
+impl CsvSink {
+    pub fn new(out_dir: &Path) -> Self {
+        Self { out_dir: out_dir.to_path_buf(), announce: true }
+    }
+
+    /// Print (or suppress) the classic `csv: path / path` line.
+    pub fn announce(mut self, on: bool) -> Self {
+        self.announce = on;
+        self
+    }
+}
+
+impl Sink for CsvSink {
+    fn emit(&mut self, report: &Report) -> Result<()> {
+        let mut paths: Vec<String> = Vec::new();
+        for s in &report.series {
+            let path = self.out_dir.join(format!("{}.csv", s.name));
+            let cols: Vec<&str> = s.columns.iter().map(|c| c.as_str()).collect();
+            let mut csv = Csv::create(&path, &cols)?;
+            for row in &s.rows {
+                csv.row(row)?;
+            }
+            let shown = path.display().to_string();
+            if !paths.contains(&shown) {
+                paths.push(shown);
+            }
+        }
+        if self.announce && !paths.is_empty() {
+            println!("csv: {}", paths.join(" / "));
+        }
+        Ok(())
+    }
+}
+
+/// One JSON object per report on stdout (schema below, `"schema": 1`).
+pub struct JsonSink;
+
+impl Sink for JsonSink {
+    fn emit(&mut self, report: &Report) -> Result<()> {
+        println!("{}", to_json(report));
+        Ok(())
+    }
+}
+
+/// Emit a report the way the text-mode CLI does: terminal rendering first,
+/// then the CSV files with their `csv:` announcement.  Shared by the CLI,
+/// the benches and the examples.
+pub fn emit_text(report: &Report, out_dir: &Path) -> Result<()> {
+    StdoutSink.emit(report)?;
+    CsvSink::new(out_dir).emit(report)
+}
+
+// ---------------------------------------------------------------------------
+// JSON serialization (hand-rolled; the offline crate set has no serde)
+// ---------------------------------------------------------------------------
+
+/// Escape a string for a JSON string literal.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A JSON number token — finite floats via shortest-roundtrip `Display`,
+/// non-finite values as `null` (JSON has no NaN/Infinity).
+fn jnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn jstr_array(items: &[String]) -> String {
+    let parts: Vec<String> = items.iter().map(|s| format!("\"{}\"", esc(s))).collect();
+    format!("[{}]", parts.join(","))
+}
+
+fn jrows(rows: &[Vec<String>]) -> String {
+    let parts: Vec<String> = rows.iter().map(|r| jstr_array(r)).collect();
+    format!("[{}]", parts.join(","))
+}
+
+/// Serialize a report to its stable JSON schema:
+///
+/// ```json
+/// {"schema":1,"mission":"...","title":"...",
+///  "scalars":[{"name":"...","value":1.5}],
+///  "tables":[{"name":"...","title":"...","columns":[...],"rows":[[...]]}],
+///  "series":[{"name":"...","columns":[...],"rows":[[...]]}],
+///  "notes":["..."]}
+/// ```
+///
+/// Key order is fixed; scalars are an array (not an object) because
+/// composed reports may legitimately repeat a name.
+pub fn to_json(report: &Report) -> String {
+    let scalars: Vec<String> = report
+        .scalars
+        .iter()
+        .map(|s| format!("{{\"name\":\"{}\",\"value\":{}}}", esc(&s.name), jnum(s.value)))
+        .collect();
+    let tables: Vec<String> = report
+        .tables
+        .iter()
+        .map(|t| {
+            format!(
+                "{{\"name\":\"{}\",\"title\":\"{}\",\"columns\":{},\"rows\":{}}}",
+                esc(&t.name),
+                esc(&t.title),
+                jstr_array(&t.columns),
+                jrows(&t.rows)
+            )
+        })
+        .collect();
+    let series: Vec<String> = report
+        .series
+        .iter()
+        .map(|s| {
+            format!(
+                "{{\"name\":\"{}\",\"columns\":{},\"rows\":{}}}",
+                esc(&s.name),
+                jstr_array(&s.columns),
+                jrows(&s.rows)
+            )
+        })
+        .collect();
+    format!(
+        "{{\"schema\":1,\"mission\":\"{}\",\"title\":\"{}\",\"scalars\":[{}],\"tables\":[{}],\"series\":[{}],\"notes\":{}}}",
+        esc(&report.mission),
+        esc(&report.title),
+        scalars.join(","),
+        tables.join(","),
+        series.join(","),
+        jstr_array(&report.notes)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_report() -> Report {
+        let mut r = Report::new("demo", "Demo mission");
+        r.push_scalar("answer", 42.0);
+        r.push_scalar("ratio", 0.25);
+        let mut t = ReportTable::new("t", "A table", &["a", "b"]);
+        t.row(&["1".into(), "x\"y".into()]);
+        r.push_table(t);
+        let mut s = Series::new("demo_series", &["t", "v"]);
+        s.rowf(&[1.0, 2.5]);
+        r.push_series(s);
+        r.push_note("note with\nnewline");
+        r
+    }
+
+    #[test]
+    fn json_schema_is_stable_and_escaped() {
+        let j = to_json(&demo_report());
+        assert!(j.starts_with("{\"schema\":1,\"mission\":\"demo\",\"title\":\"Demo mission\""));
+        assert!(j.contains("{\"name\":\"answer\",\"value\":42}"));
+        assert!(j.contains("x\\\"y"));
+        assert!(j.contains("note with\\nnewline"));
+        assert!(j.contains("\"series\":[{\"name\":\"demo_series\""));
+        // Deterministic serialization.
+        assert_eq!(j, to_json(&demo_report()));
+    }
+
+    #[test]
+    fn json_maps_non_finite_to_null() {
+        let mut r = Report::new("m", "t");
+        r.push_scalar("bad", f64::NAN);
+        assert!(to_json(&r).contains("{\"name\":\"bad\",\"value\":null}"));
+    }
+
+    #[test]
+    fn csv_sink_writes_series_files() {
+        let dir = std::env::temp_dir().join("avery_report_sink_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let r = demo_report();
+        CsvSink::new(&dir).announce(false).emit(&r).unwrap();
+        let text = std::fs::read_to_string(dir.join("demo_series.csv")).unwrap();
+        assert_eq!(text, "t,v\n1.000000,2.500000\n");
+    }
+
+    #[test]
+    fn scalar_lookup_finds_first() {
+        let mut r = demo_report();
+        r.push_scalar("answer", 7.0);
+        assert_eq!(r.scalar_value("answer"), Some(42.0));
+        assert_eq!(r.scalar_value("missing"), None);
+    }
+
+    #[test]
+    fn absorb_preserves_order() {
+        let mut a = Report::new("outer", "outer");
+        let inner = demo_report();
+        a.absorb(inner);
+        a.push_note("outer note");
+        assert_eq!(a.tables.len(), 1);
+        assert_eq!(a.series.len(), 1);
+        assert_eq!(a.notes, vec!["note with\nnewline".to_string(), "outer note".to_string()]);
+    }
+
+    #[test]
+    fn output_format_parses() {
+        assert_eq!(OutputFormat::parse("text").unwrap(), OutputFormat::Text);
+        assert_eq!(OutputFormat::parse("json").unwrap(), OutputFormat::Json);
+        assert!(OutputFormat::parse("yaml").is_err());
+    }
+}

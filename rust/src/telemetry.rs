@@ -16,7 +16,10 @@ pub struct Csv {
 impl Csv {
     pub fn create(path: &Path, header: &[&str]) -> Result<Self> {
         if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir).ok();
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating csv dir {}", dir.display()))?;
+            }
         }
         let mut file = std::fs::File::create(path)
             .with_context(|| format!("creating {}", path.display()))?;

@@ -257,3 +257,30 @@ fn pool_session_routes_weight_sets_over_transport() {
         client.send(b"shutdown").unwrap();
     });
 }
+
+#[test]
+fn fleet_mission_via_trait_reports_aggregates() {
+    // The `avery fleet` driver behind the Mission API: the structured
+    // report must carry the aggregate scalars and all three CSV series,
+    // and honor RunOptions overrides (fleet size, workers).
+    let e = env();
+    let mission = avery::mission::find("fleet").expect("fleet registered");
+    let opts = avery::mission::RunOptions {
+        duration_secs: 60.0,
+        exec_every: 1000,
+        uavs: Some(2),
+        workers: Some(1),
+        ..avery::mission::RunOptions::default()
+    };
+    let report = mission.run(e, &opts).unwrap();
+    assert_eq!(report.mission, "fleet");
+    assert_eq!(report.scalar_value("uavs"), Some(2.0));
+    assert_eq!(report.scalar_value("workers"), Some(1.0));
+    assert!(report.scalar_value("delivered").unwrap() > 0.0);
+    let jain = report.scalar_value("jain_pps").unwrap();
+    assert!(jain > 0.0 && jain <= 1.0 + 1e-12, "jain {jain}");
+    let names: Vec<&str> = report.series.iter().map(|s| s.name.as_str()).collect();
+    assert_eq!(names, ["fleet_per_uav", "fleet_epochs", "fleet_summary"]);
+    // The per-UAV series has one row per UAV.
+    assert_eq!(report.series[0].rows.len(), 2);
+}

@@ -311,3 +311,20 @@ fn raw_compression_loses_to_learned_bottleneck() {
         "split {split_acc} should beat raw-compression {raw_acc}"
     );
 }
+
+#[test]
+fn artifact_free_missions_run_through_the_trait() {
+    // Every mission that declares itself artifact-free-capable must
+    // actually complete against the synthetic fallback environment and
+    // return a well-formed report.  (fig9/fig10/fleet/scenario get deeper
+    // coverage in their own suites; the quick static missions run here.)
+    let env = smoke_env();
+    for name in ["table3", "fig7", "fig8", "streams"] {
+        let mission = avery::mission::find(name).expect("registered");
+        assert!(!mission.needs_artifacts(), "{name} should be artifact-free");
+        let report = mission.run(env, &avery::mission::RunOptions::default()).unwrap();
+        assert_eq!(report.mission, name);
+        assert!(!report.tables.is_empty(), "{name}: no tables");
+        assert!(!report.scalars.is_empty(), "{name}: no scalars");
+    }
+}

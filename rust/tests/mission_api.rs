@@ -1,0 +1,260 @@
+//! Mission API regression suite — no artifacts required, never skips.
+//!
+//! * **Registry completeness** — every legacy subcommand name resolves to
+//!   a mission, the registry is exactly the nine drivers, and `avery all`
+//!   order (= registry order) is pinned.
+//! * **Golden JSON report** — a synthetic `scenario` run serialized
+//!   through the JSON sink: schema-stable key layout, parseable by a
+//!   strict JSON grammar, byte-deterministic per seed, and free of
+//!   wall-clock or filesystem-path leakage.
+
+use std::path::Path;
+
+use avery::mission::{find, registry, Env, RunOptions};
+use avery::report::to_json;
+
+/// The nine legacy CLI subcommands, in pre-API `avery all` order.
+const LEGACY_SUBCOMMANDS: [&str; 9] = [
+    "table3", "fig7", "fig8", "fig9", "fig10", "headline", "streams", "fleet", "scenario",
+];
+
+#[test]
+fn every_legacy_subcommand_resolves_to_a_mission() {
+    for name in LEGACY_SUBCOMMANDS {
+        let m = find(name).unwrap_or_else(|| panic!("`avery {name}` lost its mission"));
+        assert_eq!(m.name(), name);
+    }
+}
+
+#[test]
+fn all_order_matches_registry_order() {
+    let names: Vec<&str> = registry().iter().map(|m| m.name()).collect();
+    assert_eq!(names, LEGACY_SUBCOMMANDS, "`avery all` order drifted");
+}
+
+#[test]
+fn registry_is_closed_over_find() {
+    // find() must agree with registry() and reject unknown names.
+    for m in registry() {
+        assert!(find(m.name()).is_some());
+    }
+    assert!(find("table4").is_none());
+    assert!(find("").is_none());
+}
+
+// ---------------------------------------------------------------------------
+// Golden JSON report (synthetic scenario run)
+// ---------------------------------------------------------------------------
+
+fn sim_env(tag: &str) -> Env {
+    Env::synthetic(Path::new(&format!("target/test-out/mission-api-{tag}"))).unwrap()
+}
+
+fn scenario_json(tag: &str) -> String {
+    let env = sim_env(tag);
+    let mission = find("scenario").expect("scenario registered");
+    let opts = RunOptions {
+        name: Some("urban-flood".to_string()),
+        duration_secs: 180.0,
+        seed: 7,
+        exec_every: 10,
+        ..RunOptions::default()
+    };
+    to_json(&mission.run(&env, &opts).unwrap())
+}
+
+#[test]
+fn scenario_report_json_is_schema_stable_and_deterministic() {
+    let j = scenario_json("golden-a");
+    // Golden schema prefix: fixed key order, version tag first.
+    assert!(
+        j.starts_with("{\"schema\":1,\"mission\":\"scenario\",\"title\":\""),
+        "schema prefix drifted: {}",
+        j.get(..42).unwrap_or(&j)
+    );
+    for key in ["\"scalars\":[", "\"tables\":[", "\"series\":[", "\"notes\":["] {
+        assert!(j.contains(key), "missing section {key}");
+    }
+    // The report must not leak host paths or wall-clock: byte-identical
+    // across two runs in *different* output directories.
+    let j2 = scenario_json("golden-b");
+    assert_eq!(j, j2, "same-seed JSON reports differ");
+    // And the seed must matter.
+    let env = sim_env("golden-c");
+    let mission = find("scenario").expect("scenario registered");
+    let opts = RunOptions {
+        name: Some("urban-flood".to_string()),
+        duration_secs: 180.0,
+        seed: 8,
+        exec_every: 10,
+        ..RunOptions::default()
+    };
+    let j3 = to_json(&mission.run(&env, &opts).unwrap());
+    assert_ne!(j, j3, "seed 8 reproduced seed 7's report");
+    // Strict parse: the whole string is one valid JSON value.
+    parse_json(&j).unwrap_or_else(|e| panic!("report JSON does not parse: {e}"));
+}
+
+#[test]
+fn scenario_report_json_names_its_csv_series() {
+    let j = scenario_json("series");
+    for series in [
+        "scenario_urban-flood_summary",
+        "scenario_urban-flood_per_uav",
+        "scenario_urban-flood_epochs",
+    ] {
+        assert!(j.contains(&format!("\"name\":\"{series}\"")), "missing series {series}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Minimal strict JSON parser (validation only — no external crates)
+// ---------------------------------------------------------------------------
+
+fn parse_json(text: &str) -> Result<(), String> {
+    let bytes = text.as_bytes();
+    let mut pos = 0usize;
+    skip_ws(bytes, &mut pos);
+    parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        return Err(format!("trailing bytes at {pos}"));
+    }
+    Ok(())
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<(), String> {
+    match b.get(*pos) {
+        Some(b'{') => parse_object(b, pos),
+        Some(b'[') => parse_array(b, pos),
+        Some(b'"') => parse_string(b, pos),
+        Some(b't') => parse_lit(b, pos, b"true"),
+        Some(b'f') => parse_lit(b, pos, b"false"),
+        Some(b'n') => parse_lit(b, pos, b"null"),
+        Some(c) if c.is_ascii_digit() || *c == b'-' => parse_number(b, pos),
+        other => Err(format!("unexpected {other:?} at {pos}")),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &[u8]) -> Result<(), String> {
+    if b.len() >= *pos + lit.len() && &b[*pos..*pos + lit.len()] == lit {
+        *pos += lit.len();
+        Ok(())
+    } else {
+        Err(format!("bad literal at {pos}"))
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<(), String> {
+    let start = *pos;
+    if b.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    while *pos < b.len()
+        && (b[*pos].is_ascii_digit() || matches!(b[*pos], b'.' | b'e' | b'E' | b'+' | b'-'))
+    {
+        *pos += 1;
+    }
+    let tok = std::str::from_utf8(&b[start..*pos]).map_err(|e| e.to_string())?;
+    tok.parse::<f64>().map_err(|e| format!("bad number `{tok}`: {e}"))?;
+    Ok(())
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<(), String> {
+    if b.get(*pos) != Some(&b'"') {
+        return Err(format!("expected string at {pos}"));
+    }
+    *pos += 1;
+    while let Some(&c) = b.get(*pos) {
+        match c {
+            b'"' => {
+                *pos += 1;
+                return Ok(());
+            }
+            b'\\' => {
+                match b.get(*pos + 1) {
+                    Some(b'"') | Some(b'\\') | Some(b'/') | Some(b'b') | Some(b'f')
+                    | Some(b'n') | Some(b'r') | Some(b't') => *pos += 2,
+                    Some(b'u') => {
+                        let hex = b
+                            .get(*pos + 2..*pos + 6)
+                            .ok_or_else(|| format!("short \\u escape at {pos}"))?;
+                        if !hex.iter().all(|h| h.is_ascii_hexdigit()) {
+                            return Err(format!("bad \\u escape at {pos}"));
+                        }
+                        *pos += 6;
+                    }
+                    other => return Err(format!("bad escape {other:?} at {pos}")),
+                }
+            }
+            0x00..=0x1f => return Err(format!("raw control byte in string at {pos}")),
+            _ => *pos += 1,
+        }
+    }
+    Err("unterminated string".to_string())
+}
+
+fn parse_array(b: &[u8], pos: &mut usize) -> Result<(), String> {
+    *pos += 1; // [
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(());
+    }
+    loop {
+        skip_ws(b, pos);
+        parse_value(b, pos)?;
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(());
+            }
+            other => return Err(format!("expected , or ] got {other:?} at {pos}")),
+        }
+    }
+}
+
+fn parse_object(b: &[u8], pos: &mut usize) -> Result<(), String> {
+    *pos += 1; // {
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(());
+    }
+    loop {
+        skip_ws(b, pos);
+        parse_string(b, pos)?;
+        skip_ws(b, pos);
+        if b.get(*pos) != Some(&b':') {
+            return Err(format!("expected : at {pos}"));
+        }
+        *pos += 1;
+        skip_ws(b, pos);
+        parse_value(b, pos)?;
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(());
+            }
+            other => return Err(format!("expected , or }} got {other:?} at {pos}")),
+        }
+    }
+}
+
+#[test]
+fn json_validator_sanity() {
+    assert!(parse_json("{\"a\":[1,2.5,-3e2],\"b\":\"x\\n\",\"c\":null}").is_ok());
+    assert!(parse_json("{\"a\":1,}").is_err());
+    assert!(parse_json("{\"a\":1} extra").is_err());
+    assert!(parse_json("{\"a\"}").is_err());
+}

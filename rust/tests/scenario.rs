@@ -19,10 +19,11 @@ use std::path::Path;
 use avery::coordinator::{
     classify_intent, ControllerDecision, MissionGoal, RuntimeState, SplitController, TierId,
 };
-use avery::mission::{run_scenario, Env, ScenarioOptions};
+use avery::mission::{run_scenario, Env, RunOptions};
 use avery::netsim::{
     BandwidthEstimator, BandwidthTrace, LinkConfig, PhaseKind, SharedLink, OUTAGE_FLOOR_MBPS,
 };
+use avery::report::{CsvSink, Sink};
 use avery::scenario::{build, summarize_trace, SCENARIO_NAMES};
 use avery::streams::fleet::jain_index;
 use avery::streams::UavRole;
@@ -249,18 +250,26 @@ fn read_summary_csv(env: &Env, name: &str) -> String {
         .expect("summary csv written")
 }
 
+/// Run the scenario mission and persist its CSV series the way the CLI's
+/// CSV sink does (drivers no longer write files themselves).
+fn run_and_sink(env: &Env, opts: &RunOptions) -> avery::streams::fleet::FleetRun {
+    let (run, report) = run_scenario(env, opts).unwrap();
+    CsvSink::new(&env.out_dir).announce(false).emit(&report).unwrap();
+    run
+}
+
 #[test]
 fn scenario_mission_summary_csv_is_deterministic() {
-    let opts = ScenarioOptions {
-        name: "urban-flood".to_string(),
+    let opts = RunOptions {
+        name: Some("urban-flood".to_string()),
         duration_secs: 240.0,
         seed: 7,
-        ..ScenarioOptions::default()
+        ..RunOptions::default()
     };
     let env_a = sim_env("det-a");
     let env_b = sim_env("det-b");
-    let a = run_scenario(&env_a, &opts).unwrap();
-    let b = run_scenario(&env_b, &opts).unwrap();
+    let a = run_and_sink(&env_a, &opts);
+    let b = run_and_sink(&env_b, &opts);
     assert_eq!(a.delivered_total, b.delivered_total);
     assert_eq!(a.executed_total, b.executed_total);
     assert!((a.avg_iou - b.avg_iou).abs() < 1e-12);
@@ -272,9 +281,9 @@ fn scenario_mission_summary_csv_is_deterministic() {
     assert!(a.delivered_total > 0, "nothing delivered");
     // A different seed must change the run (energy integrates every jitter
     // draw, so seed collisions there are measure-zero).
-    let c = run_scenario(
+    let (c, _) = run_scenario(
         &sim_env("det-c"),
-        &ScenarioOptions { seed: 8, ..opts },
+        &RunOptions { seed: 8, ..opts },
     )
     .unwrap();
     assert!(
@@ -287,13 +296,13 @@ fn scenario_mission_summary_csv_is_deterministic() {
 #[test]
 fn intent_schedule_visibly_moves_agents_between_streams() {
     let env = sim_env("intent");
-    let opts = ScenarioOptions {
-        name: "urban-flood".to_string(),
+    let opts = RunOptions {
+        name: Some("urban-flood".to_string()),
         duration_secs: 240.0,
         seed: 7,
-        ..ScenarioOptions::default()
+        ..RunOptions::default()
     };
-    let run = run_scenario(&env, &opts).unwrap();
+    let (run, _) = run_scenario(&env, &opts).unwrap();
     // The schedule fired on every UAV (two switches each, offset by start).
     assert!(run.intent_switches_total >= 2 * run.per_uav.len() as u64 - 2);
     let insight_launched: Vec<_> =
@@ -329,13 +338,13 @@ fn intent_schedule_visibly_moves_agents_between_streams() {
 #[test]
 fn outage_scenario_starves_the_controller() {
     let env = sim_env("outage");
-    let opts = ScenarioOptions {
-        name: "earthquake-canyon".to_string(),
+    let opts = RunOptions {
+        name: Some("earthquake-canyon".to_string()),
         duration_secs: 300.0,
         seed: 7,
-        ..ScenarioOptions::default()
+        ..RunOptions::default()
     };
-    let run = run_scenario(&env, &opts).unwrap();
+    let (run, _) = run_scenario(&env, &opts).unwrap();
     // The mission still delivers outside the blackouts...
     assert!(run.delivered_total > 0);
     // ...and the blackouts are visible in the per-second timeline: the
@@ -361,19 +370,31 @@ fn outage_scenario_starves_the_controller() {
 
 #[test]
 fn every_scenario_runs_artifact_free() {
-    // Short smoke across the whole registry — the CI scenario matrix in
-    // miniature (cargo test must not depend on artifacts/).
+    // Short smoke across the whole scenario registry, driven through the
+    // Mission trait — the CI scenario matrix in miniature (cargo test must
+    // not depend on artifacts/).  Asserts on the structured report, the
+    // surface programmatic consumers see.
+    let mission = avery::mission::find("scenario").expect("scenario registered");
     for name in SCENARIO_NAMES {
         let env = sim_env(&format!("smoke-{name}"));
-        let opts = ScenarioOptions {
-            name: name.to_string(),
+        let opts = RunOptions {
+            name: Some(name.to_string()),
             duration_secs: 120.0,
             seed: 7,
             exec_every: 10,
-            ..ScenarioOptions::default()
+            ..RunOptions::default()
         };
-        let run = run_scenario(&env, &opts).unwrap();
-        assert!(run.delivered_total > 0, "{name}: nothing delivered");
-        assert!(run.jain_pps > 0.0 && run.jain_pps <= 1.0 + 1e-12, "{name}: jain");
+        let report = mission.run(&env, &opts).unwrap();
+        assert_eq!(report.mission, "scenario", "{name}");
+        let delivered = report.scalar_value("delivered").unwrap();
+        let jain = report.scalar_value("jain_pps").unwrap();
+        assert!(delivered > 0.0, "{name}: nothing delivered");
+        assert!(jain > 0.0 && jain <= 1.0 + 1e-12, "{name}: jain {jain}");
+        // Every scenario report carries its three CSV series.
+        assert_eq!(report.series.len(), 3, "{name}: series");
+        assert!(
+            report.series.iter().any(|s| s.name == format!("scenario_{name}_summary")),
+            "{name}: summary series missing"
+        );
     }
 }
