@@ -1,6 +1,6 @@
 # Build entrypoints documented in README.md / DESIGN.md.
 
-.PHONY: artifacts build test bench
+.PHONY: artifacts build test bench bench-quick bench-all
 
 # Train mini-LISA, profile the LUT, AOT-lower every path to artifacts/.
 artifacts:
@@ -12,5 +12,18 @@ build:
 test:
 	cargo build --release && cargo test -q
 
+# The perf-trajectory benches: the simulation kernel (writes
+# BENCH_simkernel.json — the machine-readable baseline CI's bench-smoke
+# job checks) plus the L3 hot-path microbenchmarks.  Both run artifact-free.
 bench:
+	cargo bench --bench simkernel -- --out BENCH_simkernel.json
+	cargo bench --bench hotpath
+
+# CI-sized variant of the same pair.
+bench-quick:
+	cargo bench --bench simkernel -- --quick --out BENCH_simkernel.json
+	cargo bench --bench hotpath
+
+# Every bench target, including the artifact-gated figure benches.
+bench-all:
 	cargo bench

@@ -1,17 +1,23 @@
 //! Bench: L3 hot-path microbenchmarks — the §Perf instrumentation.
 //!
 //! * controller decision latency (Algorithm 1 must be negligible)
-//! * packet encode/decode + quantization
+//! * synthetic dispatch: inline (caller-thread, no channel) vs the
+//!   engine-thread round-trip — the direct-dispatch backend win
+//! * packet encode/decode + quantization (artifact-free: falls back to the
+//!   synthetic engine on a fresh checkout)
 //! * head/tail artifact execution in both weight-delivery modes
-//!   (LiteralsEachCall vs PreuploadedBuffers — the §Perf lever)
+//!   (LiteralsEachCall vs PreuploadedBuffers — the §Perf lever); this
+//!   section needs real artifacts and prints a skip note without them.
 
 use avery::bench::{bench, bench_result, header};
 use avery::coordinator::{
     classify_intent, Lut, MissionGoal, RuntimeState, SplitController,
 };
+use avery::dataset::{Corpus, Dataset};
 use avery::mission::Env;
 use avery::packet::Packet;
-use avery::runtime::ExecMode;
+use avery::runtime::{Engine, ExecMode};
+use avery::tensor::Tensor;
 
 fn main() -> anyhow::Result<()> {
     header("controller decision (Algorithm 1)");
@@ -31,9 +37,32 @@ fn main() -> anyhow::Result<()> {
         let _ = classify_intent("highlight individuals near submerged vehicles");
     });
 
+    header("synthetic dispatch: inline vs engine-thread round-trip");
+    let scene = Dataset::synthetic(Corpus::Flood, 1, 16, 0xF10D0).scenes[0].image.clone();
+    let intent = classify_intent("highlight the stranded people");
+    let pids = Tensor::i32(vec![intent.token_ids.len()], intent.token_ids.clone())?;
+    for (engine, label) in
+        [(Engine::synthetic(), "inline"), (Engine::synthetic_threaded(), "threaded")]
+    {
+        let head =
+            engine.execute("head_sp1_balanced", "shared", std::slice::from_ref(&scene))?;
+        let tail_inputs = [head[0].clone(), head[1].clone(), pids.clone()];
+        bench_result(&format!("head sp1 BAL synthetic [{label}]"), 200, 20_000, || {
+            engine.execute("head_sp1_balanced", "shared", std::slice::from_ref(&scene))?;
+            Ok(())
+        });
+        bench_result(&format!("tail sp1 BAL synthetic [{label}]"), 200, 20_000, || {
+            engine.execute("tail_sp1_balanced", "ft", &tail_inputs)?;
+            Ok(())
+        });
+    }
+
     header("packet wire path");
-    let artifacts = avery::find_artifacts(None)?;
-    let env = Env::load(&artifacts, std::path::Path::new("out"), ExecMode::PreuploadedBuffers)?;
+    // Artifact-free capable: a fresh checkout benches the wire path over
+    // the synthetic engine (packet sizes differ from the paper-scale wire
+    // model either way — that is what `wire_bytes` is for).
+    let env =
+        Env::load_or_synthetic(None, std::path::Path::new("out"), ExecMode::PreuploadedBuffers)?;
     let scene = &env.flood_val.scenes[0];
     let mut edge =
         avery::edge::EdgePipeline::new(env.engine.clone(), env.device.clone(), env.lut.clone());
@@ -49,6 +78,13 @@ fn main() -> anyhow::Result<()> {
     });
 
     header("artifact execution: weight-delivery modes (the §Perf lever)");
+    let Ok(artifacts) = avery::find_artifacts(None) else {
+        println!(
+            "skipping weight-delivery-mode section — artifacts/ not found \
+             (`make artifacts` to bench the real PJRT path)"
+        );
+        return Ok(());
+    };
     for (mode, label) in [
         (ExecMode::LiteralsEachCall, "literals-each-call"),
         (ExecMode::PreuploadedBuffers, "preuploaded-buffers"),

@@ -1,0 +1,266 @@
+//! Bench: the simulation kernel — packets-simulated-per-wall-second and
+//! end-to-end mission wall time, emitted as machine-readable
+//! `BENCH_simkernel.json` so every future perf PR has a before/after
+//! trajectory (schema below; CI's `bench-smoke` job parses it and enforces
+//! a packets/sec floor from `ci/bench_floor.json`).
+//!
+//! Sections:
+//!
+//! * **dispatch** — one head+tail synthetic round-trip through the inline
+//!   backend (caller-thread, no channel) vs the threaded backend (mpsc
+//!   round-trip to a dedicated engine thread): the per-packet dispatch win.
+//! * **throughput** — aggregate packets/sec over T threads hammering
+//!   clones of ONE inline engine: the scaling the old single-consumer
+//!   engine thread could not deliver.
+//! * **fleet** — `avery fleet` wall time at N ∈ {1, 4, 16, 64} UAVs.
+//! * **all_missions** — the 8 artifact-free registry missions through the
+//!   parallel runner at `--jobs 1` vs `--jobs 4` vs `--jobs 8`, with a
+//!   byte-identity check over every report's JSON.
+//!
+//! Usage: `cargo bench --bench simkernel -- [--quick] [--out PATH]`
+//! (`--quick` is what CI runs; default writes `BENCH_simkernel.json` in
+//! the current directory).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use avery::bench::{fmt_secs, header};
+use avery::coordinator::classify_intent;
+use avery::dataset::{Corpus, Dataset};
+use avery::mission::{registry, run_collect, run_fleet, Env, EnvSpec, Mission, RunOptions};
+use avery::report::to_json;
+use avery::runtime::Engine;
+use avery::tensor::Tensor;
+
+struct Args {
+    quick: bool,
+    out: String,
+}
+
+fn parse_args() -> Args {
+    let mut args = Args { quick: false, out: "BENCH_simkernel.json".to_string() };
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--quick" => args.quick = true,
+            "--out" => {
+                if let Some(v) = argv.get(i + 1) {
+                    args.out = v.clone();
+                    i += 1;
+                }
+            }
+            other => {
+                if let Some(v) = other.strip_prefix("--out=") {
+                    args.out = v.to_string();
+                }
+                // `cargo bench` passes `--bench`; ignore unknown flags so
+                // the harness contract stays permissive.
+            }
+        }
+        i += 1;
+    }
+    args
+}
+
+/// One synthetic Insight packet worth of execution: head then tail.
+fn roundtrip(engine: &Engine, scene: &Tensor, tail_inputs: &[Tensor; 3]) {
+    engine
+        .execute("head_sp1_balanced", "shared", std::slice::from_ref(scene))
+        .expect("head");
+    engine.execute("tail_sp1_balanced", "ft", tail_inputs).expect("tail");
+}
+
+fn bench_scene() -> (Tensor, [Tensor; 3]) {
+    let ds = Dataset::synthetic(Corpus::Flood, 1, 16, 0xF10D0);
+    let scene = ds.scenes[0].image.clone();
+    let intent = classify_intent("highlight the stranded people");
+    let pids =
+        Tensor::i32(vec![intent.token_ids.len()], intent.token_ids.clone()).expect("pids");
+    let engine = Engine::synthetic();
+    let head = engine
+        .execute("head_sp1_balanced", "shared", std::slice::from_ref(&scene))
+        .expect("head outputs");
+    let tail_inputs = [head[0].clone(), head[1].clone(), pids];
+    (scene, tail_inputs)
+}
+
+/// Mean nanoseconds per head+tail round-trip on one thread.
+fn ns_per_packet(engine: &Engine, scene: &Tensor, tail_inputs: &[Tensor; 3], iters: usize) -> f64 {
+    for _ in 0..iters / 10 {
+        roundtrip(engine, scene, tail_inputs);
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        roundtrip(engine, scene, tail_inputs);
+    }
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+/// Aggregate packets/sec over `threads` threads sharing one inline engine.
+fn throughput(
+    engine: &Engine,
+    scene: &Tensor,
+    tail_inputs: &[Tensor; 3],
+    threads: usize,
+    per_thread: usize,
+) -> f64 {
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                for _ in 0..per_thread {
+                    roundtrip(engine, scene, tail_inputs);
+                }
+            });
+        }
+    });
+    (threads * per_thread) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn jf(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    let mode = if args.quick { "quick" } else { "full" };
+    let dispatch_iters = if args.quick { 20_000 } else { 200_000 };
+    let fleet_duration = if args.quick { 120.0 } else { 600.0 };
+    let all_duration = if args.quick { 120.0 } else { 600.0 };
+    let all_exec_every = if args.quick { 4 } else { 1 };
+
+    // ---- dispatch: inline vs threaded round-trip -------------------------
+    header("dispatch: inline vs engine-thread synthetic round-trip");
+    let (scene, tail_inputs) = bench_scene();
+    let inline = Engine::synthetic();
+    let threaded = Engine::synthetic_threaded();
+    let inline_ns = ns_per_packet(&inline, &scene, &tail_inputs, dispatch_iters);
+    let threaded_ns = ns_per_packet(&threaded, &scene, &tail_inputs, dispatch_iters);
+    println!(
+        "inline   {inline_ns:>10.0} ns/packet\nthreaded {threaded_ns:>10.0} ns/packet\n\
+         channel+hop overhead: {:.2}x",
+        threaded_ns / inline_ns
+    );
+
+    // ---- throughput scaling over shared inline engine --------------------
+    header("throughput: packets/sec over T threads, one shared inline engine");
+    let per_thread = if args.quick { 20_000 } else { 100_000 };
+    let mut tputs: Vec<(usize, f64)> = Vec::new();
+    for threads in [1usize, 2, 4, 8] {
+        let pps = throughput(&inline, &scene, &tail_inputs, threads, per_thread);
+        println!("threads {threads:>2}: {pps:>12.0} packets/s");
+        tputs.push((threads, pps));
+    }
+
+    // ---- fleet mission wall time at N ------------------------------------
+    header("fleet mission wall time (synthetic env, contended uplink)");
+    let mut fleet_rows: Vec<(usize, f64, u64)> = Vec::new();
+    for &n in &[1usize, 4, 16, 64] {
+        let env = Env::synthetic(Path::new("out/bench-simkernel"))?;
+        let opts = RunOptions {
+            duration_secs: fleet_duration,
+            uavs: Some(n),
+            workers: Some(n.min(4)),
+            seed: 7,
+            ..RunOptions::default()
+        };
+        let t0 = Instant::now();
+        let (run, _report) = run_fleet(&env, &opts)?;
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "N={n:<3} wall {:>10}  ({} packets delivered, {:.0} sim-packets/wall-s)",
+            fmt_secs(wall),
+            run.delivered_total,
+            run.delivered_total as f64 / wall
+        );
+        fleet_rows.push((n, wall, run.delivered_total));
+    }
+
+    // ---- avery all: --jobs 1 vs --jobs 4 vs --jobs 8 ---------------------
+    header("avery all (artifact-free registry) through the parallel runner");
+    let missions: Vec<Box<dyn Mission>> =
+        registry().into_iter().filter(|m| !m.needs_artifacts()).collect();
+    let opts = RunOptions {
+        duration_secs: all_duration,
+        exec_every: all_exec_every,
+        seed: 7,
+        ..RunOptions::default()
+    };
+    let out_dir = Path::new("out/bench-simkernel");
+    let mut walls: Vec<(usize, f64)> = Vec::new();
+    let mut json_ref: Option<Vec<String>> = None;
+    let mut byte_identical = true;
+    // jobs=4 first so any warm-cache bias favors the serial run — the
+    // reported speedup is conservative.
+    for jobs in [4usize, 1, 8] {
+        let t0 = Instant::now();
+        let reports = run_collect(&missions, &EnvSpec::Synthetic, out_dir, &opts, jobs);
+        let wall = t0.elapsed().as_secs_f64();
+        let jsons: Vec<String> = reports
+            .iter()
+            .map(|r| to_json(r.as_ref().unwrap_or_else(|e| panic!("mission failed: {e:#}"))))
+            .collect();
+        match &json_ref {
+            None => json_ref = Some(jsons),
+            Some(want) => byte_identical &= *want == jsons,
+        }
+        println!("--jobs {jobs}: {} for {} missions", fmt_secs(wall), missions.len());
+        walls.push((jobs, wall));
+    }
+    let wall_of = |j: usize| walls.iter().find(|(jobs, _)| *jobs == j).unwrap().1;
+    let (w1, w4, w8) = (wall_of(1), wall_of(4), wall_of(8));
+    println!(
+        "speedup: --jobs 4 {:.2}x, --jobs 8 {:.2}x, reports byte-identical: {byte_identical}",
+        w1 / w4,
+        w1 / w8
+    );
+
+    // ---- machine-readable output -----------------------------------------
+    let fleet_json: Vec<String> = fleet_rows
+        .iter()
+        .map(|(n, wall, pkts)| {
+            format!(
+                "{{\"uavs\":{n},\"wall_secs\":{},\"sim_packets\":{pkts},\
+                 \"packets_per_wall_sec\":{}}}",
+                jf(*wall),
+                jf(*pkts as f64 / wall)
+            )
+        })
+        .collect();
+    let tput_json: Vec<String> = tputs
+        .iter()
+        .map(|(t, pps)| format!("{{\"threads\":{t},\"packets_per_sec\":{}}}", jf(*pps)))
+        .collect();
+    let json = format!(
+        "{{\"schema\":1,\"bench\":\"simkernel\",\"mode\":\"{mode}\",\
+         \"dispatch\":{{\"inline_ns_per_packet\":{},\"threaded_ns_per_packet\":{},\
+         \"threaded_over_inline\":{}}},\
+         \"throughput\":[{}],\
+         \"fleet\":[{}],\
+         \"all_missions\":{{\"missions\":{},\"jobs_1_wall_secs\":{},\
+         \"jobs_4_wall_secs\":{},\"jobs_8_wall_secs\":{},\
+         \"speedup_jobs_4\":{},\"speedup_jobs_8\":{},\
+         \"byte_identical\":{byte_identical}}}}}",
+        jf(inline_ns),
+        jf(threaded_ns),
+        jf(threaded_ns / inline_ns),
+        tput_json.join(","),
+        fleet_json.join(","),
+        missions.len(),
+        jf(w1),
+        jf(w4),
+        jf(w8),
+        jf(w1 / w4),
+        jf(w1 / w8),
+    );
+    std::fs::write(&args.out, format!("{json}\n"))?;
+    println!("\nwrote {}", args.out);
+    Ok(())
+}

@@ -88,7 +88,7 @@ pub fn eval_raw_compression(
             let degraded = raw_compress_roundtrip(&scene.image, side)?;
             let pids = Tensor::i32(vec![intent.token_ids.len()], intent.token_ids.clone())?;
             let outs = engine
-                .execute("full_pipeline", dataset.corpus.weight_set(), vec![degraded, pids])
+                .execute_owned("full_pipeline", dataset.corpus.weight_set(), vec![degraded, pids])
                 .context("raw-compression full_pipeline")?;
             acc.push(mask_iou(outs[0].as_f32()?, &scene.masks[*class_id], 0.0));
         }
@@ -135,7 +135,11 @@ pub fn eval_full_pipeline(
             let intent = classify_intent(prompt);
             let pids = Tensor::i32(vec![intent.token_ids.len()], intent.token_ids.clone())?;
             let outs = engine
-                .execute("full_pipeline", dataset.corpus.weight_set(), vec![scene.image.clone(), pids])
+                .execute_owned(
+                    "full_pipeline",
+                    dataset.corpus.weight_set(),
+                    vec![scene.image.clone(), pids],
+                )
                 .context("full_pipeline")?;
             acc.push(mask_iou(outs[0].as_f32()?, &scene.masks[*class_id], 0.0));
         }

@@ -11,8 +11,10 @@
 //!   per-session weight-set routing over the [`crate::transport`] framing
 //!   and an in-process fast path ([`CloudPool::process_sync`]) the fleet
 //!   simulator uses.  Pass one engine handle per worker: clones of a single
-//!   engine serialize at its thread (queueing model), independent engines
-//!   execute truly in parallel.
+//!   *threaded* engine serialize at its thread (queueing model), while
+//!   inline synthetic handles — clones or not — execute truly in parallel,
+//!   and in-process requests skip the job queue entirely via the
+//!   direct-call fast path.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -22,7 +24,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::{classify_intent, TierId};
-use crate::edge::tail_artifact;
+use crate::edge::tail_artifact_name;
 use crate::packet::{dequantize_code, dequantize_scaled, Packet, StreamKind};
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
@@ -73,7 +75,7 @@ fn process_packet(
     match pkt.kind {
         StreamKind::Context => {
             let outs = engine
-                .execute("context_respond", set, vec![clip, pids])
+                .execute_owned("context_respond", set, vec![clip, pids])
                 .context("running context_respond")?;
             Ok(CloudResponse { mask_logits: None, presence: outs[0].as_f32()?.to_vec() })
         }
@@ -88,14 +90,12 @@ fn process_packet(
                 other => bail!("bad tier index {other}"),
             };
             let code = dequantize_code(&pkt.code_q, pkt.code_shape)?;
-            let artifact = tail_artifact(pkt.split as usize, tier);
-            let outs = engine
-                .execute(&artifact, set, vec![code, clip, pids])
+            let artifact = tail_artifact_name(pkt.split as usize, tier);
+            let mut outs = engine
+                .execute_owned(&artifact, set, vec![code, clip, pids])
                 .with_context(|| format!("running {artifact}"))?;
-            Ok(CloudResponse {
-                mask_logits: Some(outs[0].clone()),
-                presence: outs[1].as_f32()?.to_vec(),
-            })
+            let presence = outs[1].as_f32()?.to_vec();
+            Ok(CloudResponse { mask_logits: Some(outs.swap_remove(0)), presence })
         }
     }
 }
@@ -170,13 +170,24 @@ pub struct CloudPool {
     n_workers: usize,
     completed: Arc<AtomicU64>,
     busy_micros: Arc<AtomicU64>,
+    /// Direct-call fast path for [`CloudPool::process_sync`]: set when every
+    /// worker engine executes inline (caller-thread synthetic backend), in
+    /// which case an in-process request needs no job-queue hop — and no
+    /// `Packet` clone.
+    direct: Option<Engine>,
 }
 
 impl CloudPool {
-    /// Spawn one worker per engine handle.  Handles may be clones of one
-    /// engine (shared execution thread — models a queueing server) or
-    /// independently started engines (true parallel execution).
+    /// Spawn one worker per engine handle.  Threaded handles may be clones
+    /// of one engine (shared execution thread — models a queueing server)
+    /// or independently started engines; inline synthetic handles always
+    /// execute truly in parallel, worker- and caller-side.
     pub fn new(engines: Vec<Engine>) -> Self {
+        let direct = if !engines.is_empty() && engines.iter().all(|e| e.is_inline()) {
+            Some(engines[0].clone())
+        } else {
+            None
+        };
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let completed = Arc::new(AtomicU64::new(0));
@@ -209,7 +220,7 @@ impl CloudPool {
                     .expect("spawning cloud worker")
             })
             .collect();
-        Self { jobs: tx, workers, n_workers, completed, busy_micros }
+        Self { jobs: tx, workers, n_workers, completed, busy_micros, direct }
     }
 
     pub fn workers(&self) -> usize {
@@ -231,10 +242,20 @@ impl CloudPool {
         Ok(Ticket { rx })
     }
 
-    /// In-process fast path: enqueue and block for the response.  This is
-    /// what the fleet simulator calls — virtual time is charged by the
-    /// mission's timing model, so only the numerics flow through here.
+    /// In-process fast path: serve the request without leaving the caller's
+    /// thread when the backend executes inline (no job-queue hop, no
+    /// `pkt.clone()`/`prompt_ids.to_vec()`), else enqueue and block.  This
+    /// is what the fleet simulator calls — virtual time is charged by the
+    /// mission's timing model, so only the numerics flow through here, and
+    /// responses are pure functions of the request on either route.
     pub fn process_sync(&self, pkt: &Packet, prompt_ids: &[i32], set: &str) -> Result<CloudResponse> {
+        if let Some(engine) = &self.direct {
+            let t0 = Instant::now();
+            let r = process_packet(engine, pkt, prompt_ids, set);
+            self.busy_micros.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+            self.completed.fetch_add(1, Ordering::Relaxed);
+            return r;
+        }
         self.submit(pkt, prompt_ids, set)?.wait()
     }
 
@@ -370,6 +391,34 @@ mod tests {
         let (p, m) = decode_response(&encode_response(&ctx)).unwrap();
         assert_eq!(p.len(), 1);
         assert!(m.is_empty());
+    }
+
+    #[test]
+    fn pool_direct_path_matches_queue_and_server() {
+        use crate::coordinator::{classify_intent, Lut, TierId};
+        use crate::dataset::{Corpus, Dataset};
+        use crate::edge::EdgePipeline;
+        use crate::energy::DeviceModel;
+        use crate::runtime::Engine;
+
+        let engine = Engine::synthetic();
+        let ds = Dataset::synthetic(Corpus::Flood, 2, 16, 0xF10D0);
+        let mut edge =
+            EdgePipeline::new(engine.clone(), DeviceModel::jetson_mode_30w(8), Lut::paper());
+        let (pkt, _) =
+            edge.capture_insight(&ds.scenes[0], 1, TierId::HighAccuracy, 0.0).unwrap();
+        let intent = classify_intent("highlight the stranded people");
+
+        let pool = CloudPool::new(vec![engine.clone(), engine.clone()]);
+        let direct = pool.process_sync(&pkt, &intent.token_ids, "ft").unwrap();
+        let queued = pool.submit(&pkt, &intent.token_ids, "ft").unwrap().wait().unwrap();
+        let server = CloudServer::new(engine).process(&pkt, &intent.token_ids, "ft").unwrap();
+        assert_eq!(direct.presence, queued.presence);
+        assert_eq!(direct.presence, server.presence);
+        assert_eq!(direct.mask_logits, queued.mask_logits);
+        assert_eq!(direct.mask_logits, server.mask_logits);
+        // Both routes count toward the pool's aggregate counters.
+        assert_eq!(pool.stats().completed, 2);
     }
 
     #[test]

@@ -130,6 +130,9 @@ pub struct RunConfig {
     pub list: bool,
     /// Report rendering (`--format text|json`); CSVs are always written.
     pub format: OutputFormat,
+    /// Parallel mission fan-out for `avery all` (`--jobs N`); rendering
+    /// stays serial so output bytes match a `--jobs 1` run.
+    pub jobs: usize,
 }
 
 impl RunConfig {
@@ -177,6 +180,7 @@ impl RunConfig {
             name: kv.get("name").map(|s| s.to_string()),
             list: kv.get_bool("list", false)?,
             format,
+            jobs: kv.get_usize("jobs", 1)?,
         })
     }
 }
@@ -225,6 +229,14 @@ mod tests {
         assert_eq!(rc.uavs, None);
         assert_eq!(rc.workers, None);
         assert_eq!(rc.format, OutputFormat::Text);
+        assert_eq!(rc.jobs, 1);
+    }
+
+    #[test]
+    fn jobs_key_parses_and_rejects() {
+        let rc = RunConfig::from_kv(&Kv::parse("jobs = 8\n").unwrap()).unwrap();
+        assert_eq!(rc.jobs, 8);
+        assert!(RunConfig::from_kv(&Kv::parse("jobs = many\n").unwrap()).is_err());
     }
 
     #[test]

@@ -9,6 +9,8 @@
 //! stream compute-bound — its rate is limited by the 6.4x-faster on-device
 //! CLIP pass, not the uplink, exactly as §5.2.2 describes).
 
+use std::borrow::Cow;
+
 use anyhow::{Context, Result};
 
 use crate::coordinator::{Lut, TierId};
@@ -20,13 +22,30 @@ use crate::runtime::Engine;
 /// Paper-scale wire bytes charged for a Context packet.
 pub const CONTEXT_WIRE_BYTES: f64 = 0.1e6;
 
-/// Artifact naming helpers (must match aot.py).
+/// Artifact naming helpers (must match aot.py).  The `_name` variants
+/// borrow from the interned table in [`crate::runtime`] — zero allocation
+/// for every split the table covers, which is all of them in practice
+/// (`format!` fallback above `runtime::MAX_STATIC_SPLIT`).
+pub fn head_artifact_name(split: usize, tier: TierId) -> Cow<'static, str> {
+    match crate::runtime::head_name(split, tier) {
+        Some(s) => Cow::Borrowed(s),
+        None => Cow::Owned(format!("head_sp{split}_{}", tier.name())),
+    }
+}
+
+pub fn tail_artifact_name(split: usize, tier: TierId) -> Cow<'static, str> {
+    match crate::runtime::tail_name(split, tier) {
+        Some(s) => Cow::Borrowed(s),
+        None => Cow::Owned(format!("tail_sp{split}_{}", tier.name())),
+    }
+}
+
 pub fn head_artifact(split: usize, tier: TierId) -> String {
-    format!("head_sp{split}_{}", tier.name())
+    head_artifact_name(split, tier).into_owned()
 }
 
 pub fn tail_artifact(split: usize, tier: TierId) -> String {
-    format!("tail_sp{split}_{}", tier.name())
+    tail_artifact_name(split, tier).into_owned()
 }
 
 /// The UAV-side pipeline.
@@ -56,10 +75,12 @@ impl EdgePipeline {
         tier: TierId,
         t_capture: f64,
     ) -> Result<(Packet, StageCost)> {
-        let artifact = head_artifact(split, tier);
+        let artifact = head_artifact_name(split, tier);
+        // Borrowed dispatch: the scene image is never cloned on this path —
+        // the inline backend reads it in place.
         let outs = self
             .engine
-            .execute(&artifact, "shared", vec![scene.image.clone()])
+            .execute(&artifact, "shared", std::slice::from_ref(&scene.image))
             .with_context(|| format!("running {artifact}"))?;
         // outputs: code, clip_tokens, clip_pooled
         let (code_q, code_shape) = quantize_code(&outs[0])?;
@@ -84,7 +105,7 @@ impl EdgePipeline {
     pub fn capture_context(&mut self, scene: &Scene, t_capture: f64) -> Result<(Packet, StageCost)> {
         let outs = self
             .engine
-            .execute("context_edge", "shared", vec![scene.image.clone()])
+            .execute("context_edge", "shared", std::slice::from_ref(&scene.image))
             .context("running context_edge")?;
         let (clip_q, clip_shape, clip_scale) = quantize_scaled(&outs[0])?;
         let pkt = Packet {

@@ -26,20 +26,24 @@
 //! `--goal accuracy|throughput`, `--exec-every N`, `--seed N`,
 //! `--hysteresis H`, `--exec-mode buffers|literals`, `--config FILE`,
 //! `--uavs N`, `--workers N` (fleet), `--scenario NAME` (fleet/fig9),
-//! `--name NAME` / `--list` (scenario), `--format text|json`.
+//! `--name NAME` / `--list` (scenario), `--format text|json`,
+//! `--jobs N` (parallel mission fan-out for `avery all`).
 //!
 //! Every artifact-free-capable mission (all but `headline`) falls back to
 //! the synthetic closed-form engine when `artifacts/` is missing (control
 //! plane exact, numerics simulated), so the whole evaluation surface runs
 //! in CI.  CSV outputs are always written; `--format json` renders the
 //! structured report as one JSON object on stdout instead of tables.
+//! With `--jobs N` missions *run* in parallel but reports are *rendered*
+//! serially in registry order, so stdout/CSV/JSON bytes are identical to a
+//! serial run (pinned by `rust/tests/mission_api.rs`).
 
 use std::path::Path;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use avery::config::{Kv, RunConfig};
-use avery::mission::{self, Env, Mission, RunOptions};
+use avery::mission::{self, EnvSpec, Mission, RunOptions};
 use avery::report::{emit_text, CsvSink, JsonSink, OutputFormat, Sink};
 
 const USAGE: &str = "usage: avery <run <mission>|list|all|MISSION> [--options]
@@ -58,10 +62,13 @@ missions: table3 fig7 fig8 fig9 fig10 headline streams fleet scenario
   --name NAME          scenario to run for `avery run scenario`
   --list               list registered scenarios (`avery scenario --list`)
   --format FMT         text | json report rendering (CSVs always written)
+  --jobs N             run missions N at a time (`avery all`); output bytes
+                       are identical to --jobs 1 (default 1)
   --config FILE        key = value config file (CLI overrides it)
 
 Every mission except `headline` needs no artifacts: without them it runs
-the synthetic closed-form engine (control plane exact, numerics simulated).";
+the synthetic closed-form engine (control plane exact, numerics simulated);
+`avery all` skips artifact-gated missions with a note instead of failing.";
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -103,9 +110,9 @@ fn main() -> Result<()> {
             let Some(m) = mission::find(name) else {
                 bail!("unknown mission `{name}` — see `avery list`");
             };
-            run_missions(&[m], &cfg)
+            run_missions(vec![m], &cfg, false)
         }
-        "all" => run_missions(&mission::registry(), &cfg),
+        "all" => run_missions(mission::registry(), &cfg, true),
         // Legacy subcommands are registry aliases.  `avery scenario` with
         // no name keeps its listing behavior.
         "scenario" if cfg.list || cfg.name.is_none() => {
@@ -113,7 +120,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         other => match mission::find(other) {
-            Some(m) => run_missions(&[m], &cfg),
+            Some(m) => run_missions(vec![m], &cfg, false),
             None => bail!("unknown command `{other}`\n{USAGE}"),
         },
     }
@@ -134,26 +141,61 @@ fn print_scenario_list() {
     }
 }
 
-/// Load one environment, then drive each mission through the trait and
-/// render its report: CSVs always, tables+notes or JSON per `--format`.
-fn run_missions(missions: &[Box<dyn Mission>], cfg: &RunConfig) -> Result<()> {
+/// Resolve the execution environment once (so parallel workers neither
+/// race artifact discovery nor repeat the fallback notice), run the
+/// missions `--jobs` at a time, then render every report serially in
+/// registry order: CSVs always, tables+notes or JSON per `--format`.
+/// `skip_gated` (the `avery all` path) drops artifact-needing missions
+/// with a note when no artifacts exist instead of failing the whole run.
+fn run_missions(
+    missions: Vec<Box<dyn Mission>>,
+    cfg: &RunConfig,
+    skip_gated: bool,
+) -> Result<()> {
     let out_dir = Path::new(&cfg.out_dir);
-    let env = if missions.iter().any(|m| m.needs_artifacts()) {
-        let artifacts = avery::find_artifacts(cfg.artifacts.as_deref())?;
-        eprintln!("artifacts: {}", artifacts.display());
-        Env::load(&artifacts, out_dir, cfg.exec_mode)?
-    } else {
-        Env::load_or_synthetic(cfg.artifacts.as_deref(), out_dir, cfg.exec_mode)?
+    let needs_artifacts = missions.iter().any(|m| m.needs_artifacts());
+    // One shared resolution path with the library (`EnvSpec::resolve` also
+    // backs `Env::load_or_synthetic`): explicit dir must exist, discovery
+    // falls back to the synthetic engine with a one-time notice.
+    let spec = EnvSpec::resolve(cfg.artifacts.as_deref(), cfg.exec_mode)?;
+    if let EnvSpec::Artifacts { dir, .. } = &spec {
+        if needs_artifacts {
+            eprintln!("artifacts: {}", dir.display());
+        }
+    }
+    let missions: Vec<Box<dyn Mission>> = match &spec {
+        EnvSpec::Artifacts { .. } => missions,
+        EnvSpec::Synthetic if needs_artifacts && !skip_gated => bail!(
+            "this mission needs artifacts/ — run `make artifacts` first \
+             (or set AVERY_ARTIFACTS)"
+        ),
+        EnvSpec::Synthetic => missions
+            .into_iter()
+            .filter(|m| {
+                if m.needs_artifacts() {
+                    eprintln!("skipping `{}` (needs artifacts)", m.name());
+                    false
+                } else {
+                    true
+                }
+            })
+            .collect(),
     };
+
     let opts = RunOptions::from_config(cfg);
-    for m in missions {
-        let report = m.run(&env, &opts)?;
+    let jobs = cfg.jobs.max(1);
+    if jobs > 1 && missions.len() > 1 {
+        eprintln!("running {} missions, {} at a time", missions.len(), jobs.min(missions.len()));
+    }
+    let reports = mission::run_collect(&missions, &spec, out_dir, &opts, jobs);
+    for (m, r) in missions.iter().zip(reports) {
+        let report = r.with_context(|| format!("mission `{}`", m.name()))?;
         match cfg.format {
-            OutputFormat::Text => emit_text(&report, &env.out_dir)?,
+            OutputFormat::Text => emit_text(&report, out_dir)?,
             OutputFormat::Json => {
                 // Stdout stays pure JSON (one object per mission); the CSV
                 // files are still written, silently.
-                CsvSink::new(&env.out_dir).announce(false).emit(&report)?;
+                CsvSink::new(out_dir).announce(false).emit(&report)?;
                 JsonSink.emit(&report)?;
             }
         }

@@ -17,10 +17,12 @@ mod fig8;
 mod fig9;
 mod fleet;
 mod headline;
+mod runner;
 mod scenario;
 mod table3;
 
 pub use context::{run_streams, StreamsMission};
+pub use runner::{run_collect, EnvSpec};
 pub use fig10::{run_fig10, Fig10Mission};
 pub use fig7::{run_fig7, Fig7Mission};
 pub use fig8::{run_fig8, Fig8Mission};
@@ -49,7 +51,12 @@ pub const DEFAULT_WORKERS: usize = 2;
 
 /// One mission behind the uniform API: a named, registry-enumerable driver
 /// from `(Env, RunOptions)` to a structured [`Report`].
-pub trait Mission {
+///
+/// `Send + Sync` because the parallel runner ([`run_collect`]) fans
+/// registry missions out over scoped worker threads — drivers hold no
+/// shared mutable state (everything mission-local hangs off the `Env`
+/// and the options they are passed).
+pub trait Mission: Send + Sync {
     /// Registry name — also the CLI subcommand (`avery run <name>` and the
     /// legacy `avery <name>` alias).
     fn name(&self) -> &'static str;
@@ -220,27 +227,15 @@ impl Env {
     /// Load the artifact-backed environment when artifacts can be found,
     /// else fall back to [`Env::synthetic`].  An *explicitly named*
     /// artifacts dir that fails to load is an error (the caller asked for
-    /// it); only discovery failure falls through to the sim path.
+    /// it); only discovery failure falls through to the sim path.  The
+    /// resolution rules (and the fallback notice) live in
+    /// [`EnvSpec::resolve`], which the CLI shares.
     pub fn load_or_synthetic(
         explicit_artifacts: Option<&str>,
         out_dir: &Path,
         mode: ExecMode,
     ) -> Result<Self> {
-        if explicit_artifacts.is_some() {
-            let dir = crate::find_artifacts(explicit_artifacts)?;
-            return Self::load(&dir, out_dir, mode);
-        }
-        match crate::find_artifacts(None) {
-            Ok(dir) => Self::load(&dir, out_dir, mode),
-            Err(_) => {
-                eprintln!(
-                    "artifacts/ not found — running the synthetic closed-form engine \
-                     (control plane exact, numerics simulated; `make artifacts` for \
-                     the real model)"
-                );
-                Self::synthetic(out_dir)
-            }
-        }
+        EnvSpec::resolve(explicit_artifacts, mode)?.build(out_dir)
     }
 }
 

@@ -1,0 +1,230 @@
+//! The parallel mission runner — `avery all --jobs N` and the simkernel
+//! bench fan missions out over scoped worker threads (DESIGN.md "Execution
+//! backends & parallel runner").
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Output bytes cannot change.**  Workers only *compute* reports;
+//!    the caller renders them (stdout tables / JSON / CSV files) serially,
+//!    in the caller's mission order.  Reports are wall-clock- and path-free
+//!    (see `crate::report`), so a mission's report is identical no matter
+//!    which worker ran it or when.
+//! 2. **No shared engine bottleneck on the synthetic path.**  Synthetic
+//!    workers each build their own [`Env`] (cheap: no I/O), so parallel
+//!    missions never serialize behind one engine thread.  The artifacts
+//!    path instead builds ONE `Env` up front and shares it — `Env::load`
+//!    is expensive (PJRT engine, lazy artifact compilation, device weight
+//!    uploads) and duplicating it per worker would multiply compile time
+//!    and device memory; the engine handle is thread-safe, and PJRT
+//!    execution serializes at its dedicated thread regardless.
+//! 3. **Balanced schedule.**  Workers pull mission indices from a shared
+//!    atomic cursor over a heaviest-first ordering (composed missions like
+//!    fig10/headline re-run fig9 internally and dominate wall time), so
+//!    the longest mission starts first and the others pack around it.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::report::Report;
+use crate::runtime::ExecMode;
+
+use super::{Env, Mission, RunOptions};
+
+/// How a runner worker builds its [`Env`] — resolved once by the caller so
+/// parallel workers neither race artifact discovery nor repeat the
+/// synthetic-fallback notice.
+#[derive(Clone, Debug)]
+pub enum EnvSpec {
+    /// Load the PJRT artifacts from `dir`.
+    Artifacts { dir: PathBuf, mode: ExecMode },
+    /// The artifact-free inline synthetic environment.
+    Synthetic,
+}
+
+impl EnvSpec {
+    /// The one place artifact discovery becomes an environment choice
+    /// (shared by the CLI and `Env::load_or_synthetic`): an *explicitly
+    /// named* artifacts dir that cannot be found is an error (the caller
+    /// asked for it); discovery failure falls through to the synthetic
+    /// path with a one-time notice.
+    pub fn resolve(explicit_artifacts: Option<&str>, mode: ExecMode) -> Result<Self> {
+        if explicit_artifacts.is_some() {
+            let dir = crate::find_artifacts(explicit_artifacts)?;
+            return Ok(EnvSpec::Artifacts { dir, mode });
+        }
+        match crate::find_artifacts(None) {
+            Ok(dir) => Ok(EnvSpec::Artifacts { dir, mode }),
+            Err(_) => {
+                eprintln!(
+                    "artifacts/ not found — running the synthetic closed-form engine \
+                     (control plane exact, numerics simulated; `make artifacts` for \
+                     the real model)"
+                );
+                Ok(EnvSpec::Synthetic)
+            }
+        }
+    }
+
+    pub fn build(&self, out_dir: &Path) -> Result<Env> {
+        match self {
+            EnvSpec::Artifacts { dir, mode } => Env::load(dir, out_dir, *mode),
+            EnvSpec::Synthetic => Env::synthetic(out_dir),
+        }
+    }
+}
+
+/// Static wall-time ordering for the LPT-style schedule: lower rank =
+/// scheduled earlier.  Only a heuristic — correctness never depends on it.
+fn cost_rank(name: &str) -> usize {
+    match name {
+        "fig10" => 0,    // fig9 + trade-off sweep
+        "headline" => 1, // fig9 + baselines
+        "fig9" => 2,
+        "fleet" => 3,
+        "scenario" => 4,
+        "streams" => 5,
+        "fig8" => 6,
+        "fig7" => 7,
+        _ => 8,
+    }
+}
+
+/// Run every mission against `opts`, `jobs` at a time, and return the
+/// reports **in input order** (the caller renders them serially, so stdout,
+/// JSON and CSV bytes match a `jobs = 1` run exactly).  Synthetic workers
+/// build their own environment; the artifacts environment is built once,
+/// up front, and shared — and if that build fails, every mission fails
+/// immediately instead of retrying the expensive load per mission.
+pub fn run_collect(
+    missions: &[Box<dyn Mission>],
+    spec: &EnvSpec,
+    out_dir: &Path,
+    opts: &RunOptions,
+    jobs: usize,
+) -> Vec<Result<Report>> {
+    let n = missions.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let shared_env: Option<Env> = match spec {
+        EnvSpec::Synthetic => None,
+        EnvSpec::Artifacts { .. } => match spec.build(out_dir) {
+            Ok(e) => Some(e),
+            Err(e) => {
+                // anyhow::Error is not Clone; replicate the rendered chain.
+                let msg = format!("{e:#}");
+                return (0..n).map(|_| Err(anyhow!("building environment: {msg}"))).collect();
+            }
+        },
+    };
+    let jobs = jobs.clamp(1, n);
+    // Serial runs keep registry order end to end; parallel runs schedule
+    // heaviest-first (results are still returned in input order).
+    let mut order: Vec<usize> = (0..n).collect();
+    if jobs > 1 {
+        order.sort_by_key(|&i| (cost_rank(missions[i].name()), i));
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<Report>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| {
+                let mut own_env: Option<Env> = None;
+                loop {
+                    let k = next.fetch_add(1, Ordering::Relaxed);
+                    if k >= n {
+                        break;
+                    }
+                    let i = order[k];
+                    let r = match &shared_env {
+                        Some(e) => missions[i].run(e, opts),
+                        None => {
+                            if own_env.is_none() {
+                                // Synthetic build: cheap (create_dir_all
+                                // only), so a rare failure is retried.
+                                match spec.build(out_dir) {
+                                    Ok(e) => own_env = Some(e),
+                                    Err(e) => {
+                                        *slots[i].lock().unwrap() = Some(Err(e));
+                                        continue;
+                                    }
+                                }
+                            }
+                            missions[i].run(own_env.as_ref().unwrap(), opts)
+                        }
+                    };
+                    *slots[i].lock().unwrap() = Some(r);
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .unwrap()
+                .unwrap_or_else(|| Err(anyhow!("mission was never scheduled")))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mission::registry;
+    use crate::report::to_json;
+
+    #[test]
+    fn cost_rank_orders_composed_missions_first() {
+        assert!(cost_rank("fig10") < cost_rank("fig9"));
+        assert!(cost_rank("headline") < cost_rank("table3"));
+        assert_eq!(cost_rank("unknown"), 8);
+    }
+
+    #[test]
+    fn empty_mission_list_is_a_noop() {
+        let r = run_collect(
+            &[],
+            &EnvSpec::Synthetic,
+            Path::new("target/test-out/runner-empty"),
+            &RunOptions::default(),
+            4,
+        );
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn parallel_reports_match_serial_for_one_mission_pair() {
+        // Full 8-mission parity lives in tests/mission_api.rs; this quick
+        // in-crate check covers the runner plumbing with two light missions.
+        let missions: Vec<Box<dyn Mission>> = registry()
+            .into_iter()
+            .filter(|m| matches!(m.name(), "table3" | "fig7"))
+            .collect();
+        let opts = RunOptions { duration_secs: 60.0, exec_every: 10, ..RunOptions::default() };
+        let serial = run_collect(
+            &missions,
+            &EnvSpec::Synthetic,
+            Path::new("target/test-out/runner-serial"),
+            &opts,
+            1,
+        );
+        let parallel = run_collect(
+            &missions,
+            &EnvSpec::Synthetic,
+            Path::new("target/test-out/runner-parallel"),
+            &opts,
+            2,
+        );
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(
+                to_json(a.as_ref().unwrap()),
+                to_json(b.as_ref().unwrap()),
+                "parallel run diverged"
+            );
+        }
+    }
+}

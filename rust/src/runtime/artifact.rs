@@ -1,0 +1,219 @@
+//! Interned artifact names — the allocation-free half of the direct-dispatch
+//! execution backend.
+//!
+//! Every hot-path execute used to build its artifact name with `format!`
+//! (`head_sp{k}_{tier}`) and then `to_string` it again into the engine
+//! request — two heap allocations per packet before any work happened.  The
+//! artifact namespace is tiny and closed (head/tail × split × tier, plus the
+//! context pair and the full-pipeline baseline), so this module precomputes
+//! every name as a `&'static str` at compile time and maps hot names to
+//! dense *stat slots* so the inline synthetic backend can keep per-artifact
+//! [`super::ExecStats`] in plain atomics instead of a locked map.
+//!
+//! Splits above [`MAX_STATIC_SPLIT`] simply fall back to the old `format!`
+//! path (see [`crate::edge::head_artifact_name`]) — correctness never
+//! depends on the table.
+
+use crate::coordinator::TierId;
+
+/// Highest split index with a precomputed static name.  Paper depth is 8;
+/// 16 leaves generous headroom for deeper manifests.
+pub const MAX_STATIC_SPLIT: usize = 16;
+
+const N_TIERS: usize = 3;
+
+macro_rules! tier_names {
+    ($prefix:tt, $k:tt) => {
+        [
+            concat!($prefix, $k, "_high_accuracy"),
+            concat!($prefix, $k, "_balanced"),
+            concat!($prefix, $k, "_high_throughput"),
+        ]
+    };
+}
+
+macro_rules! split_table {
+    ($prefix:tt) => {
+        [
+            tier_names!($prefix, 0),
+            tier_names!($prefix, 1),
+            tier_names!($prefix, 2),
+            tier_names!($prefix, 3),
+            tier_names!($prefix, 4),
+            tier_names!($prefix, 5),
+            tier_names!($prefix, 6),
+            tier_names!($prefix, 7),
+            tier_names!($prefix, 8),
+            tier_names!($prefix, 9),
+            tier_names!($prefix, 10),
+            tier_names!($prefix, 11),
+            tier_names!($prefix, 12),
+            tier_names!($prefix, 13),
+            tier_names!($prefix, 14),
+            tier_names!($prefix, 15),
+            tier_names!($prefix, 16),
+        ]
+    };
+}
+
+static HEAD_NAMES: [[&str; N_TIERS]; MAX_STATIC_SPLIT + 1] = split_table!("head_sp");
+static TAIL_NAMES: [[&str; N_TIERS]; MAX_STATIC_SPLIT + 1] = split_table!("tail_sp");
+
+/// Precomputed `head_sp{split}_{tier}`; `None` above [`MAX_STATIC_SPLIT`].
+pub fn head_name(split: usize, tier: TierId) -> Option<&'static str> {
+    HEAD_NAMES.get(split).map(|row| row[tier.index()])
+}
+
+/// Precomputed `tail_sp{split}_{tier}`; `None` above [`MAX_STATIC_SPLIT`].
+pub fn tail_name(split: usize, tier: TierId) -> Option<&'static str> {
+    TAIL_NAMES.get(split).map(|row| row[tier.index()])
+}
+
+/// Map an arbitrary artifact name onto its static interned equivalent, so
+/// the engine-thread request can carry a `Cow::Borrowed` instead of an
+/// owned `String`.  Unknown names return `None` (caller clones — cold
+/// path).  Strictly an identity map: a name that parses but is not
+/// byte-equal to its canonical spelling (e.g. `head_sp07_balanced`) is
+/// NOT interned — the request must reach the manifest under the exact
+/// name the caller used.
+pub fn intern_artifact(name: &str) -> Option<&'static str> {
+    match name {
+        "context_edge" => Some("context_edge"),
+        "context_respond" => Some("context_respond"),
+        "full_pipeline" => Some("full_pipeline"),
+        _ => {
+            let (table, rest) = if let Some(r) = name.strip_prefix("head_sp") {
+                (&HEAD_NAMES, r)
+            } else if let Some(r) = name.strip_prefix("tail_sp") {
+                (&TAIL_NAMES, r)
+            } else {
+                return None;
+            };
+            let (digits, tier_name) = rest.split_once('_')?;
+            let split: usize = digits.parse().ok()?;
+            let tier = TierId::from_name(tier_name).ok()?;
+            table.get(split).map(|row| row[tier.index()]).filter(|&s| s == name)
+        }
+    }
+}
+
+/// Intern the (closed) weight-set namespace: `shared`/`orig`/`ft`.
+pub fn intern_set(set: &str) -> Option<&'static str> {
+    match set {
+        "shared" => Some("shared"),
+        "orig" => Some("orig"),
+        "ft" => Some("ft"),
+        _ => None,
+    }
+}
+
+/// Number of dense stat slots the inline backend keeps in atomics:
+/// the context pair plus head/tail × split × tier.
+pub(crate) const N_STAT_SLOTS: usize = 2 + 2 * N_TIERS * (MAX_STATIC_SPLIT + 1);
+
+/// Dense stat slot of a hot artifact name; `None` routes to the (locked)
+/// overflow map — only ever taken by unknown or out-of-table names.
+/// Keyed through [`intern_artifact`] so a non-canonical spelling never
+/// aliases a canonical name's slot.
+pub(crate) fn stat_slot(artifact: &str) -> Option<usize> {
+    match intern_artifact(artifact)? {
+        "context_edge" => Some(0),
+        "context_respond" => Some(1),
+        canonical => {
+            let (base, rest) = if let Some(r) = canonical.strip_prefix("head_sp") {
+                (2, r)
+            } else if let Some(r) = canonical.strip_prefix("tail_sp") {
+                (2 + N_TIERS * (MAX_STATIC_SPLIT + 1), r)
+            } else {
+                return None; // full_pipeline: interned but not synthetic-served
+            };
+            let (digits, tier_name) = rest.split_once('_')?;
+            let split: usize = digits.parse().ok()?;
+            let tier = TierId::from_name(tier_name).ok()?;
+            Some(base + split * N_TIERS + tier.index())
+        }
+    }
+}
+
+/// Inverse of [`stat_slot`] for stats snapshots.
+pub(crate) fn stat_slot_name(slot: usize) -> &'static str {
+    match slot {
+        0 => "context_edge",
+        1 => "context_respond",
+        s => {
+            let s = s - 2;
+            let heads = N_TIERS * (MAX_STATIC_SPLIT + 1);
+            if s < heads {
+                HEAD_NAMES[s / N_TIERS][s % N_TIERS]
+            } else {
+                let s = s - heads;
+                TAIL_NAMES[s / N_TIERS][s % N_TIERS]
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_names_match_format() {
+        for split in 0..=MAX_STATIC_SPLIT {
+            for tier in TierId::ALL {
+                assert_eq!(
+                    head_name(split, tier).unwrap(),
+                    format!("head_sp{split}_{}", tier.name())
+                );
+                assert_eq!(
+                    tail_name(split, tier).unwrap(),
+                    format!("tail_sp{split}_{}", tier.name())
+                );
+            }
+        }
+        assert!(head_name(MAX_STATIC_SPLIT + 1, TierId::Balanced).is_none());
+    }
+
+    #[test]
+    fn intern_roundtrips_and_rejects() {
+        for name in ["context_edge", "context_respond", "full_pipeline", "head_sp3_balanced",
+            "tail_sp8_high_throughput"]
+        {
+            assert_eq!(intern_artifact(name), Some(name), "{name}");
+        }
+        assert!(intern_artifact("head_sp99_balanced").is_none());
+        assert!(intern_artifact("head_spX_balanced").is_none());
+        assert!(intern_artifact("bogus").is_none());
+        // Parsable but non-canonical spellings must NOT be canonicalized:
+        // the request has to reach the manifest under the caller's name.
+        assert!(intern_artifact("head_sp07_balanced").is_none());
+        assert!(intern_artifact("tail_sp+1_balanced").is_none());
+        assert!(stat_slot("head_sp07_balanced").is_none());
+        assert_eq!(intern_set("ft"), Some("ft"));
+        assert!(intern_set("custom").is_none());
+    }
+
+    #[test]
+    fn stat_slots_are_dense_and_invertible() {
+        let mut seen = vec![false; N_STAT_SLOTS];
+        for name in ["context_edge", "context_respond"] {
+            let slot = stat_slot(name).unwrap();
+            assert_eq!(stat_slot_name(slot), name);
+            seen[slot] = true;
+        }
+        for split in 0..=MAX_STATIC_SPLIT {
+            for tier in TierId::ALL {
+                for name in [head_name(split, tier).unwrap(), tail_name(split, tier).unwrap()] {
+                    let slot = stat_slot(name).unwrap();
+                    assert!(slot < N_STAT_SLOTS, "{name} -> {slot}");
+                    assert!(!seen[slot], "slot collision at {name}");
+                    assert_eq!(stat_slot_name(slot), name);
+                    seen[slot] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "unreachable stat slots");
+        assert!(stat_slot("full_pipeline").is_none());
+        assert!(stat_slot("head_sp17_balanced").is_none());
+    }
+}

@@ -1,6 +1,30 @@
-//! The PJRT engine thread and its cloneable [`Engine`] handle.
+//! Execution backends behind the cloneable [`Engine`] handle.
+//!
+//! Two backends serve the same artifact-name surface:
+//!
+//! * **Inline synthetic** ([`Engine::synthetic`]) — the closed-form model in
+//!   [`super::synth`] is pure and stateless, so it executes **in the
+//!   caller's thread**: no spawn, no channel round-trip, no per-call
+//!   allocation for the request envelope.  Per-artifact [`ExecStats`] live
+//!   in dense atomic slots (see [`super::artifact`]), so clones of one
+//!   inline engine execute truly in parallel from any number of threads —
+//!   this is what lets [`crate::cloud::CloudPool`] workers and the `--jobs`
+//!   mission fan-out scale with cores instead of serializing behind one
+//!   engine thread.
+//! * **Threaded** ([`Engine::start`] for PJRT, [`Engine::synthetic_threaded`]
+//!   for the queueing-model synthetic) — XLA handles (`PjRtClient`,
+//!   `Literal`) are `Rc`-based and `!Send`, so all PJRT state stays on a
+//!   dedicated engine thread reached over an mpsc request channel.  Request
+//!   envelopes carry `Cow<'static, str>` names: the closed artifact/set
+//!   namespace is interned, so the steady-state path sends no owned
+//!   `String`s either.
+//!
+//! `EdgePipeline`, `CloudServer`/`CloudPool`, missions and transports are
+//! backend-agnostic — they only see [`Engine`].
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -10,6 +34,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::manifest::Manifest;
 use crate::tensor::Tensor;
 
+use super::artifact::{intern_artifact, intern_set, stat_slot, stat_slot_name, N_STAT_SLOTS};
 use super::loader::load_weight_tensors;
 
 /// How weights reach the device each call — the §Perf lever.
@@ -30,16 +55,25 @@ pub struct ExecStats {
     pub compile_secs: f64,
 }
 
+/// Borrow a stats entry without allocating on the hot path (the name is
+/// cloned only on an artifact's first call).
+fn stats_mut<'a>(stats: &'a mut BTreeMap<String, ExecStats>, name: &str) -> &'a mut ExecStats {
+    if !stats.contains_key(name) {
+        stats.insert(name.to_string(), ExecStats::default());
+    }
+    stats.get_mut(name).unwrap()
+}
+
 enum Request {
     Execute {
-        artifact: String,
-        set: String,
+        artifact: Cow<'static, str>,
+        set: Cow<'static, str>,
         inputs: Vec<Tensor>,
         reply: Sender<Result<Vec<Tensor>>>,
     },
     Preload {
-        artifact: String,
-        set: String,
+        artifact: Cow<'static, str>,
+        set: Cow<'static, str>,
         reply: Sender<Result<()>>,
     },
     Stats {
@@ -49,11 +83,88 @@ enum Request {
     Shutdown,
 }
 
-/// Cloneable handle to the engine thread.
+/// Intern a request field: the closed artifact/set namespace borrows, an
+/// unknown name (cold path) clones.
+fn interned(name: &str, table: fn(&str) -> Option<&'static str>) -> Cow<'static, str> {
+    match table(name) {
+        Some(s) => Cow::Borrowed(s),
+        None => Cow::Owned(name.to_string()),
+    }
+}
+
+/// Cloneable handle over one execution backend.
 #[derive(Clone)]
 pub struct Engine {
+    backend: Backend,
+}
+
+#[derive(Clone)]
+enum Backend {
+    /// Caller-thread synthetic execution over shared atomic stats.
+    Inline(Arc<InlineSynth>),
+    /// Dedicated engine thread reached over an mpsc channel.
+    Threaded(ThreadedHandle),
+}
+
+/// Shared state of the inline synthetic backend: only the statistics —
+/// execution itself is pure.
+struct InlineSynth {
+    calls: [AtomicU64; N_STAT_SLOTS],
+    nanos: [AtomicU64; N_STAT_SLOTS],
+    /// Overflow for names outside the dense slot table (unknown artifacts,
+    /// splits beyond the static range) — never hit on the packet hot path.
+    other: Mutex<BTreeMap<String, ExecStats>>,
+}
+
+impl InlineSynth {
+    fn new() -> Self {
+        Self {
+            calls: std::array::from_fn(|_| AtomicU64::new(0)),
+            nanos: std::array::from_fn(|_| AtomicU64::new(0)),
+            other: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    fn execute(&self, artifact: &str, set: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let t0 = Instant::now();
+        let r = super::synth::execute_synthetic(artifact, set, inputs);
+        let dt = t0.elapsed().as_nanos() as u64;
+        match stat_slot(artifact) {
+            Some(slot) => {
+                self.calls[slot].fetch_add(1, Ordering::Relaxed);
+                self.nanos[slot].fetch_add(dt, Ordering::Relaxed);
+            }
+            None => {
+                let mut other = self.other.lock().unwrap();
+                let st = stats_mut(&mut other, artifact);
+                st.calls += 1;
+                st.total_secs += dt as f64 / 1e9;
+            }
+        }
+        r
+    }
+
+    fn snapshot(&self) -> BTreeMap<String, ExecStats> {
+        let mut map = self.other.lock().unwrap().clone();
+        for slot in 0..N_STAT_SLOTS {
+            let calls = self.calls[slot].load(Ordering::Relaxed);
+            if calls == 0 {
+                continue;
+            }
+            let total_secs = self.nanos[slot].load(Ordering::Relaxed) as f64 / 1e9;
+            map.insert(
+                stat_slot_name(slot).to_string(),
+                ExecStats { calls, total_secs, compile_secs: 0.0 },
+            );
+        }
+        map
+    }
+}
+
+#[derive(Clone)]
+struct ThreadedHandle {
     tx: Sender<Request>,
-    // Keep the join handle so drop of the *last* Engine shuts the thread down.
+    // Keep the join handle so drop of the *last* handle shuts the thread down.
     _shared: Arc<EngineShared>,
 }
 
@@ -71,42 +182,31 @@ impl Drop for EngineShared {
     }
 }
 
-impl Engine {
-    /// Spawn an engine thread backed by the closed-form synthetic model
-    /// (`runtime::synth`) — no artifacts, no PJRT.  Serves the same
-    /// artifact-name surface as the real engine so missions, the cloud
-    /// pool and the fleet scheduler run unmodified; see DESIGN.md
-    /// "Scenario library & artifact-free sim path".
-    pub fn synthetic() -> Self {
+impl ThreadedHandle {
+    fn spawn(
+        name: &str,
+        worker: impl FnOnce(std::sync::mpsc::Receiver<Request>) + Send + 'static,
+    ) -> Result<Self> {
         let (tx, rx) = channel::<Request>();
         let join = std::thread::Builder::new()
-            .name("avery-synth".into())
-            .spawn(move || synth_worker(rx))
-            .expect("spawning synthetic engine thread");
+            .name(name.to_string())
+            .spawn(move || worker(rx))
+            .with_context(|| format!("spawning {name} thread"))?;
         let shared = Arc::new(EngineShared { tx: tx.clone(), join: Mutex::new(Some(join)) });
-        Engine { tx, _shared: shared }
+        Ok(Self { tx, _shared: shared })
     }
 
-    /// Spawn the engine thread over a manifest. Artifacts compile lazily.
-    pub fn start(manifest: Manifest, mode: ExecMode) -> Result<Self> {
-        let (tx, rx) = channel::<Request>();
-        let (ready_tx, ready_rx) = channel::<Result<()>>();
-        let join = std::thread::Builder::new()
-            .name("avery-pjrt".into())
-            .spawn(move || worker(manifest, mode, rx, ready_tx))
-            .context("spawning engine thread")?;
-        ready_rx.recv().context("engine thread died during init")??;
-        let shared = Arc::new(EngineShared { tx: tx.clone(), join: Mutex::new(Some(join)) });
-        Ok(Engine { tx, _shared: shared })
-    }
-
-    /// Execute one artifact synchronously with the given weight set.
-    pub fn execute(&self, artifact: &str, set: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+    fn execute_owned(
+        &self,
+        artifact: &str,
+        set: &str,
+        inputs: Vec<Tensor>,
+    ) -> Result<Vec<Tensor>> {
         let (reply, rx) = channel();
         self.tx
             .send(Request::Execute {
-                artifact: artifact.to_string(),
-                set: set.to_string(),
+                artifact: interned(artifact, intern_artifact),
+                set: interned(set, intern_set),
                 inputs,
                 reply,
             })
@@ -114,31 +214,119 @@ impl Engine {
         rx.recv().map_err(|_| anyhow!("engine dropped reply"))?
     }
 
-    /// Compile an artifact and upload its weights ahead of time.
-    pub fn preload(&self, artifact: &str, set: &str) -> Result<()> {
+    fn preload(&self, artifact: &str, set: &str) -> Result<()> {
         let (reply, rx) = channel();
         self.tx
-            .send(Request::Preload { artifact: artifact.to_string(), set: set.to_string(), reply })
+            .send(Request::Preload {
+                artifact: interned(artifact, intern_artifact),
+                set: interned(set, intern_set),
+                reply,
+            })
             .map_err(|_| anyhow!("engine thread gone"))?;
         rx.recv().map_err(|_| anyhow!("engine dropped reply"))?
     }
 
-    /// Per-artifact wall-clock stats (perf pass).
-    pub fn stats(&self) -> BTreeMap<String, ExecStats> {
+    fn stats(&self) -> BTreeMap<String, ExecStats> {
         let (reply, rx) = channel();
         if self.tx.send(Request::Stats { reply }).is_err() {
             return BTreeMap::new();
         }
         rx.recv().unwrap_or_default()
     }
+}
 
-    /// Switch weight-delivery mode (affects artifacts loaded afterwards).
+impl Engine {
+    /// The inline synthetic backend — no artifacts, no PJRT, no engine
+    /// thread: every execute runs the closed-form model
+    /// (`runtime::synth`) in the caller's thread.  Serves the same
+    /// artifact-name surface as the real engine so missions, the cloud
+    /// pool and the fleet scheduler run unmodified; see DESIGN.md
+    /// "Execution backends & parallel runner".
+    pub fn synthetic() -> Self {
+        Engine { backend: Backend::Inline(Arc::new(InlineSynth::new())) }
+    }
+
+    /// The synthetic model behind a dedicated engine thread — the
+    /// pre-backend-split dispatch shape, kept for inline/threaded parity
+    /// tests and as an explicit single-consumer queueing model.
+    pub fn synthetic_threaded() -> Self {
+        let handle = ThreadedHandle::spawn("avery-synth", synth_worker)
+            .expect("spawning synthetic engine thread");
+        Engine { backend: Backend::Threaded(handle) }
+    }
+
+    /// Spawn the PJRT engine thread over a manifest. Artifacts compile
+    /// lazily.
+    pub fn start(manifest: Manifest, mode: ExecMode) -> Result<Self> {
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let handle = ThreadedHandle::spawn("avery-pjrt", move |rx| {
+            worker(manifest, mode, rx, ready_tx)
+        })?;
+        ready_rx.recv().context("engine thread died during init")??;
+        Ok(Engine { backend: Backend::Threaded(handle) })
+    }
+
+    /// True when executes run inline in the caller's thread (no channel
+    /// round-trip) — the property [`crate::cloud::CloudPool::process_sync`]
+    /// exploits for its direct-call fast path.
+    pub fn is_inline(&self) -> bool {
+        matches!(self.backend, Backend::Inline(_))
+    }
+
+    /// Execute one artifact synchronously with the given weight set.
+    /// Inputs are borrowed: the inline backend reads them in place; the
+    /// threaded backend clones them into its request envelope.  Call sites
+    /// that own their inputs anyway should use [`Engine::execute_owned`],
+    /// which moves them into the envelope instead.
+    pub fn execute(&self, artifact: &str, set: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        match &self.backend {
+            Backend::Inline(s) => s.execute(artifact, set, inputs),
+            Backend::Threaded(t) => t.execute_owned(artifact, set, inputs.to_vec()),
+        }
+    }
+
+    /// [`Engine::execute`] for call sites that own their inputs: the inline
+    /// backend still only borrows, the threaded backend moves the vector
+    /// into its request envelope — no per-call tensor clone on either path.
+    pub fn execute_owned(
+        &self,
+        artifact: &str,
+        set: &str,
+        inputs: Vec<Tensor>,
+    ) -> Result<Vec<Tensor>> {
+        match &self.backend {
+            Backend::Inline(s) => s.execute(artifact, set, &inputs),
+            Backend::Threaded(t) => t.execute_owned(artifact, set, inputs),
+        }
+    }
+
+    /// Compile an artifact and upload its weights ahead of time (no-op for
+    /// the synthetic backends — they have nothing to warm).
+    pub fn preload(&self, artifact: &str, set: &str) -> Result<()> {
+        match &self.backend {
+            Backend::Inline(_) => Ok(()),
+            Backend::Threaded(t) => t.preload(artifact, set),
+        }
+    }
+
+    /// Per-artifact wall-clock stats (perf pass).
+    pub fn stats(&self) -> BTreeMap<String, ExecStats> {
+        match &self.backend {
+            Backend::Inline(s) => s.snapshot(),
+            Backend::Threaded(t) => t.stats(),
+        }
+    }
+
+    /// Switch weight-delivery mode (affects artifacts loaded afterwards;
+    /// meaningless for the synthetic backends).
     pub fn set_mode(&self, mode: ExecMode) {
-        let _ = self.tx.send(Request::SetMode(mode));
+        if let Backend::Threaded(t) = &self.backend {
+            let _ = t.tx.send(Request::SetMode(mode));
+        }
     }
 }
 
-/// Request loop of the synthetic engine thread: every execute is answered
+/// Request loop of the threaded synthetic engine: every execute is answered
 /// by the deterministic closed-form model; preloads are no-ops.
 fn synth_worker(rx: std::sync::mpsc::Receiver<Request>) {
     let mut stats: BTreeMap<String, ExecStats> = BTreeMap::new();
@@ -155,7 +343,7 @@ fn synth_worker(rx: std::sync::mpsc::Receiver<Request>) {
             Request::Execute { artifact, set, inputs, reply } => {
                 let t0 = Instant::now();
                 let r = super::synth::execute_synthetic(&artifact, &set, &inputs);
-                let st = stats.entry(artifact).or_default();
+                let st = stats_mut(&mut stats, &artifact);
                 st.calls += 1;
                 st.total_secs += t0.elapsed().as_secs_f64();
                 let _ = reply.send(r);
@@ -201,17 +389,20 @@ fn worker(
                 let _ = reply.send(stats.clone());
             }
             Request::Preload { artifact, set, reply } => {
-                let r = ensure_loaded(&client, &manifest, &mut cache, &mut stats, &artifact, &set, mode)
-                    .map(|_| ());
+                let r =
+                    ensure_loaded(&client, &manifest, &mut cache, &mut stats, &artifact, &set, mode)
+                        .map(|_| ());
                 let _ = reply.send(r);
             }
             Request::Execute { artifact, set, inputs, reply } => {
                 let r = (|| -> Result<Vec<Tensor>> {
-                    ensure_loaded(&client, &manifest, &mut cache, &mut stats, &artifact, &set, mode)?;
-                    let loaded = cache.get(&artifact).unwrap();
+                    ensure_loaded(
+                        &client, &manifest, &mut cache, &mut stats, &artifact, &set, mode,
+                    )?;
+                    let loaded = cache.get(artifact.as_ref()).unwrap();
                     let t0 = Instant::now();
                     let outs = run_one(&client, loaded, &set, &inputs, mode)?;
-                    let st = stats.entry(artifact.clone()).or_default();
+                    let st = stats_mut(&mut stats, &artifact);
                     st.calls += 1;
                     st.total_secs += t0.elapsed().as_secs_f64();
                     Ok(outs)
@@ -240,8 +431,7 @@ fn ensure_loaded(
         .map_err(|e| anyhow!("parsing {}: {e}", spec.hlo.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {artifact}: {e}"))?;
-        stats.entry(artifact.to_string()).or_default().compile_secs +=
-            t0.elapsed().as_secs_f64();
+        stats_mut(stats, artifact).compile_secs += t0.elapsed().as_secs_f64();
         cache.insert(
             artifact.to_string(),
             Loaded { exe, literals: BTreeMap::new(), buffers: BTreeMap::new() },
@@ -350,4 +540,72 @@ fn run_one(
         outs.push(Tensor::from_literal(&p, dims)?);
     }
     Ok(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::tokenize;
+
+    fn scene() -> Tensor {
+        let img = 4;
+        let mut data = vec![0.0f32; img * img * 3];
+        for i in 0..img * img / 2 {
+            data[i * 3] = 1.0;
+        }
+        Tensor::f32(vec![img, img, 3], data).unwrap()
+    }
+
+    #[test]
+    fn inline_backend_executes_and_counts_stats() {
+        let e = Engine::synthetic();
+        assert!(e.is_inline());
+        let outs = e.execute("head_sp1_balanced", "shared", std::slice::from_ref(&scene()));
+        assert_eq!(outs.unwrap().len(), 3);
+        e.preload("head_sp1_balanced", "shared").unwrap();
+        let stats = e.stats();
+        let st = stats.get("head_sp1_balanced").expect("stats slot recorded");
+        assert_eq!(st.calls, 1);
+        assert!(st.total_secs >= 0.0);
+        // Errors (unknown artifacts) are still counted, via the overflow map.
+        assert!(e.execute("bogus", "shared", &[]).is_err());
+        assert_eq!(e.stats().get("bogus").map(|s| s.calls), Some(1));
+    }
+
+    #[test]
+    fn inline_stats_are_shared_across_clones_and_threads() {
+        let e = Engine::synthetic();
+        let img = scene();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let eng = e.clone();
+                let img = &img;
+                s.spawn(move || {
+                    for _ in 0..8 {
+                        eng.execute("context_edge", "shared", std::slice::from_ref(img)).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(e.stats().get("context_edge").map(|s| s.calls), Some(32));
+    }
+
+    #[test]
+    fn threaded_synthetic_matches_inline() {
+        let inline = Engine::synthetic();
+        let threaded = Engine::synthetic_threaded();
+        assert!(!threaded.is_inline());
+        let img = scene();
+        let a = inline.execute("head_sp2_high_accuracy", "shared", std::slice::from_ref(&img));
+        let b = threaded.execute("head_sp2_high_accuracy", "shared", std::slice::from_ref(&img));
+        assert_eq!(a.unwrap(), b.unwrap());
+        let pids = Tensor::i32(vec![16], tokenize("highlight the stranded people")).unwrap();
+        let head = inline
+            .execute("head_sp2_high_accuracy", "shared", std::slice::from_ref(&img))
+            .unwrap();
+        let tin = [head[0].clone(), head[1].clone(), pids];
+        let ta = inline.execute("tail_sp2_high_accuracy", "ft", &tin).unwrap();
+        let tb = threaded.execute("tail_sp2_high_accuracy", "ft", &tin).unwrap();
+        assert_eq!(ta, tb);
+    }
 }

@@ -1,23 +1,32 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them from the L3 hot path.
+//! Execution runtime: the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and the artifact-free closed-form model, behind
+//! one backend-agnostic [`Engine`] handle.
 //!
-//! XLA handles (`PjRtClient`, `PjRtLoadedExecutable`, `Literal`) are
-//! `Rc`-based and therefore `!Send`, so all PJRT state lives on a dedicated
-//! **engine thread**; the rest of the system talks to it through an mpsc
-//! request channel via the cloneable [`Engine`] handle.  Artifacts are
-//! compiled lazily on first use and cached; weight binaries are uploaded to
-//! device buffers once per (artifact, weight-set) and reused by every call
-//! (`execute_b`), so the steady-state request path moves only the runtime
-//! inputs.
+//! Two backends (see DESIGN.md "Execution backends & parallel runner"):
 //!
-//! [`Engine::synthetic`] swaps the PJRT worker for the closed-form model in
-//! [`synth`] — the artifact-free sim path used by `Env::synthetic`, the
-//! scenario CLI fallback and the un-gated control-plane tests.
+//! * **PJRT, threaded** — XLA handles (`PjRtClient`,
+//!   `PjRtLoadedExecutable`, `Literal`) are `Rc`-based and therefore
+//!   `!Send`, so all PJRT state lives on a dedicated **engine thread**; the
+//!   rest of the system talks to it through an mpsc request channel whose
+//!   envelopes carry interned (`&'static str`) artifact/set names — no
+//!   per-call `String`s.  Artifacts are compiled lazily on first use and
+//!   cached; weight binaries are uploaded to device buffers once per
+//!   (artifact, weight-set) and reused by every call (`execute_b`), so the
+//!   steady-state request path moves only the runtime inputs.
+//! * **Synthetic, inline** — [`Engine::synthetic`] executes the pure
+//!   closed-form model in [`synth`] **in the caller's thread**: no engine
+//!   thread, no channel round-trip, atomic per-artifact stats.  Clones of
+//!   one inline engine execute truly in parallel, which is what makes the
+//!   cloud pool and the `--jobs` mission fan-out scale with cores.
+//!   [`Engine::synthetic_threaded`] keeps the old single-consumer dispatch
+//!   shape for parity tests and queueing-model experiments.
 
+mod artifact;
 mod engine;
 mod loader;
 mod synth;
 
+pub use artifact::{head_name, intern_artifact, intern_set, tail_name, MAX_STATIC_SPLIT};
 pub use engine::{Engine, ExecMode, ExecStats};
 pub use loader::{load_weight_tensors, WeightFile};
 pub use synth::execute_synthetic;

@@ -92,61 +92,68 @@ fn parse_split_tier(rest: &str) -> Result<(usize, TierId)> {
     Ok((split, tier))
 }
 
-/// Extract the two per-class planes from an (img, img, 3) scene image.
-fn planes(image: &Tensor) -> Result<(usize, Vec<f32>, Vec<f32>)> {
+/// Validate an (img, img, 3) scene image and return its side length.
+fn scene_side(image: &Tensor) -> Result<usize> {
     let shape = image.shape();
     if shape.len() != 3 || shape[2] != 3 || shape[0] != shape[1] {
         bail!("synthetic head wants (img, img, 3) image, got {shape:?}");
     }
-    let img = shape[0];
-    let data = image.as_f32()?;
-    let n = img * img;
-    let mut p0 = vec![0.0f32; n];
-    let mut p1 = vec![0.0f32; n];
+    Ok(shape[0])
+}
+
+/// Per-class on-pixel counts of an (img, img, 3) scene, read straight from
+/// the interleaved channels — the packet hot path allocates no intermediate
+/// plane buffers (the old `planes()` cost two `Vec`s per call).
+fn plane_counts(data: &[f32], n: usize) -> (usize, usize) {
+    let (mut on0, mut on1) = (0usize, 0usize);
     for i in 0..n {
-        p0[i] = data[i * 3];
-        p1[i] = data[i * 3 + 1];
+        on0 += (data[i * 3] > 0.5) as usize;
+        on1 += (data[i * 3 + 1] > 0.5) as usize;
     }
-    Ok((img, p0, p1))
+    (on0, on1)
 }
 
 /// CLIP summary rows `(2, 4)`: `[fraction, presence flag, 0.25, 0]` per
 /// class.  The constant third column keeps the per-packet quantizer scale
 /// bounded away from zero even for empty scenes.
-fn clip_rows(p0: &[f32], p1: &[f32]) -> Result<Tensor> {
-    let row = |p: &[f32]| {
-        let on = p.iter().filter(|&&v| v > 0.5).count();
-        let frac = on as f32 / p.len().max(1) as f32;
+fn clip_rows(on0: usize, on1: usize, n: usize) -> Result<Tensor> {
+    let row = |on: usize| {
+        let frac = on as f32 / n.max(1) as f32;
         let flag = if on > 0 { 1.0f32 } else { 0.0 };
         [frac, flag, 0.25, 0.0]
     };
-    let (a, b) = (row(p0), row(p1));
+    let (a, b) = (row(on0), row(on1));
     Tensor::f32(vec![2, 4], a.iter().chain(b.iter()).copied().collect())
 }
 
 /// Serve one synthetic execution request.  Artifact names match aot.py's.
+///
+/// Allocation discipline: this runs inline in the caller's thread on every
+/// simulated packet, so the only `Vec`s built here are the ones the output
+/// [`Tensor`]s must own — no intermediate plane/scratch buffers.
 pub fn execute_synthetic(artifact: &str, set: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
     if let Some(rest) = artifact.strip_prefix("head_sp") {
         let (_split, _tier) = parse_split_tier(rest)?;
         if inputs.len() != 1 {
             bail!("head wants 1 input, got {}", inputs.len());
         }
-        let (img, p0, p1) = planes(&inputs[0])?;
+        let img = scene_side(&inputs[0])?;
+        let data = inputs[0].as_f32()?;
         let n = img * img;
         let mut code = vec![0.0f32; 2 * n];
+        let (mut on0, mut on1) = (0usize, 0usize);
         for i in 0..n {
-            code[i] = if p0[i] > 0.5 { 1.0 } else { -1.0 };
-            code[n + i] = if p1[i] > 0.5 { 1.0 } else { -1.0 };
+            let a = data[i * 3] > 0.5;
+            let b = data[i * 3 + 1] > 0.5;
+            on0 += a as usize;
+            on1 += b as usize;
+            code[i] = if a { 1.0 } else { -1.0 };
+            code[n + i] = if b { 1.0 } else { -1.0 };
         }
-        let clip = clip_rows(&p0, &p1)?;
+        let clip = clip_rows(on0, on1, n)?;
         let pooled = Tensor::f32(
             vec![1, 4],
-            vec![
-                p0.iter().filter(|&&v| v > 0.5).count() as f32 / n as f32,
-                p1.iter().filter(|&&v| v > 0.5).count() as f32 / n as f32,
-                0.0,
-                0.0,
-            ],
+            vec![on0 as f32 / n as f32, on1 as f32 / n as f32, 0.0, 0.0],
         )?;
         return Ok(vec![Tensor::f32(vec![2, n], code)?, clip, pooled]);
     }
@@ -198,8 +205,10 @@ pub fn execute_synthetic(artifact: &str, set: &str, inputs: &[Tensor]) -> Result
             if inputs.len() != 1 {
                 bail!("context_edge wants 1 input, got {}", inputs.len());
             }
-            let (_img, p0, p1) = planes(&inputs[0])?;
-            Ok(vec![clip_rows(&p0, &p1)?])
+            let img = scene_side(&inputs[0])?;
+            let n = img * img;
+            let (on0, on1) = plane_counts(inputs[0].as_f32()?, n);
+            Ok(vec![clip_rows(on0, on1, n)?])
         }
         "context_respond" => {
             if inputs.len() != 2 {

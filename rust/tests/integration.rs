@@ -136,7 +136,7 @@ fn golden_parity_every_artifact() {
                 .zip(&spec.inputs)
                 .map(|(t, ispec)| reshape_like(t, &ispec.dims))
                 .collect();
-            let outs = eng.execute(name, set, inputs).unwrap();
+            let outs = eng.execute(name, set, &inputs).unwrap();
             assert_eq!(outs.len(), want_outputs.len(), "{name} output arity");
             for (o, want) in outs.iter().zip(&want_outputs) {
                 let got = o.as_f32().unwrap();

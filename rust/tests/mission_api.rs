@@ -7,11 +7,19 @@
 //!   through the JSON sink: schema-stable key layout, parseable by a
 //!   strict JSON grammar, byte-deterministic per seed, and free of
 //!   wall-clock or filesystem-path leakage.
+//! * **Backend parity** — the inline synthetic backend and the threaded
+//!   engine return identical tensors for every artifact class, and the
+//!   parallel runner (`avery all --jobs 8`) reproduces `--jobs 1` reports
+//!   byte for byte.
 
 use std::path::Path;
 
-use avery::mission::{find, registry, Env, RunOptions};
+use avery::coordinator::TierId;
+use avery::dataset::{Corpus, Dataset};
+use avery::mission::{find, registry, run_collect, Env, EnvSpec, Mission, RunOptions};
 use avery::report::to_json;
+use avery::runtime::Engine;
+use avery::tensor::Tensor;
 
 /// The nine legacy CLI subcommands, in pre-API `avery all` order.
 const LEGACY_SUBCOMMANDS: [&str; 9] = [
@@ -104,6 +112,86 @@ fn scenario_report_json_names_its_csv_series() {
         "scenario_urban-flood_epochs",
     ] {
         assert!(j.contains(&format!("\"name\":\"{series}\"")), "missing series {series}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend parity: inline synthetic == threaded engine, --jobs 8 == --jobs 1
+// ---------------------------------------------------------------------------
+
+#[test]
+fn inline_and_threaded_synthetic_backends_are_tensor_identical() {
+    let inline = Engine::synthetic();
+    let threaded = Engine::synthetic_threaded();
+    assert!(inline.is_inline(), "Engine::synthetic must dispatch inline");
+    assert!(!threaded.is_inline());
+    let ds = Dataset::synthetic(Corpus::Flood, 3, 16, 0xF10D0);
+    let intent = avery::coordinator::classify_intent("highlight the stranded people");
+    let pids = Tensor::i32(vec![intent.token_ids.len()], intent.token_ids.clone()).unwrap();
+    for scene in &ds.scenes {
+        let img = std::slice::from_ref(&scene.image);
+        for (split, tier) in [
+            (1, TierId::HighAccuracy),
+            (2, TierId::Balanced),
+            (4, TierId::HighThroughput),
+        ] {
+            let head = avery::edge::head_artifact(split, tier);
+            let a = inline.execute(&head, "shared", img).unwrap();
+            let b = threaded.execute(&head, "shared", img).unwrap();
+            assert_eq!(a, b, "{head}");
+            let tail = avery::edge::tail_artifact(split, tier);
+            for set in ["orig", "ft"] {
+                let tin = [a[0].clone(), a[1].clone(), pids.clone()];
+                let ta = inline.execute(&tail, set, &tin).unwrap();
+                let tb = threaded.execute(&tail, set, &tin).unwrap();
+                assert_eq!(ta, tb, "{tail}.{set}");
+            }
+        }
+        let ca = inline.execute("context_edge", "shared", img).unwrap();
+        let cb = threaded.execute("context_edge", "shared", img).unwrap();
+        assert_eq!(ca, cb, "context_edge");
+        let rin = [ca[0].clone(), pids.clone()];
+        let ra = inline.execute("context_respond", "ft", &rin).unwrap();
+        let rb = threaded.execute("context_respond", "ft", &rin).unwrap();
+        assert_eq!(ra, rb, "context_respond");
+    }
+}
+
+#[test]
+fn avery_all_jobs8_reports_match_jobs1_byte_for_byte() {
+    // The in-process equivalent of `avery all --jobs 8 --format json` vs
+    // `--jobs 1`: the runner computes in parallel, rendering is serial in
+    // registry order, and reports are wall-clock/path-free — so the JSON
+    // (which embeds every CSV series) must be byte-identical.
+    let missions: Vec<Box<dyn Mission>> =
+        registry().into_iter().filter(|m| !m.needs_artifacts()).collect();
+    assert_eq!(missions.len(), 8, "artifact-free mission set drifted");
+    let opts = RunOptions {
+        duration_secs: 120.0,
+        exec_every: 10,
+        seed: 7,
+        ..RunOptions::default()
+    };
+    let serial = run_collect(
+        &missions,
+        &EnvSpec::Synthetic,
+        Path::new("target/test-out/jobs-serial"),
+        &opts,
+        1,
+    );
+    let parallel = run_collect(
+        &missions,
+        &EnvSpec::Synthetic,
+        Path::new("target/test-out/jobs-parallel"),
+        &opts,
+        8,
+    );
+    assert_eq!(serial.len(), parallel.len());
+    for ((a, b), m) in serial.iter().zip(&parallel).zip(&missions) {
+        let ja = to_json(a.as_ref().unwrap_or_else(|e| panic!("{} serial: {e:#}", m.name())));
+        let jb =
+            to_json(b.as_ref().unwrap_or_else(|e| panic!("{} parallel: {e:#}", m.name())));
+        assert_eq!(ja, jb, "mission `{}` diverged under --jobs 8", m.name());
     }
 }
 
