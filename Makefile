@@ -12,16 +12,19 @@ build:
 test:
 	cargo build --release && cargo test -q
 
-# The perf-trajectory benches: the simulation kernel (writes
-# BENCH_simkernel.json — the machine-readable baseline CI's bench-smoke
-# job checks) plus the L3 hot-path microbenchmarks.  Both run artifact-free.
+# The perf-trajectory benches: the simulation kernel and the cloud serving
+# layer (write BENCH_simkernel.json / BENCH_serving.json — the
+# machine-readable baselines CI's bench-smoke / serving-smoke jobs check)
+# plus the L3 hot-path microbenchmarks.  All run artifact-free.
 bench:
 	cargo bench --bench simkernel -- --out BENCH_simkernel.json
+	cargo bench --bench serving -- --out BENCH_serving.json
 	cargo bench --bench hotpath
 
-# CI-sized variant of the same pair.
+# CI-sized variant of the same set.
 bench-quick:
 	cargo bench --bench simkernel -- --quick --out BENCH_simkernel.json
+	cargo bench --bench serving -- --quick --out BENCH_serving.json
 	cargo bench --bench hotpath
 
 # Every bench target, including the artifact-gated figure benches.

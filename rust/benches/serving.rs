@@ -1,0 +1,241 @@
+//! Bench: the cloud serving layer (DESIGN.md "Cloud serving layer") —
+//! machine-readable `BENCH_serving.json` for the perf trajectory, parsed by
+//! CI's `serving-smoke` job against `ci/bench_floor.json`.
+//!
+//! Sections:
+//!
+//! * **batch_sweep** — served packets/sec through the pool's queued path at
+//!   `batch_max` ∈ {1, 2, 4, 8, 16}: one worker over a *threaded* synthetic
+//!   engine (the engine-thread shape PJRT serving runs with), so the sweep
+//!   measures exactly what micro-batching amortizes — the per-request queue
+//!   pop, engine channel round-trip and reply.
+//! * **cache** — fleet missions at N ∈ {4, 16, 64} UAVs with the
+//!   content-addressed response cache enabled: hit rate vs fleet size
+//!   (swarms over the same disaster zone produce redundant streams).
+//! * **overload** — a bounded queue under a submission flood (shed policy):
+//!   admitted vs shed.
+//!
+//! Usage: `cargo bench --bench serving -- [--quick] [--out PATH]`
+//! (`--quick` is what CI runs; default writes `BENCH_serving.json`).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use avery::bench::header;
+use avery::cloud::{AdmissionPolicy, CloudPool, ServingConfig, Ticket};
+use avery::coordinator::{classify_intent, Lut, TierId};
+use avery::dataset::{Corpus, Dataset};
+use avery::edge::EdgePipeline;
+use avery::energy::DeviceModel;
+use avery::mission::{run_fleet, Env, RunOptions};
+use avery::packet::Packet;
+use avery::runtime::Engine;
+
+struct Args {
+    quick: bool,
+    out: String,
+}
+
+fn parse_args() -> Args {
+    let mut args = Args { quick: false, out: "BENCH_serving.json".to_string() };
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--quick" => args.quick = true,
+            "--out" => {
+                if let Some(v) = argv.get(i + 1) {
+                    args.out = v.clone();
+                    i += 1;
+                }
+            }
+            other => {
+                if let Some(v) = other.strip_prefix("--out=") {
+                    args.out = v.to_string();
+                }
+                // `cargo bench` passes `--bench`; ignore unknown flags.
+            }
+        }
+        i += 1;
+    }
+    args
+}
+
+/// Distinct-scene Insight packets, all batch-compatible (same tier, split
+/// and weight set).
+fn build_packets(n_scenes: usize, img: usize) -> (Vec<Packet>, Vec<i32>) {
+    let engine = Engine::synthetic();
+    let ds = Dataset::synthetic(Corpus::Flood, n_scenes, img, 0xF10D0);
+    let mut edge = EdgePipeline::new(engine, DeviceModel::jetson_mode_30w(8), Lut::paper());
+    let pkts = ds
+        .scenes
+        .iter()
+        .map(|s| edge.capture_insight(s, 1, TierId::Balanced, 0.0).unwrap().0)
+        .collect();
+    (pkts, classify_intent("highlight the stranded people").token_ids)
+}
+
+/// Served packets/sec through the queued path at one `batch_max` setting.
+fn sweep_pps(batch: usize, pkts: &[Packet], ids: &[i32], total: usize) -> f64 {
+    let pool = CloudPool::with_config(
+        vec![Engine::synthetic_threaded()],
+        ServingConfig { batch_max: batch, ..ServingConfig::default() },
+    );
+    for p in pkts.iter().take(64.min(pkts.len())) {
+        pool.process_sync(p, ids, "ft").expect("warmup");
+    }
+    let t0 = Instant::now();
+    let tickets: Vec<Ticket> = (0..total)
+        .map(|i| pool.submit(&pkts[i % pkts.len()], ids, "ft").expect("submit"))
+        .collect();
+    for t in tickets {
+        t.wait().expect("wait");
+    }
+    total as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// One cache-enabled fleet mission; returns (hit_rate, hits, misses,
+/// evictions).
+fn fleet_cache(n: usize, duration: f64, out_dir: &Path) -> Result<(f64, u64, u64, u64)> {
+    let env = Env::synthetic(out_dir)?;
+    let opts = RunOptions {
+        duration_secs: duration,
+        uavs: Some(n),
+        workers: Some(2),
+        seed: 7,
+        batch_max: Some(8),
+        cache_entries: Some(512),
+        cache_ttl: Some(240.0),
+        ..RunOptions::default()
+    };
+    let (_run, report) = run_fleet(&env, &opts)?;
+    let g = |k: &str| report.scalar_value(k).unwrap_or(0.0);
+    Ok((
+        g("cache_hit_rate"),
+        g("cache_hits") as u64,
+        g("cache_misses") as u64,
+        g("cache_evictions") as u64,
+    ))
+}
+
+/// Flood a bounded queue from several submitter threads; returns
+/// (admitted, shed).
+fn overload(
+    pkts: &[Packet],
+    ids: &[i32],
+    submitters: usize,
+    per: usize,
+    depth: usize,
+) -> (u64, u64) {
+    let pool = CloudPool::with_config(
+        vec![Engine::synthetic_threaded()],
+        ServingConfig {
+            batch_max: 4,
+            queue_depth: depth,
+            admission: AdmissionPolicy::Shed,
+            ..ServingConfig::default()
+        },
+    );
+    std::thread::scope(|s| {
+        for t in 0..submitters {
+            let pool = &pool;
+            s.spawn(move || {
+                let mut tickets = Vec::with_capacity(per);
+                for i in 0..per {
+                    if let Ok(tk) = pool.submit(&pkts[(t * per + i) % pkts.len()], ids, "ft") {
+                        tickets.push(tk);
+                    }
+                }
+                for tk in tickets {
+                    let _ = tk.wait();
+                }
+            });
+        }
+    });
+    let st = pool.stats();
+    (st.completed, st.shed)
+}
+
+fn jf(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.4}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    let mode = if args.quick { "quick" } else { "full" };
+    let sweep_total = if args.quick { 4_000 } else { 20_000 };
+    let fleet_duration = if args.quick { 120.0 } else { 600.0 };
+    let overload_per = if args.quick { 1_500 } else { 6_000 };
+
+    // ---- batch-size sweep -------------------------------------------------
+    header("micro-batch sweep: served packets/sec (1 worker, threaded synthetic)");
+    let (pkts, ids) = build_packets(32, 16);
+    let mut sweep: Vec<(usize, f64)> = Vec::new();
+    for batch in [1usize, 2, 4, 8, 16] {
+        let pps = sweep_pps(batch, &pkts, &ids, sweep_total);
+        println!("batch_max {batch:>2}: {pps:>12.0} packets/s");
+        sweep.push((batch, pps));
+    }
+    let pps_of = |b: usize| sweep.iter().find(|(batch, _)| *batch == b).unwrap().1;
+    let speedup8 = pps_of(8) / pps_of(1);
+    println!("batch 8 vs batch 1: {speedup8:.2}x");
+
+    // ---- cache hit rate vs fleet size ------------------------------------
+    header("response cache: hit rate vs fleet size (512 entries, ttl 240 s)");
+    let out_dir = Path::new("out/bench-serving");
+    let mut cache_rows: Vec<(usize, f64, u64, u64, u64)> = Vec::new();
+    for &n in &[4usize, 16, 64] {
+        let (rate, hits, misses, evictions) = fleet_cache(n, fleet_duration, out_dir)?;
+        println!(
+            "N={n:<3} hit rate {:>6.1}%  ({hits} hits / {misses} misses, {evictions} evicted)",
+            rate * 100.0
+        );
+        cache_rows.push((n, rate, hits, misses, evictions));
+    }
+
+    // ---- shed rate under overload ----------------------------------------
+    header("admission control: bounded queue under submission flood (depth 64)");
+    let (big_pkts, big_ids) = build_packets(16, 64);
+    let (admitted, shed) = overload(&big_pkts, &big_ids, 4, overload_per, 64);
+    let shed_rate = shed as f64 / (admitted + shed).max(1) as f64;
+    println!("admitted {admitted}, shed {shed} ({:.1}% shed)", shed_rate * 100.0);
+
+    // ---- machine-readable output -----------------------------------------
+    let sweep_json: Vec<String> = sweep
+        .iter()
+        .map(|(b, pps)| format!("{{\"batch\":{b},\"packets_per_sec\":{}}}", jf(*pps)))
+        .collect();
+    let cache_json: Vec<String> = cache_rows
+        .iter()
+        .map(|(n, rate, hits, misses, evictions)| {
+            format!(
+                "{{\"uavs\":{n},\"hit_rate\":{},\"hits\":{hits},\"misses\":{misses},\
+                 \"evictions\":{evictions}}}",
+                jf(*rate)
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\"schema\":1,\"bench\":\"serving\",\"mode\":\"{mode}\",\
+         \"batch_sweep\":[{}],\
+         \"batched_packets_per_sec\":{},\
+         \"speedup_batch_8\":{},\
+         \"cache\":[{}],\
+         \"overload\":{{\"queue_depth\":64,\"admitted\":{admitted},\"shed\":{shed},\
+         \"shed_rate\":{}}}}}",
+        sweep_json.join(","),
+        jf(pps_of(8)),
+        jf(speedup8),
+        cache_json.join(","),
+        jf(shed_rate),
+    );
+    std::fs::write(&args.out, format!("{json}\n"))?;
+    println!("\nwrote {}", args.out);
+    Ok(())
+}

@@ -1,0 +1,316 @@
+//! Cloud (server-side) processing: unpack a received packet, run the
+//! matching tail artifact (bottleneck decode -> SAM suffix -> LLM trunk ->
+//! mask decoder, or the text-only context responder), and produce the
+//! operator-facing response (paper §4.2).
+//!
+//! Two server shapes share the same request path:
+//! * [`CloudServer`] — the original single-session server; synchronous
+//!   `process` over one engine handle.
+//! * [`CloudPool`] (in [`serving`]) — the concurrent serving layer
+//!   (DESIGN.md "Cloud serving layer"): a worker pool draining a shared job
+//!   queue through a **micro-batcher**, fronted by a **content-addressed
+//!   response cache** and an **admission controller**, with per-session
+//!   weight-set routing over the [`crate::transport`] framing and an
+//!   in-process fast path ([`CloudPool::process_sync`]) the fleet simulator
+//!   uses.
+//!
+//! This module holds the request path both shapes share (decode ->
+//! artifact -> response) and the wire-level response framing, including the
+//! admission controller's `busy` shed reply.
+
+pub mod serving;
+
+pub use serving::{
+    cache_key, AdmissionPolicy, CloudPool, PoolStats, ResponseCache, ServeError, ServingConfig,
+    Ticket,
+};
+
+use std::borrow::Cow;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::TierId;
+use crate::edge::tail_artifact_name;
+use crate::packet::{dequantize_code, dequantize_scaled, Packet, StreamKind};
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use crate::transport::BUSY_FRAME;
+
+/// Operator-facing response.
+#[derive(Clone, Debug)]
+pub struct CloudResponse {
+    /// Insight: (img, img) mask logits. Context: None.
+    pub mask_logits: Option<Tensor>,
+    /// Per-class presence logits (person, vehicle) — the text-level answer.
+    pub presence: Vec<f32>,
+}
+
+impl CloudResponse {
+    /// Render the text answer the operator sees for a Context query
+    /// ("Yes, two possible life signs detected ..." in the paper's example).
+    pub fn text_answer(&self, class_names: &[&str]) -> String {
+        let mut found = Vec::new();
+        for (i, &logit) in self.presence.iter().enumerate() {
+            if logit > 0.0 {
+                found.push(*class_names.get(i).unwrap_or(&"object"));
+            }
+        }
+        if found.is_empty() {
+            "No critical targets detected in this sector.".to_string()
+        } else {
+            format!("Possible {} detected — escalate with an Insight query.", found.join(" and "))
+        }
+    }
+}
+
+/// A served request: the response plus serving-layer provenance.  The
+/// virtual-time drivers feed `cache_hit` into the timing model — a hit is
+/// answered from the cache index, not by tail execution, so it is charged
+/// the (tiny) lookup latency instead of the artifact's tail latency.
+#[derive(Clone, Debug)]
+pub struct Served {
+    pub resp: CloudResponse,
+    /// True when the response came from the content-addressed cache.
+    pub cache_hit: bool,
+}
+
+impl Served {
+    pub(crate) fn executed(resp: CloudResponse) -> Self {
+        Self { resp, cache_hit: false }
+    }
+}
+
+/// Anything that can serve UAV packets — the seam between the mission state
+/// machines and the server implementation (single-session or pooled).
+pub trait ServePackets {
+    fn serve(&self, pkt: &Packet, prompt_ids: &[i32], set: &str) -> Result<Served>;
+}
+
+/// Decode one request into (artifact, engine inputs) — the front half of
+/// the request path, shared by single execution ([`process_packet`]) and
+/// the serving layer's micro-batcher (which decodes every member, then
+/// dispatches ONE `execute_batch` for the whole compatible batch).
+pub(crate) fn decode_request_inputs(
+    pkt: &Packet,
+    prompt_ids: &[i32],
+) -> Result<(Cow<'static, str>, Vec<Tensor>)> {
+    let clip = dequantize_scaled(&pkt.clip_q, pkt.clip_shape, pkt.clip_scale)?;
+    let pids = Tensor::i32(vec![prompt_ids.len()], prompt_ids.to_vec())?;
+    match pkt.kind {
+        StreamKind::Context => Ok((Cow::Borrowed("context_respond"), vec![clip, pids])),
+        StreamKind::Insight => {
+            if pkt.code_q.is_empty() {
+                bail!("insight packet without code");
+            }
+            let tier = match pkt.tier {
+                0 => TierId::HighAccuracy,
+                1 => TierId::Balanced,
+                2 => TierId::HighThroughput,
+                other => bail!("bad tier index {other}"),
+            };
+            let code = dequantize_code(&pkt.code_q, pkt.code_shape)?;
+            Ok((tail_artifact_name(pkt.split as usize, tier), vec![code, clip, pids]))
+        }
+    }
+}
+
+/// Build the operator-facing response from an artifact's outputs — the back
+/// half of the request path.
+pub(crate) fn response_from_outputs(
+    kind: StreamKind,
+    mut outs: Vec<Tensor>,
+) -> Result<CloudResponse> {
+    match kind {
+        StreamKind::Context => {
+            let Some(first) = outs.first() else {
+                bail!("context responder returned no outputs");
+            };
+            Ok(CloudResponse { mask_logits: None, presence: first.as_f32()?.to_vec() })
+        }
+        StreamKind::Insight => {
+            if outs.len() < 2 {
+                bail!("insight tail returned {} outputs, want (mask, presence)", outs.len());
+            }
+            let presence = outs[1].as_f32()?.to_vec();
+            Ok(CloudResponse { mask_logits: Some(outs.swap_remove(0)), presence })
+        }
+    }
+}
+
+/// Shared request path: dequantize, pick the artifact, execute.
+pub(crate) fn process_packet(
+    engine: &Engine,
+    pkt: &Packet,
+    prompt_ids: &[i32],
+    set: &str,
+) -> Result<CloudResponse> {
+    let (artifact, inputs) = decode_request_inputs(pkt, prompt_ids)?;
+    let outs = engine
+        .execute_owned(&artifact, set, inputs)
+        .with_context(|| format!("running {artifact}"))?;
+    response_from_outputs(pkt.kind, outs)
+}
+
+/// The remote server: owns an engine handle and serves packets.
+pub struct CloudServer {
+    pub engine: Engine,
+}
+
+impl CloudServer {
+    pub fn new(engine: Engine) -> Self {
+        Self { engine }
+    }
+
+    /// Process one packet with the operator prompt (token ids) against a
+    /// weight set ("orig"/"ft" — which fine-tune serves the query).
+    pub fn process(&self, pkt: &Packet, prompt_ids: &[i32], set: &str) -> Result<CloudResponse> {
+        process_packet(&self.engine, pkt, prompt_ids, set)
+    }
+}
+
+impl ServePackets for CloudServer {
+    fn serve(&self, pkt: &Packet, prompt_ids: &[i32], set: &str) -> Result<Served> {
+        Ok(Served::executed(self.process(pkt, prompt_ids, set)?))
+    }
+}
+
+/// Serialize a [`CloudResponse`] for the transport layer: presence logits
+/// then the (possibly empty) flattened mask logits.
+pub fn encode_response(resp: &CloudResponse) -> Vec<u8> {
+    let mask: Vec<f32> = resp
+        .mask_logits
+        .as_ref()
+        .and_then(|m| m.as_f32().ok().map(|s| s.to_vec()))
+        .unwrap_or_default();
+    let mut out = Vec::with_capacity(8 + 4 * (resp.presence.len() + mask.len()));
+    out.extend_from_slice(&(resp.presence.len() as u32).to_le_bytes());
+    for p in &resp.presence {
+        out.extend_from_slice(&p.to_le_bytes());
+    }
+    out.extend_from_slice(&(mask.len() as u32).to_le_bytes());
+    for v in &mask {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// A decoded server reply frame: a response, or the admission controller's
+/// `busy` shed signal (see [`crate::transport::BUSY_FRAME`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServerReply {
+    /// The admission controller shed the request — back off and resend.
+    Busy,
+    /// A served response: (presence, mask) — mask empty for Context.
+    Response { presence: Vec<f32>, mask: Vec<f32> },
+}
+
+/// Decode a server reply frame, busy-aware.  Clients that can handle
+/// backpressure should prefer this over [`decode_response`].
+pub fn decode_reply(frame: &[u8]) -> Result<ServerReply> {
+    if frame == BUSY_FRAME {
+        return Ok(ServerReply::Busy);
+    }
+    let (presence, mask) = decode_response(frame)?;
+    Ok(ServerReply::Response { presence, mask })
+}
+
+/// Inverse of [`encode_response`]: (presence, mask) — mask empty for
+/// Context.  Section counts are sanity-capped against the bytes actually
+/// present *before* any offset arithmetic, so a corrupt or hostile length
+/// prefix (up to the u32 maximum — 4 GiB of declared payload) is rejected
+/// instead of driving a huge allocation or overflowing index math.
+pub fn decode_response(frame: &[u8]) -> Result<(Vec<f32>, Vec<f32>)> {
+    if frame == BUSY_FRAME {
+        bail!("server is busy (admission controller shed the request)");
+    }
+    let f32s = |bytes: &[u8]| -> Vec<f32> {
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    };
+    if frame.len() < 8 {
+        bail!("response truncated: {} bytes", frame.len());
+    }
+    let np = u32::from_le_bytes(frame[0..4].try_into().unwrap()) as usize;
+    let mut off = 4;
+    // The presence section plus the mask-count prefix must fit what's left.
+    if np > (frame.len() - off - 4) / 4 {
+        bail!("response declares {np} presence values, frame has {} bytes", frame.len());
+    }
+    let presence = f32s(&frame[off..off + np * 4]);
+    off += np * 4;
+    let nm = u32::from_le_bytes(frame[off..off + 4].try_into().unwrap()) as usize;
+    off += 4;
+    if nm > (frame.len() - off) / 4 {
+        bail!("response declares {nm} mask values, frame has {} bytes", frame.len());
+    }
+    let mask = f32s(&frame[off..off + nm * 4]);
+    Ok((presence, mask))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_answer_formats() {
+        let r = CloudResponse { mask_logits: None, presence: vec![1.2, -0.5] };
+        let s = r.text_answer(&["person", "vehicle"]);
+        assert!(s.contains("person") && !s.contains("vehicle"));
+        let none = CloudResponse { mask_logits: None, presence: vec![-1.0, -1.0] };
+        assert!(none.text_answer(&["person", "vehicle"]).contains("No critical"));
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = CloudResponse {
+            mask_logits: Some(Tensor::f32(vec![2, 2], vec![0.5, -0.5, 1.0, -1.0]).unwrap()),
+            presence: vec![1.5, -2.5],
+        };
+        let (presence, mask) = decode_response(&encode_response(&r)).unwrap();
+        assert_eq!(presence, vec![1.5, -2.5]);
+        assert_eq!(mask, vec![0.5, -0.5, 1.0, -1.0]);
+        let ctx = CloudResponse { mask_logits: None, presence: vec![0.1] };
+        let (p, m) = decode_response(&encode_response(&ctx)).unwrap();
+        assert_eq!(p.len(), 1);
+        assert!(m.is_empty());
+        assert_eq!(
+            decode_reply(&encode_response(&ctx)).unwrap(),
+            ServerReply::Response { presence: p, mask: m }
+        );
+    }
+
+    #[test]
+    fn truncated_response_rejected() {
+        let r = CloudResponse { mask_logits: None, presence: vec![1.0, 2.0] };
+        let frame = encode_response(&r);
+        assert!(decode_response(&frame[..frame.len() - 2]).is_err());
+        assert!(decode_response(&[]).is_err());
+    }
+
+    #[test]
+    fn oversized_section_lengths_rejected() {
+        // A 4 GiB presence count in a 12-byte frame must be rejected up
+        // front — not by attempting the offset arithmetic.
+        let mut frame = vec![0u8; 12];
+        frame[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_response(&frame).unwrap_err().to_string();
+        assert!(err.contains("presence"), "{err}");
+        // Same for the mask count.
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&1u32.to_le_bytes());
+        frame.extend_from_slice(&1.0f32.to_le_bytes());
+        frame.extend_from_slice(&u32::MAX.to_le_bytes());
+        frame.extend_from_slice(&[0u8; 4]);
+        let err = decode_response(&frame).unwrap_err().to_string();
+        assert!(err.contains("mask"), "{err}");
+    }
+
+    #[test]
+    fn busy_frame_is_distinguished() {
+        assert_eq!(decode_reply(crate::transport::BUSY_FRAME).unwrap(), ServerReply::Busy);
+        let err = decode_response(crate::transport::BUSY_FRAME).unwrap_err().to_string();
+        assert!(err.contains("busy"), "{err}");
+    }
+}

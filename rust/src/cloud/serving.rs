@@ -1,0 +1,1121 @@
+//! The cloud serving layer (DESIGN.md "Cloud serving layer"): the
+//! concurrent [`CloudPool`] behind an admission-controlled frontier.
+//!
+//! Three mechanisms compose on the request path, all off by default (the
+//! [`ServingConfig`] defaults reproduce the pre-serving-layer pool
+//! byte-for-byte):
+//!
+//! * **Micro-batcher** — each worker drains the shared job queue into a
+//!   batch of up to `batch_max` *compatible* requests (same artifact —
+//!   i.e. same stream kind, tier and split — and same weight set) and
+//!   executes them through ONE [`Engine::execute_batch_owned`] dispatch:
+//!   the inline synthetic backend loops the closed-form kernel with a
+//!   single stats update, the threaded backend crosses its request channel
+//!   once per batch instead of once per request.
+//! * **Content-addressed response cache** — keyed by
+//!   `crc32(packet payload bytes) ⊕ prompt ⊕ set` ([`cache_key`]), an LRU
+//!   with configurable capacity and TTL in *virtual* seconds (entries age
+//!   on packet capture time, so the cache lives in the simulator's clock,
+//!   not the host's).  Swarm fleets over the same disaster zone produce
+//!   highly redundant streams; identical content maps to one entry no
+//!   matter which UAV or when.
+//! * **Admission controller** — a bound on in-flight requests (queued +
+//!   executing) with a shed-or-wait policy, so `submit` and `serve_session`
+//!   expose backpressure instead of buffering without limit.  A shed
+//!   session request is answered with the wire protocol's `busy` frame.
+//!
+//! The in-process fast path ([`CloudPool::process_sync`]) still serves
+//! all-inline pools in the caller's thread: it consults the cache but never
+//! queues, so the virtual-time fleet simulator stays deterministic — cache
+//! hit/miss sequences are a pure function of the (event-ordered) request
+//! stream.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::classify_intent;
+use crate::packet::Packet;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use crate::transport::{decode_request, Transport, BUSY_FRAME};
+use crate::util::Crc32;
+
+use super::{
+    decode_request_inputs, encode_response, process_packet, response_from_outputs,
+    CloudResponse, ServePackets, Served,
+};
+
+/// Admission policy when the bounded queue is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Refuse immediately: [`CloudPool::submit`] returns
+    /// [`ServeError::Shed`] and `serve_session` replies with the wire
+    /// protocol's `busy` frame.
+    Shed,
+    /// Block the submitter until an in-flight slot frees (backpressure).
+    Wait,
+}
+
+/// Serving-layer configuration.  The defaults are the pre-serving-layer
+/// behavior — no batching, no cache, unbounded queue — so a default pool
+/// reproduces the old `CloudPool` byte-for-byte (pinned by
+/// `rust/tests/serving.rs`).
+#[derive(Clone, Debug)]
+pub struct ServingConfig {
+    /// Maximum compatible requests per micro-batch (1 = no batching).
+    pub batch_max: usize,
+    /// Response-cache capacity in entries (0 = cache off).
+    pub cache_entries: usize,
+    /// Cache TTL in *virtual* seconds (entries age on packet capture time);
+    /// `f64::INFINITY` = never expire.
+    pub cache_ttl_secs: f64,
+    /// Bound on in-flight (queued + executing) requests; 0 = unbounded.
+    pub queue_depth: usize,
+    /// What to do with a request that finds the queue full.
+    pub admission: AdmissionPolicy,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            batch_max: 1,
+            cache_entries: 0,
+            cache_ttl_secs: f64::INFINITY,
+            queue_depth: 0,
+            admission: AdmissionPolicy::Shed,
+        }
+    }
+}
+
+impl ServingConfig {
+    /// True when any serving feature deviates from the pre-layer defaults —
+    /// drives whether the fleet/scenario missions emit the extra serving
+    /// telemetry (off-mode reports stay byte-identical to the pre-layer
+    /// ones).
+    pub fn enabled(&self) -> bool {
+        self.batch_max > 1 || self.cache_entries > 0 || self.queue_depth > 0
+    }
+}
+
+/// Why a pool request produced no response — the typed distinction
+/// [`Ticket::wait`] used to erase by double-wrapping everything into one
+/// anyhow chain (a worker death and an execution failure were
+/// indistinguishable; a shed had no representation at all).
+#[derive(Debug)]
+pub enum ServeError {
+    /// The admission controller refused the request (bounded queue full
+    /// under [`AdmissionPolicy::Shed`]).
+    Shed,
+    /// The pool shut down — or a worker died — before replying.
+    Closed,
+    /// The request executed and failed.
+    Exec(anyhow::Error),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Shed => write!(f, "cloud pool shed the request (queue full)"),
+            ServeError::Closed => write!(f, "cloud pool closed before replying"),
+            ServeError::Exec(e) => write!(f, "cloud execution failed: {e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// FNV-1a 64-bit over raw bytes (cache-key folding).
+fn fnv64(h: u64, bytes: &[u8]) -> u64 {
+    bytes
+        .iter()
+        .fold(h, |h, &b| (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3))
+}
+
+/// View an i8 payload as bytes (same layout; the packet encoder uses the
+/// identical cast).
+fn i8_bytes(v: &[i8]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len()) }
+}
+
+/// Content-addressed cache key: `crc32(packet payload bytes) ⊕ prompt ⊕
+/// set`.  "Payload" is exactly the fields that determine the response —
+/// stream kind, tier, split, shapes, quantizer scale, code and CLIP bytes —
+/// and never `seq`, `t_capture` or `wire_bytes`, so the same scene captured
+/// by two different UAVs at two different times addresses the same entry.
+/// A crc32 alone carries only 32 bits of content entropy (a ~77k-distinct-
+/// payload working set would reach birthday-bound collision odds — and a
+/// collision silently serves the wrong response), so an independent FNV-1a
+/// 64 pass over the same payload bytes is folded in on a different
+/// rotation, as are the prompt (token ids) and weight set, each on distinct
+/// rotations so no two components can cancel.
+pub fn cache_key(pkt: &Packet, prompt_ids: &[i32], set: &str) -> u64 {
+    let mut crc = Crc32::new();
+    let mut content = 0xcbf2_9ce4_8422_2325u64;
+    let mut absorb = |bytes: &[u8]| {
+        crc.update(bytes);
+        content = fnv64(content, bytes);
+    };
+    absorb(&[pkt.kind as u8, pkt.tier, pkt.split]);
+    absorb(&(pkt.code_shape.0 as u32).to_le_bytes());
+    absorb(&(pkt.code_shape.1 as u32).to_le_bytes());
+    absorb(&(pkt.clip_shape.0 as u32).to_le_bytes());
+    absorb(&(pkt.clip_shape.1 as u32).to_le_bytes());
+    absorb(&pkt.clip_scale.to_le_bytes());
+    absorb(i8_bytes(&pkt.code_q));
+    absorb(i8_bytes(&pkt.clip_q));
+    let mut prompt_h = 0xcbf2_9ce4_8422_2325u64;
+    for id in prompt_ids {
+        prompt_h = fnv64(prompt_h, &id.to_le_bytes());
+    }
+    let set_h = fnv64(0xcbf2_9ce4_8422_2325, set.as_bytes());
+    (crc.finish() as u64)
+        ^ content.rotate_left(31)
+        ^ prompt_h.rotate_left(20)
+        ^ set_h.rotate_left(42)
+}
+
+/// Cache counters.  All are pure counts of the (deterministic) request
+/// stream in the virtual-time sim, so they are safe to surface in reports.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    /// Served requests that missed and were executed (counted at cache
+    /// fill, so a request the admission controller sheds never skews the
+    /// hit rate).
+    pub misses: u64,
+    /// Entries displaced by the LRU capacity bound.
+    pub evictions: u64,
+    /// Entries dropped because their virtual age exceeded the TTL.
+    pub expirations: u64,
+}
+
+struct CacheEntry {
+    /// Arc so a hit hands back a refcount bump under the cache lock and the
+    /// (possibly multi-MB mask) deep copy — when a caller needs one —
+    /// happens outside it.
+    resp: Arc<CloudResponse>,
+    /// Virtual insertion time (the inserting packet's capture time).
+    t_insert: f64,
+    /// Recency tick — the key into the LRU order map.
+    access: u64,
+}
+
+/// The content-addressed response cache: an LRU over [`cache_key`]s with a
+/// TTL in virtual seconds.  Recency is a monotone tick; the LRU order map
+/// (tick -> key) makes eviction O(log n) and fully deterministic.
+pub struct ResponseCache {
+    capacity: usize,
+    ttl_secs: f64,
+    map: HashMap<u64, CacheEntry>,
+    lru: BTreeMap<u64, u64>,
+    tick: u64,
+    stats: CacheStats,
+}
+
+impl ResponseCache {
+    pub fn new(capacity: usize, ttl_secs: f64) -> Self {
+        Self {
+            capacity,
+            ttl_secs,
+            map: HashMap::with_capacity(capacity.min(1 << 16)),
+            lru: BTreeMap::new(),
+            tick: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Look up `key` at virtual time `now`.  A hit returns the stored
+    /// response behind an `Arc` (byte-identical — responses are immutable
+    /// once built; the refcount bump keeps the lock hold O(1)) and
+    /// refreshes recency; an entry older than the TTL is dropped and
+    /// counted as an expiration.  Misses are NOT counted here — they are
+    /// counted at [`ResponseCache::insert`] (i.e. when the missed request
+    /// actually executes), so shed requests cannot deflate the hit rate.
+    pub fn get(&mut self, key: u64, now: f64) -> Option<Arc<CloudResponse>> {
+        self.tick += 1;
+        let tick = self.tick;
+        let ttl = self.ttl_secs;
+        let (prev, resp) = match self.map.get_mut(&key) {
+            None => return None,
+            Some(e) if now - e.t_insert > ttl => (e.access, None),
+            Some(e) => {
+                let prev = std::mem::replace(&mut e.access, tick);
+                (prev, Some(Arc::clone(&e.resp)))
+            }
+        };
+        let Some(resp) = resp else {
+            self.map.remove(&key);
+            self.lru.remove(&prev);
+            self.stats.expirations += 1;
+            return None;
+        };
+        self.lru.remove(&prev);
+        self.lru.insert(tick, key);
+        self.stats.hits += 1;
+        Some(resp)
+    }
+
+    /// Insert (or refresh) an entry at virtual time `now`, evicting the
+    /// least-recently-used entries over capacity.  Every insert is one
+    /// executed miss — the counterpart of [`ResponseCache::get`]'s hits.
+    pub fn insert(&mut self, key: u64, resp: CloudResponse, now: f64) {
+        self.stats.misses += 1;
+        if self.capacity == 0 {
+            return;
+        }
+        self.tick += 1;
+        if let Some(old) = self.map.insert(
+            key,
+            CacheEntry { resp: Arc::new(resp), t_insert: now, access: self.tick },
+        ) {
+            self.lru.remove(&old.access);
+        }
+        self.lru.insert(self.tick, key);
+        while self.map.len() > self.capacity {
+            let Some((_, victim)) = self.lru.pop_first() else { break };
+            self.map.remove(&victim);
+            self.stats.evictions += 1;
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// One queued job for the pool.
+struct Job {
+    pkt: Packet,
+    prompt_ids: Vec<i32>,
+    set: String,
+    /// Precomputed cache key (cache enabled only): the worker inserts the
+    /// executed response under it.
+    key: Option<u64>,
+    reply: Sender<Result<CloudResponse>>,
+}
+
+impl Job {
+    /// Batch-compatibility class: two jobs may share a micro-batch iff they
+    /// resolve to the same artifact — i.e. same stream kind, tier and
+    /// split — and name the same weight set.
+    fn compatible(&self, other: &Job) -> bool {
+        self.pkt.kind == other.pkt.kind
+            && self.pkt.tier == other.pkt.tier
+            && self.pkt.split == other.pkt.split
+            && self.set == other.set
+    }
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    /// Admitted and not yet replied (queued + executing) — what the
+    /// admission bound counts.
+    in_flight: usize,
+    closed: bool,
+}
+
+/// The admission-controlled job queue: a Condvar-guarded deque (mpsc cannot
+/// give workers the selective drain the micro-batcher needs).
+struct JobQueue {
+    state: Mutex<QueueState>,
+    /// Wakes workers (a job arrived / the pool closed).
+    ready: Condvar,
+    /// Wakes `Wait`-policy submitters (an in-flight slot freed).
+    space: Condvar,
+}
+
+impl JobQueue {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(QueueState {
+                jobs: VecDeque::new(),
+                in_flight: 0,
+                closed: false,
+            }),
+            ready: Condvar::new(),
+            space: Condvar::new(),
+        }
+    }
+
+    /// Reserve one in-flight admission slot (shed-or-wait).  Split from
+    /// [`JobQueue::enqueue`] so a shed request is refused before the caller
+    /// builds a job at all — no packet clone, no allocation.
+    fn reserve(&self, depth: usize, policy: AdmissionPolicy) -> Result<(), ServeError> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(ServeError::Closed);
+        }
+        if depth > 0 {
+            match policy {
+                AdmissionPolicy::Shed => {
+                    if st.in_flight >= depth {
+                        return Err(ServeError::Shed);
+                    }
+                }
+                AdmissionPolicy::Wait => {
+                    while st.in_flight >= depth && !st.closed {
+                        st = self.space.wait(st).unwrap();
+                    }
+                    if st.closed {
+                        return Err(ServeError::Closed);
+                    }
+                }
+            }
+        }
+        st.in_flight += 1;
+        Ok(())
+    }
+
+    /// Enqueue a job under a slot already held via [`JobQueue::reserve`];
+    /// releases the slot if the pool closed in between.
+    fn enqueue(&self, job: Job) -> Result<(), ServeError> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            st.in_flight = st.in_flight.saturating_sub(1);
+            drop(st);
+            self.space.notify_all();
+            return Err(ServeError::Closed);
+        }
+        st.jobs.push_back(job);
+        drop(st);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Pop the oldest job plus up to `max - 1` more compatible jobs (queue
+    /// order is preserved for the jobs left behind).  Blocks while the
+    /// queue is empty; returns `None` once the pool is closed *and*
+    /// drained — queued work is always served before shutdown.
+    fn pop_batch(&self, max: usize) -> Option<Vec<Job>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(first) = st.jobs.pop_front() {
+                let mut batch = Vec::with_capacity(max.max(1));
+                batch.push(first);
+                let mut i = 0;
+                while batch.len() < max && i < st.jobs.len() {
+                    if batch[0].compatible(&st.jobs[i]) {
+                        let job = st.jobs.remove(i).unwrap();
+                        batch.push(job);
+                    } else {
+                        i += 1;
+                    }
+                }
+                return Some(batch);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+    }
+
+    /// Mark `n` jobs replied — frees admission slots.
+    fn done(&self, n: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.in_flight = st.in_flight.saturating_sub(n);
+        drop(st);
+        self.space.notify_all();
+    }
+
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.ready.notify_all();
+        self.space.notify_all();
+    }
+}
+
+/// Aggregate pool counters.  `busy_secs` is wall-clock (diagnostic only);
+/// every other field is a deterministic count of the request stream, so
+/// the fleet/scenario reports may surface them.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    pub workers: usize,
+    /// Requests served (executions, failures and cache hits alike).
+    pub completed: u64,
+    /// Summed wall-clock seconds workers spent inside artifact execution.
+    pub busy_secs: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    pub cache_expirations: u64,
+    /// Requests refused by the admission controller (shed policy).
+    pub shed: u64,
+    /// Worker queue drains (each serves one micro-batch; 1 when batching
+    /// is off) and the requests they carried — queued path only, the
+    /// in-process direct path never batches.
+    pub batches: u64,
+    pub batched_requests: u64,
+}
+
+impl PoolStats {
+    /// Fraction of worker capacity used over a wall-clock window.
+    pub fn utilization(&self, wall_secs: f64) -> f64 {
+        if self.workers == 0 || wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.busy_secs / (self.workers as f64 * wall_secs)
+    }
+
+    /// Cache hit rate over all lookups (0 when the cache is off).
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.cache_hits as f64 / (self.cache_hits + self.cache_misses).max(1) as f64
+    }
+}
+
+/// Response handle returned by [`CloudPool::submit`]: either resolved at
+/// admission time from the content-addressed cache (no channel, no queue),
+/// or pending a worker reply.
+pub struct Ticket {
+    inner: TicketInner,
+}
+
+enum TicketInner {
+    Ready(CloudResponse),
+    Pending(Receiver<Result<CloudResponse>>),
+}
+
+impl Ticket {
+    fn ready(resp: CloudResponse) -> Self {
+        Self { inner: TicketInner::Ready(resp) }
+    }
+
+    fn pending(rx: Receiver<Result<CloudResponse>>) -> Self {
+        Self { inner: TicketInner::Pending(rx) }
+    }
+
+    /// True when the response was resolved from the content-addressed cache
+    /// at admission time (it never entered the queue; `wait` returns
+    /// immediately).
+    pub fn cache_hit(&self) -> bool {
+        matches!(self.inner, TicketInner::Ready(_))
+    }
+
+    /// Typed wait: a closed reply channel (pool shutdown, worker death) is
+    /// [`ServeError::Closed`]; an execution failure is
+    /// [`ServeError::Exec`].
+    pub fn wait(self) -> Result<CloudResponse, ServeError> {
+        match self.inner {
+            TicketInner::Ready(resp) => Ok(resp),
+            TicketInner::Pending(rx) => match rx.recv() {
+                Err(_) => Err(ServeError::Closed),
+                Ok(Ok(resp)) => Ok(resp),
+                Ok(Err(e)) => Err(ServeError::Exec(e)),
+            },
+        }
+    }
+}
+
+/// Concurrent multi-session cloud server: a fixed worker pool draining a
+/// shared job queue through the micro-batcher, behind the response cache
+/// and the admission controller.  See the module docs and DESIGN.md
+/// "Cloud serving layer".
+pub struct CloudPool {
+    queue: Arc<JobQueue>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    n_workers: usize,
+    cfg: ServingConfig,
+    completed: Arc<AtomicU64>,
+    busy_micros: Arc<AtomicU64>,
+    shed: AtomicU64,
+    batches: Arc<AtomicU64>,
+    batched_requests: Arc<AtomicU64>,
+    cache: Option<Arc<Mutex<ResponseCache>>>,
+    /// Direct-call fast path for [`CloudPool::process_sync`]: set when every
+    /// worker engine executes inline (caller-thread synthetic backend), in
+    /// which case an in-process request needs no job-queue hop — and no
+    /// `Packet` clone.
+    direct: Option<Engine>,
+}
+
+impl CloudPool {
+    /// Spawn one worker per engine handle with the default (pre-layer)
+    /// serving configuration: no batching, no cache, unbounded queue.
+    pub fn new(engines: Vec<Engine>) -> Self {
+        Self::with_config(engines, ServingConfig::default())
+    }
+
+    /// Spawn one worker per engine handle.  Threaded handles may be clones
+    /// of one engine (shared execution thread — models a queueing server)
+    /// or independently started engines; inline synthetic handles always
+    /// execute truly in parallel, worker- and caller-side.
+    pub fn with_config(engines: Vec<Engine>, cfg: ServingConfig) -> Self {
+        let direct = if !engines.is_empty() && engines.iter().all(|e| e.is_inline()) {
+            Some(engines[0].clone())
+        } else {
+            None
+        };
+        let cache = (cfg.cache_entries > 0).then(|| {
+            Arc::new(Mutex::new(ResponseCache::new(cfg.cache_entries, cfg.cache_ttl_secs)))
+        });
+        let queue = Arc::new(JobQueue::new());
+        let completed = Arc::new(AtomicU64::new(0));
+        let busy_micros = Arc::new(AtomicU64::new(0));
+        let batches = Arc::new(AtomicU64::new(0));
+        let batched_requests = Arc::new(AtomicU64::new(0));
+        let n_workers = engines.len();
+        let batch_max = cfg.batch_max.max(1);
+        let workers = engines
+            .into_iter()
+            .enumerate()
+            .map(|(i, engine)| {
+                let queue = Arc::clone(&queue);
+                let completed = Arc::clone(&completed);
+                let busy = Arc::clone(&busy_micros);
+                let batches = Arc::clone(&batches);
+                let batched_requests = Arc::clone(&batched_requests);
+                let cache = cache.clone();
+                std::thread::Builder::new()
+                    .name(format!("avery-cloud-{i}"))
+                    .spawn(move || {
+                        while let Some(batch) = queue.pop_batch(batch_max) {
+                            let n = batch.len();
+                            // Count before replying so the counters are
+                            // consistent the moment a ticket resolves.
+                            completed.fetch_add(n as u64, Ordering::Relaxed);
+                            batches.fetch_add(1, Ordering::Relaxed);
+                            batched_requests.fetch_add(n as u64, Ordering::Relaxed);
+                            let t0 = Instant::now();
+                            serve_batch(&engine, batch, cache.as_deref());
+                            busy.fetch_add(
+                                t0.elapsed().as_micros() as u64,
+                                Ordering::Relaxed,
+                            );
+                            queue.done(n);
+                        }
+                    })
+                    .expect("spawning cloud worker")
+            })
+            .collect();
+        Self {
+            queue,
+            workers,
+            n_workers,
+            cfg,
+            completed,
+            busy_micros,
+            shed: AtomicU64::new(0),
+            batches,
+            batched_requests,
+            cache,
+            direct,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// The serving configuration this pool runs with.
+    pub fn config(&self) -> &ServingConfig {
+        &self.cfg
+    }
+
+    /// Enqueue one request through the cache and the admission controller;
+    /// the returned [`Ticket`] resolves when a worker finishes it (or
+    /// immediately, on a cache hit — hits cost one index lookup and bypass
+    /// admission entirely).
+    pub fn submit(
+        &self,
+        pkt: &Packet,
+        prompt_ids: &[i32],
+        set: &str,
+    ) -> Result<Ticket, ServeError> {
+        let key = match self.cache_lookup(pkt, prompt_ids, set) {
+            Ok(resp) => return Ok(Ticket::ready(resp)),
+            Err(key) => key,
+        };
+        // Reserve the admission slot BEFORE building the job: a shed
+        // request clones no packet and (since misses are counted at cache
+        // fill) never skews the hit rate.
+        self.reserve_slot()?;
+        let (reply, rx) = channel();
+        let job = Job {
+            pkt: pkt.clone(),
+            prompt_ids: prompt_ids.to_vec(),
+            set: set.to_string(),
+            key,
+            reply,
+        };
+        self.queue.enqueue(job)?;
+        Ok(Ticket::pending(rx))
+    }
+
+    /// The cache front door shared by [`CloudPool::submit`] and the direct
+    /// path: `Ok` is a hit (counted as completed; the lock is released
+    /// before the response deep-copy), `Err` carries the precomputed key
+    /// to fill after execution (`Err(None)` when the cache is off).
+    fn cache_lookup(
+        &self,
+        pkt: &Packet,
+        prompt_ids: &[i32],
+        set: &str,
+    ) -> Result<CloudResponse, Option<u64>> {
+        let Some(cache) = &self.cache else {
+            return Err(None);
+        };
+        let k = cache_key(pkt, prompt_ids, set);
+        let hit = cache.lock().unwrap().get(k, pkt.t_capture);
+        match hit {
+            Some(resp) => {
+                self.completed.fetch_add(1, Ordering::Relaxed);
+                Ok(resp.as_ref().clone())
+            }
+            None => Err(Some(k)),
+        }
+    }
+
+    /// Reserve one admission slot, counting a shed on refusal.
+    fn reserve_slot(&self) -> Result<(), ServeError> {
+        match self.queue.reserve(self.cfg.queue_depth, self.cfg.admission) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                if matches!(e, ServeError::Shed) {
+                    self.shed.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// In-process request path with typed errors: serve in the caller's
+    /// thread when the backend executes inline (no job-queue hop, no
+    /// `pkt.clone()`/`prompt_ids.to_vec()`), else enqueue and block.  This
+    /// is what the fleet simulator calls — virtual time is charged by the
+    /// mission's timing model, so only the numerics (and the cache-hit
+    /// flag) flow through here, and responses are pure functions of the
+    /// request on either route.
+    pub fn try_process(
+        &self,
+        pkt: &Packet,
+        prompt_ids: &[i32],
+        set: &str,
+    ) -> Result<Served, ServeError> {
+        if let Some(engine) = &self.direct {
+            let key = match self.cache_lookup(pkt, prompt_ids, set) {
+                Ok(resp) => return Ok(Served { resp, cache_hit: true }),
+                Err(key) => key,
+            };
+            // The direct path skips the queue, not the admission bound: it
+            // holds an in-flight slot for the duration of the execution, so
+            // a bounded pool sheds concurrent in-process callers exactly
+            // like transport sessions.  (The serial virtual-time fleet loop
+            // keeps in_flight <= 1, so the sim never sheds and stays
+            // deterministic.)
+            let bounded = self.cfg.queue_depth > 0;
+            if bounded {
+                self.reserve_slot()?;
+            }
+            let t0 = Instant::now();
+            let r = process_packet(engine, pkt, prompt_ids, set);
+            self.busy_micros
+                .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+            self.completed.fetch_add(1, Ordering::Relaxed);
+            if bounded {
+                self.queue.done(1);
+            }
+            let resp = r.map_err(ServeError::Exec)?;
+            if let (Some(k), Some(cache)) = (key, &self.cache) {
+                // Clone outside the lock — the guard is only held for the
+                // O(log n) index update.
+                let stored = resp.clone();
+                cache.lock().unwrap().insert(k, stored, pkt.t_capture);
+            }
+            return Ok(Served::executed(resp));
+        }
+        let ticket = self.submit(pkt, prompt_ids, set)?;
+        let cache_hit = ticket.cache_hit();
+        ticket.wait().map(|resp| Served { resp, cache_hit })
+    }
+
+    /// [`CloudPool::try_process`] with the typed error folded into anyhow
+    /// (the historical surface most call sites want).
+    pub fn process_sync(&self, pkt: &Packet, prompt_ids: &[i32], set: &str) -> Result<Served> {
+        self.try_process(pkt, prompt_ids, set).map_err(anyhow::Error::from)
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let cs = self
+            .cache
+            .as_ref()
+            .map(|c| c.lock().unwrap().stats())
+            .unwrap_or_default();
+        PoolStats {
+            workers: self.n_workers,
+            completed: self.completed.load(Ordering::Relaxed),
+            busy_secs: self.busy_micros.load(Ordering::Relaxed) as f64 / 1e6,
+            cache_hits: cs.hits,
+            cache_misses: cs.misses,
+            cache_evictions: cs.evictions,
+            cache_expirations: cs.expirations,
+            shed: self.shed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_requests: self.batched_requests.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Serve one transport session until the peer closes or sends
+    /// `shutdown`.  Per-session weight-set routing: a `hello <set>` frame
+    /// pins the session's default weight set; individual requests may still
+    /// override it by naming a non-empty set (see
+    /// [`crate::transport::encode_request`]).  Responses use
+    /// [`encode_response`]/[`super::decode_reply`] framing; a request the
+    /// admission controller sheds is answered with the `busy` frame and
+    /// does not count as served.
+    pub fn serve_session<T: Transport>(&self, transport: &mut T, default_set: &str) -> Result<u64> {
+        let mut session_set = default_set.to_string();
+        let mut served = 0u64;
+        loop {
+            let frame = match transport.recv() {
+                Ok(f) => f,
+                Err(_) => break, // peer closed
+            };
+            if frame == b"shutdown" {
+                break;
+            }
+            if let Some(set) = frame.strip_prefix(b"hello ") {
+                session_set = String::from_utf8_lossy(set).trim().to_string();
+                transport.send(b"ok")?;
+                continue;
+            }
+            let (pkt_bytes, prompt, set) = decode_request(&frame)?;
+            let pkt = Packet::decode(&pkt_bytes)?;
+            let intent = classify_intent(&prompt);
+            let set = if set.is_empty() { session_set.as_str() } else { set.as_str() };
+            match self.try_process(&pkt, &intent.token_ids, set) {
+                Ok(r) => {
+                    transport.send(&encode_response(&r.resp))?;
+                    served += 1;
+                }
+                Err(ServeError::Shed) => transport.send(BUSY_FRAME)?,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(served)
+    }
+}
+
+impl Drop for CloudPool {
+    fn drop(&mut self) {
+        // Closing the queue unblocks every worker; queued jobs are drained
+        // before the workers exit.
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl ServePackets for CloudPool {
+    fn serve(&self, pkt: &Packet, prompt_ids: &[i32], set: &str) -> Result<Served> {
+        self.process_sync(pkt, prompt_ids, set)
+    }
+}
+
+/// Serve one popped micro-batch: decode every member, dispatch ONE
+/// `execute_batch` for the whole batch (or the single-request path for a
+/// batch of one), build and send each reply, and fill the cache.
+fn serve_batch(engine: &Engine, mut jobs: Vec<Job>, cache: Option<&Mutex<ResponseCache>>) {
+    if jobs.len() == 1 {
+        let job = jobs.pop().unwrap();
+        let r = process_packet(engine, &job.pkt, &job.prompt_ids, &job.set);
+        finish_job(job, r, cache);
+        return;
+    }
+    // Decode first: a member that fails to decode is answered individually
+    // and excluded; the rest still batch.
+    let mut decoded = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        match decode_request_inputs(&job.pkt, &job.prompt_ids) {
+            Ok((artifact, inputs)) => decoded.push((job, artifact, inputs)),
+            Err(e) => {
+                let _ = job.reply.send(Err(e));
+            }
+        }
+    }
+    let Some((first, artifact, _)) = decoded.first() else {
+        return;
+    };
+    let artifact = artifact.clone();
+    let set = first.set.clone();
+    let inputs: Vec<Vec<Tensor>> =
+        decoded.iter_mut().map(|(_, _, i)| std::mem::take(i)).collect();
+    match engine.execute_batch_owned(&artifact, &set, inputs) {
+        Ok(outs) => {
+            for ((job, _, _), out) in decoded.into_iter().zip(outs) {
+                let r = response_from_outputs(job.pkt.kind, out);
+                finish_job(job, r, cache);
+            }
+        }
+        Err(_) => {
+            // A batch fails as a whole, but one bad member must not fail
+            // its co-batched neighbors — re-run every member individually
+            // so only the offending request sees its error.  Rare path:
+            // the re-decode cost is irrelevant next to correctness.
+            for (job, _, _) in decoded {
+                let r = process_packet(engine, &job.pkt, &job.prompt_ids, &job.set);
+                finish_job(job, r, cache);
+            }
+        }
+    }
+}
+
+/// Reply to one job, filling the cache on success.
+fn finish_job(job: Job, r: Result<CloudResponse>, cache: Option<&Mutex<ResponseCache>>) {
+    if let (Ok(resp), Some(key), Some(cache)) = (&r, job.key, cache) {
+        // Clone outside the lock — the guard is only held for the O(log n)
+        // index update.
+        let stored = resp.clone();
+        cache.lock().unwrap().insert(key, stored, job.pkt.t_capture);
+    }
+    let _ = job.reply.send(r);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::CloudServer;
+    use crate::coordinator::{classify_intent, Lut, TierId};
+    use crate::dataset::{Corpus, Dataset};
+    use crate::edge::EdgePipeline;
+    use crate::energy::DeviceModel;
+
+    fn sample_packets(n: usize) -> (Vec<Packet>, Vec<i32>) {
+        let engine = Engine::synthetic();
+        let ds = Dataset::synthetic(Corpus::Flood, n, 16, 0xF10D0);
+        let mut edge =
+            EdgePipeline::new(engine, DeviceModel::jetson_mode_30w(8), Lut::paper());
+        let pkts = ds
+            .scenes
+            .iter()
+            .map(|s| edge.capture_insight(s, 1, TierId::HighAccuracy, 0.0).unwrap().0)
+            .collect();
+        (pkts, classify_intent("highlight the stranded people").token_ids)
+    }
+
+    #[test]
+    fn pool_direct_path_matches_queue_and_server() {
+        let engine = Engine::synthetic();
+        let (pkts, ids) = sample_packets(1);
+        let pkt = &pkts[0];
+
+        let pool = CloudPool::new(vec![engine.clone(), engine.clone()]);
+        let direct = pool.process_sync(pkt, &ids, "ft").unwrap();
+        assert!(!direct.cache_hit);
+        let queued = pool.submit(pkt, &ids, "ft").unwrap().wait().unwrap();
+        let server = CloudServer::new(engine).process(pkt, &ids, "ft").unwrap();
+        assert_eq!(direct.resp.presence, queued.presence);
+        assert_eq!(direct.resp.presence, server.presence);
+        assert_eq!(direct.resp.mask_logits, queued.mask_logits);
+        assert_eq!(direct.resp.mask_logits, server.mask_logits);
+        // Both routes count toward the pool's aggregate counters.
+        assert_eq!(pool.stats().completed, 2);
+    }
+
+    #[test]
+    fn cache_hit_returns_byte_identical_response() {
+        let engine = Engine::synthetic();
+        let (pkts, ids) = sample_packets(1);
+        let pool = CloudPool::with_config(
+            vec![engine],
+            ServingConfig { cache_entries: 8, ..ServingConfig::default() },
+        );
+        let first = pool.process_sync(&pkts[0], &ids, "ft").unwrap();
+        assert!(!first.cache_hit);
+        let second = pool.process_sync(&pkts[0], &ids, "ft").unwrap();
+        assert!(second.cache_hit);
+        assert_eq!(first.resp.presence, second.resp.presence);
+        assert_eq!(first.resp.mask_logits, second.resp.mask_logits);
+        // A different weight set is a different key.
+        let other = pool.process_sync(&pkts[0], &ids, "orig").unwrap();
+        assert!(!other.cache_hit);
+        let st = pool.stats();
+        assert_eq!((st.cache_hits, st.cache_misses), (1, 2));
+        assert_eq!(st.completed, 3);
+    }
+
+    #[test]
+    fn cache_ttl_expires_in_virtual_time() {
+        let mut cache = ResponseCache::new(4, 10.0);
+        let resp = CloudResponse { mask_logits: None, presence: vec![1.0] };
+        cache.insert(42, resp, 0.0);
+        assert!(cache.get(42, 5.0).is_some());
+        // Virtual age 15 s > TTL 10 s: expired, dropped, counted.
+        assert!(cache.get(42, 15.0).is_none());
+        assert!(cache.is_empty());
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.expirations), (1, 1, 1));
+    }
+
+    #[test]
+    fn cache_lru_evicts_in_recency_order() {
+        let mut cache = ResponseCache::new(2, f64::INFINITY);
+        let resp = |v: f32| CloudResponse { mask_logits: None, presence: vec![v] };
+        cache.insert(1, resp(1.0), 0.0);
+        cache.insert(2, resp(2.0), 1.0);
+        // Touch 1 so 2 becomes the LRU victim.
+        assert!(cache.get(1, 2.0).is_some());
+        cache.insert(3, resp(3.0), 3.0);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(2, 4.0).is_none(), "2 should have been evicted");
+        assert_eq!(cache.get(1, 5.0).unwrap().presence, vec![1.0]);
+        assert_eq!(cache.get(3, 6.0).unwrap().presence, vec![3.0]);
+        assert_eq!(cache.stats().evictions, 1);
+    }
+
+    #[test]
+    fn cache_key_is_content_addressed() {
+        let (pkts, ids) = sample_packets(2);
+        let mut a = pkts[0].clone();
+        let mut b = pkts[0].clone();
+        // Same content at different times / sequence numbers: same key.
+        a.seq = 1;
+        a.t_capture = 0.0;
+        b.seq = 99;
+        b.t_capture = 500.0;
+        assert_eq!(cache_key(&a, &ids, "ft"), cache_key(&b, &ids, "ft"));
+        // Different scene content, prompt, or set: different keys.
+        assert_ne!(cache_key(&pkts[0], &ids, "ft"), cache_key(&pkts[1], &ids, "ft"));
+        assert_ne!(cache_key(&pkts[0], &ids, "ft"), cache_key(&pkts[0], &ids, "orig"));
+        let other = classify_intent("mark the submerged vehicles").token_ids;
+        assert_ne!(cache_key(&pkts[0], &ids, "ft"), cache_key(&pkts[0], &other, "ft"));
+    }
+
+    #[test]
+    fn admission_sheds_then_closes() {
+        // A pool with no workers never drains: admission outcomes are
+        // exactly determined by what was submitted.
+        let (pkts, ids) = sample_packets(1);
+        let pool = CloudPool::with_config(
+            Vec::new(),
+            ServingConfig { queue_depth: 1, ..ServingConfig::default() },
+        );
+        let ticket = pool.submit(&pkts[0], &ids, "ft").unwrap();
+        assert!(matches!(pool.submit(&pkts[0], &ids, "ft"), Err(ServeError::Shed)));
+        assert_eq!(pool.stats().shed, 1);
+        drop(pool);
+        // The pool died with the job queued: Closed, not Exec.
+        assert!(matches!(ticket.wait(), Err(ServeError::Closed)));
+    }
+
+    #[test]
+    fn direct_path_honors_admission_bound() {
+        // Inline pool bounded to ONE in-flight request: while a slow
+        // request executes through the direct path, a concurrent caller is
+        // shed — the bound applies to in-process serving, not just the
+        // queued transport path.  (Both sides retry on shed so neither can
+        // starve the other; the serial fleet sim never sees this because
+        // its in_flight never exceeds 1.)
+        let engine = Engine::synthetic();
+        let ds = Dataset::synthetic(Corpus::Flood, 1, 1024, 0xF10D0);
+        let mut edge =
+            EdgePipeline::new(engine.clone(), DeviceModel::jetson_mode_30w(8), Lut::paper());
+        let (big, _) =
+            edge.capture_insight(&ds.scenes[0], 1, TierId::Balanced, 0.0).unwrap();
+        let (small, ids) = sample_packets(1);
+        let pool = CloudPool::with_config(
+            vec![engine],
+            ServingConfig { queue_depth: 1, ..ServingConfig::default() },
+        );
+        std::thread::scope(|s| {
+            let pool = &pool;
+            let big = &big;
+            let blocker_ids = ids.clone();
+            s.spawn(move || loop {
+                match pool.try_process(big, &blocker_ids, "ft") {
+                    Ok(_) => break,
+                    Err(ServeError::Shed) => continue,
+                    Err(e) => panic!("blocker: {e}"),
+                }
+            });
+            let mut shed_seen = false;
+            for _ in 0..200_000 {
+                match pool.try_process(&small[0], &ids, "ft") {
+                    Err(ServeError::Shed) => {
+                        shed_seen = true;
+                        break;
+                    }
+                    Ok(_) => {}
+                    Err(e) => panic!("probe: {e}"),
+                }
+            }
+            assert!(shed_seen, "bounded direct path never shed a concurrent caller");
+        });
+        assert!(pool.stats().shed >= 1);
+    }
+
+    #[test]
+    fn ticket_distinguishes_execution_errors() {
+        let engine = Engine::synthetic();
+        let (pkts, ids) = sample_packets(1);
+        let pool = CloudPool::new(vec![engine]);
+        // An insight packet with its code stripped fails execution-side.
+        let mut bad = pkts[0].clone();
+        bad.code_q = Vec::new();
+        match pool.submit(&bad, &ids, "ft").unwrap().wait() {
+            Err(ServeError::Exec(e)) => assert!(format!("{e:#}").contains("code"), "{e:#}"),
+            other => panic!("want Exec error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_batch_member_fails_alone() {
+        // A member that decodes but fails kernel-side must not take its
+        // co-batched neighbors down with it: the batch falls back to
+        // per-element execution and only the offender sees an error.
+        let (pkts, ids) = sample_packets(3);
+        let mut bad = pkts[0].clone();
+        bad.code_shape = (2, 3); // decodes fine; the tail rejects non-square planes
+        bad.code_q = vec![0; 6];
+        let pool = CloudPool::with_config(
+            vec![Engine::synthetic_threaded()],
+            ServingConfig { batch_max: 4, ..ServingConfig::default() },
+        );
+        let good: Vec<Ticket> =
+            pkts.iter().map(|p| pool.submit(p, &ids, "ft").unwrap()).collect();
+        let bad_ticket = pool.submit(&bad, &ids, "ft").unwrap();
+        for t in good {
+            t.wait().unwrap();
+        }
+        assert!(matches!(bad_ticket.wait(), Err(ServeError::Exec(_))));
+    }
+
+    #[test]
+    fn batched_queue_path_matches_direct() {
+        // Force the queued path (threaded engine => no direct fast path)
+        // with batching on; results must match the inline direct path
+        // byte for byte, whatever batches actually formed.
+        let (pkts, ids) = sample_packets(6);
+        let inline_pool = CloudPool::new(vec![Engine::synthetic()]);
+        let batched = CloudPool::with_config(
+            vec![Engine::synthetic_threaded()],
+            ServingConfig { batch_max: 4, ..ServingConfig::default() },
+        );
+        let tickets: Vec<Ticket> =
+            pkts.iter().map(|p| batched.submit(p, &ids, "ft").unwrap()).collect();
+        for (pkt, ticket) in pkts.iter().zip(tickets) {
+            let want = inline_pool.process_sync(pkt, &ids, "ft").unwrap().resp;
+            let got = ticket.wait().unwrap();
+            assert_eq!(want.presence, got.presence);
+            assert_eq!(want.mask_logits, got.mask_logits);
+        }
+        let st = batched.stats();
+        assert_eq!(st.batched_requests, 6);
+        assert!(st.batches <= 6, "drains {}", st.batches);
+    }
+}

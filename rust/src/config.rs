@@ -126,6 +126,18 @@ pub struct RunConfig {
     pub scenario: Option<String>,
     /// Scenario name for the `scenario` mission (`--name NAME`).
     pub name: Option<String>,
+    /// Cloud serving layer: max compatible requests per micro-batch
+    /// (`--batch-max N`); `None` = 1 (unbatched).
+    pub batch_max: Option<usize>,
+    /// Cloud serving layer: response-cache capacity in entries
+    /// (`--cache-entries N`); `None` = 0 (cache off).
+    pub cache_entries: Option<usize>,
+    /// Cloud serving layer: cache TTL in virtual seconds
+    /// (`--cache-ttl SECS`); `None` = never expire.
+    pub cache_ttl: Option<f64>,
+    /// Cloud serving layer: bound on in-flight requests
+    /// (`--queue-depth N`); `None` = 0 (unbounded).
+    pub queue_depth: Option<usize>,
     /// `avery scenario --list`.
     pub list: bool,
     /// Report rendering (`--format text|json`); CSVs are always written.
@@ -152,6 +164,26 @@ impl RunConfig {
             None => OutputFormat::Text,
             Some(s) => OutputFormat::parse(s)?,
         };
+        let cache_entries = match kv.get("cache-entries") {
+            None => None,
+            Some(v) => Some(
+                v.parse::<usize>()
+                    .with_context(|| format!("config cache-entries={v} not an integer"))?,
+            ),
+        };
+        let cache_ttl = match kv.get("cache-ttl") {
+            None => None,
+            Some(v) => Some(
+                v.parse::<f64>()
+                    .with_context(|| format!("config cache-ttl={v} not a number"))?,
+            ),
+        };
+        // A TTL without a cache would be a silent no-op — reject it so the
+        // user learns the cache never existed instead of trusting phantom
+        // reuse.
+        if cache_ttl.is_some() && cache_entries.unwrap_or(0) == 0 {
+            bail!("cache-ttl requires cache-entries > 0 (the cache is off without it)");
+        }
         Ok(Self {
             artifacts: kv.get("artifacts").map(|s| s.to_string()),
             out_dir: kv.get("out").unwrap_or("out").to_string(),
@@ -178,6 +210,22 @@ impl RunConfig {
             },
             scenario: kv.get("scenario").map(|s| s.to_string()),
             name: kv.get("name").map(|s| s.to_string()),
+            batch_max: match kv.get("batch-max") {
+                None => None,
+                Some(v) => Some(
+                    v.parse()
+                        .with_context(|| format!("config batch-max={v} not an integer"))?,
+                ),
+            },
+            cache_entries,
+            cache_ttl,
+            queue_depth: match kv.get("queue-depth") {
+                None => None,
+                Some(v) => Some(
+                    v.parse()
+                        .with_context(|| format!("config queue-depth={v} not an integer"))?,
+                ),
+            },
             list: kv.get_bool("list", false)?,
             format,
             jobs: kv.get_usize("jobs", 1)?,
@@ -277,5 +325,33 @@ mod tests {
     fn run_config_rejects_bad_fleet_counts() {
         assert!(RunConfig::from_kv(&Kv::parse("uavs = many\n").unwrap()).is_err());
         assert!(RunConfig::from_kv(&Kv::parse("workers = -1\n").unwrap()).is_err());
+    }
+
+    #[test]
+    fn serving_keys_parse_and_reject() {
+        let kv = Kv::parse(
+            "batch-max = 8\ncache-entries = 256\ncache-ttl = 60.5\nqueue-depth = 128\n",
+        )
+        .unwrap();
+        let rc = RunConfig::from_kv(&kv).unwrap();
+        assert_eq!(rc.batch_max, Some(8));
+        assert_eq!(rc.cache_entries, Some(256));
+        assert_eq!(rc.cache_ttl, Some(60.5));
+        assert_eq!(rc.queue_depth, Some(128));
+        let rc0 = RunConfig::from_kv(&Kv::default()).unwrap();
+        assert!(rc0.batch_max.is_none() && rc0.cache_entries.is_none());
+        assert!(rc0.cache_ttl.is_none() && rc0.queue_depth.is_none());
+        assert!(RunConfig::from_kv(&Kv::parse("batch-max = big\n").unwrap()).is_err());
+        assert!(
+            RunConfig::from_kv(&Kv::parse("cache-entries = 8\ncache-ttl = soon\n").unwrap())
+                .is_err()
+        );
+        assert!(RunConfig::from_kv(&Kv::parse("queue-depth = -2\n").unwrap()).is_err());
+        // A TTL without a cache is a silent no-op — rejected.
+        assert!(RunConfig::from_kv(&Kv::parse("cache-ttl = 60\n").unwrap()).is_err());
+        assert!(
+            RunConfig::from_kv(&Kv::parse("cache-ttl = 60\ncache-entries = 0\n").unwrap())
+                .is_err()
+        );
     }
 }

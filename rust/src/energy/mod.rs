@@ -140,6 +140,20 @@ impl DeviceModel {
         let frac = 1.0 - (k as f64 - 1.0) / self.paper_depth as f64;
         0.05 + 0.08 * frac.max(0.0)
     }
+
+    /// [`DeviceModel::cloud_tail_latency`] under micro-batched serving
+    /// (DESIGN.md "Cloud serving layer"): the 0.05 s per-request setup
+    /// component (scheduler dispatch, weight activation, KV-cache prefill)
+    /// amortizes across a batch of up to `batch_max` compatible requests;
+    /// the per-packet tail compute does not.  `batch_max <= 1` reproduces
+    /// the unbatched latency exactly.
+    pub fn cloud_tail_latency_batched(&self, k: usize, batch_max: usize) -> f64 {
+        if batch_max <= 1 {
+            return self.cloud_tail_latency(k);
+        }
+        let frac = 1.0 - (k as f64 - 1.0) / self.paper_depth as f64;
+        0.05 / batch_max as f64 + 0.08 * frac.max(0.0)
+    }
 }
 
 #[cfg(test)]
@@ -152,6 +166,20 @@ mod tests {
         let c = m.insight_edge(1);
         assert!((c.latency_s - 0.2318).abs() < 1e-9);
         assert!((c.energy_j - 3.12).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batched_tail_latency_amortizes_setup_only() {
+        let m = DeviceModel::jetson_mode_30w(8);
+        for k in [1usize, 4, 8] {
+            // batch_max 1 (and 0) reproduce the unbatched latency exactly.
+            assert_eq!(m.cloud_tail_latency_batched(k, 1), m.cloud_tail_latency(k));
+            assert_eq!(m.cloud_tail_latency_batched(k, 0), m.cloud_tail_latency(k));
+            // Larger batches amortize exactly the 0.05 s setup component.
+            let b8 = m.cloud_tail_latency_batched(k, 8);
+            assert!((m.cloud_tail_latency(k) - b8 - (0.05 - 0.05 / 8.0)).abs() < 1e-12);
+            assert!(b8 > 0.0);
+        }
     }
 
     #[test]

@@ -27,7 +27,10 @@
 //! `--hysteresis H`, `--exec-mode buffers|literals`, `--config FILE`,
 //! `--uavs N`, `--workers N` (fleet), `--scenario NAME` (fleet/fig9),
 //! `--name NAME` / `--list` (scenario), `--format text|json`,
-//! `--jobs N` (parallel mission fan-out for `avery all`).
+//! `--jobs N` (parallel mission fan-out for `avery all`), and the cloud
+//! serving layer's `--batch-max N`, `--cache-entries N`, `--cache-ttl SECS`
+//! and `--queue-depth N` (fleet/scenario; defaults preserve the unbatched,
+//! uncached behavior byte-for-byte).
 //!
 //! Every artifact-free-capable mission (all but `headline`) falls back to
 //! the synthetic closed-form engine when `artifacts/` is missing (control
@@ -61,6 +64,12 @@ missions: table3 fig7 fig8 fig9 fig10 headline streams fleet scenario
   --scenario NAME      run fleet/fig9 under a scenario regime
   --name NAME          scenario to run for `avery run scenario`
   --list               list registered scenarios (`avery scenario --list`)
+  --batch-max N        cloud micro-batch bound for fleet/scenario serving
+                       (default 1 = unbatched)
+  --cache-entries N    cloud response-cache capacity (default 0 = off)
+  --cache-ttl SECS     response-cache TTL in virtual seconds (default: never)
+  --queue-depth N      cloud admission bound on in-flight requests
+                       (default 0 = unbounded; full queues shed with `busy`)
   --format FMT         text | json report rendering (CSVs always written)
   --jobs N             run missions N at a time (`avery all`); output bytes
                        are identical to --jobs 1 (default 1)

@@ -67,6 +67,13 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
     let trace = BandwidthTrace::generate(&trace_cfg);
     let mut link = SharedLink::new(trace, link_cfg, uavs);
 
+    // Serving layer (micro-batching / response cache / admission): the
+    // defaults reproduce the pre-layer pool and timing byte-for-byte.  The
+    // timing model charges the amortized tail per *effective* batch bound —
+    // capped by fleet size, since a batch can only fill from concurrent
+    // UAVs (a lone UAV gets no amortization no matter the flag).
+    let serving = opts.serving();
+    let effective_batch = serving.batch_max.min(uavs);
     let fleet_cfg = FleetConfig {
         n_uavs: uavs,
         mission: MissionConfig {
@@ -76,6 +83,7 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
             seed: opts.seed,
             hysteresis,
             min_dwell,
+            batch_max: effective_batch,
             ..MissionConfig::default()
         },
         workers,
@@ -83,7 +91,7 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
         ..FleetConfig::default()
     };
 
-    let pool = CloudPool::new(vec![env.engine.clone(); workers]);
+    let pool = CloudPool::with_config(vec![env.engine.clone(); workers], serving.clone());
     let wall0 = std::time::Instant::now();
     let run = run_fleet_mission(
         &env.engine,
@@ -227,6 +235,20 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
     report.push_scalar("infeasible_s", run.infeasible_total as f64);
     report.push_scalar("server_utilization", run.server_utilization);
     report.push_scalar("total_energy_j", run.total_energy_j);
+
+    // Serving-layer telemetry only exists when a serving feature is on, so
+    // default runs stay byte-identical to the pre-serving-layer reports.
+    if serving.enabled() {
+        super::push_serving_telemetry(
+            &mut report,
+            "fleet_serving",
+            "role",
+            &run.per_uav,
+            &serving,
+            effective_batch,
+            &pool.stats(),
+        );
+    }
 
     report.push_note(format!(
         "fleet aggregate: {:.2} PPS over {} UAVs, Jain fairness {:.3}, avg IoU {}",

@@ -36,13 +36,16 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+use crate::cloud::{PoolStats, ServingConfig};
 use crate::config::RunConfig;
 use crate::coordinator::{Lut, MissionGoal};
 use crate::dataset::{Corpus, Dataset};
 use crate::energy::DeviceModel;
 use crate::manifest::Manifest;
-use crate::report::Report;
+use crate::report::{Report, Series};
 use crate::runtime::{Engine, ExecMode};
+use crate::streams::fleet::UavOutcome;
+use crate::telemetry::f;
 
 /// Default fleet size when neither the CLI nor a scenario specifies one.
 pub const DEFAULT_UAVS: usize = 4;
@@ -121,6 +124,18 @@ pub struct RunOptions {
     /// Scenario to run for the `scenario` mission (`--name NAME`; falls
     /// back to `scenario`, then "urban-flood").
     pub name: Option<String>,
+    /// Cloud serving layer (`--batch-max N`): micro-batch bound; `None` =
+    /// 1 (unbatched — byte-identical to the pre-serving-layer pool).
+    pub batch_max: Option<usize>,
+    /// Cloud serving layer (`--cache-entries N`): response-cache capacity;
+    /// `None` = 0 (cache off).
+    pub cache_entries: Option<usize>,
+    /// Cloud serving layer (`--cache-ttl SECS`): cache TTL in virtual
+    /// seconds; `None` = never expire.
+    pub cache_ttl: Option<f64>,
+    /// Cloud serving layer (`--queue-depth N`): in-flight request bound;
+    /// `None` = 0 (unbounded).
+    pub queue_depth: Option<usize>,
 }
 
 impl Default for RunOptions {
@@ -135,6 +150,10 @@ impl Default for RunOptions {
             workers: None,
             scenario: None,
             name: None,
+            batch_max: None,
+            cache_entries: None,
+            cache_ttl: None,
+            queue_depth: None,
         }
     }
 }
@@ -152,8 +171,77 @@ impl RunOptions {
             workers: cfg.workers,
             scenario: cfg.scenario.clone(),
             name: cfg.name.clone(),
+            batch_max: cfg.batch_max,
+            cache_entries: cfg.cache_entries,
+            cache_ttl: cfg.cache_ttl,
+            queue_depth: cfg.queue_depth,
         }
     }
+
+    /// The cloud serving configuration these options select — defaults
+    /// reproduce the pre-serving-layer pool byte-for-byte (no batching,
+    /// no cache, unbounded queue; see `cloud::ServingConfig`).
+    pub fn serving(&self) -> crate::cloud::ServingConfig {
+        crate::cloud::ServingConfig {
+            batch_max: self.batch_max.unwrap_or(1).max(1),
+            cache_entries: self.cache_entries.unwrap_or(0),
+            cache_ttl_secs: self.cache_ttl.unwrap_or(f64::INFINITY),
+            queue_depth: self.queue_depth.unwrap_or(0),
+            admission: crate::cloud::AdmissionPolicy::Shed,
+        }
+    }
+}
+
+/// Append the serving-layer telemetry shared by the fleet and scenario
+/// reports: a per-UAV `<series_name>` CSV series plus the cache/admission
+/// scalars and a summary note.  Callers invoke this ONLY when a serving
+/// feature is enabled, so off-mode reports stay byte-identical to the
+/// pre-serving-layer ones.  Every surfaced counter is a deterministic
+/// count of the event-ordered request stream (never wall-clock).
+pub(crate) fn push_serving_telemetry(
+    report: &mut Report,
+    series_name: &str,
+    role_header: &str,
+    per_uav: &[UavOutcome],
+    serving: &ServingConfig,
+    effective_batch: usize,
+    ps: &PoolStats,
+) {
+    let mut sv =
+        Series::new(series_name, &["uav", role_header, "executed", "cache_hits", "hit_rate"]);
+    for o in per_uav {
+        let s = &o.summary;
+        sv.row(&[
+            o.id.to_string(),
+            o.role.name().to_string(),
+            s.executed.to_string(),
+            s.cache_hits.to_string(),
+            f(s.cache_hits as f64 / s.executed.max(1) as f64, 4),
+        ]);
+    }
+    report.push_series(sv);
+    report.push_scalar("batch_max", serving.batch_max as f64);
+    // What the timing model actually charged: the flag capped by fleet
+    // size (batches can only fill from concurrent UAVs).
+    report.push_scalar("batch_max_effective", effective_batch as f64);
+    report.push_scalar("cache_entries", serving.cache_entries as f64);
+    report.push_scalar("cache_hits", ps.cache_hits as f64);
+    report.push_scalar("cache_misses", ps.cache_misses as f64);
+    report.push_scalar("cache_evictions", ps.cache_evictions as f64);
+    report.push_scalar("cache_expirations", ps.cache_expirations as f64);
+    report.push_scalar("cache_hit_rate", ps.cache_hit_rate());
+    report.push_scalar("shed", ps.shed as f64);
+    report.push_note(format!(
+        "serving: batch_max {}, cache {}/{} hits ({} entries, {} evictions, {} expired), \
+         {} shed",
+        serving.batch_max,
+        ps.cache_hits,
+        ps.cache_hits + ps.cache_misses,
+        serving.cache_entries,
+        ps.cache_evictions,
+        ps.cache_expirations,
+        ps.shed
+    ));
 }
 
 /// Shared environment every mission needs.
@@ -271,7 +359,8 @@ mod tests {
         let kv = Kv::parse(
             "duration = 300\ngoal = throughput\nexec-every = 4\nseed = 9\n\
              hysteresis = 0.1\nuavs = 8\nworkers = 3\nscenario = urban-flood\n\
-             name = wildfire-ridge\n",
+             name = wildfire-ridge\nbatch-max = 8\ncache-entries = 64\n\
+             cache-ttl = 45\nqueue-depth = 32\n",
         )
         .unwrap();
         let cfg = RunConfig::from_kv(&kv).unwrap();
@@ -285,11 +374,28 @@ mod tests {
         assert_eq!(opts.workers, Some(3));
         assert_eq!(opts.scenario.as_deref(), Some("urban-flood"));
         assert_eq!(opts.name.as_deref(), Some("wildfire-ridge"));
+        assert_eq!(opts.batch_max, Some(8));
+        assert_eq!(opts.cache_entries, Some(64));
+        assert_eq!(opts.cache_ttl, Some(45.0));
+        assert_eq!(opts.queue_depth, Some(32));
+        let serving = opts.serving();
+        assert!(serving.enabled());
+        assert_eq!(serving.batch_max, 8);
+        assert_eq!(serving.cache_entries, 64);
+        assert_eq!(serving.cache_ttl_secs, 45.0);
+        assert_eq!(serving.queue_depth, 32);
 
         let defaults = RunOptions::from_config(&RunConfig::from_kv(&Kv::default()).unwrap());
         assert_eq!(defaults.goal, None);
         assert_eq!(defaults.uavs, None);
         assert_eq!(defaults.workers, None);
         assert_eq!(defaults.duration_secs, 1200.0);
+        // Serving defaults are the pre-layer behavior (nothing enabled).
+        let serving = defaults.serving();
+        assert!(!serving.enabled());
+        assert_eq!(serving.batch_max, 1);
+        assert_eq!(serving.cache_entries, 0);
+        assert_eq!(serving.queue_depth, 0);
+        assert!(serving.cache_ttl_secs.is_infinite());
     }
 }

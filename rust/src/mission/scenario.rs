@@ -70,6 +70,11 @@ pub fn run_scenario(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> 
     let tsum = summarize_trace(&sc.trace, &trace);
     let mut link = SharedLink::new(trace, sc.link.clone(), n_uavs);
 
+    // Timing charges the amortized tail per *effective* batch bound —
+    // capped by fleet size, since batches can only fill from concurrent
+    // UAVs (see `run_fleet`).
+    let serving = opts.serving();
+    let effective_batch = serving.batch_max.min(n_uavs);
     let fleet_cfg = FleetConfig {
         n_uavs,
         mission: MissionConfig {
@@ -79,6 +84,7 @@ pub fn run_scenario(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> 
             seed: opts.seed,
             hysteresis: sc.hysteresis,
             min_dwell: sc.min_dwell,
+            batch_max: effective_batch,
             ..MissionConfig::default()
         },
         context_every: sc.fleet.context_every,
@@ -87,7 +93,7 @@ pub fn run_scenario(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> 
         schedule: sc.schedule.clone(),
     };
 
-    let pool = CloudPool::new(vec![env.engine.clone(); workers]);
+    let pool = CloudPool::with_config(vec![env.engine.clone(); workers], serving.clone());
     let run = run_fleet_mission(
         &env.engine,
         &env.datasets(),
@@ -237,6 +243,21 @@ pub fn run_scenario(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> 
     report.push_scalar("trace_mean_mbps", tsum.mean_mbps);
     report.push_scalar("trace_outage_s", tsum.outage_secs);
     report.push_scalar("trace_regimes", tsum.regimes as f64);
+
+    // Serving-layer telemetry, only when a serving feature is enabled —
+    // default scenario reports stay byte-identical to the pre-layer ones
+    // (pinned by the mission-api golden JSON test).
+    if serving.enabled() {
+        super::push_serving_telemetry(
+            &mut report,
+            &format!("{stem}_serving"),
+            "launch_role",
+            &run.per_uav,
+            &serving,
+            effective_batch,
+            &pool.stats(),
+        );
+    }
 
     report.push_note(format!(
         "trace: mean {:.1} Mbps in [{:.2}, {:.1}], {} regimes, {:.0} s outage",

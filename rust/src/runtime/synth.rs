@@ -92,6 +92,34 @@ fn parse_split_tier(rest: &str) -> Result<(usize, TierId)> {
     Ok((split, tier))
 }
 
+/// A resolved artifact name: what the closed-form model will run.  Resolving
+/// once per *batch* (instead of once per request) is the inline backend's
+/// share of the micro-batching win — see [`execute_synthetic_batch`].
+enum SynthOp {
+    Head,
+    Tail(TierId),
+    ContextEdge,
+    ContextRespond,
+}
+
+/// Resolve an artifact name to its closed-form operation.  Error cases and
+/// messages match the pre-batching single-request path exactly.
+fn resolve_op(artifact: &str) -> Result<SynthOp> {
+    if let Some(rest) = artifact.strip_prefix("head_sp") {
+        let (_split, _tier) = parse_split_tier(rest)?;
+        return Ok(SynthOp::Head);
+    }
+    if let Some(rest) = artifact.strip_prefix("tail_sp") {
+        let (_split, tier) = parse_split_tier(rest)?;
+        return Ok(SynthOp::Tail(tier));
+    }
+    match artifact {
+        "context_edge" => Ok(SynthOp::ContextEdge),
+        "context_respond" => Ok(SynthOp::ContextRespond),
+        other => bail!("synthetic engine has no artifact `{other}`"),
+    }
+}
+
 /// Validate an (img, img, 3) scene image and return its side length.
 fn scene_side(image: &Tensor) -> Result<usize> {
     let shape = image.shape();
@@ -132,8 +160,26 @@ fn clip_rows(on0: usize, on1: usize, n: usize) -> Result<Tensor> {
 /// simulated packet, so the only `Vec`s built here are the ones the output
 /// [`Tensor`]s must own — no intermediate plane/scratch buffers.
 pub fn execute_synthetic(artifact: &str, set: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-    if let Some(rest) = artifact.strip_prefix("head_sp") {
-        let (_split, _tier) = parse_split_tier(rest)?;
+    run_op(&resolve_op(artifact)?, set, inputs)
+}
+
+/// Serve a micro-batch of compatible requests (same artifact + weight set):
+/// the artifact name is resolved once, then the pure closed-form kernel
+/// loops over the batch.  Results are element-for-element identical to
+/// calling [`execute_synthetic`] once per request (pinned by
+/// `rust/tests/serving.rs`); any failing element fails the whole batch.
+pub fn execute_synthetic_batch(
+    artifact: &str,
+    set: &str,
+    batches: &[&[Tensor]],
+) -> Result<Vec<Vec<Tensor>>> {
+    let op = resolve_op(artifact)?;
+    batches.iter().map(|inputs| run_op(&op, set, inputs)).collect()
+}
+
+/// Run one resolved closed-form operation.
+fn run_op(op: &SynthOp, set: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    if matches!(op, SynthOp::Head) {
         if inputs.len() != 1 {
             bail!("head wants 1 input, got {}", inputs.len());
         }
@@ -158,8 +204,8 @@ pub fn execute_synthetic(artifact: &str, set: &str, inputs: &[Tensor]) -> Result
         return Ok(vec![Tensor::f32(vec![2, n], code)?, clip, pooled]);
     }
 
-    if let Some(rest) = artifact.strip_prefix("tail_sp") {
-        let (_split, tier) = parse_split_tier(rest)?;
+    if let SynthOp::Tail(tier) = op {
+        let tier = *tier;
         if inputs.len() != 3 {
             bail!("tail wants (code, clip, prompt_ids), got {} inputs", inputs.len());
         }
@@ -200,8 +246,8 @@ pub fn execute_synthetic(artifact: &str, set: &str, inputs: &[Tensor]) -> Result
         ]);
     }
 
-    match artifact {
-        "context_edge" => {
+    match op {
+        SynthOp::ContextEdge => {
             if inputs.len() != 1 {
                 bail!("context_edge wants 1 input, got {}", inputs.len());
             }
@@ -210,7 +256,7 @@ pub fn execute_synthetic(artifact: &str, set: &str, inputs: &[Tensor]) -> Result
             let (on0, on1) = plane_counts(inputs[0].as_f32()?, n);
             Ok(vec![clip_rows(on0, on1, n)?])
         }
-        "context_respond" => {
+        SynthOp::ContextRespond => {
             if inputs.len() != 2 {
                 bail!("context_respond wants (clip, prompt_ids), got {}", inputs.len());
             }
@@ -238,7 +284,8 @@ pub fn execute_synthetic(artifact: &str, set: &str, inputs: &[Tensor]) -> Result
                 .collect();
             Ok(vec![Tensor::f32(vec![2], presence)?])
         }
-        other => bail!("synthetic engine has no artifact `{other}`"),
+        // Handled by the early returns above.
+        SynthOp::Head | SynthOp::Tail(_) => unreachable!("handled above"),
     }
 }
 
@@ -333,5 +380,28 @@ mod tests {
     fn unknown_artifact_rejected() {
         assert!(execute_synthetic("bogus", "shared", &[]).is_err());
         assert!(execute_synthetic("head_spX_balanced", "shared", &[scene_image()]).is_err());
+        assert!(execute_synthetic_batch("bogus", "shared", &[]).is_err());
+    }
+
+    #[test]
+    fn batch_matches_sequential_execution() {
+        let a = [scene_image()];
+        let mut flipped = vec![0.0f32; 4 * 4 * 3];
+        for i in 8..16 {
+            flipped[i * 3 + 1] = 1.0;
+        }
+        let b = [Tensor::f32(vec![4, 4, 3], flipped).unwrap()];
+        let batch = execute_synthetic_batch("head_sp1_balanced", "shared", &[&a, &b]).unwrap();
+        assert_eq!(batch.len(), 2);
+        for (inputs, outs) in [(&a[..], &batch[0]), (&b[..], &batch[1])] {
+            let single = execute_synthetic("head_sp1_balanced", "shared", inputs).unwrap();
+            assert_eq!(&single, outs);
+        }
+        // An empty batch resolves the artifact but runs nothing.
+        assert!(execute_synthetic_batch("head_sp1_balanced", "shared", &[])
+            .unwrap()
+            .is_empty());
+        // One bad element fails the whole batch.
+        assert!(execute_synthetic_batch("head_sp1_balanced", "shared", &[&a, &[]]).is_err());
     }
 }

@@ -103,6 +103,9 @@ pub struct FleetRun {
     /// Scheduled operator re-taskings applied across the fleet.
     pub intent_switches_total: u64,
     pub infeasible_total: u64,
+    /// Served requests answered from the cloud response cache (0 unless the
+    /// serving layer's cache is enabled).
+    pub cache_hits_total: u64,
     /// Executed-weighted mean IoU over Insight UAVs.
     pub avg_iou: f64,
     /// Virtual server utilization: induced tail-seconds / (duration x workers).
@@ -268,6 +271,7 @@ pub fn run_fleet_mission(
         switches_total: per_uav.iter().map(|o| o.summary.switches).sum(),
         intent_switches_total: per_uav.iter().map(|o| o.summary.intent_switches).sum(),
         infeasible_total: per_uav.iter().map(|o| o.summary.infeasible_epochs).sum(),
+        cache_hits_total: per_uav.iter().map(|o| o.summary.cache_hits).sum(),
         avg_iou,
         server_utilization: server_secs / (duration.max(1e-9) * cfg.workers.max(1) as f64),
         total_energy_j: per_uav.iter().map(|o| o.summary.total_energy_j).sum(),

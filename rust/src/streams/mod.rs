@@ -91,6 +91,10 @@ pub struct MissionConfig {
     /// Fixed split point (the paper fixes split@1 after §5.2.1).
     pub split: usize,
     pub seed: u64,
+    /// Cloud micro-batch bound the serving layer runs with (1 = unbatched):
+    /// the timing model amortizes the per-request tail setup across the
+    /// batch ([`crate::energy::DeviceModel::cloud_tail_latency_batched`]).
+    pub batch_max: usize,
 }
 
 impl Default for MissionConfig {
@@ -105,6 +109,7 @@ impl Default for MissionConfig {
             min_dwell: 0,
             split: 1,
             seed: 7,
+            batch_max: 1,
         }
     }
 }
@@ -178,6 +183,9 @@ pub struct RunSummary {
     /// Operator re-taskings applied from the intent schedule.
     pub intent_switches: u64,
     pub infeasible_epochs: u64,
+    /// Served requests answered from the cloud's content-addressed response
+    /// cache (0 unless the serving layer's cache is enabled).
+    pub cache_hits: u64,
 }
 
 /// Full result of an Insight mission run.
@@ -235,6 +243,8 @@ pub struct UavAgent<'a> {
     infeasible: u64,
     delivered: u64,
     executed: u64,
+    /// Served requests answered from the cloud response cache.
+    cache_hits: u64,
     /// Virtual seconds of server-side work this agent induced (utilization).
     pub server_secs: f64,
     ctx_correct: u64,
@@ -246,6 +256,11 @@ pub struct UavAgent<'a> {
 /// Server-side virtual seconds charged per Context response (the text-only
 /// responder is far lighter than any Insight tail).
 pub const CONTEXT_TAIL_SECS: f64 = 0.02;
+
+/// Server-side virtual seconds charged when the serving layer answers a
+/// request from its content-addressed response cache: one index lookup and
+/// a reply — no tail execution at all (DESIGN.md "Cloud serving layer").
+pub const CACHE_HIT_TAIL_SECS: f64 = 0.002;
 
 impl<'a> UavAgent<'a> {
     /// An Insight-stream agent (the paper's dynamic-mission loop).
@@ -345,6 +360,7 @@ impl<'a> UavAgent<'a> {
             infeasible: 0,
             delivered: 0,
             executed: 0,
+            cache_hits: 0,
             server_secs: 0.0,
             ctx_correct: 0,
             ctx_total: 0,
@@ -477,8 +493,10 @@ impl<'a> UavAgent<'a> {
         let tx = uplink.transmit(self.id, t, pkt.wire_bytes);
         self.estimator.observe(tx.goodput_mbps);
         let cycle = cost.latency_s.max(tx.tx_secs);
-        let tail = self.device.cloud_tail_latency(self.cfg.split);
-        let t_deliver = t + cycle + tail;
+        // Micro-batched serving amortizes the per-request tail setup
+        // (identical to the unbatched latency at batch_max <= 1); a cache
+        // hit replaces tail execution with the lookup cost entirely.
+        let mut tail = self.device.cloud_tail_latency_batched(self.cfg.split, self.cfg.batch_max);
         let tx_energy = self.device.tx_energy(tx.tx_secs);
         self.total_energy += cost.energy_j + tx_energy;
         self.tier_secs[tier.index()] += cycle;
@@ -486,7 +504,6 @@ impl<'a> UavAgent<'a> {
         let mut iou = None;
         if tx.delivered {
             self.delivered += 1;
-            self.server_secs += tail;
             // Sample packets for real HLO execution with probability
             // 1/exec_every via the deterministic rng — a modulo would alias
             // against the strict generic/flood round-robin and starve one
@@ -494,8 +511,13 @@ impl<'a> UavAgent<'a> {
             let sample = self.cfg.exec_every <= 1
                 || self.probe_noise.below(self.cfg.exec_every) == 0;
             if sample {
-                let resp = server.serve(&pkt, &intent.token_ids, item.corpus.weight_set())?;
-                let logits = resp.mask_logits.as_ref().expect("insight mask");
+                let served =
+                    server.serve(&pkt, &intent.token_ids, item.corpus.weight_set())?;
+                if served.cache_hit {
+                    self.cache_hits += 1;
+                    tail = CACHE_HIT_TAIL_SECS;
+                }
+                let logits = served.resp.mask_logits.as_ref().expect("insight mask");
                 let s = mask_iou(logits.as_f32()?, &item.scene.masks[class_id], 0.0);
                 let mut one = IouAccumulator::default();
                 one.push(s);
@@ -507,7 +529,9 @@ impl<'a> UavAgent<'a> {
                 }
                 self.executed += 1;
             }
+            self.server_secs += tail;
         }
+        let t_deliver = t + cycle + tail;
         self.packets.push(PacketRecord {
             t_send: t,
             t_deliver,
@@ -566,12 +590,17 @@ impl<'a> UavAgent<'a> {
         self.total_energy += cost.energy_j + tx_energy;
         if tx.delivered {
             self.delivered += 1;
-            self.server_secs += CONTEXT_TAIL_SECS;
+            let mut tail = CONTEXT_TAIL_SECS;
             let sample = self.cfg.exec_every <= 1
                 || self.probe_noise.below(self.cfg.exec_every) == 0;
             if sample {
-                let resp = server.serve(&pkt, &intent.token_ids, item.corpus.weight_set())?;
-                for (cls, &logit) in resp.presence.iter().enumerate() {
+                let served =
+                    server.serve(&pkt, &intent.token_ids, item.corpus.weight_set())?;
+                if served.cache_hit {
+                    self.cache_hits += 1;
+                    tail = CACHE_HIT_TAIL_SECS;
+                }
+                for (cls, &logit) in served.resp.presence.iter().enumerate() {
                     let gt = item.scene.masks[cls].iter().any(|&m| m > 0.5);
                     if (logit > 0.0) == gt {
                         self.ctx_correct += 1;
@@ -580,6 +609,7 @@ impl<'a> UavAgent<'a> {
                 }
                 self.executed += 1;
             }
+            self.server_secs += tail;
         }
         self.t += cycle;
         Ok(true)
@@ -620,6 +650,7 @@ impl<'a> UavAgent<'a> {
             switches: self.controller.switches,
             intent_switches: self.intent_switches,
             infeasible_epochs: self.infeasible,
+            cache_hits: self.cache_hits,
         }
     }
 }

@@ -15,6 +15,13 @@ use anyhow::{bail, Context, Result};
 /// Maximum frame we will accept (guards against corrupt length prefixes).
 pub const MAX_FRAME: usize = 64 << 20;
 
+/// Server reply frame sent instead of a response when the admission
+/// controller sheds a session request (`CloudPool::serve_session` with a
+/// bounded queue under [`crate::cloud::AdmissionPolicy::Shed`]).  Four
+/// bytes, so it can never be confused with a real response frame — those
+/// always carry at least two u32 section counts (8 bytes).
+pub const BUSY_FRAME: &[u8] = b"busy";
+
 /// A bidirectional message transport.
 pub trait Transport {
     fn send(&mut self, frame: &[u8]) -> Result<()>;
@@ -111,9 +118,17 @@ pub fn encode_request(packet_bytes: &[u8], prompt: &str, set: &str) -> Vec<u8> {
 
 pub fn decode_request(frame: &[u8]) -> Result<(Vec<u8>, String, String)> {
     let mut off = 0usize;
+    // Every section length is checked against the bytes actually remaining
+    // BEFORE any slicing — a corrupt or hostile u32 prefix (up to 4 GiB of
+    // declared payload) is rejected here instead of driving downstream
+    // allocation or offset arithmetic.  The same guard covers short reply
+    // frames (e.g. the 4-byte `busy` frame) mistakenly fed to this decoder.
     let mut take = |n: usize| -> Result<&[u8]> {
-        if off + n > frame.len() {
-            bail!("request truncated");
+        if n > frame.len() - off {
+            bail!(
+                "request section of {n} bytes exceeds the {} bytes remaining in the frame",
+                frame.len() - off
+            );
         }
         let s = &frame[off..off + n];
         off += n;
@@ -244,5 +259,28 @@ mod tests {
     fn truncated_request_rejected() {
         let frame = encode_request(b"abc", "p", "s");
         assert!(decode_request(&frame[..frame.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn oversized_section_lengths_rejected() {
+        // A 4 GiB packet-section prefix in a tiny frame: rejected before
+        // any slicing or allocation.
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&u32::MAX.to_le_bytes());
+        frame.extend_from_slice(b"abc");
+        let err = decode_request(&frame).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "{err}");
+        // Same for the prompt and set sections.
+        for (prompt_len, set_len) in [(u32::MAX, 0u32), (1, u32::MAX)] {
+            let mut frame = Vec::new();
+            frame.extend_from_slice(&2u32.to_le_bytes());
+            frame.extend_from_slice(b"pk");
+            frame.extend_from_slice(&prompt_len.to_le_bytes());
+            frame.extend_from_slice(b"p");
+            frame.extend_from_slice(&set_len.to_le_bytes());
+            assert!(decode_request(&frame).is_err(), "{prompt_len} {set_len}");
+        }
+        // The short busy reply frame cannot be misparsed as a request.
+        assert!(decode_request(BUSY_FRAME).is_err());
     }
 }

@@ -67,11 +67,38 @@ const CRC32_TABLE: [u32; 256] = {
 /// CRC-32 (IEEE 802.3) — table-driven and self-contained, so the per-packet
 /// wire format has no external-crate dependency on its hot path.
 pub fn crc32(bytes: &[u8]) -> u32 {
-    let mut crc = !0u32;
-    for &b in bytes {
-        crc = (crc >> 8) ^ CRC32_TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+/// Streaming CRC-32 over multiple sections (same polynomial and result as
+/// [`crc32`]) — lets the cloud serving layer derive its content-addressed
+/// cache key from a packet's payload fields without materializing one
+/// contiguous buffer per request.
+#[derive(Clone, Copy, Debug)]
+pub struct Crc32(u32);
+
+impl Crc32 {
+    pub fn new() -> Self {
+        Self(!0)
     }
-    !crc
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0 >> 8) ^ CRC32_TABLE[((self.0 ^ b as u32) & 0xFF) as usize];
+        }
+    }
+
+    pub fn finish(self) -> u32 {
+        !self.0
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 /// FNV-1a 32-bit — MUST stay in exact sync with python/compile/data.py.
@@ -191,6 +218,16 @@ mod tests {
         // The CRC-32 "check" input from the catalogue of parametrised CRCs.
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn crc32_streaming_matches_one_shot() {
+        let mut c = Crc32::new();
+        c.update(b"1234");
+        c.update(b"");
+        c.update(b"56789");
+        assert_eq!(c.finish(), crc32(b"123456789"));
+        assert_eq!(Crc32::default().finish(), 0);
     }
 
     #[test]

@@ -217,9 +217,10 @@ fn cloud_pool_serves_concurrent_clients() {
             };
             s.spawn(move || {
                 for _ in 0..3 {
-                    let resp = pool.process_sync(pkt, ids, "ft").unwrap();
-                    assert_eq!(resp.presence.len(), 2);
-                    assert_eq!(resp.mask_logits.is_some(), i % 2 == 0);
+                    let served = pool.process_sync(pkt, ids, "ft").unwrap();
+                    assert!(!served.cache_hit, "cache is off by default");
+                    assert_eq!(served.resp.presence.len(), 2);
+                    assert_eq!(served.resp.mask_logits.is_some(), i % 2 == 0);
                 }
             });
         }

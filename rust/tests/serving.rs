@@ -1,0 +1,273 @@
+//! Cloud serving layer integration tests (DESIGN.md "Cloud serving layer")
+//! — no artifacts required, never skipped.
+//!
+//! * **Batcher parity** — `Engine::execute_batch` is element-for-element
+//!   identical to sequential `execute` calls on both the inline and the
+//!   threaded synthetic backend, across every artifact class.
+//! * **Off-mode parity** — a fleet mission with the serving defaults
+//!   (`--batch-max 1 --cache-entries 0`) produces a byte-identical JSON
+//!   report to one with the options entirely unset, and emits no serving
+//!   telemetry at all.
+//! * **Enabled-mode determinism** — two same-seed fleet runs with
+//!   batching + cache on are byte-identical, show nonzero reuse, and
+//!   charge *less* virtual server time than the unbatched/uncached run.
+//! * **Admission control** — the wait policy backpressures without loss;
+//!   a full bounded queue sheds with the wire protocol's `busy` frame.
+
+use std::path::Path;
+
+use avery::cloud::{
+    decode_reply, AdmissionPolicy, CloudPool, ServerReply, ServingConfig,
+};
+use avery::coordinator::{classify_intent, Lut, TierId};
+use avery::dataset::{Corpus, Dataset};
+use avery::edge::EdgePipeline;
+use avery::energy::DeviceModel;
+use avery::mission::{run_fleet, Env, RunOptions};
+use avery::packet::Packet;
+use avery::report::{to_json, Report};
+use avery::runtime::Engine;
+use avery::streams::fleet::FleetRun;
+use avery::tensor::Tensor;
+use avery::transport::{encode_request, InProc, Transport};
+
+/// Batch-compatible Insight packets over distinct synthetic scenes.
+fn insight_packets(n: usize, img: usize) -> (Vec<Packet>, Vec<i32>) {
+    let engine = Engine::synthetic();
+    let ds = Dataset::synthetic(Corpus::Flood, n, img, 0xF10D0);
+    let mut edge = EdgePipeline::new(engine, DeviceModel::jetson_mode_30w(8), Lut::paper());
+    let pkts = ds
+        .scenes
+        .iter()
+        .map(|s| edge.capture_insight(s, 1, TierId::Balanced, 0.0).unwrap().0)
+        .collect();
+    (pkts, classify_intent("highlight the stranded people").token_ids)
+}
+
+// ---------------------------------------------------------------------------
+// Batcher parity: execute_batch == N sequential executes, both backends
+// ---------------------------------------------------------------------------
+
+#[test]
+fn execute_batch_parity_across_backends_and_artifacts() {
+    let ds = Dataset::synthetic(Corpus::Generic, 3, 16, 0xA5E17);
+    let scenes: Vec<&[Tensor]> =
+        ds.scenes.iter().map(|s| std::slice::from_ref(&s.image)).collect();
+    let intent = classify_intent("highlight the stranded people");
+    let pids = Tensor::i32(vec![intent.token_ids.len()], intent.token_ids.clone()).unwrap();
+    for engine in [Engine::synthetic(), Engine::synthetic_threaded()] {
+        for artifact in ["head_sp1_balanced", "head_sp2_high_accuracy", "context_edge"] {
+            let batch = engine.execute_batch(artifact, "shared", &scenes).unwrap();
+            for (inputs, outs) in scenes.iter().zip(&batch) {
+                assert_eq!(&engine.execute(artifact, "shared", inputs).unwrap(), outs,
+                    "{artifact}");
+            }
+        }
+        // Tail + context responder over per-scene inputs.
+        let heads: Vec<Vec<Tensor>> = scenes
+            .iter()
+            .map(|s| engine.execute("head_sp1_balanced", "shared", s).unwrap())
+            .collect();
+        for set in ["orig", "ft"] {
+            let tails: Vec<Vec<Tensor>> = heads
+                .iter()
+                .map(|h| vec![h[0].clone(), h[1].clone(), pids.clone()])
+                .collect();
+            let refs: Vec<&[Tensor]> = tails.iter().map(|t| t.as_slice()).collect();
+            let batch = engine.execute_batch("tail_sp1_balanced", set, &refs).unwrap();
+            for (inputs, outs) in refs.iter().zip(&batch) {
+                assert_eq!(
+                    &engine.execute("tail_sp1_balanced", set, inputs).unwrap(),
+                    outs,
+                    "tail.{set}"
+                );
+            }
+        }
+        let ctx: Vec<Vec<Tensor>> = scenes
+            .iter()
+            .map(|s| {
+                let clip = engine.execute("context_edge", "shared", s).unwrap();
+                vec![clip[0].clone(), pids.clone()]
+            })
+            .collect();
+        let refs: Vec<&[Tensor]> = ctx.iter().map(|c| c.as_slice()).collect();
+        let batch = engine.execute_batch("context_respond", "ft", &refs).unwrap();
+        for (inputs, outs) in refs.iter().zip(&batch) {
+            assert_eq!(&engine.execute("context_respond", "ft", inputs).unwrap(), outs);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet missions: off-mode byte parity, enabled-mode determinism + reuse
+// ---------------------------------------------------------------------------
+
+fn fleet_json(tag: &str, opts: &RunOptions) -> (FleetRun, Report, String) {
+    let env = Env::synthetic(Path::new(&format!("target/test-out/serving-{tag}"))).unwrap();
+    let (run, report) = run_fleet(&env, opts).unwrap();
+    let json = to_json(&report);
+    (run, report, json)
+}
+
+fn base_opts() -> RunOptions {
+    RunOptions {
+        duration_secs: 120.0,
+        uavs: Some(8),
+        workers: Some(2),
+        seed: 7,
+        ..RunOptions::default()
+    }
+}
+
+#[test]
+fn serving_defaults_are_byte_identical_to_unset_options() {
+    let (_, _, unset) = fleet_json("unset", &base_opts());
+    let explicit = RunOptions {
+        batch_max: Some(1),
+        cache_entries: Some(0),
+        queue_depth: Some(0),
+        ..base_opts()
+    };
+    let (_, report, off) = fleet_json("explicit-off", &explicit);
+    assert_eq!(unset, off, "--batch-max 1 --cache-entries 0 must be a no-op");
+    // Off-mode reports carry no serving telemetry at all.
+    assert!(!off.contains("fleet_serving"));
+    assert!(report.scalar_value("cache_hit_rate").is_none());
+    assert!(report.scalar_value("batch_max").is_none());
+}
+
+#[test]
+fn serving_enabled_fleet_is_deterministic_and_reuses() {
+    let enabled = RunOptions {
+        batch_max: Some(8),
+        cache_entries: Some(256),
+        cache_ttl: Some(120.0),
+        ..base_opts()
+    };
+    let (run_a, report, a) = fleet_json("on-a", &enabled);
+    let (_, _, b) = fleet_json("on-b", &enabled);
+    assert_eq!(a, b, "same-seed serving-enabled fleet reports differ");
+
+    // The redundant swarm stream actually reuses responses...
+    assert!(run_a.cache_hits_total > 0, "no cache hits across an 8-UAV fleet");
+    let hit_rate = report.scalar_value("cache_hit_rate").unwrap();
+    assert!(hit_rate > 0.0 && hit_rate <= 1.0, "hit rate {hit_rate}");
+    assert_eq!(report.scalar_value("batch_max"), Some(8.0));
+    assert_eq!(report.scalar_value("shed"), Some(0.0), "sim path must never shed");
+    let serving = report
+        .series
+        .iter()
+        .find(|s| s.name == "fleet_serving")
+        .expect("serving series present when enabled");
+    assert_eq!(serving.rows.len(), 8);
+
+    // ...and batching + hits charge less virtual server time than the
+    // unbatched/uncached baseline (both runs are deterministic).
+    let (_, baseline, _) = fleet_json("baseline", &base_opts());
+    let util_on = report.scalar_value("server_utilization").unwrap();
+    let util_off = baseline.scalar_value("server_utilization").unwrap();
+    assert!(
+        util_on < util_off,
+        "batched+cached utilization {util_on} not below baseline {util_off}"
+    );
+}
+
+#[test]
+fn lone_uav_gets_no_batch_amortization() {
+    // The timing model caps batch amortization at the fleet size: a batch
+    // can only fill from concurrent UAVs, so N=1 charges the unbatched
+    // tail no matter how large the flag is.
+    let solo = RunOptions {
+        duration_secs: 120.0,
+        uavs: Some(1),
+        workers: Some(1),
+        seed: 7,
+        ..RunOptions::default()
+    };
+    let (_, base, _) = fleet_json("solo-base", &solo);
+    let batched = RunOptions { batch_max: Some(64), ..solo };
+    let (_, on, _) = fleet_json("solo-batch", &batched);
+    assert_eq!(
+        base.scalar_value("server_utilization"),
+        on.scalar_value("server_utilization"),
+        "a lone UAV must not be granted batch-setup amortization"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Admission control end to end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wait_policy_backpressures_without_loss() {
+    let (pkts, ids) = insight_packets(4, 16);
+    let pool = CloudPool::with_config(
+        vec![Engine::synthetic_threaded()],
+        ServingConfig {
+            batch_max: 2,
+            queue_depth: 2,
+            admission: AdmissionPolicy::Wait,
+            ..ServingConfig::default()
+        },
+    );
+    let mut tickets = Vec::new();
+    for i in 0..20 {
+        tickets.push(pool.submit(&pkts[i % pkts.len()], &ids, "ft").unwrap());
+    }
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let st = pool.stats();
+    assert_eq!(st.shed, 0);
+    assert_eq!(st.completed, 20);
+    assert_eq!(st.batched_requests, 20);
+}
+
+#[test]
+fn session_replies_busy_while_queue_is_full() {
+    let pool = CloudPool::with_config(
+        vec![Engine::synthetic_threaded()],
+        ServingConfig { queue_depth: 1, ..ServingConfig::default() },
+    );
+    // Occupy the single in-flight slot with a slow request (2048x2048
+    // scene: ~100 ms of closed-form work — a wide window for the shed
+    // assertion below even on a loaded CI runner).
+    let (big, big_ids) = insight_packets(1, 2048);
+    let blocker = pool.submit(&big[0], &big_ids, "ft").unwrap();
+
+    let (small, _) = insight_packets(1, 16);
+    let frame =
+        encode_request(&small[0].encode(), "highlight the stranded people", "ft");
+    let (mut client, mut server_side) = InProc::pair();
+    std::thread::scope(|s| {
+        let pool = &pool;
+        s.spawn(move || {
+            let served = pool.serve_session(&mut server_side, "ft").unwrap();
+            assert!(served >= 1, "session never served once the slot freed");
+        });
+        // While the blocker holds the slot, the session request is shed
+        // with the wire protocol's busy frame.
+        client.send(&frame).unwrap();
+        assert_eq!(decode_reply(&client.recv().unwrap()).unwrap(), ServerReply::Busy);
+        // Drain the blocker, then retry until the slot frees.
+        blocker.wait().unwrap();
+        let mut served = false;
+        for _ in 0..200 {
+            client.send(&frame).unwrap();
+            match decode_reply(&client.recv().unwrap()).unwrap() {
+                ServerReply::Busy => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                ServerReply::Response { presence, mask } => {
+                    assert_eq!(presence.len(), 2);
+                    assert!(!mask.is_empty());
+                    served = true;
+                    break;
+                }
+            }
+        }
+        assert!(served, "slot never freed after the blocker completed");
+        client.send(b"shutdown").unwrap();
+    });
+    assert!(pool.stats().shed >= 1, "no shed was recorded");
+}
