@@ -19,12 +19,14 @@ test:
 bench:
 	cargo bench --bench simkernel -- --out BENCH_simkernel.json
 	cargo bench --bench serving -- --out BENCH_serving.json
+	cargo bench --bench scenario_matrix -- --out BENCH_scenario_matrix.json
 	cargo bench --bench hotpath
 
 # CI-sized variant of the same set.
 bench-quick:
 	cargo bench --bench simkernel -- --quick --out BENCH_simkernel.json
 	cargo bench --bench serving -- --quick --out BENCH_serving.json
+	cargo bench --bench scenario_matrix -- --quick --out BENCH_scenario_matrix.json
 	cargo bench --bench hotpath
 
 # Every bench target, including the artifact-gated figure benches.

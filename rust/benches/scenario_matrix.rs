@@ -1,21 +1,82 @@
-//! Bench: the scenario matrix — every registered scenario-library regime
-//! run end to end through the Mission API (DESIGN.md "Scenario library &
-//! artifact-free sim path"), consuming each run's structured `Report`.
+//! Bench: the scenario matrix — the scenario-library regimes end to end
+//! through the Mission API, plus the scenario compiler's perf trajectory
+//! (DESIGN.md "Scenario compiler"), emitted as machine-readable
+//! `BENCH_scenario_matrix.json` (CI's `matrix-smoke` job parses it and
+//! enforces a compile-throughput floor from `ci/bench_floor.json`).
 //!
-//! Reports, per scenario: fleet shape, delivered packets, aggregate PPS,
-//! Jain fairness, tier/intent switches, infeasible (outage-starved)
-//! seconds, and the wall-clock cost of simulating the regime.  Runs
-//! against real artifacts when present, else the synthetic closed-form
-//! engine — the matrix itself is what this bench times, not the numerics.
+//! Sections:
+//!
+//! * **library** — every registered scenario run end to end (fleet shape,
+//!   delivered packets, aggregate PPS, Jain fairness, tier/intent
+//!   switches, infeasible seconds, wall-clock).
+//! * **compile** — parse + validate + lower throughput over the full
+//!   generated manifest corpus (8 traces × 4 links × 4 fleets × 4
+//!   intents), plus the checked-in `scenarios/*.toml` files.
+//! * **parity** — each checked-in manifest instantiated against its
+//!   hand-coded `scenario::build` arm: the two `Scenario` values must be
+//!   identical (bit-for-bit via `Debug`, which round-trips floats).
+//! * **matrix** — `avery run matrix` over a seeded generated sample with
+//!   the invariant gates on: scenarios/sec and the pass/fail tally.
+//!
+//! Usage: `cargo bench --bench scenario_matrix -- [--quick] [--out PATH]`
+//! (`--quick` is what CI runs; default writes `BENCH_scenario_matrix.json`
+//! in the current directory).
 
+use std::path::Path;
 use std::time::Instant;
 
+use avery::bench::header;
 use avery::mission::{self, Env, RunOptions};
 use avery::runtime::ExecMode;
-use avery::scenario::SCENARIO_NAMES;
+use avery::scenario::compile::{compile_file, compile_str};
+use avery::scenario::{build, generate, SCENARIO_NAMES};
 use avery::telemetry::{f, Table};
 
+struct Args {
+    quick: bool,
+    out: String,
+}
+
+fn parse_args() -> Args {
+    let mut args = Args { quick: false, out: "BENCH_scenario_matrix.json".to_string() };
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--quick" => args.quick = true,
+            "--out" => {
+                if let Some(v) = argv.get(i + 1) {
+                    args.out = v.clone();
+                    i += 1;
+                }
+            }
+            other => {
+                if let Some(v) = other.strip_prefix("--out=") {
+                    args.out = v.to_string();
+                }
+                // `cargo bench` passes `--bench`; ignore unknown flags so
+                // the harness contract stays permissive.
+            }
+        }
+        i += 1;
+    }
+    args
+}
+
+fn jf(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
 fn main() -> anyhow::Result<()> {
+    let args = parse_args();
+    let mode = if args.quick { "quick" } else { "full" };
+    let compile_rounds = if args.quick { 2 } else { 10 };
+    let matrix_count = if args.quick { 8 } else { 32 };
+
     let env = Env::load_or_synthetic(
         None,
         std::path::Path::new("out"),
@@ -23,6 +84,7 @@ fn main() -> anyhow::Result<()> {
     )?;
     let mission = mission::find("scenario").expect("scenario registered");
 
+    // ---- library: every built-in regime end to end -----------------------
     let mut table = Table::new(
         "Scenario matrix (180 s missions, exec-every 50)",
         &[
@@ -30,6 +92,7 @@ fn main() -> anyhow::Result<()> {
             "Intent sw", "Infeasible s", "Wall (s)",
         ],
     );
+    let mut library_json = Vec::new();
     for name in SCENARIO_NAMES {
         let opts = RunOptions {
             name: Some(name.to_string()),
@@ -52,6 +115,12 @@ fn main() -> anyhow::Result<()> {
             f(scalar("infeasible_s"), 0),
             f(wall, 2),
         ]);
+        library_json.push(format!(
+            "{{\"scenario\":\"{name}\",\"delivered\":{},\"jain\":{},\"wall_s\":{}}}",
+            jf(scalar("delivered")),
+            jf(scalar("jain_pps")),
+            jf(wall)
+        ));
     }
     table.print();
     println!(
@@ -59,5 +128,101 @@ fn main() -> anyhow::Result<()> {
          coastal-satellite sheds tiers under the sawtooth + 280 ms latency, and the\n\
          intent-switch scenarios pause tier occupancy while parked on Context."
     );
+
+    // ---- compile: generator corpus + checked-in manifests ----------------
+    header("compile: parse + validate + lower throughput");
+    let corpus = generate::generate(7);
+    let t0 = Instant::now();
+    let mut compiled = 0usize;
+    for _ in 0..compile_rounds {
+        for m in &corpus {
+            compile_str(&m.text)
+                .unwrap_or_else(|e| panic!("generated `{}` failed to compile: {e}", m.name));
+            compiled += 1;
+        }
+    }
+    let compile_wall = t0.elapsed().as_secs_f64();
+    let compiles_per_sec = compiled as f64 / compile_wall;
+    println!(
+        "corpus {} manifests x {compile_rounds} rounds: {compiled} compiles in {:.3} s \
+         ({:.0}/s)",
+        corpus.len(),
+        compile_wall,
+        compiles_per_sec
+    );
+    let t0 = Instant::now();
+    for name in SCENARIO_NAMES {
+        compile_file(Path::new(&format!("scenarios/{name}.toml")))
+            .unwrap_or_else(|e| panic!("scenarios/{name}.toml: {e}"));
+    }
+    println!(
+        "checked-in manifests: {} files in {:.1} ms",
+        SCENARIO_NAMES.len(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // ---- parity: manifests reproduce the hand-coded build() arms ---------
+    header("parity: scenarios/*.toml vs scenario::build");
+    let mut parity_ok = true;
+    for name in SCENARIO_NAMES {
+        let compiled = compile_file(Path::new(&format!("scenarios/{name}.toml")))
+            .unwrap_or_else(|e| panic!("scenarios/{name}.toml: {e}"));
+        let a = format!("{:?}", compiled.instantiate(7, 180.0));
+        let b = format!("{:?}", build(name, 7, 180.0)?);
+        let same = a == b;
+        parity_ok &= same;
+        println!("{name}: {}", if same { "identical" } else { "DIVERGED" });
+    }
+
+    // ---- matrix: generated sample through the invariant gates ------------
+    header("matrix: generated sample with invariant gates");
+    let matrix = mission::find("matrix").expect("matrix registered");
+    let opts = RunOptions {
+        matrix_count: Some(matrix_count),
+        seed: 7,
+        exec_every: 25,
+        ..RunOptions::default()
+    };
+    let t0 = Instant::now();
+    let report = matrix.run(&env, &opts)?;
+    let matrix_wall = t0.elapsed().as_secs_f64();
+    let scalar = |n: &str| report.scalar_value(n).unwrap_or(f64::NAN);
+    let (run, passed, failed) = (scalar("scenarios_run"), scalar("passed"), scalar("failed"));
+    println!(
+        "{run:.0} scenarios in {matrix_wall:.2} s ({:.2}/s): {passed:.0} passed, \
+         {failed:.0} failed (corpus {})",
+        run / matrix_wall,
+        generate::MATRIX_SIZE
+    );
+
+    // ---- JSON ------------------------------------------------------------
+    let json = format!(
+        "{{\"schema\":1,\"bench\":\"scenario_matrix\",\"mode\":\"{mode}\",\
+         \"compile\":{{\"corpus_size\":{},\"rounds\":{compile_rounds},\
+         \"compiles_per_sec\":{},\"wall_s\":{}}},\
+         \"parity\":{{\"scenarios\":{},\"identical\":{parity_ok}}},\
+         \"matrix\":{{\"count\":{},\"passed\":{},\"failed\":{},\"wall_s\":{},\
+         \"scenarios_per_sec\":{}}},\
+         \"library\":[{}]}}",
+        corpus.len(),
+        jf(compiles_per_sec),
+        jf(compile_wall),
+        SCENARIO_NAMES.len(),
+        run as usize,
+        passed as usize,
+        failed as usize,
+        jf(matrix_wall),
+        jf(run / matrix_wall),
+        library_json.join(",")
+    );
+    std::fs::write(&args.out, format!("{json}\n"))?;
+    println!("\nwrote {}", args.out);
+
+    if !parity_ok {
+        anyhow::bail!("manifest/builtin parity diverged");
+    }
+    if failed > 0.0 {
+        anyhow::bail!("{failed:.0} matrix scenarios failed their invariant gates");
+    }
     Ok(())
 }

@@ -126,6 +126,11 @@ pub struct RunConfig {
     pub scenario: Option<String>,
     /// Scenario name for the `scenario` mission (`--name NAME`).
     pub name: Option<String>,
+    /// Scenario manifest path for the `scenario` mission
+    /// (`--manifest PATH`); compiled by the scenario compiler.
+    pub manifest: Option<String>,
+    /// Matrix mission sample size (`--matrix-count N`); `None` = default.
+    pub matrix_count: Option<usize>,
     /// Cloud serving layer: max compatible requests per micro-batch
     /// (`--batch-max N`); `None` = 1 (unbatched).
     pub batch_max: Option<usize>,
@@ -210,6 +215,14 @@ impl RunConfig {
             },
             scenario: kv.get("scenario").map(|s| s.to_string()),
             name: kv.get("name").map(|s| s.to_string()),
+            manifest: kv.get("manifest").map(|s| s.to_string()),
+            matrix_count: match kv.get("matrix-count") {
+                None => None,
+                Some(v) => Some(
+                    v.parse()
+                        .with_context(|| format!("config matrix-count={v} not an integer"))?,
+                ),
+            },
             batch_max: match kv.get("batch-max") {
                 None => None,
                 Some(v) => Some(
@@ -306,6 +319,18 @@ mod tests {
         assert!(rc.list);
         let rc0 = RunConfig::from_kv(&Kv::default()).unwrap();
         assert!(rc0.name.is_none() && rc0.scenario.is_none() && !rc0.list);
+    }
+
+    #[test]
+    fn manifest_and_matrix_keys_parse_and_reject() {
+        let kv =
+            Kv::parse("manifest = scenarios/urban-flood.toml\nmatrix-count = 24\n").unwrap();
+        let rc = RunConfig::from_kv(&kv).unwrap();
+        assert_eq!(rc.manifest.as_deref(), Some("scenarios/urban-flood.toml"));
+        assert_eq!(rc.matrix_count, Some(24));
+        let rc0 = RunConfig::from_kv(&Kv::default()).unwrap();
+        assert!(rc0.manifest.is_none() && rc0.matrix_count.is_none());
+        assert!(RunConfig::from_kv(&Kv::parse("matrix-count = lots\n").unwrap()).is_err());
     }
 
     #[test]

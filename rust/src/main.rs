@@ -20,13 +20,15 @@
 //! streams    §5.2.2 dual-stream characterization + §4.3 demo
 //! fleet      multi-UAV contended-uplink mission (beyond the paper)
 //! scenario   scenario library: named disaster/network regimes
+//! matrix     generated scenario matrix under invariant gates
 //! ```
 //!
 //! Common options: `--artifacts DIR`, `--out DIR`, `--duration SECS`,
 //! `--goal accuracy|throughput`, `--exec-every N`, `--seed N`,
 //! `--hysteresis H`, `--exec-mode buffers|literals`, `--config FILE`,
 //! `--uavs N`, `--workers N` (fleet), `--scenario NAME` (fleet/fig9),
-//! `--name NAME` / `--list` (scenario), `--format text|json`,
+//! `--name NAME` / `--manifest PATH` / `--list` (scenario),
+//! `--matrix-count N` (matrix), `--format text|json`,
 //! `--jobs N` (parallel mission fan-out for `avery all`), and the cloud
 //! serving layer's `--batch-max N`, `--cache-entries N`, `--cache-ttl SECS`
 //! and `--queue-depth N` (fleet/scenario; defaults preserve the unbatched,
@@ -50,7 +52,7 @@ use avery::mission::{self, EnvSpec, Mission, RunOptions};
 use avery::report::{emit_text, CsvSink, JsonSink, OutputFormat, Sink};
 
 const USAGE: &str = "usage: avery <run <mission>|list|all|MISSION> [--options]
-missions: table3 fig7 fig8 fig9 fig10 headline streams fleet scenario
+missions: table3 fig7 fig8 fig9 fig10 headline streams fleet scenario matrix
   --artifacts DIR      artifact directory (default: discover ./artifacts)
   --out DIR            CSV output directory (default: out)
   --duration SECS      mission length for fig9/fig10/headline/fleet/scenario (default 1200)
@@ -63,6 +65,8 @@ missions: table3 fig7 fig8 fig9 fig10 headline streams fleet scenario
   --workers N          cloud pool workers (default 2, or the scenario's)
   --scenario NAME      run fleet/fig9 under a scenario regime
   --name NAME          scenario to run for `avery run scenario`
+  --manifest PATH      compile + run a scenario manifest (see scenarios/)
+  --matrix-count N     scenarios sampled by `avery run matrix` (default 16)
   --list               list registered scenarios (`avery scenario --list`)
   --batch-max N        cloud micro-batch bound for fleet/scenario serving
                        (default 1 = unbatched)
@@ -123,8 +127,8 @@ fn main() -> Result<()> {
         }
         "all" => run_missions(mission::registry(), &cfg, true),
         // Legacy subcommands are registry aliases.  `avery scenario` with
-        // no name keeps its listing behavior.
-        "scenario" if cfg.list || cfg.name.is_none() => {
+        // neither a name nor a manifest keeps its listing behavior.
+        "scenario" if cfg.list || (cfg.name.is_none() && cfg.manifest.is_none()) => {
             print_scenario_list();
             Ok(())
         }

@@ -1,0 +1,245 @@
+//! `avery run matrix` — compile a seeded subset of the generated scenario
+//! matrix (`scenario::generate`) and run every member end to end, gating
+//! each on the golden-trace invariants from the scenario regression suite:
+//!
+//! * **clamp** — every generated bandwidth sample stays inside its phase's
+//!   legal band (the outage floor for `Outage` phases, the configured
+//!   `[min, max]` clamp otherwise);
+//! * **anti-flap** — the controller, driven exactly like the mission's
+//!   Sense stage (EWMA α = 0.4, one observation per epoch) with the
+//!   scenario's hysteresis + dwell, never voluntarily flaps A→B→A on
+//!   consecutive epochs (only forced evictions of an infeasible B);
+//! * **run** — the full fleet mission delivers at least one packet and its
+//!   Jain fairness index lands in (0, 1].
+//!
+//! Every scenario runs at a fixed internal duration so `--duration`
+//! (meant for single-mission runs) cannot turn a 16-point smoke into an
+//! hours-long sweep; `--matrix-count N` picks the sample size.  The
+//! report is wall-clock-free and byte-deterministic per seed, like every
+//! other mission (pinned by the `avery all --jobs` parity test).
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{
+    classify_intent, ControllerDecision, Lut, MissionGoal, RuntimeState, SplitController,
+    TierId,
+};
+use crate::netsim::{BandwidthEstimator, BandwidthTrace, PhaseKind, OUTAGE_FLOOR_MBPS};
+use crate::report::{Report, ReportTable, Series};
+use crate::scenario::compile::compile_str;
+use crate::scenario::{generate, Scenario};
+use crate::telemetry::f;
+
+use super::{run_compiled_scenario, Env, Mission, RunOptions};
+
+/// Scenarios run per matrix mission when `--matrix-count` is unset.
+pub const DEFAULT_MATRIX_COUNT: usize = 16;
+
+/// Fixed per-scenario mission length (virtual seconds).
+const MATRIX_SCENARIO_SECS: f64 = 120.0;
+
+/// `avery run matrix` — invariant-gated sweep over generated scenarios.
+pub struct MatrixMission;
+
+impl Mission for MatrixMission {
+    fn name(&self) -> &'static str {
+        "matrix"
+    }
+
+    fn summary(&self) -> &'static str {
+        "generated scenario matrix: compile + run a seeded subset under invariant gates"
+    }
+
+    fn needs_artifacts(&self) -> bool {
+        false
+    }
+
+    fn run(&self, env: &Env, opts: &RunOptions) -> Result<Report> {
+        run_matrix(env, opts)
+    }
+}
+
+/// One scenario's gate outcomes.
+struct GateRow {
+    name: String,
+    uavs: usize,
+    delivered: u64,
+    jain: f64,
+    clamp_ok: bool,
+    antiflap_ok: bool,
+    run_ok: bool,
+}
+
+impl GateRow {
+    fn pass(&self) -> bool {
+        self.clamp_ok && self.antiflap_ok && self.run_ok
+    }
+}
+
+/// Compile and run the seeded matrix subset; report per-scenario gates.
+pub fn run_matrix(env: &Env, opts: &RunOptions) -> Result<Report> {
+    let count = opts.matrix_count.unwrap_or(DEFAULT_MATRIX_COUNT).max(1);
+    let sample = generate::sample(opts.seed, count);
+
+    // The sweep pins its own per-scenario duration and a coarse execute
+    // cadence; everything else (fleet shape, goal, controller knobs) comes
+    // from each compiled scenario.
+    let child = RunOptions {
+        duration_secs: MATRIX_SCENARIO_SECS,
+        exec_every: opts.exec_every.max(25),
+        seed: opts.seed,
+        ..RunOptions::default()
+    };
+
+    let mut rows = Vec::with_capacity(sample.len());
+    for m in &sample {
+        let sc = compile_str(&m.text)
+            .with_context(|| format!("generated manifest `{}` failed to compile", m.name))?
+            .instantiate(opts.seed, MATRIX_SCENARIO_SECS);
+        let trace = BandwidthTrace::generate(&sc.trace);
+        let clamp_ok = clamp_gate(&sc, &trace);
+        let antiflap_ok = antiflap_gate(&sc, &trace);
+        let (run, _) = run_compiled_scenario(env, &child, &sc)?;
+        let run_ok =
+            run.delivered_total > 0 && run.jain_pps > 0.0 && run.jain_pps <= 1.0 + 1e-12;
+        rows.push(GateRow {
+            name: sc.name.clone(),
+            uavs: sc.fleet.n_uavs,
+            delivered: run.delivered_total,
+            jain: run.jain_pps,
+            clamp_ok,
+            antiflap_ok,
+            run_ok,
+        });
+    }
+
+    let passed = rows.iter().filter(|r| r.pass()).count();
+    let failed = rows.len() - passed;
+    let title = format!(
+        "Scenario matrix — {}/{} gated scenarios passed ({} sampled of {}, seed {})",
+        passed,
+        rows.len(),
+        rows.len(),
+        generate::MATRIX_SIZE,
+        opts.seed
+    );
+    let mut report = Report::new("matrix", &title);
+
+    let mut table = ReportTable::new(
+        "matrix_gates",
+        &title,
+        &["Scenario", "UAVs", "Delivered", "Jain", "Clamp", "Anti-flap", "Run", "Pass"],
+    );
+    let mut sm = Series::new(
+        "matrix_summary",
+        &[
+            "scenario", "seed", "duration_s", "uavs", "delivered", "jain_pps", "clamp_ok",
+            "antiflap_ok", "run_ok", "pass",
+        ],
+    );
+    let ok = |b: bool| if b { "ok" } else { "FAIL" }.to_string();
+    for r in &rows {
+        table.row(&[
+            r.name.clone(),
+            r.uavs.to_string(),
+            r.delivered.to_string(),
+            f(r.jain, 3),
+            ok(r.clamp_ok),
+            ok(r.antiflap_ok),
+            ok(r.run_ok),
+            ok(r.pass()),
+        ]);
+        sm.row(&[
+            r.name.clone(),
+            opts.seed.to_string(),
+            f(MATRIX_SCENARIO_SECS, 0),
+            r.uavs.to_string(),
+            r.delivered.to_string(),
+            f(r.jain, 4),
+            (r.clamp_ok as u8).to_string(),
+            (r.antiflap_ok as u8).to_string(),
+            (r.run_ok as u8).to_string(),
+            (r.pass() as u8).to_string(),
+        ]);
+    }
+    report.push_table(table);
+    report.push_series(sm);
+
+    report.push_scalar("scenarios_run", rows.len() as f64);
+    report.push_scalar("passed", passed as f64);
+    report.push_scalar("failed", failed as f64);
+    report.push_scalar("matrix_count", count as f64);
+    report.push_scalar("corpus_size", generate::MATRIX_SIZE as f64);
+    report.push_note(format!(
+        "gates: clamp band, controller anti-flap, delivery + Jain in (0, 1]; \
+         each scenario ran {MATRIX_SCENARIO_SECS:.0} virtual seconds"
+    ));
+    if failed > 0 {
+        let names: Vec<&str> =
+            rows.iter().filter(|r| !r.pass()).map(|r| r.name.as_str()).collect();
+        report.push_note(format!("FAILED: {}", names.join(", ")));
+    }
+    Ok(report)
+}
+
+/// Every sample stays inside the band of the phase that produced it
+/// (walked with the generator's own per-phase rounding).
+fn clamp_gate(sc: &Scenario, trace: &BandwidthTrace) -> bool {
+    let cfg = &sc.trace;
+    let mut idx = 0usize;
+    for p in &cfg.phases {
+        let n = (p.secs / cfg.dt).round() as usize;
+        let lo = match p.kind {
+            PhaseKind::Outage => OUTAGE_FLOOR_MBPS,
+            _ => cfg.min_mbps,
+        };
+        for i in idx..(idx + n).min(trace.samples_mbps.len()) {
+            let b = trace.samples_mbps[i];
+            if !(lo - 1e-9..=cfg.max_mbps + 1e-9).contains(&b) {
+                return false;
+            }
+        }
+        idx += n;
+    }
+    idx == trace.samples_mbps.len()
+}
+
+/// Drive the controller over the trace exactly like the mission's Sense
+/// stage and reject any voluntary A→B→A flap on consecutive epochs.
+fn antiflap_gate(sc: &Scenario, trace: &BandwidthTrace) -> bool {
+    let lut = Lut::paper();
+    let mut c = SplitController::new(Lut::paper(), 0.5, 6.0);
+    c.hysteresis = sc.hysteresis;
+    c.min_dwell_decisions = sc.min_dwell;
+    let mut est = BandwidthEstimator::new(0.4);
+    let intent = classify_intent("highlight the stranded people");
+    let mut timeline: Vec<(f64, Option<TierId>)> = Vec::new();
+    let mut t = 0.0;
+    while t < trace.duration_secs() {
+        let e = est.observe(trace.at(t));
+        let state = RuntimeState {
+            bandwidth_mbps: e,
+            power_mode: "MODE_30W_ALL",
+            intent: intent.clone(),
+        };
+        let d = match c.select_configuration(&state, MissionGoal::PrioritizeAccuracy) {
+            Ok(ControllerDecision::Insight { tier, .. }) => Some(tier),
+            Ok(ControllerDecision::Context { .. }) => None,
+            Err(_) => None,
+        };
+        timeline.push((e, d));
+        t += 1.0;
+    }
+    // With dwell active, A→B→A is legal only as a forced eviction: B went
+    // infeasible at the third epoch's estimate.
+    sc.min_dwell == 0
+        || timeline.windows(3).all(|w| {
+            let ((_, a), (_, b), (e2, c2)) = (w[0], w[1], w[2]);
+            match (a, b, c2) {
+                (Some(a), Some(b), Some(c2)) if a != b && c2 == a => {
+                    lut.entry(b).max_pps(e2) < 0.5
+                }
+                _ => true,
+            }
+        })
+}

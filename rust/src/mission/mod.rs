@@ -6,7 +6,7 @@
 //! artifacts, and runs against a shared [`Env`] + [`RunOptions`] to a
 //! structured [`Report`] (scalars, tables, CSV series, notes) that the
 //! caller renders through the sinks in [`crate::report`].  The
-//! [`registry`] enumerates all nine missions in the canonical `avery all`
+//! [`registry`] enumerates all ten missions in the canonical `avery all`
 //! order; `avery run <name>`, the legacy subcommands, the benches and the
 //! integration tests all resolve missions through it.
 
@@ -17,6 +17,7 @@ mod fig8;
 mod fig9;
 mod fleet;
 mod headline;
+mod matrix;
 mod runner;
 mod scenario;
 mod table3;
@@ -29,7 +30,8 @@ pub use fig8::{run_fig8, Fig8Mission};
 pub use fig9::{run_fig9, Fig9Mission};
 pub use fleet::{run_fleet, FleetMission};
 pub use headline::{run_headline, HeadlineMission};
-pub use scenario::{run_scenario, ScenarioMission};
+pub use matrix::{run_matrix, MatrixMission};
+pub use scenario::{run_compiled_scenario, run_scenario, ScenarioMission};
 pub use table3::{run_table3, Table3Mission};
 
 use std::path::{Path, PathBuf};
@@ -86,6 +88,7 @@ pub fn registry() -> Vec<Box<dyn Mission>> {
         Box::new(StreamsMission),
         Box::new(FleetMission),
         Box::new(ScenarioMission),
+        Box::new(MatrixMission),
     ]
 }
 
@@ -124,6 +127,13 @@ pub struct RunOptions {
     /// Scenario to run for the `scenario` mission (`--name NAME`; falls
     /// back to `scenario`, then "urban-flood").
     pub name: Option<String>,
+    /// Scenario manifest path for the `scenario` mission
+    /// (`--manifest PATH`): compiled through `scenario::compile` and run
+    /// in place of a registered name.
+    pub manifest: Option<String>,
+    /// Matrix mission sample size (`--matrix-count N`); `None` = the
+    /// mission's default subset.
+    pub matrix_count: Option<usize>,
     /// Cloud serving layer (`--batch-max N`): micro-batch bound; `None` =
     /// 1 (unbatched — byte-identical to the pre-serving-layer pool).
     pub batch_max: Option<usize>,
@@ -150,6 +160,8 @@ impl Default for RunOptions {
             workers: None,
             scenario: None,
             name: None,
+            manifest: None,
+            matrix_count: None,
             batch_max: None,
             cache_entries: None,
             cache_ttl: None,
@@ -171,6 +183,8 @@ impl RunOptions {
             workers: cfg.workers,
             scenario: cfg.scenario.clone(),
             name: cfg.name.clone(),
+            manifest: cfg.manifest.clone(),
+            matrix_count: cfg.matrix_count,
             batch_max: cfg.batch_max,
             cache_entries: cfg.cache_entries,
             cache_ttl: cfg.cache_ttl,
@@ -333,9 +347,9 @@ mod tests {
     use crate::config::Kv;
 
     #[test]
-    fn registry_has_nine_unique_missions() {
+    fn registry_has_ten_unique_missions() {
         let reg = registry();
-        assert_eq!(reg.len(), 9);
+        assert_eq!(reg.len(), 10);
         let names: Vec<&str> = reg.iter().map(|m| m.name()).collect();
         let mut dedup = names.clone();
         dedup.sort_unstable();
@@ -359,7 +373,8 @@ mod tests {
         let kv = Kv::parse(
             "duration = 300\ngoal = throughput\nexec-every = 4\nseed = 9\n\
              hysteresis = 0.1\nuavs = 8\nworkers = 3\nscenario = urban-flood\n\
-             name = wildfire-ridge\nbatch-max = 8\ncache-entries = 64\n\
+             name = wildfire-ridge\nmanifest = scenarios/urban-flood.toml\n\
+             matrix-count = 24\nbatch-max = 8\ncache-entries = 64\n\
              cache-ttl = 45\nqueue-depth = 32\n",
         )
         .unwrap();
@@ -374,6 +389,8 @@ mod tests {
         assert_eq!(opts.workers, Some(3));
         assert_eq!(opts.scenario.as_deref(), Some("urban-flood"));
         assert_eq!(opts.name.as_deref(), Some("wildfire-ridge"));
+        assert_eq!(opts.manifest.as_deref(), Some("scenarios/urban-flood.toml"));
+        assert_eq!(opts.matrix_count, Some(24));
         assert_eq!(opts.batch_max, Some(8));
         assert_eq!(opts.cache_entries, Some(64));
         assert_eq!(opts.cache_ttl, Some(45.0));
@@ -387,6 +404,8 @@ mod tests {
 
         let defaults = RunOptions::from_config(&RunConfig::from_kv(&Kv::default()).unwrap());
         assert_eq!(defaults.goal, None);
+        assert_eq!(defaults.manifest, None);
+        assert_eq!(defaults.matrix_count, None);
         assert_eq!(defaults.uavs, None);
         assert_eq!(defaults.workers, None);
         assert_eq!(defaults.duration_secs, 1200.0);

@@ -13,13 +13,16 @@
 //! are pure functions of the request, so pool scheduling cannot perturb
 //! the virtual-time results.
 
-use anyhow::Result;
+use std::path::Path;
+
+use anyhow::{Context, Result};
 
 use crate::cloud::CloudPool;
 use crate::coordinator::IntentLevel;
 use crate::netsim::{BandwidthTrace, SharedLink};
 use crate::report::{Report, ReportTable, Series};
-use crate::scenario::{build, summarize_trace};
+use crate::scenario::compile::compile_file;
+use crate::scenario::{build, summarize_trace, Scenario};
 use crate::streams::fleet::{run_fleet_mission, FleetConfig, FleetRun};
 use crate::streams::{MissionConfig, UavRole};
 use crate::telemetry::{f, pct};
@@ -52,16 +55,35 @@ impl Mission for ScenarioMission {
 }
 
 /// Run one scenario and build its report; the raw [`FleetRun`] comes back
-/// alongside for programmatic consumers.  The scenario is `opts.name`,
-/// falling back to `opts.scenario`, then [`DEFAULT_SCENARIO`]; fleet
-/// size/workers/goal default to the scenario's own unless overridden.
+/// alongside for programmatic consumers.  With `--manifest PATH` the
+/// scenario comes from the compiler (`scenario::compile`); otherwise it is
+/// `opts.name`, falling back to `opts.scenario`, then [`DEFAULT_SCENARIO`].
+/// Fleet size/workers/goal default to the scenario's own unless overridden.
 pub fn run_scenario(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
-    let name = opts
-        .name
-        .clone()
-        .or_else(|| opts.scenario.clone())
-        .unwrap_or_else(|| DEFAULT_SCENARIO.to_string());
-    let sc = build(&name, opts.seed, opts.duration_secs)?;
+    let sc = match &opts.manifest {
+        Some(path) => compile_file(Path::new(path))
+            .with_context(|| format!("compiling scenario manifest {path}"))?
+            .instantiate(opts.seed, opts.duration_secs),
+        None => {
+            let name = opts
+                .name
+                .clone()
+                .or_else(|| opts.scenario.clone())
+                .unwrap_or_else(|| DEFAULT_SCENARIO.to_string());
+            build(&name, opts.seed, opts.duration_secs)?
+        }
+    };
+    run_compiled_scenario(env, opts, &sc)
+}
+
+/// Drive one fully-resolved [`Scenario`] end to end — the shared back half
+/// of `run_scenario` and the matrix mission (which instantiates compiled
+/// scenarios directly, bypassing name/manifest resolution).
+pub fn run_compiled_scenario(
+    env: &Env,
+    opts: &RunOptions,
+    sc: &Scenario,
+) -> Result<(FleetRun, Report)> {
     let n_uavs = opts.uavs.unwrap_or(sc.fleet.n_uavs).max(1);
     let workers = opts.workers.unwrap_or(sc.fleet.workers).max(1);
     let goal = opts.goal.unwrap_or(sc.goal);

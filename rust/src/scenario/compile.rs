@@ -1,0 +1,816 @@
+//! Scenario compile pipeline: manifest text → validated [`CompiledScenario`]
+//! → [`Scenario`], in staged passes (DESIGN.md "Scenario compiler"):
+//!
+//! 1. **parse** — `manifest::Doc::parse`, syntax errors with line numbers;
+//! 2. **include resolution** — a manifest may `include = "base.toml"`
+//!    (file-relative); the including file's keys override the base's,
+//!    tables merge key-wise, arrays replace whole.  Cycles and depth > 8
+//!    are [`CompileError::IncludeCycle`];
+//! 3. **default resolution + key audit** — unknown keys/sections/arrays
+//!    are rejected ([`CompileError::UnknownKey`]), missing optional keys
+//!    take the documented defaults, missing required ones are
+//!    [`CompileError::MissingKey`];
+//! 4. **symbolic validation** — phase windows (positive durations,
+//!    fractions summing to 1, no frac/secs mixing), rate bounds (clamp
+//!    band, per-phase anchor levels, link loss/jitter/latency), intent
+//!    schedule ordering and fleet shape — all *before* any simulation
+//!    runs, each diagnostic naming the offending key path
+//!    (`phase[2].level_mbps`, `trace.min_mbps`, ...);
+//! 5. **lowering** — [`CompiledScenario::instantiate`] binds `(seed,
+//!    duration)` and produces the same [`Scenario`] value the hand-coded
+//!    `scenario::build` arms produce — bit-for-bit, so the checked-in
+//!    manifests under `scenarios/` reproduce the built-in fleet CSVs
+//!    byte-identically (pinned by `rust/tests/matrix.rs` and CI).
+//!
+//! Phase durations come in three modes, mirroring the built-ins exactly:
+//! fractional (`frac = 0.15` → `0.15 * duration`), absolute (`secs = 180`
+//! then `scaled_to(duration)` — the paper-baseline path), and Markov
+//! (`markov_dwell_div`/`markov_dwell_min_s` express the built-ins'
+//! `(duration / div).max(min)` mean dwell, because `d / 12.0` and
+//! `d * (1.0 / 12.0)` are *not* the same IEEE value).
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::MissionGoal;
+use crate::netsim::{LinkConfig, Phase, PhaseKind, TraceConfig, OUTAGE_FLOOR_MBPS};
+use crate::streams::IntentSwitch;
+
+use super::manifest::{Doc, Table, Value};
+use super::{FleetSpec, Scenario};
+
+/// Maximum include-chain depth before the resolver assumes a cycle.
+const MAX_INCLUDE_DEPTH: usize = 8;
+
+/// A structured compile diagnostic.  Every semantic variant names the
+/// offending key path (`trace.min_mbps`, `phase[2].frac`, ...), so a
+/// failing manifest is fixable without reading the compiler.
+#[derive(Clone, Debug)]
+pub enum CompileError {
+    /// Manifest syntax error (pass 1).
+    Parse { path: String, line: usize, msg: String },
+    /// Manifest file unreadable (or `include` used where no file system
+    /// context exists, e.g. `compile_str`).
+    Io { path: String, msg: String },
+    /// `include` chain revisits a file or exceeds the depth bound.
+    IncludeCycle { path: String },
+    /// A required key is absent.
+    MissingKey { key: String },
+    /// A key/section the schema does not define.
+    UnknownKey { key: String },
+    /// Wrong type, malformed enum value, or out-of-domain scalar.
+    BadValue { key: String, msg: String },
+    /// Phase-script structure: non-positive windows, frac/secs mixing,
+    /// fractions not summing to 1, phases alongside Markov keys.
+    PhaseWindow { key: String, msg: String },
+    /// Bandwidth/link rate outside its legal band.
+    RateBound { key: String, msg: String },
+    /// Intent schedule out of order or outside the mission window.
+    ScheduleOrder { key: String, msg: String },
+    /// Fleet composition out of range.
+    FleetSpec { key: String, msg: String },
+}
+
+impl CompileError {
+    /// The offending key path, for semantic variants (`None` for
+    /// file-level errors, which carry a path instead).
+    pub fn key_path(&self) -> Option<&str> {
+        match self {
+            CompileError::Parse { .. }
+            | CompileError::Io { .. }
+            | CompileError::IncludeCycle { .. } => None,
+            CompileError::MissingKey { key }
+            | CompileError::UnknownKey { key }
+            | CompileError::BadValue { key, .. }
+            | CompileError::PhaseWindow { key, .. }
+            | CompileError::RateBound { key, .. }
+            | CompileError::ScheduleOrder { key, .. }
+            | CompileError::FleetSpec { key, .. } => Some(key),
+        }
+    }
+}
+
+impl fmt::Display for CompileError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CompileError::Parse { path, line, msg } => {
+                write!(f, "{path}:{line}: {msg}")
+            }
+            CompileError::Io { path, msg } => write!(f, "{path}: {msg}"),
+            CompileError::IncludeCycle { path } => {
+                write!(f, "include cycle (or depth > {MAX_INCLUDE_DEPTH}) through {path}")
+            }
+            CompileError::MissingKey { key } => write!(f, "missing required key `{key}`"),
+            CompileError::UnknownKey { key } => write!(f, "unknown key `{key}`"),
+            CompileError::BadValue { key, msg } => write!(f, "bad value for `{key}`: {msg}"),
+            CompileError::PhaseWindow { key, msg } => {
+                write!(f, "phase window at `{key}`: {msg}")
+            }
+            CompileError::RateBound { key, msg } => write!(f, "rate bound at `{key}`: {msg}"),
+            CompileError::ScheduleOrder { key, msg } => {
+                write!(f, "intent schedule at `{key}`: {msg}")
+            }
+            CompileError::FleetSpec { key, msg } => write!(f, "fleet spec at `{key}`: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+/// The phase script a manifest lowers to, before `(seed, duration)` bind.
+#[derive(Clone, Debug)]
+pub enum TraceSpec {
+    /// Scripted phases.  `fractional`: durations are mission fractions
+    /// (`frac * duration`); otherwise absolute seconds rescaled through
+    /// `TraceConfig::scaled_to` exactly like the paper-baseline arm.
+    Phases { phases: Vec<(PhaseKind, f64, f64)>, fractional: bool },
+    /// Markov regime switching; mean dwell = `(duration / dwell_div)
+    /// .max(dwell_min_secs)`.
+    Markov { kinds: Vec<PhaseKind>, dwell_div: f64, dwell_min_secs: f64 },
+}
+
+/// A validated, seed/duration-free scenario template — the compiler's
+/// output, instantiable any number of times.
+#[derive(Clone, Debug)]
+pub struct CompiledScenario {
+    pub name: String,
+    pub summary: String,
+    pub goal: MissionGoal,
+    pub hysteresis: f64,
+    pub min_dwell: u64,
+    pub min_mbps: f64,
+    pub max_mbps: f64,
+    pub dt: f64,
+    pub trace: TraceSpec,
+    pub loss_prob: f64,
+    pub jitter_std: f64,
+    pub extra_latency_s: f64,
+    pub fleet: FleetSpec,
+    /// `(mission fraction, prompt)`, strictly increasing in fraction.
+    pub schedule: Vec<(f64, String)>,
+}
+
+impl CompiledScenario {
+    /// Bind a seed and mission duration, producing the same [`Scenario`]
+    /// value the hand-coded `build` arms construct.
+    pub fn instantiate(&self, seed: u64, duration_secs: f64) -> Scenario {
+        let d = duration_secs;
+        let trace = match &self.trace {
+            TraceSpec::Markov { kinds, dwell_div, dwell_min_secs } => {
+                TraceConfig::markov_modulated(
+                    seed,
+                    d,
+                    self.min_mbps,
+                    self.max_mbps,
+                    (d / dwell_div).max(*dwell_min_secs),
+                    kinds,
+                )
+            }
+            TraceSpec::Phases { phases, fractional } => {
+                let cfg = TraceConfig {
+                    phases: phases
+                        .iter()
+                        .map(|&(kind, dur, level_mbps)| Phase {
+                            kind,
+                            secs: if *fractional { dur * d } else { dur },
+                            level_mbps,
+                        })
+                        .collect(),
+                    min_mbps: self.min_mbps,
+                    max_mbps: self.max_mbps,
+                    dt: self.dt,
+                    seed,
+                };
+                if *fractional {
+                    cfg
+                } else {
+                    cfg.scaled_to(d)
+                }
+            }
+        };
+        Scenario {
+            name: self.name.clone(),
+            summary: self.summary.clone(),
+            trace,
+            link: LinkConfig {
+                loss_prob: self.loss_prob,
+                jitter_std: self.jitter_std,
+                extra_latency_s: self.extra_latency_s,
+                seed,
+            },
+            fleet: self.fleet,
+            schedule: self
+                .schedule
+                .iter()
+                .map(|(frac, prompt)| IntentSwitch::new(frac * d, prompt))
+                .collect(),
+            goal: self.goal,
+            hysteresis: self.hysteresis,
+            min_dwell: self.min_dwell,
+        }
+    }
+}
+
+/// Compile manifest text (no file system: `include` is rejected here).
+pub fn compile_str(text: &str) -> Result<CompiledScenario, CompileError> {
+    let doc = Doc::parse(text).map_err(|e| CompileError::Parse {
+        path: "<inline>".to_string(),
+        line: e.line,
+        msg: e.msg,
+    })?;
+    if doc.root.get("include").is_some() {
+        return Err(CompileError::Io {
+            path: "<inline>".to_string(),
+            msg: "`include` is only resolved when compiling from a file".to_string(),
+        });
+    }
+    lower(&doc)
+}
+
+/// Compile a manifest file, resolving its `include` chain.
+pub fn compile_file(path: &Path) -> Result<CompiledScenario, CompileError> {
+    let doc = load_with_includes(path, &mut Vec::new())?;
+    lower(&doc)
+}
+
+fn load_with_includes(path: &Path, stack: &mut Vec<PathBuf>) -> Result<Doc, CompileError> {
+    let display = path.display().to_string();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| CompileError::Io { path: display.clone(), msg: e.to_string() })?;
+    let canon = std::fs::canonicalize(path).unwrap_or_else(|_| path.to_path_buf());
+    if stack.contains(&canon) || stack.len() >= MAX_INCLUDE_DEPTH {
+        return Err(CompileError::IncludeCycle { path: display });
+    }
+    let mut doc = Doc::parse(&text).map_err(|e| CompileError::Parse {
+        path: display,
+        line: e.line,
+        msg: e.msg,
+    })?;
+    let Some(inc) = doc.root.remove("include") else { return Ok(doc) };
+    let Value::Str(rel) = inc else {
+        return Err(CompileError::BadValue {
+            key: "include".to_string(),
+            msg: format!("expected a string path, got {}", inc.type_name()),
+        });
+    };
+    let base_path = path.parent().unwrap_or_else(|| Path::new(".")).join(rel);
+    stack.push(canon);
+    let base = load_with_includes(&base_path, stack)?;
+    stack.pop();
+    Ok(merge(base, doc))
+}
+
+/// Overlay `over` on `base`: root keys override, same-named tables merge
+/// key-wise, arrays replace whole (a partial phase override would be a
+/// silently different script).
+fn merge(mut base: Doc, over: Doc) -> Doc {
+    for (name, table) in over.tables {
+        match base.tables.iter_mut().find(|(n, _)| *n == name) {
+            Some((_, bt)) => {
+                for key in table.keys().map(String::from).collect::<Vec<_>>() {
+                    bt.set(&key, table.get(&key).cloned().expect("key just listed"));
+                }
+            }
+            None => base.tables.push((name, table)),
+        }
+    }
+    for (name, tables) in over.arrays {
+        match base.arrays.iter_mut().find(|(n, _)| *n == name) {
+            Some((_, bt)) => *bt = tables,
+            None => base.arrays.push((name, tables)),
+        }
+    }
+    for key in over.root.keys().map(String::from).collect::<Vec<_>>() {
+        base.root.set(&key, over.root.get(&key).cloned().expect("key just listed"));
+    }
+    base
+}
+
+// ---------------------------------------------------------------------------
+// Typed accessors (every mismatch names the key path)
+// ---------------------------------------------------------------------------
+
+fn want_num(v: &Value, key: &str) -> Result<f64, CompileError> {
+    match v {
+        Value::Num(n) => Ok(*n),
+        other => Err(CompileError::BadValue {
+            key: key.to_string(),
+            msg: format!("expected a number, got {}", other.type_name()),
+        }),
+    }
+}
+
+fn want_str<'v>(v: &'v Value, key: &str) -> Result<&'v str, CompileError> {
+    match v {
+        Value::Str(s) => Ok(s),
+        other => Err(CompileError::BadValue {
+            key: key.to_string(),
+            msg: format!("expected a string, got {}", other.type_name()),
+        }),
+    }
+}
+
+fn want_usize(v: &Value, key: &str) -> Result<usize, CompileError> {
+    let n = want_num(v, key)?;
+    if n < 0.0 || n.fract() != 0.0 || n > u32::MAX as f64 {
+        return Err(CompileError::BadValue {
+            key: key.to_string(),
+            msg: format!("expected a non-negative integer, got {n}"),
+        });
+    }
+    Ok(n as usize)
+}
+
+fn opt_num(t: &Table, section: &str, key: &str, default: f64) -> Result<f64, CompileError> {
+    match t.get(key) {
+        None => Ok(default),
+        Some(v) => want_num(v, &format!("{section}.{key}")),
+    }
+}
+
+fn opt_usize(
+    t: &Table,
+    section: &str,
+    key: &str,
+    default: usize,
+) -> Result<usize, CompileError> {
+    match t.get(key) {
+        None => Ok(default),
+        Some(v) => want_usize(v, &format!("{section}.{key}")),
+    }
+}
+
+fn audit_keys(t: &Table, section: &str, known: &[&str]) -> Result<(), CompileError> {
+    for k in t.keys() {
+        if !known.contains(&k) {
+            let key = if section.is_empty() {
+                k.to_string()
+            } else {
+                format!("{section}.{k}")
+            };
+            return Err(CompileError::UnknownKey { key });
+        }
+    }
+    Ok(())
+}
+
+fn parse_kind(s: &str, key: &str) -> Result<PhaseKind, CompileError> {
+    match s {
+        "stable" => Ok(PhaseKind::Stable),
+        "volatile" => Ok(PhaseKind::Volatile),
+        "drop" => Ok(PhaseKind::Drop),
+        "outage" => Ok(PhaseKind::Outage),
+        "sawtooth" => Ok(PhaseKind::Sawtooth),
+        other => Err(CompileError::BadValue {
+            key: key.to_string(),
+            msg: format!(
+                "unknown phase kind `{other}` (stable|volatile|drop|outage|sawtooth)"
+            ),
+        }),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Passes 3–5: key audit, defaults, symbolic validation, lowering
+// ---------------------------------------------------------------------------
+
+fn lower(doc: &Doc) -> Result<CompiledScenario, CompileError> {
+    // Sections and arrays the schema defines; anything else is a typo.
+    for (name, _) in &doc.tables {
+        if !["trace", "link", "fleet"].contains(&name.as_str()) {
+            return Err(CompileError::UnknownKey { key: format!("[{name}]") });
+        }
+    }
+    for (name, _) in &doc.arrays {
+        if !["phase", "intent"].contains(&name.as_str()) {
+            return Err(CompileError::UnknownKey { key: format!("[[{name}]]") });
+        }
+    }
+    audit_keys(
+        &doc.root,
+        "",
+        &["schema", "name", "summary", "goal", "hysteresis", "min_dwell", "include"],
+    )?;
+
+    if let Some(v) = doc.root.get("schema") {
+        let n = want_num(v, "schema")?;
+        if n != 1.0 {
+            return Err(CompileError::BadValue {
+                key: "schema".to_string(),
+                msg: format!("unsupported schema version {n} (expected 1)"),
+            });
+        }
+    }
+
+    let name = match doc.root.get("name") {
+        None => return Err(CompileError::MissingKey { key: "name".to_string() }),
+        Some(v) => want_str(v, "name")?.to_string(),
+    };
+    if name.is_empty()
+        || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+    {
+        return Err(CompileError::BadValue {
+            key: "name".to_string(),
+            msg: format!("`{name}` is not a valid scenario name ([A-Za-z0-9_-]+)"),
+        });
+    }
+    let summary = match doc.root.get("summary") {
+        None => String::new(),
+        Some(v) => want_str(v, "summary")?.to_string(),
+    };
+    let goal = match doc.root.get("goal") {
+        None => MissionGoal::PrioritizeAccuracy,
+        Some(v) => match want_str(v, "goal")? {
+            "accuracy" => MissionGoal::PrioritizeAccuracy,
+            "throughput" => MissionGoal::PrioritizeThroughput,
+            other => {
+                return Err(CompileError::BadValue {
+                    key: "goal".to_string(),
+                    msg: format!("expected accuracy|throughput, got `{other}`"),
+                })
+            }
+        },
+    };
+    let hysteresis = opt_num(&doc.root, "", "hysteresis", 0.10).map_err(|e| match e {
+        CompileError::BadValue { msg, .. } => {
+            CompileError::BadValue { key: "hysteresis".to_string(), msg }
+        }
+        other => other,
+    })?;
+    if !(0.0..=0.5).contains(&hysteresis) {
+        return Err(CompileError::BadValue {
+            key: "hysteresis".to_string(),
+            msg: format!("{hysteresis} outside [0, 0.5]"),
+        });
+    }
+    let min_dwell = match doc.root.get("min_dwell") {
+        None => 2,
+        Some(v) => want_usize(v, "min_dwell")? as u64,
+    };
+
+    // ---- [trace]: clamp band, resolution, Markov keys -------------------
+    let empty = Table::new();
+    let trace_t = doc.table("trace").unwrap_or(&empty);
+    audit_keys(
+        trace_t,
+        "trace",
+        &["min_mbps", "max_mbps", "dt", "markov_kinds", "markov_dwell_div",
+          "markov_dwell_min_s"],
+    )?;
+    let min_mbps = opt_num(trace_t, "trace", "min_mbps", 8.0)?;
+    let max_mbps = opt_num(trace_t, "trace", "max_mbps", 20.0)?;
+    let dt = opt_num(trace_t, "trace", "dt", 1.0)?;
+    if min_mbps <= 0.0 {
+        return Err(CompileError::RateBound {
+            key: "trace.min_mbps".to_string(),
+            msg: format!("clamp floor {min_mbps} must be > 0"),
+        });
+    }
+    if max_mbps <= min_mbps {
+        return Err(CompileError::RateBound {
+            key: "trace.max_mbps".to_string(),
+            msg: format!("clamp ceiling {max_mbps} must exceed the floor {min_mbps}"),
+        });
+    }
+    if dt <= 0.0 {
+        return Err(CompileError::RateBound {
+            key: "trace.dt".to_string(),
+            msg: format!("sampling resolution {dt} must be > 0"),
+        });
+    }
+
+    // ---- phase script xor Markov regime model ---------------------------
+    let phase_tables = doc.array("phase");
+    let has_markov = trace_t.get("markov_kinds").is_some()
+        || trace_t.get("markov_dwell_div").is_some()
+        || trace_t.get("markov_dwell_min_s").is_some();
+    let trace = if has_markov {
+        if !phase_tables.is_empty() {
+            return Err(CompileError::PhaseWindow {
+                key: "trace.markov_kinds".to_string(),
+                msg: "manifest declares both [[phase]] tables and Markov trace keys"
+                    .to_string(),
+            });
+        }
+        let kinds_v = trace_t.get("markov_kinds").ok_or_else(|| {
+            CompileError::MissingKey { key: "trace.markov_kinds".to_string() }
+        })?;
+        let Value::List(items) = kinds_v else {
+            return Err(CompileError::BadValue {
+                key: "trace.markov_kinds".to_string(),
+                msg: format!("expected a list of kinds, got {}", kinds_v.type_name()),
+            });
+        };
+        if items.is_empty() {
+            return Err(CompileError::BadValue {
+                key: "trace.markov_kinds".to_string(),
+                msg: "regime kind set is empty".to_string(),
+            });
+        }
+        let mut kinds = Vec::new();
+        for item in items {
+            kinds.push(parse_kind(want_str(item, "trace.markov_kinds")?,
+                "trace.markov_kinds")?);
+        }
+        let dwell_div = opt_num(trace_t, "trace", "markov_dwell_div", 12.0)?;
+        let dwell_min_secs = opt_num(trace_t, "trace", "markov_dwell_min_s", 20.0)?;
+        if dwell_div <= 0.0 {
+            return Err(CompileError::RateBound {
+                key: "trace.markov_dwell_div".to_string(),
+                msg: format!("dwell divisor {dwell_div} must be > 0"),
+            });
+        }
+        if dwell_min_secs < 1.0 {
+            return Err(CompileError::RateBound {
+                key: "trace.markov_dwell_min_s".to_string(),
+                msg: format!("minimum dwell {dwell_min_secs} must be >= 1 s"),
+            });
+        }
+        TraceSpec::Markov { kinds, dwell_div, dwell_min_secs }
+    } else {
+        if phase_tables.is_empty() {
+            return Err(CompileError::MissingKey { key: "phase".to_string() });
+        }
+        let mut phases = Vec::new();
+        let mut fractional: Option<bool> = None;
+        let mut frac_sum = 0.0;
+        for (i, pt) in phase_tables.iter().enumerate() {
+            let at = |k: &str| format!("phase[{i}].{k}");
+            audit_keys(pt, &format!("phase[{i}]"), &["kind", "frac", "secs",
+                "level_mbps"])?;
+            let kind = match pt.get("kind") {
+                None => return Err(CompileError::MissingKey { key: at("kind") }),
+                Some(v) => parse_kind(want_str(v, &at("kind"))?, &at("kind"))?,
+            };
+            let level_mbps = match pt.get("level_mbps") {
+                None => return Err(CompileError::MissingKey { key: at("level_mbps") }),
+                Some(v) => want_num(v, &at("level_mbps"))?,
+            };
+            let (dur, is_frac) = match (pt.get("frac"), pt.get("secs")) {
+                (Some(_), Some(_)) => {
+                    return Err(CompileError::PhaseWindow {
+                        key: at("secs"),
+                        msg: "phase declares both `frac` and `secs`".to_string(),
+                    })
+                }
+                (None, None) => {
+                    return Err(CompileError::MissingKey { key: at("frac") })
+                }
+                (Some(v), None) => (want_num(v, &at("frac"))?, true),
+                (None, Some(v)) => (want_num(v, &at("secs"))?, false),
+            };
+            let dur_key = if is_frac { at("frac") } else { at("secs") };
+            match fractional {
+                None => fractional = Some(is_frac),
+                Some(mode) if mode != is_frac => {
+                    return Err(CompileError::PhaseWindow {
+                        key: dur_key,
+                        msg: "cannot mix fractional and absolute phase durations"
+                            .to_string(),
+                    })
+                }
+                Some(_) => {}
+            }
+            if dur <= 0.0 {
+                return Err(CompileError::PhaseWindow {
+                    key: dur_key,
+                    msg: format!("non-positive phase duration {dur}"),
+                });
+            }
+            if is_frac {
+                if dur > 1.0 {
+                    return Err(CompileError::PhaseWindow {
+                        key: dur_key,
+                        msg: format!("fraction {dur} exceeds the mission"),
+                    });
+                }
+                frac_sum += dur;
+            }
+            // Anchor levels must sit inside the band the generator clamps
+            // to — Outage phases anchor between the outage floor and the
+            // ceiling instead (the built-in blackouts sit at 0.05 Mbps).
+            let (lo, hi) = match kind {
+                PhaseKind::Outage => (OUTAGE_FLOOR_MBPS, max_mbps),
+                _ => (min_mbps, max_mbps),
+            };
+            if !(lo..=hi).contains(&level_mbps) {
+                return Err(CompileError::RateBound {
+                    key: at("level_mbps"),
+                    msg: format!("anchor {level_mbps} outside [{lo}, {hi}]"),
+                });
+            }
+            phases.push((kind, dur, level_mbps));
+        }
+        let fractional = fractional.expect("at least one phase");
+        if fractional && (frac_sum - 1.0).abs() > 1e-6 {
+            return Err(CompileError::PhaseWindow {
+                key: "phase".to_string(),
+                msg: format!("phase fractions sum to {frac_sum}, expected 1"),
+            });
+        }
+        TraceSpec::Phases { phases, fractional }
+    };
+
+    // ---- [link] ----------------------------------------------------------
+    let link_t = doc.table("link").unwrap_or(&empty);
+    audit_keys(link_t, "link", &["loss_prob", "jitter_std", "extra_latency_s"])?;
+    let loss_prob = opt_num(link_t, "link", "loss_prob", 0.0)?;
+    let jitter_std = opt_num(link_t, "link", "jitter_std", 0.03)?;
+    let extra_latency_s = opt_num(link_t, "link", "extra_latency_s", 0.0)?;
+    if !(0.0..1.0).contains(&loss_prob) {
+        return Err(CompileError::RateBound {
+            key: "link.loss_prob".to_string(),
+            msg: format!("loss probability {loss_prob} outside [0, 1)"),
+        });
+    }
+    if !(0.0..=1.0).contains(&jitter_std) {
+        return Err(CompileError::RateBound {
+            key: "link.jitter_std".to_string(),
+            msg: format!("jitter stddev {jitter_std} outside [0, 1]"),
+        });
+    }
+    if !(0.0..=10.0).contains(&extra_latency_s) {
+        return Err(CompileError::RateBound {
+            key: "link.extra_latency_s".to_string(),
+            msg: format!("extra latency {extra_latency_s} outside [0, 10] s"),
+        });
+    }
+
+    // ---- [fleet] ---------------------------------------------------------
+    let fleet_t = doc.table("fleet").unwrap_or(&empty);
+    audit_keys(fleet_t, "fleet", &["uavs", "context_every", "stagger_secs", "workers"])?;
+    let n_uavs = opt_usize(fleet_t, "fleet", "uavs", 1)?;
+    let context_every = opt_usize(fleet_t, "fleet", "context_every", 0)?;
+    let stagger_secs = opt_num(fleet_t, "fleet", "stagger_secs", 0.0)?;
+    let workers = opt_usize(fleet_t, "fleet", "workers", 1)?;
+    if !(1..=1024).contains(&n_uavs) {
+        return Err(CompileError::FleetSpec {
+            key: "fleet.uavs".to_string(),
+            msg: format!("fleet size {n_uavs} outside [1, 1024]"),
+        });
+    }
+    if !(1..=256).contains(&workers) {
+        return Err(CompileError::FleetSpec {
+            key: "fleet.workers".to_string(),
+            msg: format!("worker count {workers} outside [1, 256]"),
+        });
+    }
+    if !(0.0..=600.0).contains(&stagger_secs) {
+        return Err(CompileError::FleetSpec {
+            key: "fleet.stagger_secs".to_string(),
+            msg: format!("stagger {stagger_secs} outside [0, 600] s"),
+        });
+    }
+
+    // ---- [[intent]] schedule --------------------------------------------
+    let mut schedule = Vec::new();
+    let mut prev_frac = 0.0_f64;
+    for (i, it) in doc.array("intent").iter().enumerate() {
+        let at = |k: &str| format!("intent[{i}].{k}");
+        audit_keys(it, &format!("intent[{i}]"), &["at_frac", "prompt"])?;
+        let frac = match it.get("at_frac") {
+            None => return Err(CompileError::MissingKey { key: at("at_frac") }),
+            Some(v) => want_num(v, &at("at_frac"))?,
+        };
+        if !(frac > 0.0 && frac < 1.0) {
+            return Err(CompileError::ScheduleOrder {
+                key: at("at_frac"),
+                msg: format!("switch fraction {frac} outside (0, 1)"),
+            });
+        }
+        if frac <= prev_frac && i > 0 {
+            return Err(CompileError::ScheduleOrder {
+                key: at("at_frac"),
+                msg: format!("switch fraction {frac} not after {prev_frac}"),
+            });
+        }
+        prev_frac = frac;
+        let prompt = match it.get("prompt") {
+            None => return Err(CompileError::MissingKey { key: at("prompt") }),
+            Some(v) => want_str(v, &at("prompt"))?.to_string(),
+        };
+        if prompt.trim().is_empty() {
+            return Err(CompileError::BadValue {
+                key: at("prompt"),
+                msg: "empty prompt".to_string(),
+            });
+        }
+        schedule.push((frac, prompt));
+    }
+
+    Ok(CompiledScenario {
+        name,
+        summary,
+        goal,
+        hysteresis,
+        min_dwell,
+        min_mbps,
+        max_mbps,
+        dt,
+        trace,
+        loss_prob,
+        jitter_std,
+        extra_latency_s,
+        fleet: FleetSpec { n_uavs, context_every, stagger_secs, workers },
+        schedule,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINIMAL: &str = "name = \"mini\"\n\
+        [[phase]]\nkind = \"stable\"\nfrac = 1.0\nlevel_mbps = 16\n";
+
+    #[test]
+    fn minimal_manifest_compiles_with_defaults() {
+        let c = compile_str(MINIMAL).unwrap();
+        assert_eq!(c.name, "mini");
+        assert_eq!(c.summary, "");
+        assert_eq!(c.goal, MissionGoal::PrioritizeAccuracy);
+        assert_eq!(c.hysteresis, 0.10);
+        assert_eq!(c.min_dwell, 2);
+        assert_eq!((c.min_mbps, c.max_mbps, c.dt), (8.0, 20.0, 1.0));
+        assert_eq!((c.loss_prob, c.jitter_std, c.extra_latency_s), (0.0, 0.03, 0.0));
+        assert_eq!(c.fleet.n_uavs, 1);
+        assert_eq!(c.fleet.workers, 1);
+        assert!(c.schedule.is_empty());
+        let sc = c.instantiate(7, 300.0);
+        assert_eq!(sc.trace.phases.len(), 1);
+        assert!((sc.trace.total_secs() - 300.0).abs() < 1e-9);
+        assert_eq!(sc.link.seed, 7);
+    }
+
+    #[test]
+    fn instantiate_binds_fractions_seconds_and_markov() {
+        let frac = compile_str(
+            "name = \"f\"\n[[phase]]\nkind = \"stable\"\nfrac = 0.25\nlevel_mbps = 16\n\
+             [[phase]]\nkind = \"drop\"\nfrac = 0.75\nlevel_mbps = 9\n",
+        )
+        .unwrap()
+        .instantiate(7, 400.0);
+        assert_eq!(frac.trace.phases[0].secs.to_bits(), (0.25_f64 * 400.0).to_bits());
+
+        let secs = compile_str(
+            "name = \"s\"\n[[phase]]\nkind = \"stable\"\nsecs = 60\nlevel_mbps = 16\n\
+             [[phase]]\nkind = \"drop\"\nsecs = 60\nlevel_mbps = 9\n",
+        )
+        .unwrap()
+        .instantiate(7, 240.0);
+        assert!((secs.trace.total_secs() - 240.0).abs() < 1e-9);
+
+        let markov = compile_str(
+            "name = \"m\"\n[trace]\nmarkov_kinds = [\"stable\", \"drop\"]\n\
+             markov_dwell_div = 10\nmarkov_dwell_min_s = 15\n",
+        )
+        .unwrap()
+        .instantiate(11, 600.0);
+        assert!(!markov.trace.phases.is_empty());
+        assert!((markov.trace.total_secs() - 600.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn each_validation_pass_names_its_key() {
+        let cases: [(&str, fn(&CompileError) -> bool, &str); 8] = [
+            ("[[phase]]\nkind = \"stable\"\nfrac = 1.0\nlevel_mbps = 16\n",
+             |e| matches!(e, CompileError::MissingKey { .. }), "name"),
+            ("name = \"x\"\nbogus = 1\n[[phase]]\nkind = \"stable\"\nfrac = 1.0\n\
+              level_mbps = 16\n",
+             |e| matches!(e, CompileError::UnknownKey { .. }), "bogus"),
+            ("name = \"x\"\ngoal = \"fastest\"\n[[phase]]\nkind = \"stable\"\n\
+              frac = 1.0\nlevel_mbps = 16\n",
+             |e| matches!(e, CompileError::BadValue { .. }), "goal"),
+            ("name = \"x\"\n[[phase]]\nkind = \"stable\"\nfrac = 0.6\nlevel_mbps = 16\n",
+             |e| matches!(e, CompileError::PhaseWindow { .. }), "phase"),
+            ("name = \"x\"\n[trace]\nmin_mbps = 12\nmax_mbps = 9\n[[phase]]\n\
+              kind = \"stable\"\nfrac = 1.0\nlevel_mbps = 16\n",
+             |e| matches!(e, CompileError::RateBound { .. }), "trace.max_mbps"),
+            ("name = \"x\"\n[fleet]\nuavs = 0\n[[phase]]\nkind = \"stable\"\n\
+              frac = 1.0\nlevel_mbps = 16\n",
+             |e| matches!(e, CompileError::FleetSpec { .. }), "fleet.uavs"),
+            ("name = \"x\"\n[[phase]]\nkind = \"stable\"\nfrac = 1.0\nlevel_mbps = 16\n\
+              [[intent]]\nat_frac = 1.5\nprompt = \"p\"\n",
+             |e| matches!(e, CompileError::ScheduleOrder { .. }), "intent[0].at_frac"),
+            ("name = \"x\"\n[[phase]]\nkind = \"stable\"\nfrac = 0.5\nlevel_mbps = 16\n\
+              [[phase]]\nkind = \"drop\"\nsecs = 60\nlevel_mbps = 9\n",
+             |e| matches!(e, CompileError::PhaseWindow { .. }), "phase[1].secs"),
+        ];
+        for (text, variant_ok, key) in cases {
+            let err = compile_str(text).unwrap_err();
+            assert!(variant_ok(&err), "{text:?} -> {err}");
+            assert_eq!(err.key_path(), Some(key), "{err}");
+        }
+    }
+
+    #[test]
+    fn include_is_rejected_inline_and_parse_errors_carry_lines() {
+        let err = compile_str("include = \"base.toml\"\nname = \"x\"\n").unwrap_err();
+        assert!(matches!(err, CompileError::Io { .. }), "{err}");
+        let err = compile_str("name = \"x\"\n???\n").unwrap_err();
+        match err {
+            CompileError::Parse { line, .. } => assert_eq!(line, 2),
+            other => panic!("expected parse error, got {other}"),
+        }
+    }
+}

@@ -1,0 +1,316 @@
+//! Scenario manifest parser: the TOML subset the scenario compiler reads.
+//!
+//! Hand-rolled like every other format in this repo (`report.rs` emits
+//! JSON by hand, `config.rs` parses `key = value`) — the offline crate set
+//! has no serde/toml.  The subset is exactly what scenario manifests need:
+//!
+//! ```text
+//! # comment (quote-aware: `#` inside strings is literal)
+//! key = "string"            # top-level scalars
+//! key = 3.5                 # numbers (always f64)
+//! key = true                # booleans
+//! key = ["a", "b"]          # flat lists of scalars
+//! [section]                 # named table ([trace], [link], [fleet])
+//! key = value
+//! [[entry]]                 # array-of-tables ([[phase]], [[intent]])
+//! key = value
+//! ```
+//!
+//! No nesting, no inline tables, no multi-line values, no commas inside
+//! quoted list elements.  The parser only builds the [`Doc`] tree and
+//! reports syntax errors with line numbers; all semantic checking (known
+//! keys, required keys, value ranges) is the compile pipeline's job
+//! (`scenario::compile`), so every diagnostic names the offending key.
+
+use std::fmt;
+
+/// A parsed manifest value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl Value {
+    /// Human name of the value's type, for diagnostics.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "string",
+            Value::Num(_) => "number",
+            Value::Bool(_) => "boolean",
+            Value::List(_) => "list",
+        }
+    }
+}
+
+/// One flat key → value table, preserving insertion order (manifests are
+/// small; linear scans keep the structure dependency-free).
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    entries: Vec<(String, Value)>,
+}
+
+impl Table {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    /// Insert or replace — later assignments (and include overrides) win.
+    pub fn set(&mut self, key: &str, value: Value) {
+        match self.entries.iter_mut().find(|(k, _)| k == key) {
+            Some((_, v)) => *v = value,
+            None => self.entries.push((key.to_string(), value)),
+        }
+    }
+
+    pub fn remove(&mut self, key: &str) -> Option<Value> {
+        let i = self.entries.iter().position(|(k, _)| k == key)?;
+        Some(self.entries.remove(i).1)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|(k, _)| k.as_str())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// A parsed manifest: top-level keys, named tables, arrays of tables.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub root: Table,
+    pub tables: Vec<(String, Table)>,
+    pub arrays: Vec<(String, Vec<Table>)>,
+}
+
+impl Doc {
+    /// The named `[section]` table, if present.
+    pub fn table(&self, name: &str) -> Option<&Table> {
+        self.tables.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    /// Every `[[name]]` entry, in file order (empty slice when absent).
+    pub fn array(&self, name: &str) -> &[Table] {
+        self.arrays
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, ts)| ts.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Parse manifest text into a [`Doc`]; syntax errors carry the line.
+    pub fn parse(text: &str) -> Result<Doc, ParseError> {
+        enum Cur {
+            Root,
+            Table(usize),
+            Array(usize),
+        }
+        let mut doc = Doc::default();
+        let mut cur = Cur::Root;
+        for (i, raw) in text.lines().enumerate() {
+            let line = i + 1;
+            let stripped = strip_comment(raw);
+            let s = stripped.trim();
+            if s.is_empty() {
+                continue;
+            }
+            if let Some(inner) = s.strip_prefix("[[") {
+                let Some(name) = inner.strip_suffix("]]").map(str::trim) else {
+                    return Err(ParseError::new(line, "unterminated [[header]]"));
+                };
+                check_ident(name, line)?;
+                let ai = match doc.arrays.iter().position(|(n, _)| n == name) {
+                    Some(ai) => ai,
+                    None => {
+                        doc.arrays.push((name.to_string(), Vec::new()));
+                        doc.arrays.len() - 1
+                    }
+                };
+                doc.arrays[ai].1.push(Table::new());
+                cur = Cur::Array(ai);
+            } else if let Some(inner) = s.strip_prefix('[') {
+                let Some(name) = inner.strip_suffix(']').map(str::trim) else {
+                    return Err(ParseError::new(line, "unterminated [header]"));
+                };
+                check_ident(name, line)?;
+                let ti = match doc.tables.iter().position(|(n, _)| n == name) {
+                    Some(ti) => ti,
+                    None => {
+                        doc.tables.push((name.to_string(), Table::new()));
+                        doc.tables.len() - 1
+                    }
+                };
+                cur = Cur::Table(ti);
+            } else {
+                let Some((k, v)) = s.split_once('=') else {
+                    return Err(ParseError::new(line, "expected `key = value` or a [header]"));
+                };
+                let key = k.trim();
+                check_ident(key, line)?;
+                let value = parse_value(v.trim(), line)?;
+                let target = match cur {
+                    Cur::Root => &mut doc.root,
+                    Cur::Table(ti) => &mut doc.tables[ti].1,
+                    Cur::Array(ai) => doc.arrays[ai]
+                        .1
+                        .last_mut()
+                        .expect("array header always pushes a table"),
+                };
+                target.set(key, value);
+            }
+        }
+        Ok(doc)
+    }
+}
+
+/// A manifest syntax error (line-numbered; the compile pipeline wraps it
+/// with the file path).
+#[derive(Clone, Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl ParseError {
+    fn new(line: usize, msg: impl Into<String>) -> Self {
+        Self { line, msg: msg.into() }
+    }
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {}", self.line, self.msg)
+    }
+}
+
+/// Cut a trailing `# comment`, treating `#` inside a quoted string as
+/// literal content.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn check_ident(name: &str, line: usize) -> Result<(), ParseError> {
+    if name.is_empty() {
+        return Err(ParseError::new(line, "empty identifier"));
+    }
+    if let Some(c) =
+        name.chars().find(|c| !(c.is_ascii_alphanumeric() || *c == '-' || *c == '_'))
+    {
+        return Err(ParseError::new(line, format!("bad character `{c}` in `{name}`")));
+    }
+    Ok(())
+}
+
+fn parse_scalar(s: &str, line: usize) -> Result<Value, ParseError> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let Some(content) = inner.strip_suffix('"') else {
+            return Err(ParseError::new(line, format!("unterminated string `{s}`")));
+        };
+        if content.contains('"') {
+            return Err(ParseError::new(line, "embedded `\"` in string (no escapes)"));
+        }
+        return Ok(Value::Str(content.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    match s.parse::<f64>() {
+        Ok(n) if n.is_finite() => Ok(Value::Num(n)),
+        _ => Err(ParseError::new(line, format!("unparseable value `{s}`"))),
+    }
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ParseError> {
+    if s.is_empty() {
+        return Err(ParseError::new(line, "missing value after `=`"));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let Some(body) = inner.strip_suffix(']') else {
+            return Err(ParseError::new(line, "unterminated list"));
+        };
+        if body.trim().is_empty() {
+            return Ok(Value::List(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for item in body.split(',') {
+            items.push(parse_scalar(item.trim(), line)?);
+        }
+        return Ok(Value::List(items));
+    }
+    parse_scalar(s, line)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_supported_shape() {
+        let doc = Doc::parse(
+            "name = \"demo\" # trailing comment\n\
+             frac = 0.25\n\
+             flag = true\n\
+             note = \"has # inside\"\n\
+             [trace]\n\
+             min_mbps = 8\n\
+             markov_kinds = [\"stable\", \"drop\"]\n\
+             [[phase]]\n\
+             kind = \"stable\"\n\
+             [[phase]]\n\
+             kind = \"drop\"\n",
+        )
+        .unwrap();
+        assert_eq!(doc.root.get("name"), Some(&Value::Str("demo".into())));
+        assert_eq!(doc.root.get("frac"), Some(&Value::Num(0.25)));
+        assert_eq!(doc.root.get("flag"), Some(&Value::Bool(true)));
+        assert_eq!(doc.root.get("note"), Some(&Value::Str("has # inside".into())));
+        let tr = doc.table("trace").unwrap();
+        assert_eq!(tr.get("min_mbps"), Some(&Value::Num(8.0)));
+        assert_eq!(
+            tr.get("markov_kinds"),
+            Some(&Value::List(vec![Value::Str("stable".into()), Value::Str("drop".into())]))
+        );
+        assert_eq!(doc.array("phase").len(), 2);
+        assert!(doc.array("intent").is_empty());
+    }
+
+    #[test]
+    fn later_assignments_replace_earlier_ones() {
+        let doc = Doc::parse("a = 1\na = 2\n").unwrap();
+        assert_eq!(doc.root.get("a"), Some(&Value::Num(2.0)));
+    }
+
+    #[test]
+    fn syntax_errors_carry_line_numbers() {
+        for (text, line) in [
+            ("ok = 1\nnot a pair\n", 2),
+            ("[unclosed\n", 1),
+            ("x = \"unterminated\n", 1),
+            ("x = [1, 2\n", 1),
+            ("ok = 1\nx = @nan@\n", 2),
+            ("bad key! = 1\n", 1),
+            ("x =\n", 1),
+        ] {
+            let err = Doc::parse(text).unwrap_err();
+            assert_eq!(err.line, line, "{text:?} -> {err}");
+        }
+    }
+}

@@ -20,6 +20,10 @@
 //! silent drift.  Run one with `avery scenario --name <name>`; list them
 //! with `avery scenario --list`.
 
+pub mod compile;
+pub mod generate;
+pub mod manifest;
+
 use anyhow::{bail, Result};
 
 use crate::coordinator::MissionGoal;
@@ -39,8 +43,8 @@ pub struct FleetSpec {
 /// A named disaster/network regime, fully resolved for one (seed, duration).
 #[derive(Clone, Debug)]
 pub struct Scenario {
-    pub name: &'static str,
-    pub summary: &'static str,
+    pub name: String,
+    pub summary: String,
     pub trace: TraceConfig,
     pub link: LinkConfig,
     pub fleet: FleetSpec,
@@ -112,8 +116,8 @@ pub fn build(name: &str, seed: u64, duration_secs: f64) -> Result<Scenario> {
         // The paper's §5.3 reproduction: one 20-minute script, one standing
         // Insight intent, a dedicated-feeling uplink (N=1).
         "paper-baseline" => Ok(Scenario {
-            name: "paper-baseline",
-            summary: summary_of("paper-baseline"),
+            name: "paper-baseline".to_string(),
+            summary: summary_of("paper-baseline").to_string(),
             trace: TraceConfig::paper_20min(seed).scaled_to(d),
             link: LinkConfig { seed, ..LinkConfig::default() },
             fleet: FleetSpec { n_uavs: 1, context_every: 0, stagger_secs: 0.0, workers: 1 },
@@ -127,8 +131,8 @@ pub fn build(name: &str, seed: u64, duration_secs: f64) -> Result<Scenario> {
         // switching between calm, turbulent and attenuated regimes, with a
         // mid-mission triage detour and a late re-tasking onto vehicles.
         "wildfire-ridge" => Ok(Scenario {
-            name: "wildfire-ridge",
-            summary: summary_of("wildfire-ridge"),
+            name: "wildfire-ridge".to_string(),
+            summary: summary_of("wildfire-ridge").to_string(),
             trace: TraceConfig::markov_modulated(
                 seed,
                 d,
@@ -152,8 +156,8 @@ pub fn build(name: &str, seed: u64, duration_secs: f64) -> Result<Scenario> {
         // paper-like drop-heavy script, lossier link, and the operator
         // walking the fleet from awareness into grounded segmentation.
         "urban-flood" => Ok(Scenario {
-            name: "urban-flood",
-            summary: summary_of("urban-flood"),
+            name: "urban-flood".to_string(),
+            summary: summary_of("urban-flood").to_string(),
             trace: TraceConfig {
                 phases: vec![
                     Phase { kind: PhaseKind::Stable, secs: 0.15 * d, level_mbps: 16.0 },
@@ -184,8 +188,8 @@ pub fn build(name: &str, seed: u64, duration_secs: f64) -> Result<Scenario> {
         // the outage-recovery stress case (infeasible epochs, estimator
         // collapse and recovery).
         "earthquake-canyon" => Ok(Scenario {
-            name: "earthquake-canyon",
-            summary: summary_of("earthquake-canyon"),
+            name: "earthquake-canyon".to_string(),
+            summary: summary_of("earthquake-canyon").to_string(),
             trace: TraceConfig {
                 phases: vec![
                     Phase { kind: PhaseKind::Stable, secs: 0.20 * d, level_mbps: 15.0 },
@@ -212,8 +216,8 @@ pub fn build(name: &str, seed: u64, duration_secs: f64) -> Result<Scenario> {
         // ramps with handoff snap-backs and a fixed propagation latency;
         // throughput-first tasking with a late vehicle re-task.
         "coastal-satellite" => Ok(Scenario {
-            name: "coastal-satellite",
-            summary: summary_of("coastal-satellite"),
+            name: "coastal-satellite".to_string(),
+            summary: summary_of("coastal-satellite").to_string(),
             trace: TraceConfig {
                 phases: vec![
                     Phase { kind: PhaseKind::Sawtooth, secs: 0.30 * d, level_mbps: 9.0 },

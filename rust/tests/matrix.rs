@@ -1,0 +1,614 @@
+//! Scenario-compiler + generated-matrix property suite — no artifacts
+//! required, never skips.
+//!
+//! * **Corpus validity** — every manifest in the full generated matrix
+//!   (8 traces × 4 links × 4 fleets × 4 intents ≥ 500) parses and compiles
+//!   clean, with unique names covering every axis value.
+//! * **Invariant gates** — a 64-scenario seeded sample upholds the PR 2
+//!   golden-trace invariants: per-phase clamp bounds, same-seed
+//!   byte-determinism, controller anti-flap under hysteresis + dwell,
+//!   fair-share conservation and Jain ∈ (0, 1] on the shared uplink.
+//! * **Built-in parity** — each checked-in manifest under `scenarios/`
+//!   compiles to a bit-identical [`Scenario`] and a byte-identical fleet
+//!   CSV set versus its hand-coded `scenario::build` arm.
+//! * **Diagnostics** — hand-written invalid manifests hit every
+//!   [`CompileError`] variant, each naming the offending key path.
+//! * **Matrix mission** — `avery run matrix` passes all gates on the
+//!   default sample and reports byte-deterministically per seed.
+
+mod common;
+
+use std::path::Path;
+
+use avery::coordinator::{
+    classify_intent, ControllerDecision, Lut, MissionGoal, RuntimeState, SplitController, TierId,
+};
+use avery::mission::{find, run_compiled_scenario, run_scenario, RunOptions};
+use avery::netsim::{BandwidthEstimator, BandwidthTrace, PhaseKind, SharedLink, OUTAGE_FLOOR_MBPS};
+use avery::report::{to_json, CsvSink, Sink};
+use avery::scenario::compile::{compile_file, compile_str, CompileError};
+use avery::scenario::{build, generate, Scenario, SCENARIO_NAMES};
+use avery::streams::fleet::jain_index;
+use avery::util::Rng;
+
+// ---------------------------------------------------------------------------
+// Corpus validity: every generated manifest compiles, axes are covered
+// ---------------------------------------------------------------------------
+
+#[test]
+fn full_generated_corpus_compiles_clean() {
+    let all = generate::generate(7);
+    assert!(all.len() >= 500, "corpus shrank to {}", all.len());
+    assert_eq!(all.len(), generate::MATRIX_SIZE);
+    let mut names: Vec<&str> = Vec::with_capacity(all.len());
+    for m in &all {
+        let c = compile_str(&m.text)
+            .unwrap_or_else(|e| panic!("generated `{}` failed to compile: {e}", m.name));
+        assert_eq!(c.name, m.name, "manifest name drifted from generator name");
+        assert!(!c.summary.is_empty(), "{}: empty summary", m.name);
+        names.push(&m.name);
+    }
+    names.sort_unstable();
+    names.dedup();
+    assert_eq!(names.len(), all.len(), "duplicate names in the corpus");
+}
+
+#[test]
+fn corpus_covers_every_axis_value() {
+    let all = generate::generate(7);
+    const TRACES: [&str; 8] =
+        ["steady", "canyon", "droppy", "sawtooth", "relay", "mksmoke", "mkstorm", "mkpass"];
+    for trace in TRACES {
+        let prefix = format!("gen-{trace}-");
+        assert!(all.iter().any(|m| m.name.starts_with(&prefix)), "no {trace} trace");
+    }
+    for link in ["clean", "lossy", "jittery", "sat"] {
+        let tag = format!("-{link}-");
+        assert!(all.iter().any(|m| m.name.contains(&tag)), "no {link} link");
+    }
+    for fleet in ["solo", "patrol", "swarm", "wing"] {
+        let tag = format!("-{fleet}-");
+        assert!(all.iter().any(|m| m.name.contains(&tag)), "no {fleet} fleet");
+    }
+    for intent in ["hold", "escalate", "retask", "triage"] {
+        let suffix = format!("-{intent}");
+        assert!(all.iter().any(|m| m.name.ends_with(&suffix)), "no {intent} intent");
+    }
+    // Both mission goals appear in the corpus.
+    let goals: Vec<MissionGoal> = all.iter().map(|m| compile_str(&m.text).unwrap().goal).collect();
+    assert!(goals.contains(&MissionGoal::PrioritizeAccuracy));
+    assert!(goals.contains(&MissionGoal::PrioritizeThroughput));
+}
+
+// ---------------------------------------------------------------------------
+// Invariant gates over a 64-scenario seeded sample (the PR 2 golden-trace
+// properties, applied to compiler output instead of the built-ins)
+// ---------------------------------------------------------------------------
+
+/// Walk samples phase by phase with the generator's own rounding; every
+/// sample must sit inside the band of the phase that produced it.
+fn assert_clamp_band(name: &str, sc: &Scenario, trace: &BandwidthTrace) {
+    let cfg = &sc.trace;
+    let mut idx = 0usize;
+    for p in &cfg.phases {
+        let n = (p.secs / cfg.dt).round() as usize;
+        let lo = match p.kind {
+            PhaseKind::Outage => OUTAGE_FLOOR_MBPS,
+            _ => cfg.min_mbps,
+        };
+        for i in idx..(idx + n).min(trace.samples_mbps.len()) {
+            let b = trace.samples_mbps[i];
+            assert!(
+                (lo - 1e-9..=cfg.max_mbps + 1e-9).contains(&b),
+                "{name}: {:?} sample {b} at {i} outside [{lo}, {}]",
+                p.kind,
+                cfg.max_mbps
+            );
+        }
+        idx += n;
+    }
+    assert_eq!(idx, trace.samples_mbps.len(), "{name}: phase walk misses samples");
+}
+
+/// Drive the controller over the trace exactly as the mission's Sense
+/// stage does (EWMA α = 0.4, one observation per decision epoch).
+fn controller_timeline(
+    trace: &BandwidthTrace,
+    hysteresis: f64,
+    dwell: u64,
+) -> Vec<(f64, Option<TierId>)> {
+    let mut c = SplitController::new(Lut::paper(), 0.5, 6.0);
+    c.hysteresis = hysteresis;
+    c.min_dwell_decisions = dwell;
+    let mut est = BandwidthEstimator::new(0.4);
+    let intent = classify_intent("highlight the stranded people");
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    while t < trace.duration_secs() {
+        let e = est.observe(trace.at(t));
+        let state = RuntimeState {
+            bandwidth_mbps: e,
+            power_mode: "MODE_30W_ALL",
+            intent: intent.clone(),
+        };
+        let d = match c.select_configuration(&state, MissionGoal::PrioritizeAccuracy) {
+            Ok(ControllerDecision::Insight { tier, .. }) => Some(tier),
+            Ok(ControllerDecision::Context { .. }) => None,
+            Err(_) => None,
+        };
+        out.push((e, d));
+        t += 1.0;
+    }
+    out
+}
+
+#[test]
+fn sixty_four_sampled_scenarios_pass_trace_invariants() {
+    let sample = generate::sample(7, 64);
+    assert_eq!(sample.len(), 64);
+    let lut = Lut::paper();
+    for m in &sample {
+        let compiled = compile_str(&m.text)
+            .unwrap_or_else(|e| panic!("sampled `{}` failed to compile: {e}", m.name));
+        let sc = compiled.instantiate(7, 300.0);
+        assert!((sc.trace.total_secs() - 300.0).abs() < 1e-6, "{}: duration", m.name);
+        let trace = BandwidthTrace::generate(&sc.trace);
+
+        // Clamp bounds, phase by phase.
+        assert_clamp_band(&m.name, &sc, &trace);
+
+        // Same-seed byte-determinism through the whole pipeline: re-compile
+        // the same text, re-instantiate, re-generate.  And the seed must
+        // matter.
+        let regen = |seed: u64| {
+            BandwidthTrace::generate(&compile_str(&m.text).unwrap().instantiate(seed, 300.0).trace)
+        };
+        assert_eq!(trace.samples_mbps, regen(7).samples_mbps, "{}: not deterministic", m.name);
+        assert_ne!(trace.samples_mbps, regen(8).samples_mbps, "{}: seed ignored", m.name);
+
+        // Anti-flap: with the scenario's hysteresis + dwell, an A→B→A on
+        // consecutive epochs is legal only as a forced eviction of an
+        // infeasible B.
+        if sc.min_dwell > 0 {
+            let tl = controller_timeline(&trace, sc.hysteresis, sc.min_dwell);
+            for w in tl.windows(3) {
+                let ((_, a), (_, b), (e2, c2)) = (w[0], w[1], w[2]);
+                let (Some(a), Some(b), Some(c2)) = (a, b, c2) else { continue };
+                if a != b && c2 == a {
+                    let b_pps = lut.entry(b).max_pps(e2);
+                    assert!(
+                        b_pps < 0.5,
+                        "{}: voluntary flap {a:?}->{b:?}->{c2:?} (B at {b_pps:.3} PPS)",
+                        m.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sampled_scenarios_conserve_fair_share_and_jain() {
+    for m in generate::sample(21, 6) {
+        let sc = compile_str(&m.text).unwrap().instantiate(21, 300.0);
+        let trace = BandwidthTrace::generate(&sc.trace);
+        let n_uavs = sc.fleet.n_uavs.max(2);
+        let mut link = SharedLink::new(trace.clone(), sc.link.clone(), n_uavs);
+        let mut rng = Rng::new(42);
+        let mut t = 0.0;
+        while t < 260.0 {
+            let uav = rng.below(n_uavs);
+            let bytes = 0.3e6 + rng.f64() * 2.6e6;
+            let out = link.transmit(uav, t, bytes);
+            assert!(out.tx_secs > 0.0, "{}", m.name);
+            let mut shares = Vec::with_capacity(n_uavs);
+            for u in 0..n_uavs {
+                let share = link.share_at(u, t + 0.5);
+                let cap = trace.at(t + 0.5);
+                // Processor sharing only divides: no UAV's share exceeds
+                // the uncontended trace capacity.
+                assert!(
+                    share <= cap + 1e-9,
+                    "{}: share {share} above capacity {cap}",
+                    m.name
+                );
+                assert!(share > 0.0, "{}", m.name);
+                shares.push(share);
+            }
+            let j = jain_index(&shares);
+            assert!(j > 0.0 && j <= 1.0 + 1e-12, "{}: jain {j}", m.name);
+            t += 0.7 + rng.f64() * 2.3;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generated scenarios end to end (full fleet mission over the synthetic
+// engine, via the same driver the matrix mission uses)
+// ---------------------------------------------------------------------------
+
+fn e2e_opts(seed: u64) -> RunOptions {
+    RunOptions { duration_secs: 120.0, exec_every: 25, seed, ..RunOptions::default() }
+}
+
+#[test]
+fn sampled_scenarios_run_end_to_end_with_fair_outcomes() {
+    let env = common::sim_env("matrix", "e2e");
+    let opts = e2e_opts(7);
+    for m in generate::sample(7, 4) {
+        let sc = compile_str(&m.text).unwrap().instantiate(7, 120.0);
+        let (run, report) = run_compiled_scenario(&env, &opts, &sc).unwrap();
+        assert!(run.delivered_total > 0, "{}: nothing delivered", m.name);
+        assert!(
+            run.jain_pps > 0.0 && run.jain_pps <= 1.0 + 1e-12,
+            "{}: jain {}",
+            m.name,
+            run.jain_pps
+        );
+        assert_eq!(report.mission, "scenario", "{}", m.name);
+        assert_eq!(common::scalar(&report, "uavs"), sc.fleet.n_uavs as f64, "{}", m.name);
+    }
+}
+
+#[test]
+fn generated_scenario_reports_are_byte_deterministic() {
+    let opts = e2e_opts(9);
+    for m in generate::sample(9, 2) {
+        let sc = compile_str(&m.text).unwrap().instantiate(9, 120.0);
+        let (_, ra) = run_compiled_scenario(
+            &common::sim_env("matrix", &format!("det-a-{}", m.name)),
+            &opts,
+            &sc,
+        )
+        .unwrap();
+        let (_, rb) = run_compiled_scenario(
+            &common::sim_env("matrix", &format!("det-b-{}", m.name)),
+            &opts,
+            &sc,
+        )
+        .unwrap();
+        assert_eq!(to_json(&ra), to_json(&rb), "{}: report diverged", m.name);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checked-in manifests reproduce the built-ins, bit for bit
+// ---------------------------------------------------------------------------
+
+fn assert_scenarios_bit_identical(tag: &str, a: &Scenario, b: &Scenario) {
+    assert_eq!(a.name, b.name, "{tag}: name");
+    assert_eq!(a.summary, b.summary, "{tag}: summary");
+    assert_eq!(a.goal, b.goal, "{tag}: goal");
+    assert_eq!(a.hysteresis.to_bits(), b.hysteresis.to_bits(), "{tag}: hysteresis");
+    assert_eq!(a.min_dwell, b.min_dwell, "{tag}: min_dwell");
+
+    assert_eq!(a.trace.min_mbps.to_bits(), b.trace.min_mbps.to_bits(), "{tag}: min_mbps");
+    assert_eq!(a.trace.max_mbps.to_bits(), b.trace.max_mbps.to_bits(), "{tag}: max_mbps");
+    assert_eq!(a.trace.dt.to_bits(), b.trace.dt.to_bits(), "{tag}: dt");
+    assert_eq!(a.trace.seed, b.trace.seed, "{tag}: trace seed");
+    assert_eq!(a.trace.phases.len(), b.trace.phases.len(), "{tag}: phase count");
+    for (i, (pa, pb)) in a.trace.phases.iter().zip(&b.trace.phases).enumerate() {
+        assert_eq!(pa.kind, pb.kind, "{tag}: phase[{i}].kind");
+        assert_eq!(pa.secs.to_bits(), pb.secs.to_bits(), "{tag}: phase[{i}].secs");
+        assert_eq!(
+            pa.level_mbps.to_bits(),
+            pb.level_mbps.to_bits(),
+            "{tag}: phase[{i}].level_mbps"
+        );
+    }
+
+    assert_eq!(a.link.loss_prob.to_bits(), b.link.loss_prob.to_bits(), "{tag}: loss");
+    assert_eq!(a.link.jitter_std.to_bits(), b.link.jitter_std.to_bits(), "{tag}: jitter");
+    assert_eq!(
+        a.link.extra_latency_s.to_bits(),
+        b.link.extra_latency_s.to_bits(),
+        "{tag}: latency"
+    );
+    assert_eq!(a.link.seed, b.link.seed, "{tag}: link seed");
+
+    assert_eq!(a.fleet.n_uavs, b.fleet.n_uavs, "{tag}: uavs");
+    assert_eq!(a.fleet.context_every, b.fleet.context_every, "{tag}: context_every");
+    assert_eq!(
+        a.fleet.stagger_secs.to_bits(),
+        b.fleet.stagger_secs.to_bits(),
+        "{tag}: stagger"
+    );
+    assert_eq!(a.fleet.workers, b.fleet.workers, "{tag}: workers");
+
+    assert_eq!(a.schedule.len(), b.schedule.len(), "{tag}: schedule length");
+    for (i, (sa, sb)) in a.schedule.iter().zip(&b.schedule).enumerate() {
+        assert_eq!(sa.t.to_bits(), sb.t.to_bits(), "{tag}: schedule[{i}].t");
+        assert_eq!(sa.prompt, sb.prompt, "{tag}: schedule[{i}].prompt");
+    }
+}
+
+#[test]
+fn checked_in_manifests_compile_to_bit_identical_builtins() {
+    for name in SCENARIO_NAMES {
+        let path = format!("scenarios/{name}.toml");
+        let compiled = compile_file(Path::new(&path))
+            .unwrap_or_else(|e| panic!("{path}: {e}"));
+        for (seed, dur) in [(7u64, 1200.0), (11, 600.0), (42, 181.5)] {
+            let from_manifest = compiled.instantiate(seed, dur);
+            let built = build(name, seed, dur).unwrap();
+            assert_scenarios_bit_identical(
+                &format!("{name} seed {seed} dur {dur}"),
+                &from_manifest,
+                &built,
+            );
+        }
+    }
+}
+
+#[test]
+fn manifest_mission_reproduces_builtin_fleet_csvs_byte_for_byte() {
+    // The full acceptance path for two representative scenarios (one
+    // phase-scripted with an intent schedule, one absolute-seconds): run
+    // `--manifest scenarios/X.toml` and `--name X` through the mission and
+    // CSV sink, then diff every emitted series byte for byte.  CI repeats
+    // this for all five via the built binary.
+    for name in ["urban-flood", "paper-baseline"] {
+        let base = RunOptions {
+            duration_secs: 120.0,
+            seed: 7,
+            exec_every: 10,
+            ..RunOptions::default()
+        };
+        let env_n = common::sim_env("matrix", &format!("builtin-{name}"));
+        let (_, by_name) = run_scenario(
+            &env_n,
+            &RunOptions { name: Some(name.to_string()), ..base.clone() },
+        )
+        .unwrap();
+        CsvSink::new(&env_n.out_dir).announce(false).emit(&by_name).unwrap();
+
+        let env_m = common::sim_env("matrix", &format!("manifest-{name}"));
+        let (_, by_manifest) = run_scenario(
+            &env_m,
+            &RunOptions { manifest: Some(format!("scenarios/{name}.toml")), ..base },
+        )
+        .unwrap();
+        CsvSink::new(&env_m.out_dir).announce(false).emit(&by_manifest).unwrap();
+
+        assert_eq!(to_json(&by_name), to_json(&by_manifest), "{name}: JSON reports differ");
+        for series in ["summary", "per_uav", "epochs"] {
+            let file = format!("scenario_{name}_{series}.csv");
+            let a = std::fs::read_to_string(env_n.out_dir.join(&file))
+                .unwrap_or_else(|e| panic!("{file}: {e}"));
+            let b = std::fs::read_to_string(env_m.out_dir.join(&file))
+                .unwrap_or_else(|e| panic!("{file}: {e}"));
+            assert_eq!(a, b, "{name}: {series} CSV differs between name and manifest runs");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compiler diagnostics: every CompileError variant, with key paths
+// ---------------------------------------------------------------------------
+
+fn variant(e: &CompileError) -> &'static str {
+    match e {
+        CompileError::Parse { .. } => "Parse",
+        CompileError::Io { .. } => "Io",
+        CompileError::IncludeCycle { .. } => "IncludeCycle",
+        CompileError::MissingKey { .. } => "MissingKey",
+        CompileError::UnknownKey { .. } => "UnknownKey",
+        CompileError::BadValue { .. } => "BadValue",
+        CompileError::PhaseWindow { .. } => "PhaseWindow",
+        CompileError::RateBound { .. } => "RateBound",
+        CompileError::ScheduleOrder { .. } => "ScheduleOrder",
+        CompileError::FleetSpec { .. } => "FleetSpec",
+    }
+}
+
+/// One valid phase table, appended so each case isolates a single defect.
+const PHASE: &str = "[[phase]]\nkind = \"stable\"\nfrac = 1.0\nlevel_mbps = 16\n";
+
+#[test]
+fn invalid_manifests_hit_every_semantic_variant_with_key_paths() {
+    let cases: [(&str, String, &str, &str); 14] = [
+        ("missing name", PHASE.to_string(), "MissingKey", "name"),
+        (
+            "unknown section",
+            format!("name = \"x\"\n[turbo]\nboost = 1\n{PHASE}"),
+            "UnknownKey",
+            "[turbo]",
+        ),
+        (
+            "unknown array",
+            format!("name = \"x\"\n{PHASE}[[phases]]\nkind = \"stable\"\n"),
+            "UnknownKey",
+            "[[phases]]",
+        ),
+        (
+            "unsupported schema",
+            format!("schema = 2\nname = \"x\"\n{PHASE}"),
+            "BadValue",
+            "schema",
+        ),
+        (
+            "bad phase kind",
+            "name = \"x\"\n[[phase]]\nkind = \"misty\"\nfrac = 1.0\nlevel_mbps = 16\n"
+                .to_string(),
+            "BadValue",
+            "phase[0].kind",
+        ),
+        (
+            "fractions not summing to 1",
+            "name = \"x\"\n[[phase]]\nkind = \"stable\"\nfrac = 0.9\nlevel_mbps = 16\n"
+                .to_string(),
+            "PhaseWindow",
+            "phase",
+        ),
+        (
+            "frac and secs together",
+            "name = \"x\"\n[[phase]]\nkind = \"stable\"\nfrac = 1.0\nsecs = 60\n\
+             level_mbps = 16\n"
+                .to_string(),
+            "PhaseWindow",
+            "phase[0].secs",
+        ),
+        (
+            "markov alongside phases",
+            format!("name = \"x\"\n[trace]\nmarkov_kinds = [\"stable\"]\n{PHASE}"),
+            "PhaseWindow",
+            "trace.markov_kinds",
+        ),
+        (
+            "inverted clamp band",
+            format!("name = \"x\"\n[trace]\nmin_mbps = 12\nmax_mbps = 9\n{PHASE}"),
+            "RateBound",
+            "trace.max_mbps",
+        ),
+        (
+            "anchor outside the band",
+            "name = \"x\"\n[[phase]]\nkind = \"stable\"\nfrac = 1.0\nlevel_mbps = 40\n"
+                .to_string(),
+            "RateBound",
+            "phase[0].level_mbps",
+        ),
+        (
+            "loss probability over 1",
+            format!("name = \"x\"\n[link]\nloss_prob = 1.5\n{PHASE}"),
+            "RateBound",
+            "link.loss_prob",
+        ),
+        (
+            "intent switch outside the mission",
+            format!("name = \"x\"\n{PHASE}[[intent]]\nat_frac = 1.5\nprompt = \"p\"\n"),
+            "ScheduleOrder",
+            "intent[0].at_frac",
+        ),
+        (
+            "intent switches out of order",
+            format!(
+                "name = \"x\"\n{PHASE}[[intent]]\nat_frac = 0.6\nprompt = \"p\"\n\
+                 [[intent]]\nat_frac = 0.4\nprompt = \"q\"\n"
+            ),
+            "ScheduleOrder",
+            "intent[1].at_frac",
+        ),
+        (
+            "empty fleet",
+            format!("name = \"x\"\n[fleet]\nuavs = 0\n{PHASE}"),
+            "FleetSpec",
+            "fleet.uavs",
+        ),
+    ];
+    for (what, text, want_variant, want_key) in &cases {
+        let err = compile_str(text)
+            .map(|c| c.name)
+            .expect_err(&format!("{what}: compiled anyway"));
+        assert_eq!(variant(&err), *want_variant, "{what}: {err}");
+        assert_eq!(err.key_path(), Some(*want_key), "{what}: {err}");
+    }
+
+    // A few more key-path spot checks on the same machinery.
+    let text = format!("name = \"x\"\n{PHASE}[[intent]]\nat_frac = 0.5\nprompt = \"\"\n");
+    let err = compile_str(&text).unwrap_err();
+    assert_eq!(variant(&err), "BadValue");
+    assert_eq!(err.key_path(), Some("intent[0].prompt"));
+    let err = compile_str("name = \"x\"\n").unwrap_err();
+    assert_eq!(variant(&err), "MissingKey");
+    assert_eq!(err.key_path(), Some("phase"));
+    let err = compile_str(&format!("name = \"x\"\n[fleet]\nworkers = 2000\n{PHASE}")).unwrap_err();
+    assert_eq!(variant(&err), "FleetSpec");
+    assert_eq!(err.key_path(), Some("fleet.workers"));
+}
+
+#[test]
+fn file_level_errors_parse_io_and_include_cycle() {
+    // Syntax errors carry the file path and line; key_path is None.
+    let dir = Path::new("target/test-out/matrix-manifests");
+    std::fs::create_dir_all(dir).unwrap();
+    let bad = dir.join("bad.toml");
+    std::fs::write(&bad, "name = \"x\"\n???\n").unwrap();
+    let err = compile_file(&bad).unwrap_err();
+    match &err {
+        CompileError::Parse { path, line, .. } => {
+            assert!(path.ends_with("bad.toml"), "{path}");
+            assert_eq!(*line, 2);
+        }
+        other => panic!("expected Parse, got {other}"),
+    }
+    assert_eq!(err.key_path(), None);
+
+    // Unreadable file -> Io.
+    let err = compile_file(Path::new("scenarios/does-not-exist.toml")).unwrap_err();
+    assert_eq!(variant(&err), "Io");
+    assert_eq!(err.key_path(), None);
+
+    // Two manifests including each other -> IncludeCycle.
+    let a = dir.join("cycle-a.toml");
+    let b = dir.join("cycle-b.toml");
+    std::fs::write(&a, "include = \"cycle-b.toml\"\nname = \"a\"\n").unwrap();
+    std::fs::write(&b, "include = \"cycle-a.toml\"\nname = \"b\"\n").unwrap();
+    let err = compile_file(&a).unwrap_err();
+    assert_eq!(variant(&err), "IncludeCycle", "{err}");
+}
+
+#[test]
+fn include_overlays_base_manifests() {
+    let dir = Path::new("target/test-out/matrix-manifests");
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(
+        dir.join("base.toml"),
+        "name = \"base\"\nhysteresis = 0.15\n\
+         [fleet]\nuavs = 2\nworkers = 1\n\
+         [[phase]]\nkind = \"stable\"\nfrac = 1.0\nlevel_mbps = 16\n",
+    )
+    .unwrap();
+    std::fs::write(
+        dir.join("child.toml"),
+        "include = \"base.toml\"\nname = \"child\"\n\
+         [fleet]\nuavs = 5\n\
+         [[phase]]\nkind = \"drop\"\nfrac = 0.4\nlevel_mbps = 9\n\
+         [[phase]]\nkind = \"stable\"\nfrac = 0.6\nlevel_mbps = 17\n",
+    )
+    .unwrap();
+    let c = compile_file(&dir.join("child.toml")).unwrap();
+    // Root keys override; untouched base keys survive.
+    assert_eq!(c.name, "child");
+    assert_eq!(c.hysteresis, 0.15);
+    // Tables merge key-wise: uavs overridden, workers inherited.
+    assert_eq!(c.fleet.n_uavs, 5);
+    assert_eq!(c.fleet.workers, 1);
+    // Arrays replace whole: the child's two-phase script wins.
+    let sc = c.instantiate(7, 100.0);
+    assert_eq!(sc.trace.phases.len(), 2);
+    assert_eq!(sc.trace.phases[0].kind, PhaseKind::Drop);
+}
+
+// ---------------------------------------------------------------------------
+// The matrix mission end to end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn matrix_mission_passes_all_gates_and_reports_deterministically() {
+    let mission = find("matrix").expect("matrix registered");
+    let opts = RunOptions {
+        matrix_count: Some(16),
+        seed: 7,
+        exec_every: 25,
+        ..RunOptions::default()
+    };
+    let ra = mission.run(&common::sim_env("matrix", "mission-a"), &opts).unwrap();
+    assert_eq!(ra.mission, "matrix");
+    assert_eq!(common::scalar(&ra, "scenarios_run"), 16.0);
+    assert_eq!(common::scalar(&ra, "failed"), 0.0, "a gated scenario failed: {}", ra.title);
+    assert_eq!(common::scalar(&ra, "passed"), 16.0);
+    assert_eq!(common::scalar(&ra, "corpus_size"), generate::MATRIX_SIZE as f64);
+    assert!(
+        ra.series.iter().any(|s| s.name == "matrix_summary" && s.rows.len() == 16),
+        "matrix_summary series missing or short"
+    );
+
+    // Byte-deterministic per seed (the `avery all --jobs` parity bar).
+    let rb = mission.run(&common::sim_env("matrix", "mission-b"), &opts).unwrap();
+    assert_eq!(to_json(&ra), to_json(&rb), "same-seed matrix reports differ");
+
+    // And `--matrix-count` actually sizes the sweep.
+    let small = RunOptions { matrix_count: Some(3), ..opts };
+    let rc = mission.run(&common::sim_env("matrix", "mission-c"), &small).unwrap();
+    assert_eq!(common::scalar(&rc, "scenarios_run"), 3.0);
+}

@@ -1,7 +1,7 @@
 //! Mission API regression suite — no artifacts required, never skips.
 //!
 //! * **Registry completeness** — every legacy subcommand name resolves to
-//!   a mission, the registry is exactly the nine drivers, and `avery all`
+//!   a mission, the registry is exactly the ten drivers, and `avery all`
 //!   order (= registry order) is pinned.
 //! * **Golden JSON report** — a synthetic `scenario` run serialized
 //!   through the JSON sink: schema-stable key layout, parseable by a
@@ -12,6 +12,8 @@
 //!   parallel runner (`avery all --jobs 8`) reproduces `--jobs 1` reports
 //!   byte for byte.
 
+mod common;
+
 use std::path::Path;
 
 use avery::coordinator::TierId;
@@ -21,9 +23,12 @@ use avery::report::to_json;
 use avery::runtime::Engine;
 use avery::tensor::Tensor;
 
-/// The nine legacy CLI subcommands, in pre-API `avery all` order.
-const LEGACY_SUBCOMMANDS: [&str; 9] = [
+use common::parse_json;
+
+/// The ten legacy CLI subcommands, in pre-API `avery all` order.
+const LEGACY_SUBCOMMANDS: [&str; 10] = [
     "table3", "fig7", "fig8", "fig9", "fig10", "headline", "streams", "fleet", "scenario",
+    "matrix",
 ];
 
 #[test]
@@ -55,7 +60,7 @@ fn registry_is_closed_over_find() {
 // ---------------------------------------------------------------------------
 
 fn sim_env(tag: &str) -> Env {
-    Env::synthetic(Path::new(&format!("target/test-out/mission-api-{tag}"))).unwrap()
+    common::sim_env("mission-api", tag)
 }
 
 fn scenario_json(tag: &str) -> String {
@@ -165,7 +170,7 @@ fn avery_all_jobs8_reports_match_jobs1_byte_for_byte() {
     // (which embeds every CSV series) must be byte-identical.
     let missions: Vec<Box<dyn Mission>> =
         registry().into_iter().filter(|m| !m.needs_artifacts()).collect();
-    assert_eq!(missions.len(), 8, "artifact-free mission set drifted");
+    assert_eq!(missions.len(), 9, "artifact-free mission set drifted");
     let opts = RunOptions {
         duration_secs: 120.0,
         exec_every: 10,
@@ -196,148 +201,8 @@ fn avery_all_jobs8_reports_match_jobs1_byte_for_byte() {
 }
 
 // ---------------------------------------------------------------------------
-// Minimal strict JSON parser (validation only — no external crates)
+// Shared strict JSON validator (tests/common/mod.rs) sanity
 // ---------------------------------------------------------------------------
-
-fn parse_json(text: &str) -> Result<(), String> {
-    let bytes = text.as_bytes();
-    let mut pos = 0usize;
-    skip_ws(bytes, &mut pos);
-    parse_value(bytes, &mut pos)?;
-    skip_ws(bytes, &mut pos);
-    if pos != bytes.len() {
-        return Err(format!("trailing bytes at {pos}"));
-    }
-    Ok(())
-}
-
-fn skip_ws(b: &[u8], pos: &mut usize) {
-    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
-        *pos += 1;
-    }
-}
-
-fn parse_value(b: &[u8], pos: &mut usize) -> Result<(), String> {
-    match b.get(*pos) {
-        Some(b'{') => parse_object(b, pos),
-        Some(b'[') => parse_array(b, pos),
-        Some(b'"') => parse_string(b, pos),
-        Some(b't') => parse_lit(b, pos, b"true"),
-        Some(b'f') => parse_lit(b, pos, b"false"),
-        Some(b'n') => parse_lit(b, pos, b"null"),
-        Some(c) if c.is_ascii_digit() || *c == b'-' => parse_number(b, pos),
-        other => Err(format!("unexpected {other:?} at {pos}")),
-    }
-}
-
-fn parse_lit(b: &[u8], pos: &mut usize, lit: &[u8]) -> Result<(), String> {
-    if b.len() >= *pos + lit.len() && &b[*pos..*pos + lit.len()] == lit {
-        *pos += lit.len();
-        Ok(())
-    } else {
-        Err(format!("bad literal at {pos}"))
-    }
-}
-
-fn parse_number(b: &[u8], pos: &mut usize) -> Result<(), String> {
-    let start = *pos;
-    if b.get(*pos) == Some(&b'-') {
-        *pos += 1;
-    }
-    while *pos < b.len()
-        && (b[*pos].is_ascii_digit() || matches!(b[*pos], b'.' | b'e' | b'E' | b'+' | b'-'))
-    {
-        *pos += 1;
-    }
-    let tok = std::str::from_utf8(&b[start..*pos]).map_err(|e| e.to_string())?;
-    tok.parse::<f64>().map_err(|e| format!("bad number `{tok}`: {e}"))?;
-    Ok(())
-}
-
-fn parse_string(b: &[u8], pos: &mut usize) -> Result<(), String> {
-    if b.get(*pos) != Some(&b'"') {
-        return Err(format!("expected string at {pos}"));
-    }
-    *pos += 1;
-    while let Some(&c) = b.get(*pos) {
-        match c {
-            b'"' => {
-                *pos += 1;
-                return Ok(());
-            }
-            b'\\' => {
-                match b.get(*pos + 1) {
-                    Some(b'"') | Some(b'\\') | Some(b'/') | Some(b'b') | Some(b'f')
-                    | Some(b'n') | Some(b'r') | Some(b't') => *pos += 2,
-                    Some(b'u') => {
-                        let hex = b
-                            .get(*pos + 2..*pos + 6)
-                            .ok_or_else(|| format!("short \\u escape at {pos}"))?;
-                        if !hex.iter().all(|h| h.is_ascii_hexdigit()) {
-                            return Err(format!("bad \\u escape at {pos}"));
-                        }
-                        *pos += 6;
-                    }
-                    other => return Err(format!("bad escape {other:?} at {pos}")),
-                }
-            }
-            0x00..=0x1f => return Err(format!("raw control byte in string at {pos}")),
-            _ => *pos += 1,
-        }
-    }
-    Err("unterminated string".to_string())
-}
-
-fn parse_array(b: &[u8], pos: &mut usize) -> Result<(), String> {
-    *pos += 1; // [
-    skip_ws(b, pos);
-    if b.get(*pos) == Some(&b']') {
-        *pos += 1;
-        return Ok(());
-    }
-    loop {
-        skip_ws(b, pos);
-        parse_value(b, pos)?;
-        skip_ws(b, pos);
-        match b.get(*pos) {
-            Some(b',') => *pos += 1,
-            Some(b']') => {
-                *pos += 1;
-                return Ok(());
-            }
-            other => return Err(format!("expected , or ] got {other:?} at {pos}")),
-        }
-    }
-}
-
-fn parse_object(b: &[u8], pos: &mut usize) -> Result<(), String> {
-    *pos += 1; // {
-    skip_ws(b, pos);
-    if b.get(*pos) == Some(&b'}') {
-        *pos += 1;
-        return Ok(());
-    }
-    loop {
-        skip_ws(b, pos);
-        parse_string(b, pos)?;
-        skip_ws(b, pos);
-        if b.get(*pos) != Some(&b':') {
-            return Err(format!("expected : at {pos}"));
-        }
-        *pos += 1;
-        skip_ws(b, pos);
-        parse_value(b, pos)?;
-        skip_ws(b, pos);
-        match b.get(*pos) {
-            Some(b',') => *pos += 1,
-            Some(b'}') => {
-                *pos += 1;
-                return Ok(());
-            }
-            other => return Err(format!("expected , or }} got {other:?} at {pos}")),
-        }
-    }
-}
 
 #[test]
 fn json_validator_sanity() {

@@ -13,23 +13,33 @@
 //!   charge *less* virtual server time than the unbatched/uncached run.
 //! * **Admission control** — the wait policy backpressures without loss;
 //!   a full bounded queue sheds with the wire protocol's `busy` frame.
+//! * **Wire robustness** — truncated, oversized-length, bit-flipped and
+//!   random frames come back as typed errors from every decoder; no input
+//!   can panic the codec layer.
+//! * **Cache semantics** — TTL boundary behavior (strictly-greater-than
+//!   expiry), deterministic LRU eviction order, and hit/miss/eviction/
+//!   expiration counter consistency.
 
-use std::path::Path;
+mod common;
 
 use avery::cloud::{
-    decode_reply, AdmissionPolicy, CloudPool, ServerReply, ServingConfig,
+    cache_key, decode_reply, decode_response, encode_response, AdmissionPolicy, CloudPool,
+    CloudResponse, ResponseCache, ServerReply, ServingConfig,
 };
 use avery::coordinator::{classify_intent, Lut, TierId};
 use avery::dataset::{Corpus, Dataset};
 use avery::edge::EdgePipeline;
 use avery::energy::DeviceModel;
-use avery::mission::{run_fleet, Env, RunOptions};
+use avery::mission::{run_fleet, RunOptions};
 use avery::packet::Packet;
 use avery::report::{to_json, Report};
 use avery::runtime::Engine;
 use avery::streams::fleet::FleetRun;
 use avery::tensor::Tensor;
-use avery::transport::{encode_request, InProc, Transport};
+use avery::transport::{decode_request, encode_request, InProc, Transport};
+use avery::util::Rng;
+
+use common::parse_json;
 
 /// Batch-compatible Insight packets over distinct synthetic scenes.
 fn insight_packets(n: usize, img: usize) -> (Vec<Packet>, Vec<i32>) {
@@ -103,9 +113,10 @@ fn execute_batch_parity_across_backends_and_artifacts() {
 // ---------------------------------------------------------------------------
 
 fn fleet_json(tag: &str, opts: &RunOptions) -> (FleetRun, Report, String) {
-    let env = Env::synthetic(Path::new(&format!("target/test-out/serving-{tag}"))).unwrap();
+    let env = common::sim_env("serving", tag);
     let (run, report) = run_fleet(&env, opts).unwrap();
     let json = to_json(&report);
+    parse_json(&json).unwrap_or_else(|e| panic!("fleet report JSON does not parse: {e}"));
     (run, report, json)
 }
 
@@ -270,4 +281,197 @@ fn session_replies_busy_while_queue_is_full() {
         client.send(b"shutdown").unwrap();
     });
     assert!(pool.stats().shed >= 1, "no shed was recorded");
+}
+
+// ---------------------------------------------------------------------------
+// Wire protocol under corruption: typed errors, never a panic
+// ---------------------------------------------------------------------------
+
+#[test]
+fn request_codec_round_trips() {
+    let (pkts, _) = insight_packets(1, 16);
+    let frame = encode_request(&pkts[0].encode(), "highlight the stranded people", "ft");
+    let (pkt, prompt, set) = decode_request(&frame).unwrap();
+    assert_eq!(pkt, pkts[0].encode());
+    assert_eq!(prompt, "highlight the stranded people");
+    assert_eq!(set, "ft");
+}
+
+#[test]
+fn every_truncated_request_prefix_errors() {
+    let (pkts, _) = insight_packets(1, 16);
+    let frame = encode_request(&pkts[0].encode(), "highlight the stranded people", "ft");
+    for n in 0..frame.len() {
+        assert!(decode_request(&frame[..n]).is_err(), "{n}-byte prefix decoded");
+    }
+    assert!(decode_request(&frame).is_ok());
+}
+
+#[test]
+fn hostile_length_prefixes_error_before_allocating() {
+    // A 4 GiB declared packet section on a tiny frame.
+    let mut frame = u32::MAX.to_le_bytes().to_vec();
+    frame.extend_from_slice(&[0u8; 64]);
+    assert!(decode_request(&frame).is_err());
+
+    // An oversized *middle* section: corrupt the prompt-length prefix of an
+    // otherwise valid frame (layout: 4 + pkt + 4 + prompt + 4 + set).
+    let good = encode_request(b"pkt", "p", "ft");
+    let mut f2 = good.clone();
+    f2[7..11].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(decode_request(&f2).is_err());
+    assert!(decode_request(&good).is_ok());
+
+    // And a response declaring u32::MAX presence values.
+    let mut f3 = encode_response(&CloudResponse { mask_logits: None, presence: vec![1.0] });
+    f3[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(decode_response(&f3).is_err());
+    assert!(decode_reply(&f3).is_err());
+}
+
+#[test]
+fn bit_flipped_frames_never_panic_any_decoder() {
+    let (pkts, _) = insight_packets(1, 16);
+    let req = encode_request(&pkts[0].encode(), "highlight the stranded people", "ft");
+    let resp = encode_response(&CloudResponse {
+        mask_logits: Some(Tensor::f32(vec![2, 2], vec![0.1, -0.2, 0.3, -0.4]).unwrap()),
+        presence: vec![0.5, -1.5],
+    });
+    for frame in [&req, &resp] {
+        for i in 0..frame.len() {
+            for bit in 0..8 {
+                let mut f = frame.clone();
+                f[i] ^= 1 << bit;
+                // Any outcome but a panic is legal: a content flip decodes
+                // to different bytes, a length flip is (usually) rejected.
+                let _ = decode_request(&f);
+                let _ = decode_response(&f);
+                let _ = decode_reply(&f);
+            }
+        }
+    }
+}
+
+#[test]
+fn random_frames_error_or_decode_without_panic() {
+    let mut rng = Rng::new(0xF4A2);
+    for len in [0usize, 1, 3, 4, 7, 8, 11, 12, 16, 64, 257] {
+        for _ in 0..32 {
+            let frame: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            let _ = decode_request(&frame);
+            let _ = decode_response(&frame);
+            let _ = decode_reply(&frame);
+        }
+    }
+}
+
+#[test]
+fn busy_frame_decodes_busy_for_reply_and_errors_elsewhere() {
+    assert_eq!(decode_reply(b"busy").unwrap(), ServerReply::Busy);
+    assert!(decode_response(b"busy").is_err());
+    assert!(decode_request(b"busy").is_err());
+}
+
+#[test]
+fn response_codec_round_trips_with_and_without_mask() {
+    let with_mask = CloudResponse {
+        mask_logits: Some(
+            Tensor::f32(vec![2, 3], vec![0.1, 0.2, 0.3, -0.1, -0.2, -0.3]).unwrap(),
+        ),
+        presence: vec![0.25, -0.75],
+    };
+    let frame = encode_response(&with_mask);
+    let (p, m) = decode_response(&frame).unwrap();
+    assert_eq!(p, vec![0.25, -0.75]);
+    assert_eq!(m, vec![0.1, 0.2, 0.3, -0.1, -0.2, -0.3]);
+    match decode_reply(&frame).unwrap() {
+        ServerReply::Response { presence, mask } => {
+            assert_eq!(presence, p);
+            assert_eq!(mask, m);
+        }
+        ServerReply::Busy => panic!("real response decoded as busy"),
+    }
+
+    let context = CloudResponse { mask_logits: None, presence: vec![1.0, 0.0] };
+    let (p, m) = decode_response(&encode_response(&context)).unwrap();
+    assert_eq!(p, vec![1.0, 0.0]);
+    assert!(m.is_empty(), "Context responses carry no mask");
+}
+
+#[test]
+fn cache_key_discriminates_packet_prompt_and_weight_set() {
+    let (pkts, ids) = insight_packets(2, 16);
+    let k = cache_key(&pkts[0], &ids, "ft");
+    assert_eq!(k, cache_key(&pkts[0], &ids, "ft"), "cache key must be deterministic");
+    assert_ne!(k, cache_key(&pkts[0], &ids, "orig"));
+    assert_ne!(k, cache_key(&pkts[1], &ids, "ft"));
+    assert_ne!(k, cache_key(&pkts[0], &[1, 2, 3], "ft"));
+}
+
+// ---------------------------------------------------------------------------
+// Response cache: TTL boundary, LRU order, counter consistency
+// ---------------------------------------------------------------------------
+
+fn resp(tag: f32) -> CloudResponse {
+    CloudResponse { mask_logits: None, presence: vec![tag] }
+}
+
+#[test]
+fn cache_entry_exactly_at_ttl_still_hits() {
+    let mut c = ResponseCache::new(8, 60.0);
+    c.insert(1, resp(1.0), 100.0);
+    // Expiry is strictly-greater-than: an entry aged exactly TTL serves.
+    assert!(c.get(1, 160.0).is_some());
+    let st = c.stats();
+    assert_eq!((st.hits, st.misses, st.expirations), (1, 1, 0));
+    // A hair past the TTL expires it, exactly once.
+    assert!(c.get(1, 160.0 + 1e-6).is_none());
+    let st = c.stats();
+    assert_eq!((st.hits, st.misses, st.expirations), (1, 1, 1));
+    assert!(c.is_empty());
+    // The expired entry is gone: a later get is a plain miss, not a second
+    // expiration.
+    assert!(c.get(1, 170.0).is_none());
+    assert_eq!(c.stats().expirations, 1);
+}
+
+#[test]
+fn lru_eviction_prefers_stalest_and_get_refreshes_recency() {
+    let mut c = ResponseCache::new(2, f64::INFINITY);
+    c.insert(1, resp(1.0), 0.0);
+    c.insert(2, resp(2.0), 1.0);
+    // Touch 1 so 2 becomes the least recently used...
+    assert!(c.get(1, 2.0).is_some());
+    // ...then overflow: 2 must be the victim, not the older-inserted 1.
+    c.insert(3, resp(3.0), 3.0);
+    assert_eq!(c.stats().evictions, 1);
+    assert!(c.get(2, 4.0).is_none(), "refreshed entry evicted instead of stalest");
+    assert!(c.get(1, 4.0).is_some());
+    assert!(c.get(3, 4.0).is_some());
+    assert_eq!(c.len(), 2);
+}
+
+#[test]
+fn cache_counters_stay_consistent_and_capacity_zero_stores_nothing() {
+    let mut c = ResponseCache::new(2, 10.0);
+    c.insert(1, resp(1.0), 0.0);
+    c.insert(2, resp(2.0), 0.0);
+    c.insert(3, resp(3.0), 0.0); // over capacity: evicts key 1 (oldest tick)
+    assert!(c.get(3, 5.0).is_some()); // hit
+    assert!(c.get(2, 20.0).is_none()); // aged out: expiration
+    assert!(c.get(1, 5.0).is_none()); // evicted: plain miss, no counter
+    let st = c.stats();
+    assert_eq!(st.misses, 3, "one miss per insert");
+    assert_eq!(st.hits, 1);
+    assert_eq!(st.evictions, 1);
+    assert_eq!(st.expirations, 1);
+    assert_eq!(c.len(), 1, "only the hit entry remains");
+
+    // Capacity 0 disables storage but still counts executed misses.
+    let mut z = ResponseCache::new(0, 10.0);
+    z.insert(7, resp(7.0), 0.0);
+    assert!(z.is_empty());
+    assert!(z.get(7, 0.0).is_none());
+    let st = z.stats();
+    assert_eq!((st.hits, st.misses, st.evictions), (0, 1, 0));
 }
