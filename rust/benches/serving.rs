@@ -4,16 +4,21 @@
 //!
 //! Sections:
 //!
-//! * **batch_sweep** — served packets/sec through the pool's queued path at
-//!   `batch_max` ∈ {1, 2, 4, 8, 16}: one worker over a *threaded* synthetic
-//!   engine (the engine-thread shape PJRT serving runs with), so the sweep
-//!   measures exactly what micro-batching amortizes — the per-request queue
-//!   pop, engine channel round-trip and reply.
+//! * **batch_sweep** — served packets/sec AND client-observed p99 latency
+//!   through the pool's queued path at `batch_max` ∈ {1, 2, 4, 8, 16}: one
+//!   worker over a *threaded* synthetic engine (the engine-thread shape
+//!   PJRT serving runs with), so the sweep measures exactly what
+//!   micro-batching amortizes — the per-request queue pop, engine channel
+//!   round-trip and reply.
 //! * **cache** — fleet missions at N ∈ {4, 16, 64} UAVs with the
 //!   content-addressed response cache enabled: hit rate vs fleet size
 //!   (swarms over the same disaster zone produce redundant streams).
 //! * **overload** — a bounded queue under a submission flood (shed policy):
 //!   admitted vs shed.
+//! * **deadline** — FIFO vs EDF + deadline-shed under a mixed
+//!   Context/Insight flood with a tight Context budget: Context-class p99
+//!   must improve when the drain order honors deadlines (DESIGN.md
+//!   "Tail-latency discipline").
 //!
 //! Usage: `cargo bench --bench serving -- [--quick] [--out PATH]`
 //! (`--quick` is what CI runs; default writes `BENCH_serving.json`).
@@ -77,8 +82,9 @@ fn build_packets(n_scenes: usize, img: usize) -> (Vec<Packet>, Vec<i32>) {
     (pkts, classify_intent("highlight the stranded people").token_ids)
 }
 
-/// Served packets/sec through the queued path at one `batch_max` setting.
-fn sweep_pps(batch: usize, pkts: &[Packet], ids: &[i32], total: usize) -> f64 {
+/// Served packets/sec and client-observed p99 latency (ms) through the
+/// queued path at one `batch_max` setting.
+fn sweep_pps(batch: usize, pkts: &[Packet], ids: &[i32], total: usize) -> (f64, f64) {
     let pool = CloudPool::with_config(
         vec![Engine::synthetic_threaded()],
         ServingConfig { batch_max: batch, ..ServingConfig::default() },
@@ -93,7 +99,68 @@ fn sweep_pps(batch: usize, pkts: &[Packet], ids: &[i32], total: usize) -> f64 {
     for t in tickets {
         t.wait().expect("wait");
     }
-    total as f64 / t0.elapsed().as_secs_f64()
+    let pps = total as f64 / t0.elapsed().as_secs_f64();
+    (pps, pool.stats().wall_lat_insight.p99() * 1e3)
+}
+
+/// Distinct-scene Context packets (the lightweight situational stream).
+fn build_context_packets(n_scenes: usize, img: usize) -> (Vec<Packet>, Vec<i32>) {
+    let engine = Engine::synthetic();
+    let ds = Dataset::synthetic(Corpus::Flood, n_scenes, img, 0xC0411);
+    let mut edge = EdgePipeline::new(engine, DeviceModel::jetson_mode_30w(8), Lut::paper());
+    let pkts = ds.scenes.iter().map(|s| edge.capture_context(s, 0.0).unwrap().0).collect();
+    (pkts, classify_intent("what is the overall situation").token_ids)
+}
+
+/// One arm of the deadline comparison: flood a bounded single-worker queue
+/// with a mixed stream (every 5th request is Context) under a tight Context
+/// budget and a loose Insight budget.  `edf: false` is the FIFO baseline;
+/// `edf: true` also turns on predicted-miss shedding.  Returns
+/// (ctx_p99_ms, ins_p99_ms, shed_context, shed_insight, completed).
+fn deadline_arm(
+    ctx: (&[Packet], &[i32]),
+    ins: (&[Packet], &[i32]),
+    total: usize,
+    edf: bool,
+) -> (f64, f64, u64, u64, u64) {
+    let pool = CloudPool::with_config(
+        vec![Engine::synthetic_threaded()],
+        ServingConfig {
+            batch_max: 4,
+            queue_depth: 128,
+            admission: AdmissionPolicy::Shed,
+            deadline_context_secs: 0.05,
+            deadline_insight_secs: 30.0,
+            edf,
+            deadline_shed: edf,
+            ..ServingConfig::default()
+        },
+    );
+    for p in ins.0.iter().take(8) {
+        pool.process_sync(p, ins.1, "ft").expect("warmup");
+    }
+    let mut tickets = Vec::with_capacity(total);
+    for i in 0..total {
+        let (pkts, ids) = if i % 5 == 4 { ctx } else { ins };
+        let mut p = pkts[i % pkts.len()].clone();
+        // Staggered virtual capture times give every request its own
+        // absolute deadline (t_capture + class budget).
+        p.t_capture = i as f64 * 1e-4;
+        if let Ok(t) = pool.submit(&p, ids, "ft") {
+            tickets.push(t);
+        }
+    }
+    for t in tickets {
+        let _ = t.wait();
+    }
+    let st = pool.stats();
+    (
+        st.wall_lat_context.p99() * 1e3,
+        st.wall_lat_insight.p99() * 1e3,
+        st.shed_context,
+        st.shed_insight,
+        st.completed,
+    )
 }
 
 /// One cache-enabled fleet mission; returns (hit_rate, hits, misses,
@@ -172,17 +239,19 @@ fn main() -> Result<()> {
     let sweep_total = if args.quick { 4_000 } else { 20_000 };
     let fleet_duration = if args.quick { 120.0 } else { 600.0 };
     let overload_per = if args.quick { 1_500 } else { 6_000 };
+    let deadline_total = if args.quick { 2_000 } else { 8_000 };
 
     // ---- batch-size sweep -------------------------------------------------
     header("micro-batch sweep: served packets/sec (1 worker, threaded synthetic)");
     let (pkts, ids) = build_packets(32, 16);
-    let mut sweep: Vec<(usize, f64)> = Vec::new();
+    let mut sweep: Vec<(usize, f64, f64)> = Vec::new();
     for batch in [1usize, 2, 4, 8, 16] {
-        let pps = sweep_pps(batch, &pkts, &ids, sweep_total);
-        println!("batch_max {batch:>2}: {pps:>12.0} packets/s");
-        sweep.push((batch, pps));
+        let (pps, p99_ms) = sweep_pps(batch, &pkts, &ids, sweep_total);
+        println!("batch_max {batch:>2}: {pps:>12.0} packets/s   p99 {p99_ms:>9.3} ms");
+        sweep.push((batch, pps, p99_ms));
     }
-    let pps_of = |b: usize| sweep.iter().find(|(batch, _)| *batch == b).unwrap().1;
+    let pps_of = |b: usize| sweep.iter().find(|(batch, _, _)| *batch == b).unwrap().1;
+    let p99_of = |b: usize| sweep.iter().find(|(batch, _, _)| *batch == b).unwrap().2;
     let speedup8 = pps_of(8) / pps_of(1);
     println!("batch 8 vs batch 1: {speedup8:.2}x");
 
@@ -206,10 +275,28 @@ fn main() -> Result<()> {
     let shed_rate = shed as f64 / (admitted + shed).max(1) as f64;
     println!("admitted {admitted}, shed {shed} ({:.1}% shed)", shed_rate * 100.0);
 
+    // ---- deadline discipline: FIFO vs EDF + shed -------------------------
+    header("deadline discipline: Context p99 under a mixed flood, FIFO vs EDF");
+    let (ctx_pkts, ctx_ids) = build_context_packets(16, 64);
+    let fifo = deadline_arm((&ctx_pkts, &ctx_ids), (&big_pkts, &big_ids), deadline_total, false);
+    let edf = deadline_arm((&ctx_pkts, &ctx_ids), (&big_pkts, &big_ids), deadline_total, true);
+    println!(
+        "FIFO     : ctx p99 {:>9.3} ms  ins p99 {:>9.3} ms  shed {}/{} (ctx/ins), {} served",
+        fifo.0, fifo.1, fifo.2, fifo.3, fifo.4
+    );
+    println!(
+        "EDF+shed : ctx p99 {:>9.3} ms  ins p99 {:>9.3} ms  shed {}/{} (ctx/ins), {} served",
+        edf.0, edf.1, edf.2, edf.3, edf.4
+    );
+    let ctx_p99_speedup = if edf.0 > 0.0 { fifo.0 / edf.0 } else { f64::INFINITY };
+    println!("context p99: {ctx_p99_speedup:.1}x better under EDF + deadline-shed");
+
     // ---- machine-readable output -----------------------------------------
     let sweep_json: Vec<String> = sweep
         .iter()
-        .map(|(b, pps)| format!("{{\"batch\":{b},\"packets_per_sec\":{}}}", jf(*pps)))
+        .map(|(b, pps, p99)| {
+            format!("{{\"batch\":{b},\"packets_per_sec\":{},\"p99_ms\":{}}}", jf(*pps), jf(*p99))
+        })
         .collect();
     let cache_json: Vec<String> = cache_rows
         .iter()
@@ -221,16 +308,38 @@ fn main() -> Result<()> {
             )
         })
         .collect();
+    let deadline_json = format!(
+        "{{\"queue_depth\":128,\"deadline_context_s\":0.05,\"deadline_insight_s\":30.0,\
+         \"fifo_ctx_p99_ms\":{},\"fifo_ins_p99_ms\":{},\
+         \"fifo_shed_context\":{},\"fifo_shed_insight\":{},\"fifo_completed\":{},\
+         \"edf_ctx_p99_ms\":{},\"edf_ins_p99_ms\":{},\
+         \"edf_shed_context\":{},\"edf_shed_insight\":{},\"edf_completed\":{},\
+         \"ctx_p99_speedup\":{}}}",
+        jf(fifo.0),
+        jf(fifo.1),
+        fifo.2,
+        fifo.3,
+        fifo.4,
+        jf(edf.0),
+        jf(edf.1),
+        edf.2,
+        edf.3,
+        edf.4,
+        jf(ctx_p99_speedup),
+    );
     let json = format!(
         "{{\"schema\":1,\"bench\":\"serving\",\"mode\":\"{mode}\",\
          \"batch_sweep\":[{}],\
          \"batched_packets_per_sec\":{},\
+         \"batch8_p99_ms\":{},\
          \"speedup_batch_8\":{},\
          \"cache\":[{}],\
          \"overload\":{{\"queue_depth\":64,\"admitted\":{admitted},\"shed\":{shed},\
-         \"shed_rate\":{}}}}}",
+         \"shed_rate\":{}}},\
+         \"deadline\":{deadline_json}}}",
         sweep_json.join(","),
         jf(pps_of(8)),
+        jf(p99_of(8)),
         jf(speedup8),
         cache_json.join(","),
         jf(shed_rate),

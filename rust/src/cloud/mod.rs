@@ -33,6 +33,7 @@ use crate::coordinator::TierId;
 use crate::edge::tail_artifact_name;
 use crate::packet::{dequantize_code, dequantize_scaled, Packet, StreamKind};
 use crate::runtime::Engine;
+use crate::telemetry::LatencyHistogram;
 use crate::tensor::Tensor;
 use crate::transport::BUSY_FRAME;
 
@@ -84,6 +85,21 @@ impl Served {
 /// machines and the server implementation (single-session or pooled).
 pub trait ServePackets {
     fn serve(&self, pkt: &Packet, prompt_ids: &[i32], set: &str) -> Result<Served>;
+
+    /// Record one served request's end-to-end *virtual* latency (seconds of
+    /// simulated time from capture/send to delivery).  The mission timing
+    /// model calls this after charging the request, so the histogram is a
+    /// pure function of the event-ordered request stream — deterministic
+    /// per seed.  Default: discard (the single-session [`CloudServer`]
+    /// keeps no telemetry).
+    fn observe_latency(&self, _kind: StreamKind, _virtual_secs: f64) {}
+
+    /// Per-class virtual latency histograms `(Context, Insight)`
+    /// accumulated through [`ServePackets::observe_latency`], when the
+    /// implementation records them.
+    fn latency_histograms(&self) -> Option<(LatencyHistogram, LatencyHistogram)> {
+        None
+    }
 }
 
 /// Decode one request into (artifact, engine inputs) — the front half of

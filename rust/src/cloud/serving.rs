@@ -23,6 +23,15 @@
 //!   executing) with a shed-or-wait policy, so `submit` and `serve_session`
 //!   expose backpressure instead of buffering without limit.  A shed
 //!   session request is answered with the wire protocol's `busy` frame.
+//! * **Deadline discipline** (DESIGN.md "Tail-latency discipline") — each
+//!   request derives a virtual deadline from its intent level (`t_capture`
+//!   plus a per-class budget: Context tight, Insight loose).  With `edf`
+//!   the micro-batcher drains earliest-deadline-first instead of FIFO;
+//!   with `deadline_shed` a full queue sheds the request *predicted to
+//!   miss* its deadline by the widest margin (EDF-order completion
+//!   estimate) rather than the newest arrival, with shed-by-class
+//!   counters.  Both default off, preserving the FIFO byte-identical
+//!   golden outputs.
 //!
 //! The in-process fast path ([`CloudPool::process_sync`]) still serves
 //! all-inline pools in the caller's thread: it consults the cache but never
@@ -39,8 +48,9 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::classify_intent;
-use crate::packet::Packet;
+use crate::packet::{Packet, StreamKind};
 use crate::runtime::Engine;
+use crate::telemetry::LatencyHistogram;
 use crate::tensor::Tensor;
 use crate::transport::{decode_request, Transport, BUSY_FRAME};
 use crate::util::Crc32;
@@ -78,6 +88,19 @@ pub struct ServingConfig {
     pub queue_depth: usize,
     /// What to do with a request that finds the queue full.
     pub admission: AdmissionPolicy,
+    /// Virtual deadline budget for Context requests (seconds past
+    /// `t_capture`; `--deadline-context`).  `INFINITY` = no deadline.
+    pub deadline_context_secs: f64,
+    /// Virtual deadline budget for Insight requests (`--deadline-insight`).
+    pub deadline_insight_secs: f64,
+    /// Drain the micro-batcher earliest-deadline-first instead of FIFO
+    /// (`--edf`).  Off by default: FIFO order is pinned by the golden
+    /// byte-identity tests.
+    pub edf: bool,
+    /// When the bounded queue is full, shed the request *predicted to
+    /// miss* its deadline rather than the newest arrival
+    /// (`--deadline-shed`).  Implies shed-style admission (never blocks).
+    pub deadline_shed: bool,
 }
 
 impl Default for ServingConfig {
@@ -88,6 +111,10 @@ impl Default for ServingConfig {
             cache_ttl_secs: f64::INFINITY,
             queue_depth: 0,
             admission: AdmissionPolicy::Shed,
+            deadline_context_secs: f64::INFINITY,
+            deadline_insight_secs: f64::INFINITY,
+            edf: false,
+            deadline_shed: false,
         }
     }
 }
@@ -98,7 +125,21 @@ impl ServingConfig {
     /// telemetry (off-mode reports stay byte-identical to the pre-layer
     /// ones).
     pub fn enabled(&self) -> bool {
-        self.batch_max > 1 || self.cache_entries > 0 || self.queue_depth > 0
+        self.batch_max > 1
+            || self.cache_entries > 0
+            || self.queue_depth > 0
+            || self.edf
+            || self.deadline_shed
+            || self.deadline_context_secs.is_finite()
+            || self.deadline_insight_secs.is_finite()
+    }
+
+    /// Per-class deadline budget (seconds past `t_capture`).
+    pub fn deadline_budget(&self, kind: StreamKind) -> f64 {
+        match kind {
+            StreamKind::Context => self.deadline_context_secs,
+            StreamKind::Insight => self.deadline_insight_secs,
+        }
     }
 }
 
@@ -304,7 +345,15 @@ struct Job {
     /// Precomputed cache key (cache enabled only): the worker inserts the
     /// executed response under it.
     key: Option<u64>,
-    reply: Sender<Result<CloudResponse>>,
+    /// Absolute virtual deadline: `pkt.t_capture` plus the per-class
+    /// budget ([`ServingConfig::deadline_budget`]); `INFINITY` when no
+    /// deadline is configured.
+    deadline: f64,
+    /// Wall-clock admission stamp; completion records
+    /// admission→completion into the pool's wall-latency histograms
+    /// (diagnostic/bench only — never surfaced in mission reports).
+    t_submit: Instant,
+    reply: Sender<Result<CloudResponse, ServeError>>,
 }
 
 impl Job {
@@ -395,16 +444,30 @@ impl JobQueue {
         Ok(())
     }
 
-    /// Pop the oldest job plus up to `max - 1` more compatible jobs (queue
-    /// order is preserved for the jobs left behind).  Blocks while the
-    /// queue is empty; returns `None` once the pool is closed *and*
-    /// drained — queued work is always served before shutdown.
-    fn pop_batch(&self, max: usize) -> Option<Vec<Job>> {
+    /// Pop the next lead job plus up to `max - 1` more compatible jobs
+    /// (queue order is preserved for the jobs left behind).  The lead is
+    /// the oldest job (FIFO), or with `edf` the job with the *strictly*
+    /// earliest deadline — ties keep queue order, so an all-infinite
+    /// deadline set degrades to exact FIFO.  Blocks while the queue is
+    /// empty; returns `None` once the pool is closed *and* drained —
+    /// queued work is always served before shutdown.
+    fn pop_batch(&self, max: usize, edf: bool) -> Option<Vec<Job>> {
         let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(first) = st.jobs.pop_front() {
+            if !st.jobs.is_empty() {
+                let lead = if edf {
+                    let mut best = 0;
+                    for i in 1..st.jobs.len() {
+                        if st.jobs[i].deadline < st.jobs[best].deadline {
+                            best = i;
+                        }
+                    }
+                    st.jobs.remove(best).unwrap()
+                } else {
+                    st.jobs.pop_front().unwrap()
+                };
                 let mut batch = Vec::with_capacity(max.max(1));
-                batch.push(first);
+                batch.push(lead);
                 let mut i = 0;
                 while batch.len() < max && i < st.jobs.len() {
                     if batch[0].compatible(&st.jobs[i]) {
@@ -420,6 +483,66 @@ impl JobQueue {
                 return None;
             }
             st = self.ready.wait(st).unwrap();
+        }
+    }
+
+    /// Deadline-aware admission (`deadline_shed`): admit `job`, and when
+    /// the queue is full shed the request *predicted to miss* its deadline
+    /// by the widest margin instead of the newest arrival.
+    ///
+    /// Prediction: with `now` = the arrival's `t_capture` and `service_est`
+    /// = the pool's mean observed virtual service time, the job at EDF rank
+    /// `k` (0-based over queued ∪ {arrival}) completes around
+    /// `now + (k+1)·service_est`; negative slack = predicted miss.  With no
+    /// service estimate yet (`0.0`) only already-late jobs
+    /// (`deadline < now`) are predicted misses.
+    ///
+    /// Returns `Ok(None)` (admitted, slot free), `Ok(Some(kind))`
+    /// (admitted by shedding a queued victim of that class — its ticket
+    /// resolves [`ServeError::Shed`]; the slot transfers, `in_flight`
+    /// unchanged), or `Err(Shed)` when the arrival itself is the widest
+    /// predicted misser — or nothing is predicted to miss.
+    fn admit_or_shed_misser(
+        &self,
+        job: Job,
+        depth: usize,
+        service_est: f64,
+    ) -> Result<Option<StreamKind>, ServeError> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(ServeError::Closed);
+        }
+        if depth == 0 || st.in_flight < depth {
+            st.in_flight += 1;
+            st.jobs.push_back(job);
+            drop(st);
+            self.ready.notify_one();
+            return Ok(None);
+        }
+        let now = job.pkt.t_capture;
+        let n = st.jobs.len();
+        let mut order: Vec<(f64, usize)> =
+            st.jobs.iter().enumerate().map(|(i, j)| (j.deadline, i)).collect();
+        order.push((job.deadline, n));
+        order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut victim: Option<(f64, usize)> = None;
+        for (k, &(deadline, idx)) in order.iter().enumerate() {
+            let slack = deadline - (now + (k + 1) as f64 * service_est);
+            if slack < 0.0 && victim.is_none_or(|(s, _)| slack < s) {
+                victim = Some((slack, idx));
+            }
+        }
+        match victim {
+            Some((_, idx)) if idx < n => {
+                let dead = st.jobs.remove(idx).unwrap();
+                st.jobs.push_back(job);
+                drop(st);
+                self.ready.notify_one();
+                let kind = dead.pkt.kind;
+                let _ = dead.reply.send(Err(ServeError::Shed));
+                Ok(Some(kind))
+            }
+            _ => Err(ServeError::Shed),
         }
     }
 
@@ -456,11 +579,26 @@ pub struct PoolStats {
     pub cache_expirations: u64,
     /// Requests refused by the admission controller (shed policy).
     pub shed: u64,
+    /// Shed requests by stream class (Context / Insight) — the
+    /// deadline-shed policy is class-aware, so the split is the telemetry
+    /// that shows *who* paid for an overload.
+    pub shed_context: u64,
+    pub shed_insight: u64,
     /// Worker queue drains (each serves one micro-batch; 1 when batching
     /// is off) and the requests they carried — queued path only, the
     /// in-process direct path never batches.
     pub batches: u64,
     pub batched_requests: u64,
+    /// Per-class end-to-end *virtual* latency (seconds of simulated time,
+    /// recorded through [`ServePackets::observe_latency`]) — deterministic
+    /// per seed, safe to surface in mission reports.
+    pub lat_context: LatencyHistogram,
+    pub lat_insight: LatencyHistogram,
+    /// Per-class admission→completion *wall-clock* latency on the queued
+    /// path (diagnostic/bench only — like `busy_secs`, never surfaced in
+    /// byte-deterministic reports).
+    pub wall_lat_context: LatencyHistogram,
+    pub wall_lat_insight: LatencyHistogram,
 }
 
 impl PoolStats {
@@ -487,7 +625,7 @@ pub struct Ticket {
 
 enum TicketInner {
     Ready(CloudResponse),
-    Pending(Receiver<Result<CloudResponse>>),
+    Pending(Receiver<Result<CloudResponse, ServeError>>),
 }
 
 impl Ticket {
@@ -495,7 +633,7 @@ impl Ticket {
         Self { inner: TicketInner::Ready(resp) }
     }
 
-    fn pending(rx: Receiver<Result<CloudResponse>>) -> Self {
+    fn pending(rx: Receiver<Result<CloudResponse, ServeError>>) -> Self {
         Self { inner: TicketInner::Pending(rx) }
     }
 
@@ -508,14 +646,14 @@ impl Ticket {
 
     /// Typed wait: a closed reply channel (pool shutdown, worker death) is
     /// [`ServeError::Closed`]; an execution failure is
-    /// [`ServeError::Exec`].
+    /// [`ServeError::Exec`]; a queued job displaced by the deadline-shed
+    /// policy is [`ServeError::Shed`].
     pub fn wait(self) -> Result<CloudResponse, ServeError> {
         match self.inner {
             TicketInner::Ready(resp) => Ok(resp),
             TicketInner::Pending(rx) => match rx.recv() {
                 Err(_) => Err(ServeError::Closed),
-                Ok(Ok(resp)) => Ok(resp),
-                Ok(Err(e)) => Err(ServeError::Exec(e)),
+                Ok(r) => r,
             },
         }
     }
@@ -533,6 +671,14 @@ pub struct CloudPool {
     completed: Arc<AtomicU64>,
     busy_micros: Arc<AtomicU64>,
     shed: AtomicU64,
+    shed_context: AtomicU64,
+    shed_insight: AtomicU64,
+    /// Per-class end-to-end virtual latency `[Context, Insight]`, fed by
+    /// [`ServePackets::observe_latency`] from the mission timing model.
+    vlat: Mutex<[LatencyHistogram; 2]>,
+    /// Per-class admission→completion wall latency `[Context, Insight]`
+    /// on the queued path (shared with the workers; diagnostic/bench only).
+    wlat: Arc<Mutex<[LatencyHistogram; 2]>>,
     batches: Arc<AtomicU64>,
     batched_requests: Arc<AtomicU64>,
     cache: Option<Arc<Mutex<ResponseCache>>>,
@@ -568,8 +714,10 @@ impl CloudPool {
         let busy_micros = Arc::new(AtomicU64::new(0));
         let batches = Arc::new(AtomicU64::new(0));
         let batched_requests = Arc::new(AtomicU64::new(0));
+        let wlat = Arc::new(Mutex::new([LatencyHistogram::new(); 2]));
         let n_workers = engines.len();
         let batch_max = cfg.batch_max.max(1);
+        let edf = cfg.edf;
         let workers = engines
             .into_iter()
             .enumerate()
@@ -580,10 +728,11 @@ impl CloudPool {
                 let batches = Arc::clone(&batches);
                 let batched_requests = Arc::clone(&batched_requests);
                 let cache = cache.clone();
+                let wlat = Arc::clone(&wlat);
                 std::thread::Builder::new()
                     .name(format!("avery-cloud-{i}"))
                     .spawn(move || {
-                        while let Some(batch) = queue.pop_batch(batch_max) {
+                        while let Some(batch) = queue.pop_batch(batch_max, edf) {
                             let n = batch.len();
                             // Count before replying so the counters are
                             // consistent the moment a ticket resolves.
@@ -591,7 +740,7 @@ impl CloudPool {
                             batches.fetch_add(1, Ordering::Relaxed);
                             batched_requests.fetch_add(n as u64, Ordering::Relaxed);
                             let t0 = Instant::now();
-                            serve_batch(&engine, batch, cache.as_deref());
+                            serve_batch(&engine, batch, cache.as_deref(), &wlat);
                             busy.fetch_add(
                                 t0.elapsed().as_micros() as u64,
                                 Ordering::Relaxed,
@@ -610,6 +759,10 @@ impl CloudPool {
             completed,
             busy_micros,
             shed: AtomicU64::new(0),
+            shed_context: AtomicU64::new(0),
+            shed_insight: AtomicU64::new(0),
+            vlat: Mutex::new([LatencyHistogram::new(); 2]),
+            wlat,
             batches,
             batched_requests,
             cache,
@@ -640,20 +793,83 @@ impl CloudPool {
             Ok(resp) => return Ok(Ticket::ready(resp)),
             Err(key) => key,
         };
+        if self.cfg.deadline_shed {
+            // Deadline-aware admission: the job is built first (the victim
+            // choice needs its deadline), then admitted in one queue
+            // transaction that may shed a queued predicted-misser instead.
+            let (reply, rx) = channel();
+            let job = self.build_job(pkt, prompt_ids, set, key, reply);
+            return match self.queue.admit_or_shed_misser(
+                job,
+                self.cfg.queue_depth,
+                self.mean_service_secs(),
+            ) {
+                Ok(None) => Ok(Ticket::pending(rx)),
+                Ok(Some(victim_kind)) => {
+                    self.count_shed(victim_kind);
+                    Ok(Ticket::pending(rx))
+                }
+                Err(e) => {
+                    if matches!(e, ServeError::Shed) {
+                        self.count_shed(pkt.kind);
+                    }
+                    Err(e)
+                }
+            };
+        }
         // Reserve the admission slot BEFORE building the job: a shed
         // request clones no packet and (since misses are counted at cache
         // fill) never skews the hit rate.
-        self.reserve_slot()?;
+        self.reserve_slot(pkt.kind)?;
         let (reply, rx) = channel();
-        let job = Job {
+        let job = self.build_job(pkt, prompt_ids, set, key, reply);
+        self.queue.enqueue(job)?;
+        Ok(Ticket::pending(rx))
+    }
+
+    /// Materialize one queued job (packet clone, deadline stamp,
+    /// admission wall-clock stamp).
+    fn build_job(
+        &self,
+        pkt: &Packet,
+        prompt_ids: &[i32],
+        set: &str,
+        key: Option<u64>,
+        reply: Sender<Result<CloudResponse, ServeError>>,
+    ) -> Job {
+        Job {
             pkt: pkt.clone(),
             prompt_ids: prompt_ids.to_vec(),
             set: set.to_string(),
             key,
+            deadline: pkt.t_capture + self.cfg.deadline_budget(pkt.kind),
+            t_submit: Instant::now(),
             reply,
+        }
+    }
+
+    /// Mean observed virtual service time across both classes — the
+    /// deadline-shed policy's completion estimate.  0.0 until the mission
+    /// has observed any latency (then only already-late jobs are predicted
+    /// misses).
+    fn mean_service_secs(&self) -> f64 {
+        let l = self.vlat.lock().unwrap();
+        let n = l[0].count() + l[1].count();
+        if n == 0 {
+            0.0
+        } else {
+            (l[0].mean() * l[0].count() as f64 + l[1].mean() * l[1].count() as f64)
+                / n as f64
+        }
+    }
+
+    /// Bump the total and per-class shed counters.
+    fn count_shed(&self, kind: StreamKind) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        match kind {
+            StreamKind::Context => self.shed_context.fetch_add(1, Ordering::Relaxed),
+            StreamKind::Insight => self.shed_insight.fetch_add(1, Ordering::Relaxed),
         };
-        self.queue.enqueue(job)?;
-        Ok(Ticket::pending(rx))
     }
 
     /// The cache front door shared by [`CloudPool::submit`] and the direct
@@ -680,13 +896,14 @@ impl CloudPool {
         }
     }
 
-    /// Reserve one admission slot, counting a shed on refusal.
-    fn reserve_slot(&self) -> Result<(), ServeError> {
+    /// Reserve one admission slot, counting a shed (total and per-class)
+    /// on refusal.
+    fn reserve_slot(&self, kind: StreamKind) -> Result<(), ServeError> {
         match self.queue.reserve(self.cfg.queue_depth, self.cfg.admission) {
             Ok(()) => Ok(()),
             Err(e) => {
                 if matches!(e, ServeError::Shed) {
-                    self.shed.fetch_add(1, Ordering::Relaxed);
+                    self.count_shed(kind);
                 }
                 Err(e)
             }
@@ -719,7 +936,7 @@ impl CloudPool {
             // deterministic.)
             let bounded = self.cfg.queue_depth > 0;
             if bounded {
-                self.reserve_slot()?;
+                self.reserve_slot(pkt.kind)?;
             }
             let t0 = Instant::now();
             let r = process_packet(engine, pkt, prompt_ids, set);
@@ -755,6 +972,8 @@ impl CloudPool {
             .as_ref()
             .map(|c| c.lock().unwrap().stats())
             .unwrap_or_default();
+        let [lat_context, lat_insight] = *self.vlat.lock().unwrap();
+        let [wall_lat_context, wall_lat_insight] = *self.wlat.lock().unwrap();
         PoolStats {
             workers: self.n_workers,
             completed: self.completed.load(Ordering::Relaxed),
@@ -764,8 +983,14 @@ impl CloudPool {
             cache_evictions: cs.evictions,
             cache_expirations: cs.expirations,
             shed: self.shed.load(Ordering::Relaxed),
+            shed_context: self.shed_context.load(Ordering::Relaxed),
+            shed_insight: self.shed_insight.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
+            lat_context,
+            lat_insight,
+            wall_lat_context,
+            wall_lat_insight,
         }
     }
 
@@ -825,16 +1050,30 @@ impl ServePackets for CloudPool {
     fn serve(&self, pkt: &Packet, prompt_ids: &[i32], set: &str) -> Result<Served> {
         self.process_sync(pkt, prompt_ids, set)
     }
+
+    fn observe_latency(&self, kind: StreamKind, virtual_secs: f64) {
+        self.vlat.lock().unwrap()[kind as usize].record(virtual_secs);
+    }
+
+    fn latency_histograms(&self) -> Option<(LatencyHistogram, LatencyHistogram)> {
+        let l = self.vlat.lock().unwrap();
+        Some((l[0], l[1]))
+    }
 }
 
 /// Serve one popped micro-batch: decode every member, dispatch ONE
 /// `execute_batch` for the whole batch (or the single-request path for a
 /// batch of one), build and send each reply, and fill the cache.
-fn serve_batch(engine: &Engine, mut jobs: Vec<Job>, cache: Option<&Mutex<ResponseCache>>) {
+fn serve_batch(
+    engine: &Engine,
+    mut jobs: Vec<Job>,
+    cache: Option<&Mutex<ResponseCache>>,
+    wlat: &Mutex<[LatencyHistogram; 2]>,
+) {
     if jobs.len() == 1 {
         let job = jobs.pop().unwrap();
         let r = process_packet(engine, &job.pkt, &job.prompt_ids, &job.set);
-        finish_job(job, r, cache);
+        finish_job(job, r, cache, wlat);
         return;
     }
     // Decode first: a member that fails to decode is answered individually
@@ -843,9 +1082,7 @@ fn serve_batch(engine: &Engine, mut jobs: Vec<Job>, cache: Option<&Mutex<Respons
     for job in jobs {
         match decode_request_inputs(&job.pkt, &job.prompt_ids) {
             Ok((artifact, inputs)) => decoded.push((job, artifact, inputs)),
-            Err(e) => {
-                let _ = job.reply.send(Err(e));
-            }
+            Err(e) => finish_job(job, Err(e), cache, wlat),
         }
     }
     let Some((first, artifact, _)) = decoded.first() else {
@@ -859,7 +1096,7 @@ fn serve_batch(engine: &Engine, mut jobs: Vec<Job>, cache: Option<&Mutex<Respons
         Ok(outs) => {
             for ((job, _, _), out) in decoded.into_iter().zip(outs) {
                 let r = response_from_outputs(job.pkt.kind, out);
-                finish_job(job, r, cache);
+                finish_job(job, r, cache, wlat);
             }
         }
         Err(_) => {
@@ -869,21 +1106,28 @@ fn serve_batch(engine: &Engine, mut jobs: Vec<Job>, cache: Option<&Mutex<Respons
             // the re-decode cost is irrelevant next to correctness.
             for (job, _, _) in decoded {
                 let r = process_packet(engine, &job.pkt, &job.prompt_ids, &job.set);
-                finish_job(job, r, cache);
+                finish_job(job, r, cache, wlat);
             }
         }
     }
 }
 
-/// Reply to one job, filling the cache on success.
-fn finish_job(job: Job, r: Result<CloudResponse>, cache: Option<&Mutex<ResponseCache>>) {
+/// Reply to one job, filling the cache on success and recording its
+/// admission→completion wall latency into the per-class histograms.
+fn finish_job(
+    job: Job,
+    r: Result<CloudResponse>,
+    cache: Option<&Mutex<ResponseCache>>,
+    wlat: &Mutex<[LatencyHistogram; 2]>,
+) {
     if let (Ok(resp), Some(key), Some(cache)) = (&r, job.key, cache) {
         // Clone outside the lock — the guard is only held for the O(log n)
         // index update.
         let stored = resp.clone();
         cache.lock().unwrap().insert(key, stored, job.pkt.t_capture);
     }
-    let _ = job.reply.send(r);
+    wlat.lock().unwrap()[job.pkt.kind as usize].record(job.t_submit.elapsed().as_secs_f64());
+    let _ = job.reply.send(r.map_err(ServeError::Exec));
 }
 
 #[cfg(test)]
@@ -1117,5 +1361,161 @@ mod tests {
         let st = batched.stats();
         assert_eq!(st.batched_requests, 6);
         assert!(st.batches <= 6, "drains {}", st.batches);
+        // Every queued completion stamped admission→completion wall time.
+        assert_eq!(st.wall_lat_insight.count(), 6);
+        assert_eq!(st.wall_lat_context.count(), 0);
+    }
+
+    #[test]
+    fn default_config_keeps_deadline_discipline_off() {
+        let cfg = ServingConfig::default();
+        assert!(!cfg.enabled());
+        assert!(cfg.deadline_context_secs.is_infinite());
+        assert!(ServingConfig { edf: true, ..ServingConfig::default() }.enabled());
+        assert!(ServingConfig { deadline_shed: true, ..ServingConfig::default() }.enabled());
+        assert!(ServingConfig { deadline_context_secs: 0.5, ..ServingConfig::default() }
+            .enabled());
+    }
+
+    fn queue_job(
+        pkts: &[Packet],
+        ids: &[i32],
+        t_capture: f64,
+        deadline: f64,
+    ) -> (Job, Receiver<Result<CloudResponse, ServeError>>) {
+        let (reply, rx) = channel();
+        let mut pkt = pkts[0].clone();
+        pkt.t_capture = t_capture;
+        (
+            Job {
+                pkt,
+                prompt_ids: ids.to_vec(),
+                set: "ft".to_string(),
+                key: None,
+                deadline,
+                t_submit: Instant::now(),
+                reply,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn edf_pop_drains_earliest_deadline_first() {
+        let (pkts, ids) = sample_packets(1);
+        let q = JobQueue::new();
+        for d in [5.0, 1.0, 3.0] {
+            q.reserve(0, AdmissionPolicy::Shed).unwrap();
+            q.enqueue(queue_job(&pkts, &ids, 0.0, d).0).unwrap();
+        }
+        // EDF pops by deadline, not arrival order.
+        assert_eq!(q.pop_batch(1, true).unwrap()[0].deadline, 1.0);
+        assert_eq!(q.pop_batch(1, true).unwrap()[0].deadline, 3.0);
+        assert_eq!(q.pop_batch(1, true).unwrap()[0].deadline, 5.0);
+        // FIFO (edf off) keeps arrival order even with deadlines set.
+        for d in [5.0, 1.0] {
+            q.reserve(0, AdmissionPolicy::Shed).unwrap();
+            q.enqueue(queue_job(&pkts, &ids, 0.0, d).0).unwrap();
+        }
+        assert_eq!(q.pop_batch(1, false).unwrap()[0].deadline, 5.0);
+        assert_eq!(q.pop_batch(1, false).unwrap()[0].deadline, 1.0);
+        // All-infinite deadlines degrade EDF to exact FIFO (strict-< keeps
+        // the oldest job as lead).
+        for t in [7.0, 8.0] {
+            q.reserve(0, AdmissionPolicy::Shed).unwrap();
+            q.enqueue(queue_job(&pkts, &ids, t, f64::INFINITY).0).unwrap();
+        }
+        assert_eq!(q.pop_batch(1, true).unwrap()[0].pkt.t_capture, 7.0);
+        assert_eq!(q.pop_batch(1, true).unwrap()[0].pkt.t_capture, 8.0);
+    }
+
+    #[test]
+    fn edf_lead_still_gathers_compatible_batch() {
+        let (pkts, ids) = sample_packets(1);
+        let q = JobQueue::new();
+        for d in [9.0, 2.0, 4.0] {
+            q.reserve(0, AdmissionPolicy::Shed).unwrap();
+            q.enqueue(queue_job(&pkts, &ids, 0.0, d).0).unwrap();
+        }
+        // Lead = deadline 2.0; the other two (same artifact/set) co-batch.
+        let batch = q.pop_batch(4, true).unwrap();
+        assert_eq!(batch[0].deadline, 2.0);
+        assert_eq!(batch.len(), 3);
+    }
+
+    #[test]
+    fn deadline_shed_displaces_queued_predicted_misser() {
+        let (pkts, ids) = sample_packets(1);
+        let pool = CloudPool::with_config(
+            Vec::new(),
+            ServingConfig {
+                queue_depth: 2,
+                deadline_shed: true,
+                deadline_insight_secs: 10.0,
+                ..ServingConfig::default()
+            },
+        );
+        let mk = |t: f64| {
+            let mut p = pkts[0].clone();
+            p.t_capture = t;
+            p
+        };
+        // Two queued jobs with deadlines 10 and 11 (virtual).
+        let t0 = pool.submit(&mk(0.0), &ids, "ft").unwrap();
+        let _t1 = pool.submit(&mk(1.0), &ids, "ft").unwrap();
+        // Arrival at virtual time 100: both queued jobs are already past
+        // their deadlines; the widest misser (deadline 10) is shed and the
+        // arrival takes its slot.
+        let t2 = pool.submit(&mk(100.0), &ids, "ft").unwrap();
+        assert!(matches!(t0.wait(), Err(ServeError::Shed)));
+        assert!(!t2.cache_hit());
+        let st = pool.stats();
+        assert_eq!((st.shed, st.shed_context, st.shed_insight), (1, 0, 1));
+    }
+
+    #[test]
+    fn deadline_shed_refuses_arrival_when_queue_will_hold() {
+        let (pkts, ids) = sample_packets(1);
+        let pool = CloudPool::with_config(
+            Vec::new(),
+            ServingConfig {
+                queue_depth: 2,
+                deadline_shed: true,
+                deadline_insight_secs: 10.0,
+                ..ServingConfig::default()
+            },
+        );
+        let mk = |t: f64| {
+            let mut p = pkts[0].clone();
+            p.t_capture = t;
+            p
+        };
+        // Queue full of future-deadline jobs (deadline 110 at now=0): no
+        // queued job is predicted to miss, so the arrival is refused — the
+        // plain shed-newest fallback.
+        let _a = pool.submit(&mk(100.0), &ids, "ft").unwrap();
+        let _b = pool.submit(&mk(100.0), &ids, "ft").unwrap();
+        assert!(matches!(pool.submit(&mk(0.0), &ids, "ft"), Err(ServeError::Shed)));
+        let st = pool.stats();
+        assert_eq!((st.shed, st.shed_insight), (1, 1));
+    }
+
+    #[test]
+    fn observe_latency_feeds_per_class_histograms() {
+        let pool = CloudPool::new(vec![Engine::synthetic()]);
+        // Virtual quantities from the mission timing model.
+        pool.observe_latency(StreamKind::Context, 0.02);
+        pool.observe_latency(StreamKind::Insight, 0.5);
+        pool.observe_latency(StreamKind::Insight, 0.7);
+        let (ctx, ins) = pool.latency_histograms().unwrap();
+        assert_eq!((ctx.count(), ins.count()), (1, 2));
+        assert_eq!(ctx.p50(), 0.02);
+        let st = pool.stats();
+        assert_eq!(st.lat_insight.count(), 2);
+        assert!(st.lat_insight.p99() <= 0.7 && st.lat_insight.p50() >= 0.5);
+        // The single-session server keeps the trait defaults (no-op).
+        let server = CloudServer::new(Engine::synthetic());
+        server.observe_latency(StreamKind::Context, 1.0);
+        assert!(server.latency_histograms().is_none());
     }
 }

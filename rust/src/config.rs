@@ -143,6 +143,18 @@ pub struct RunConfig {
     /// Cloud serving layer: bound on in-flight requests
     /// (`--queue-depth N`); `None` = 0 (unbounded).
     pub queue_depth: Option<usize>,
+    /// Deadline budget for Context-class requests in virtual seconds
+    /// (`--deadline-context SECS`); `None` = infinite.
+    pub deadline_context: Option<f64>,
+    /// Deadline budget for Insight-class requests in virtual seconds
+    /// (`--deadline-insight SECS`); `None` = infinite.
+    pub deadline_insight: Option<f64>,
+    /// Drain the serving queue earliest-deadline-first (`--edf`);
+    /// false = FIFO.
+    pub edf: bool,
+    /// Shed the request predicted to miss its deadline instead of the
+    /// newest arrival (`--deadline-shed`).
+    pub deadline_shed: bool,
     /// `avery scenario --list`.
     pub list: bool,
     /// Report rendering (`--format text|json`); CSVs are always written.
@@ -188,6 +200,31 @@ impl RunConfig {
         // reuse.
         if cache_ttl.is_some() && cache_entries.unwrap_or(0) == 0 {
             bail!("cache-ttl requires cache-entries > 0 (the cache is off without it)");
+        }
+        let deadline_context = match kv.get("deadline-context") {
+            None => None,
+            Some(v) => Some(
+                v.parse::<f64>()
+                    .with_context(|| format!("config deadline-context={v} not a number"))?,
+            ),
+        };
+        let deadline_insight = match kv.get("deadline-insight") {
+            None => None,
+            Some(v) => Some(
+                v.parse::<f64>()
+                    .with_context(|| format!("config deadline-insight={v} not a number"))?,
+            ),
+        };
+        // A zero/negative/NaN deadline budget would shed every request (or
+        // none, for NaN) — reject it up front; `inf` spells "no deadline".
+        for (key, d) in
+            [("deadline-context", deadline_context), ("deadline-insight", deadline_insight)]
+        {
+            if let Some(d) = d {
+                if d.is_nan() || d <= 0.0 {
+                    bail!("config {key}={d} must be a positive number of seconds");
+                }
+            }
         }
         Ok(Self {
             artifacts: kv.get("artifacts").map(|s| s.to_string()),
@@ -239,6 +276,10 @@ impl RunConfig {
                         .with_context(|| format!("config queue-depth={v} not an integer"))?,
                 ),
             },
+            deadline_context,
+            deadline_insight,
+            edf: kv.get_bool("edf", false)?,
+            deadline_shed: kv.get_bool("deadline-shed", false)?,
             list: kv.get_bool("list", false)?,
             format,
             jobs: kv.get_usize("jobs", 1)?,
@@ -378,5 +419,36 @@ mod tests {
             RunConfig::from_kv(&Kv::parse("cache-ttl = 60\ncache-entries = 0\n").unwrap())
                 .is_err()
         );
+    }
+
+    #[test]
+    fn deadline_keys_parse_and_reject() {
+        let kv = Kv::parse(
+            "deadline-context = 0.05\ndeadline-insight = 2.5\nedf = true\n\
+             deadline-shed = true\n",
+        )
+        .unwrap();
+        let rc = RunConfig::from_kv(&kv).unwrap();
+        assert_eq!(rc.deadline_context, Some(0.05));
+        assert_eq!(rc.deadline_insight, Some(2.5));
+        assert!(rc.edf && rc.deadline_shed);
+        // Defaults keep the whole deadline discipline off.
+        let rc0 = RunConfig::from_kv(&Kv::default()).unwrap();
+        assert!(rc0.deadline_context.is_none() && rc0.deadline_insight.is_none());
+        assert!(!rc0.edf && !rc0.deadline_shed);
+        // Bare CLI flags (`--edf`) arrive as `edf = true` via apply_cli.
+        let mut flags = Kv::default();
+        flags.apply_cli(&["--edf".to_string(), "--deadline-shed".to_string()]).unwrap();
+        let rcf = RunConfig::from_kv(&flags).unwrap();
+        assert!(rcf.edf && rcf.deadline_shed);
+        // Type and range errors are hard.
+        assert!(RunConfig::from_kv(&Kv::parse("deadline-context = soon\n").unwrap()).is_err());
+        assert!(RunConfig::from_kv(&Kv::parse("deadline-insight = 0\n").unwrap()).is_err());
+        assert!(RunConfig::from_kv(&Kv::parse("deadline-context = -1\n").unwrap()).is_err());
+        assert!(RunConfig::from_kv(&Kv::parse("deadline-context = NaN\n").unwrap()).is_err());
+        assert!(RunConfig::from_kv(&Kv::parse("edf = maybe\n").unwrap()).is_err());
+        // `inf` spells "no deadline" and is accepted.
+        let inf = RunConfig::from_kv(&Kv::parse("deadline-insight = inf\n").unwrap()).unwrap();
+        assert_eq!(inf.deadline_insight, Some(f64::INFINITY));
     }
 }

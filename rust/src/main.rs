@@ -30,9 +30,10 @@
 //! `--name NAME` / `--manifest PATH` / `--list` (scenario),
 //! `--matrix-count N` (matrix), `--format text|json`,
 //! `--jobs N` (parallel mission fan-out for `avery all`), and the cloud
-//! serving layer's `--batch-max N`, `--cache-entries N`, `--cache-ttl SECS`
-//! and `--queue-depth N` (fleet/scenario; defaults preserve the unbatched,
-//! uncached behavior byte-for-byte).
+//! serving layer's `--batch-max N`, `--cache-entries N`, `--cache-ttl SECS`,
+//! `--queue-depth N`, `--deadline-context SECS`, `--deadline-insight SECS`,
+//! `--edf` and `--deadline-shed` (fleet/scenario; defaults preserve the
+//! unbatched, uncached, FIFO behavior byte-for-byte).
 //!
 //! Every artifact-free-capable mission (all but `headline`) falls back to
 //! the synthetic closed-form engine when `artifacts/` is missing (control
@@ -74,6 +75,13 @@ missions: table3 fig7 fig8 fig9 fig10 headline streams fleet scenario matrix
   --cache-ttl SECS     response-cache TTL in virtual seconds (default: never)
   --queue-depth N      cloud admission bound on in-flight requests
                        (default 0 = unbounded; full queues shed with `busy`)
+  --deadline-context S deadline budget for Context requests in virtual
+                       seconds (default: none)
+  --deadline-insight S deadline budget for Insight requests (default: none)
+  --edf                drain the serving queue earliest-deadline-first
+                       (default: FIFO)
+  --deadline-shed      shed the queued request predicted to miss its
+                       deadline instead of the newest arrival
   --format FMT         text | json report rendering (CSVs always written)
   --jobs N             run missions N at a time (`avery all`); output bytes
                        are identical to --jobs 1 (default 1)

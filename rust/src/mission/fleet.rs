@@ -164,7 +164,8 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
         &[
             "uavs", "workers", "delivered", "executed", "aggregate_pps", "jain_pps",
             "avg_iou", "switches", "infeasible_s", "server_utilization",
-            "total_energy_j",
+            "total_energy_j", "ctx_p50_s", "ctx_p90_s", "ctx_p99_s", "ins_p50_s",
+            "ins_p90_s", "ins_p99_s",
         ],
     );
     sm.row(&[
@@ -179,6 +180,12 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
         run.infeasible_total.to_string(),
         f(run.server_utilization, 4),
         f(run.total_energy_j, 1),
+        f(run.lat_context.p50(), 6),
+        f(run.lat_context.p90(), 6),
+        f(run.lat_context.p99(), 6),
+        f(run.lat_insight.p50(), 6),
+        f(run.lat_insight.p90(), 6),
+        f(run.lat_insight.p99(), 6),
     ]);
     report.push_series(sm);
 
@@ -235,6 +242,16 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
     report.push_scalar("infeasible_s", run.infeasible_total as f64);
     report.push_scalar("server_utilization", run.server_utilization);
     report.push_scalar("total_energy_j", run.total_energy_j);
+
+    // Tail percentiles per stream class, next to the means above.  The
+    // histograms accumulate virtual (event-ordered) per-request latency, so
+    // these are as deterministic as every other scalar.
+    super::push_latency_telemetry(
+        &mut report,
+        "Per-class request latency (virtual seconds)",
+        &run.lat_context,
+        &run.lat_insight,
+    );
 
     // Serving-layer telemetry only exists when a serving feature is on, so
     // default runs stay byte-identical to the pre-serving-layer reports.

@@ -65,6 +65,8 @@ struct GateRow {
     uavs: usize,
     delivered: u64,
     jain: f64,
+    /// Insight-class p50/p90/p99 virtual request latency (seconds).
+    ins_p: [f64; 3],
     clamp_ok: bool,
     antiflap_ok: bool,
     run_ok: bool,
@@ -107,6 +109,7 @@ pub fn run_matrix(env: &Env, opts: &RunOptions) -> Result<Report> {
             uavs: sc.fleet.n_uavs,
             delivered: run.delivered_total,
             jain: run.jain_pps,
+            ins_p: [run.lat_insight.p50(), run.lat_insight.p90(), run.lat_insight.p99()],
             clamp_ok,
             antiflap_ok,
             run_ok,
@@ -133,8 +136,8 @@ pub fn run_matrix(env: &Env, opts: &RunOptions) -> Result<Report> {
     let mut sm = Series::new(
         "matrix_summary",
         &[
-            "scenario", "seed", "duration_s", "uavs", "delivered", "jain_pps", "clamp_ok",
-            "antiflap_ok", "run_ok", "pass",
+            "scenario", "seed", "duration_s", "uavs", "delivered", "jain_pps", "ins_p50_s",
+            "ins_p90_s", "ins_p99_s", "clamp_ok", "antiflap_ok", "run_ok", "pass",
         ],
     );
     let ok = |b: bool| if b { "ok" } else { "FAIL" }.to_string();
@@ -156,6 +159,9 @@ pub fn run_matrix(env: &Env, opts: &RunOptions) -> Result<Report> {
             r.uavs.to_string(),
             r.delivered.to_string(),
             f(r.jain, 4),
+            f(r.ins_p[0], 6),
+            f(r.ins_p[1], 6),
+            f(r.ins_p[2], 6),
             (r.clamp_ok as u8).to_string(),
             (r.antiflap_ok as u8).to_string(),
             (r.run_ok as u8).to_string(),

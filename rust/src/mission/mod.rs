@@ -44,10 +44,10 @@ use crate::coordinator::{Lut, MissionGoal};
 use crate::dataset::{Corpus, Dataset};
 use crate::energy::DeviceModel;
 use crate::manifest::Manifest;
-use crate::report::{Report, Series};
+use crate::report::{latency_table, Report, Series};
 use crate::runtime::{Engine, ExecMode};
 use crate::streams::fleet::UavOutcome;
-use crate::telemetry::f;
+use crate::telemetry::{f, LatencyHistogram};
 
 /// Default fleet size when neither the CLI nor a scenario specifies one.
 pub const DEFAULT_UAVS: usize = 4;
@@ -146,6 +146,18 @@ pub struct RunOptions {
     /// Cloud serving layer (`--queue-depth N`): in-flight request bound;
     /// `None` = 0 (unbounded).
     pub queue_depth: Option<usize>,
+    /// Deadline budget for Context-class requests in virtual seconds
+    /// (`--deadline-context SECS`); `None` = infinite (no deadline).
+    pub deadline_context: Option<f64>,
+    /// Deadline budget for Insight-class requests (`--deadline-insight
+    /// SECS`); `None` = infinite.
+    pub deadline_insight: Option<f64>,
+    /// Drain the micro-batch queue earliest-deadline-first (`--edf`);
+    /// false = FIFO (the default, byte-identical to prior outputs).
+    pub edf: bool,
+    /// Shed the queued request predicted to miss its deadline instead of
+    /// the newest arrival (`--deadline-shed`); false = depth-based shed.
+    pub deadline_shed: bool,
 }
 
 impl Default for RunOptions {
@@ -166,6 +178,10 @@ impl Default for RunOptions {
             cache_entries: None,
             cache_ttl: None,
             queue_depth: None,
+            deadline_context: None,
+            deadline_insight: None,
+            edf: false,
+            deadline_shed: false,
         }
     }
 }
@@ -189,6 +205,10 @@ impl RunOptions {
             cache_entries: cfg.cache_entries,
             cache_ttl: cfg.cache_ttl,
             queue_depth: cfg.queue_depth,
+            deadline_context: cfg.deadline_context,
+            deadline_insight: cfg.deadline_insight,
+            edf: cfg.edf,
+            deadline_shed: cfg.deadline_shed,
         }
     }
 
@@ -202,6 +222,10 @@ impl RunOptions {
             cache_ttl_secs: self.cache_ttl.unwrap_or(f64::INFINITY),
             queue_depth: self.queue_depth.unwrap_or(0),
             admission: crate::cloud::AdmissionPolicy::Shed,
+            deadline_context_secs: self.deadline_context.unwrap_or(f64::INFINITY),
+            deadline_insight_secs: self.deadline_insight.unwrap_or(f64::INFINITY),
+            edf: self.edf,
+            deadline_shed: self.deadline_shed,
         }
     }
 }
@@ -245,6 +269,8 @@ pub(crate) fn push_serving_telemetry(
     report.push_scalar("cache_expirations", ps.cache_expirations as f64);
     report.push_scalar("cache_hit_rate", ps.cache_hit_rate());
     report.push_scalar("shed", ps.shed as f64);
+    report.push_scalar("shed_context", ps.shed_context as f64);
+    report.push_scalar("shed_insight", ps.shed_insight as f64);
     report.push_note(format!(
         "serving: batch_max {}, cache {}/{} hits ({} entries, {} evictions, {} expired), \
          {} shed",
@@ -256,6 +282,24 @@ pub(crate) fn push_serving_telemetry(
         ps.cache_expirations,
         ps.shed
     ));
+}
+
+/// Append per-class virtual-latency percentiles shared by the fleet and
+/// scenario reports: `ctx_*`/`ins_*` scalars plus a rendered table.  Pushed
+/// unconditionally — unlike the serving telemetry, the scalars are
+/// schema-stable zeros when nothing recorded latency, tables are not pinned
+/// by the golden series tests, and the histograms themselves are pure
+/// functions of the event-ordered virtual timeline (never wall-clock), so
+/// default-flag outputs stay deterministic.
+pub(crate) fn push_latency_telemetry(
+    report: &mut Report,
+    title: &str,
+    ctx: &LatencyHistogram,
+    ins: &LatencyHistogram,
+) {
+    report.push_latency_scalars("ctx", ctx);
+    report.push_latency_scalars("ins", ins);
+    report.push_table(latency_table("latency", title, &[("Context", ctx), ("Insight", ins)]));
 }
 
 /// Shared environment every mission needs.
@@ -375,7 +419,8 @@ mod tests {
              hysteresis = 0.1\nuavs = 8\nworkers = 3\nscenario = urban-flood\n\
              name = wildfire-ridge\nmanifest = scenarios/urban-flood.toml\n\
              matrix-count = 24\nbatch-max = 8\ncache-entries = 64\n\
-             cache-ttl = 45\nqueue-depth = 32\n",
+             cache-ttl = 45\nqueue-depth = 32\ndeadline-context = 0.05\n\
+             deadline-insight = 2.5\nedf = true\ndeadline-shed = true\n",
         )
         .unwrap();
         let cfg = RunConfig::from_kv(&kv).unwrap();
@@ -395,12 +440,20 @@ mod tests {
         assert_eq!(opts.cache_entries, Some(64));
         assert_eq!(opts.cache_ttl, Some(45.0));
         assert_eq!(opts.queue_depth, Some(32));
+        assert_eq!(opts.deadline_context, Some(0.05));
+        assert_eq!(opts.deadline_insight, Some(2.5));
+        assert!(opts.edf);
+        assert!(opts.deadline_shed);
         let serving = opts.serving();
         assert!(serving.enabled());
         assert_eq!(serving.batch_max, 8);
         assert_eq!(serving.cache_entries, 64);
         assert_eq!(serving.cache_ttl_secs, 45.0);
         assert_eq!(serving.queue_depth, 32);
+        assert_eq!(serving.deadline_context_secs, 0.05);
+        assert_eq!(serving.deadline_insight_secs, 2.5);
+        assert!(serving.edf);
+        assert!(serving.deadline_shed);
 
         let defaults = RunOptions::from_config(&RunConfig::from_kv(&Kv::default()).unwrap());
         assert_eq!(defaults.goal, None);
@@ -416,5 +469,10 @@ mod tests {
         assert_eq!(serving.cache_entries, 0);
         assert_eq!(serving.queue_depth, 0);
         assert!(serving.cache_ttl_secs.is_infinite());
+        // Deadline discipline defaults off (byte-identical golden outputs).
+        assert!(serving.deadline_context_secs.is_infinite());
+        assert!(serving.deadline_insight_secs.is_infinite());
+        assert!(!serving.edf);
+        assert!(!serving.deadline_shed);
     }
 }

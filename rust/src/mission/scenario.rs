@@ -145,6 +145,7 @@ pub fn run_compiled_scenario(
             "executed", "aggregate_pps", "jain_pps", "avg_iou", "tier_switches",
             "intent_switches", "infeasible_s", "total_energy_j", "trace_mean_mbps",
             "trace_min_mbps", "trace_max_mbps", "trace_outage_s", "trace_regimes",
+            "ctx_p50_s", "ctx_p90_s", "ctx_p99_s", "ins_p50_s", "ins_p90_s", "ins_p99_s",
         ],
     );
     sm.row(&[
@@ -168,6 +169,12 @@ pub fn run_compiled_scenario(
         f(tsum.max_mbps, 4),
         f(tsum.outage_secs, 0),
         tsum.regimes.to_string(),
+        f(run.lat_context.p50(), 6),
+        f(run.lat_context.p90(), 6),
+        f(run.lat_context.p99(), 6),
+        f(run.lat_insight.p50(), 6),
+        f(run.lat_insight.p90(), 6),
+        f(run.lat_insight.p99(), 6),
     ]);
     report.push_series(sm);
 
@@ -265,6 +272,15 @@ pub fn run_compiled_scenario(
     report.push_scalar("trace_mean_mbps", tsum.mean_mbps);
     report.push_scalar("trace_outage_s", tsum.outage_secs);
     report.push_scalar("trace_regimes", tsum.regimes as f64);
+
+    // Tail percentiles per stream class: virtual-time histograms, so these
+    // stay byte-stable per `(name, seed, duration)` like every other cell.
+    super::push_latency_telemetry(
+        &mut report,
+        "Per-class request latency (virtual seconds)",
+        &run.lat_context,
+        &run.lat_insight,
+    );
 
     // Serving-layer telemetry, only when a serving feature is enabled —
     // default scenario reports stay byte-identical to the pre-layer ones

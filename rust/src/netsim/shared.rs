@@ -201,6 +201,50 @@ mod tests {
     }
 
     #[test]
+    fn reap_keeps_history_strictly_inside_the_window() {
+        let mut shared = SharedLink::new(flat_trace(12.0, 600), quiet_cfg(1), 2);
+        shared.transmit(1, 0.0, 3e6); // occupies [0, 2)
+        // Just inside the window: a reap shy of drain + HISTORY_SECS keeps
+        // the record, so the historical share is still answerable.
+        shared.reap(2.0 + HISTORY_SECS - 0.01);
+        assert!((shared.share_at(0, 1.0) - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reap_drops_history_exactly_at_the_boundary() {
+        let mut shared = SharedLink::new(flat_trace(12.0, 600), quiet_cfg(1), 2);
+        shared.transmit(1, 0.0, 3e6); // drains at until = 2.0
+        // Exactly HISTORY_SECS after the drain, the retain predicate
+        // `until > t - HISTORY_SECS` (strict) evicts the record: the
+        // historical query now sees an uncontended channel.
+        shared.reap(2.0 + HISTORY_SECS);
+        assert!((shared.share_at(0, 1.0) - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drained_transfer_inactive_at_its_drain_instant() {
+        let mut shared = SharedLink::new(flat_trace(12.0, 600), quiet_cfg(1), 2);
+        shared.transmit(1, 0.0, 3e6); // occupies the half-open [0, 2)
+        // At exactly t = 2.0 the occupancy is over (`until > t` is strict)
+        // even though the record is retained for past-time queries...
+        assert!((shared.share_at(0, 2.0) - 12.0).abs() < 1e-9);
+        assert!((shared.share_at(0, 2.0 - 1e-9) - 6.0).abs() < 1e-9);
+        // ...and `from <= t` is inclusive: occupancy starts at the start.
+        assert!((shared.share_at(0, 0.0) - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transmit_reaps_stale_history() {
+        let mut shared = SharedLink::new(flat_trace(12.0, 600), quiet_cfg(1), 3);
+        shared.transmit(1, 0.0, 3e6); // occupies [0, 2)
+        // A transmit at drain + HISTORY_SECS reaps the stale record before
+        // registering its own occupancy window.
+        shared.transmit(2, 2.0 + HISTORY_SECS, 3e6);
+        assert!((shared.share_at(0, 1.0) - 12.0).abs() < 1e-9);
+        assert!((shared.share_at(0, 2.0 + HISTORY_SECS + 1.0) - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
     fn extra_latency_delays_sender_without_occupying_the_channel() {
         let mut shared = SharedLink::new(
             flat_trace(16.0, 600),

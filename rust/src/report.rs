@@ -26,7 +26,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
-use crate::telemetry::{Csv, Table};
+use crate::telemetry::{f, Csv, LatencyHistogram, Table};
 
 /// Report rendering format selected by the CLI (`--format`).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -75,8 +75,18 @@ impl ReportTable {
         }
     }
 
+    /// Append one row; a cell count that disagrees with the columns is a
+    /// hard panic in every build profile (a ragged table row would render
+    /// shifted cells and serialize misaligned JSON).
     pub fn row(&mut self, cells: &[String]) {
-        debug_assert_eq!(cells.len(), self.columns.len(), "table column mismatch");
+        assert_eq!(
+            cells.len(),
+            self.columns.len(),
+            "table `{}`: row has {} cells for {} columns",
+            self.name,
+            cells.len(),
+            self.columns.len()
+        );
         self.rows.push(cells.to_vec());
     }
 }
@@ -100,13 +110,29 @@ impl Series {
         }
     }
 
+    /// Append one row; a cell count that disagrees with the columns is a
+    /// hard panic in every build profile — the CSV sink would otherwise
+    /// write a ragged row that silently shifts every downstream parse.
     pub fn row(&mut self, cells: &[String]) {
-        debug_assert_eq!(cells.len(), self.columns.len(), "series column mismatch");
+        assert_eq!(
+            cells.len(),
+            self.columns.len(),
+            "series `{}`: row has {} cells for {} columns",
+            self.name,
+            cells.len(),
+            self.columns.len()
+        );
         self.rows.push(cells.to_vec());
     }
 
     /// All-float row with the legacy `Csv::rowf` formatting (`{v:.6}`).
+    /// Non-finite values are a hard panic naming the series and column —
+    /// a `NaN` literal in a CSV cell corrupts every downstream parser.
     pub fn rowf(&mut self, values: &[f64]) {
+        if let Some((i, v)) = values.iter().enumerate().find(|(_, v)| !v.is_finite()) {
+            let column = self.columns.get(i).map(String::as_str).unwrap_or("?");
+            panic!("series `{}`: non-finite value {v} for column `{column}`", self.name);
+        }
         let vs: Vec<String> = values.iter().map(|v| format!("{v:.6}")).collect();
         self.row(&vs);
     }
@@ -163,6 +189,47 @@ impl Report {
         self.series.extend(other.series);
         self.notes.extend(other.notes);
     }
+
+    /// Surface one latency histogram as headline scalars:
+    /// `<prefix>_requests`, `<prefix>_p50_s`, `<prefix>_p90_s`,
+    /// `<prefix>_p99_s` (seconds, virtual).  Empty histograms push zeros so
+    /// the scalar set stays schema-stable across runs.
+    pub fn push_latency_scalars(&mut self, prefix: &str, h: &LatencyHistogram) {
+        self.push_scalar(&format!("{prefix}_requests"), h.count() as f64);
+        self.push_scalar(&format!("{prefix}_p50_s"), h.p50());
+        self.push_scalar(&format!("{prefix}_p90_s"), h.p90());
+        self.push_scalar(&format!("{prefix}_p99_s"), h.p99());
+    }
+}
+
+/// Render per-class latency histograms as a terminal table (one row per
+/// stream class, milliseconds) — the `Histogram → Report` adapter used by
+/// the fleet/scenario missions; follows the p50/p90/p99/min/max table shape
+/// of the open-nexus IPC benchmarks (ROADMAP "Tail-latency discipline").
+pub fn latency_table(
+    name: &str,
+    title: &str,
+    classes: &[(&str, &LatencyHistogram)],
+) -> ReportTable {
+    let ms = |v: f64| f(v * 1e3, 3);
+    let mut t = ReportTable::new(
+        name,
+        title,
+        &["Class", "Requests", "Min ms", "p50 ms", "p90 ms", "p99 ms", "p999 ms", "Max ms"],
+    );
+    for (class, h) in classes {
+        t.row(&[
+            class.to_string(),
+            h.count().to_string(),
+            ms(h.min_secs()),
+            ms(h.p50()),
+            ms(h.p90()),
+            ms(h.p99()),
+            ms(h.p999()),
+            ms(h.max_secs()),
+        ]);
+    }
+    t
 }
 
 /// A report consumer.
@@ -410,6 +477,45 @@ mod tests {
         assert_eq!(a.tables.len(), 1);
         assert_eq!(a.series.len(), 1);
         assert_eq!(a.notes, vec!["note with\nnewline".to_string(), "outer note".to_string()]);
+    }
+
+    #[test]
+    #[should_panic(expected = "table `t`: row has 1 cells for 2 columns")]
+    fn table_row_panics_on_ragged_row_in_all_builds() {
+        let mut t = ReportTable::new("t", "A table", &["a", "b"]);
+        t.row(&["lonely".into()]);
+    }
+
+    #[test]
+    #[should_panic(expected = "series `s`: row has 3 cells for 2 columns")]
+    fn series_row_panics_on_ragged_row_in_all_builds() {
+        let mut s = Series::new("s", &["a", "b"]);
+        s.row(&["1".into(), "2".into(), "3".into()]);
+    }
+
+    #[test]
+    #[should_panic(expected = "series `s`: non-finite value NaN for column `v`")]
+    fn series_rowf_panics_on_non_finite() {
+        let mut s = Series::new("s", &["t", "v"]);
+        s.rowf(&[1.0, f64::NAN]);
+    }
+
+    #[test]
+    fn latency_adapter_pushes_scalars_and_table() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.010);
+        let mut r = Report::new("m", "t");
+        r.push_latency_scalars("context", &h);
+        assert_eq!(r.scalar_value("context_requests"), Some(1.0));
+        assert_eq!(r.scalar_value("context_p99_s"), Some(0.010));
+        let t = latency_table("lat", "Latency", &[("Context", &h)]);
+        assert_eq!(t.rows.len(), 1);
+        assert_eq!(t.rows[0][0], "Context");
+        assert_eq!(t.rows[0][4], "10.000"); // p90 in ms
+        // Empty histograms still produce schema-stable zero scalars.
+        let mut r2 = Report::new("m", "t");
+        r2.push_latency_scalars("insight", &LatencyHistogram::new());
+        assert_eq!(r2.scalar_value("insight_p50_s"), Some(0.0));
     }
 
     #[test]

@@ -20,6 +20,7 @@ use crate::dataset::Dataset;
 use crate::energy::DeviceModel;
 use crate::netsim::SharedLink;
 use crate::runtime::Engine;
+use crate::telemetry::LatencyHistogram;
 
 use super::{EpochRecord, IntentSwitch, MissionConfig, Policy, RunSummary, UavAgent, UavRole};
 
@@ -111,6 +112,12 @@ pub struct FleetRun {
     /// Virtual server utilization: induced tail-seconds / (duration x workers).
     pub server_utilization: f64,
     pub total_energy_j: f64,
+    /// Per-request virtual latency (capture->deliver cycle + cloud tail) over
+    /// executed Context-class requests, recorded by the serving layer.  Empty
+    /// when the server does not track latency (e.g. the bare `CloudServer`).
+    pub lat_context: LatencyHistogram,
+    /// Same, for Insight-class requests.
+    pub lat_insight: LatencyHistogram,
 }
 
 /// Jain's fairness index: (Σx)² / (n · Σx²) — 1.0 when every UAV gets an
@@ -263,6 +270,8 @@ pub fn run_fleet_mission(
         0.0
     };
 
+    let (lat_context, lat_insight) = server.latency_histograms().unwrap_or_default();
+
     Ok(FleetRun {
         jain_pps: jain_index(&pps),
         aggregate_pps: delivered_total as f64 / duration.max(1e-9),
@@ -275,6 +284,8 @@ pub fn run_fleet_mission(
         avg_iou,
         server_utilization: server_secs / (duration.max(1e-9) * cfg.workers.max(1) as f64),
         total_energy_j: per_uav.iter().map(|o| o.summary.total_energy_j).sum(),
+        lat_context,
+        lat_insight,
         per_uav,
         epochs,
     })

@@ -528,6 +528,10 @@ impl<'a> UavAgent<'a> {
                     Corpus::Flood => self.acc_ft.push(s),
                 }
                 self.executed += 1;
+                // Per-request virtual latency for the tail-percentile
+                // telemetry: the full capture->deliver cycle plus the final
+                // (cache-adjusted) cloud tail.
+                server.observe_latency(pkt.kind, cycle + tail);
             }
             self.server_secs += tail;
         }
@@ -608,6 +612,7 @@ impl<'a> UavAgent<'a> {
                     self.ctx_total += 1;
                 }
                 self.executed += 1;
+                server.observe_latency(pkt.kind, cycle + tail);
             }
             self.server_secs += tail;
         }

@@ -1,16 +1,44 @@
-//! Telemetry sinks: CSV writers for the figure-regenerating missions and a
-//! compact fixed-width table printer for terminal summaries.
+//! Telemetry sinks: CSV writers for the figure-regenerating missions, a
+//! compact fixed-width table printer for terminal summaries, and the
+//! fixed-bucket log-scale [`LatencyHistogram`] behind the repo's
+//! tail-latency accounting (DESIGN.md "Tail-latency discipline").
+//!
+//! The CSV writer is strict in **all** builds: a ragged row (cell count ≠
+//! header count) is a hard error, and a non-finite cell is a typed
+//! [`NonFiniteCell`] error naming the column — a release binary must never
+//! silently corrupt a downstream parser with `NaN` literals or shifted
+//! columns.
 
+use std::fmt;
 use std::io::Write;
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
+
+/// Typed error: a non-finite value was handed to [`Csv::rowf`].  Carried
+/// through `anyhow` so call sites can `downcast_ref::<NonFiniteCell>()` to
+/// learn which column produced it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NonFiniteCell {
+    /// Header name of the offending column.
+    pub column: String,
+    /// The rejected value (`NaN`, `inf` or `-inf`).
+    pub value: f64,
+}
+
+impl fmt::Display for NonFiniteCell {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "non-finite value {} for csv column `{}`", self.value, self.column)
+    }
+}
+
+impl std::error::Error for NonFiniteCell {}
 
 /// A CSV writer with a fixed header.
 pub struct Csv {
     file: std::fs::File,
     pub path: PathBuf,
-    cols: usize,
+    header: Vec<String>,
 }
 
 impl Csv {
@@ -24,16 +52,37 @@ impl Csv {
         let mut file = std::fs::File::create(path)
             .with_context(|| format!("creating {}", path.display()))?;
         writeln!(file, "{}", header.join(","))?;
-        Ok(Self { file, path: path.to_path_buf(), cols: header.len() })
+        Ok(Self {
+            file,
+            path: path.to_path_buf(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+        })
     }
 
+    /// Write one pre-formatted row.  A cell count that disagrees with the
+    /// header is a hard error in every build profile — nothing is written.
     pub fn row(&mut self, values: &[String]) -> Result<()> {
-        debug_assert_eq!(values.len(), self.cols, "csv column mismatch");
+        if values.len() != self.header.len() {
+            bail!(
+                "csv {}: row has {} cells but header has {} columns",
+                self.path.display(),
+                values.len(),
+                self.header.len()
+            );
+        }
         writeln!(self.file, "{}", values.join(","))?;
         Ok(())
     }
 
+    /// Write one all-float row (`{v:.6}`).  Non-finite values are rejected
+    /// with a [`NonFiniteCell`] error naming the column; nothing is written.
     pub fn rowf(&mut self, values: &[f64]) -> Result<()> {
+        for (i, v) in values.iter().enumerate() {
+            if !v.is_finite() {
+                let column = self.header.get(i).cloned().unwrap_or_else(|| format!("#{i}"));
+                return Err(NonFiniteCell { column, value: *v }.into());
+            }
+        }
         let vs: Vec<String> = values.iter().map(|v| format!("{v:.6}")).collect();
         self.row(&vs)
     }
@@ -59,7 +108,10 @@ impl Table {
         self.rows.push(cells.to_vec());
     }
 
-    pub fn print(&self) {
+    /// Render the table body: rule, header, rule, rows, rule.  Rules and
+    /// rows share one width computed from the widest cell per column, so a
+    /// wide table never prints rows longer than its rules.
+    fn render(&self) -> Vec<String> {
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
         for row in &self.rows {
             for (i, c) in row.iter().enumerate() {
@@ -69,8 +121,7 @@ impl Table {
             }
         }
         let total: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
-        println!("\n{}", self.title);
-        println!("{}", "-".repeat(total.min(120)));
+        let rule = "-".repeat(total);
         let fmt_row = |cells: &[String]| {
             let mut s = String::from("|");
             for (i, c) in cells.iter().enumerate() {
@@ -79,12 +130,19 @@ impl Table {
             }
             s
         };
-        println!("{}", fmt_row(&self.header));
-        println!("{}", "-".repeat(total.min(120)));
+        let mut lines = vec![rule.clone(), fmt_row(&self.header), rule.clone()];
         for row in &self.rows {
-            println!("{}", fmt_row(row));
+            lines.push(fmt_row(row));
         }
-        println!("{}", "-".repeat(total.min(120)));
+        lines.push(rule);
+        lines
+    }
+
+    pub fn print(&self) {
+        println!("\n{}", self.title);
+        for line in self.render() {
+            println!("{line}");
+        }
     }
 }
 
@@ -96,6 +154,174 @@ pub fn f(v: f64, prec: usize) -> String {
 /// Format a percentage cell.
 pub fn pct(v: f64) -> String {
     format!("{:.2}%", v * 100.0)
+}
+
+// ---------------------------------------------------------------------------
+// Log-scale latency histogram
+// ---------------------------------------------------------------------------
+
+/// Bucket count for [`LatencyHistogram`].
+pub const HIST_BUCKETS: usize = 64;
+/// Lower edge of bucket 0: 10 µs.
+const HIST_LO_SECS: f64 = 1e-5;
+/// Upper edge of the last bucket: 100 s.
+const HIST_HI_SECS: f64 = 1e2;
+
+/// Fixed-bucket log-scale latency histogram: [`HIST_BUCKETS`] buckets with
+/// geometrically-spaced edges spanning [`10µs`, `100s`], O(1) record, exact
+/// min/max/count/sum, percentiles by within-bucket linear interpolation
+/// clamped to the observed `[min, max]` (so a single sample reports its
+/// exact value and p50 ≤ p90 ≤ p99 ≤ p999 always holds).
+///
+/// Deterministic and allocation-free after construction: `Copy`, no heap,
+/// and every operation is a pure function of the recorded sequence — safe
+/// to surface in byte-deterministic mission reports (values recorded must
+/// themselves be virtual quantities; see DESIGN.md).
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyHistogram {
+    counts: [u64; HIST_BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: [0; HIST_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Lower edge of bucket `i` in seconds (`edge(HIST_BUCKETS)` = 100 s).
+    fn edge(i: usize) -> f64 {
+        HIST_LO_SECS * (HIST_HI_SECS / HIST_LO_SECS).powf(i as f64 / HIST_BUCKETS as f64)
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        if v <= HIST_LO_SECS {
+            return 0;
+        }
+        let span = (HIST_HI_SECS / HIST_LO_SECS).log10();
+        let idx = ((v / HIST_LO_SECS).log10() / span * HIST_BUCKETS as f64) as usize;
+        idx.min(HIST_BUCKETS - 1)
+    }
+
+    /// Record one latency sample (seconds).  O(1).  Values outside the
+    /// bucket range clamp into the first/last bucket (min/max stay exact);
+    /// non-finite samples are a caller bug and are dropped.
+    pub fn record(&mut self, v_secs: f64) {
+        debug_assert!(v_secs.is_finite(), "non-finite latency sample {v_secs}");
+        if !v_secs.is_finite() {
+            return;
+        }
+        let v = v_secs.max(0.0);
+        self.counts[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Mean of recorded samples; 0.0 when empty (finite for CSV sinks).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact minimum; 0.0 when empty.
+    pub fn min_secs(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum; 0.0 when empty.
+    pub fn max_secs(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &Self) {
+        if other.count == 0 {
+            return;
+        }
+        for (c, o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Percentile `q` ∈ [0, 1] by within-bucket linear interpolation,
+    /// clamped to the observed `[min, max]`.  Empty → 0.0 (finite, so the
+    /// strict CSV sinks accept it).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if cum + c >= target {
+                let lo = Self::edge(i);
+                let hi = Self::edge(i + 1);
+                let frac = (target - cum) as f64 / c as f64;
+                return (lo + (hi - lo) * frac).clamp(self.min, self.max);
+            }
+            cum += c;
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.percentile(0.90)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+
+    pub fn p999(&self) -> f64 {
+        self.percentile(0.999)
+    }
 }
 
 #[cfg(test)]
@@ -118,6 +344,41 @@ mod tests {
     }
 
     #[test]
+    fn csv_rejects_ragged_rows_in_all_builds() {
+        let dir = std::env::temp_dir().join("avery_telemetry_ragged");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ragged.csv");
+        let mut c = Csv::create(&path, &["a", "b"]).unwrap();
+        let err = c.row(&["only".into()]).unwrap_err();
+        assert!(err.to_string().contains("1 cells"), "{err}");
+        assert!(c.row(&["1".into(), "2".into(), "3".into()]).is_err());
+        c.row(&["1".into(), "2".into()]).unwrap();
+        drop(c);
+        // The rejected rows never reached the file.
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn csv_rejects_non_finite_cells_with_typed_error() {
+        let dir = std::env::temp_dir().join("avery_telemetry_nonfinite");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("nf.csv");
+        let mut c = Csv::create(&path, &["t", "avg_pps"]).unwrap();
+        let err = c.rowf(&[1.0, f64::NAN]).unwrap_err();
+        let cell = err.downcast_ref::<NonFiniteCell>().expect("typed error");
+        assert_eq!(cell.column, "avg_pps");
+        assert!(cell.value.is_nan());
+        let err = c.rowf(&[f64::INFINITY, 2.0]).unwrap_err();
+        assert_eq!(err.downcast_ref::<NonFiniteCell>().unwrap().column, "t");
+        c.rowf(&[3.0, 4.0]).unwrap();
+        drop(c);
+        // Rejected rows are all-or-nothing: only the finite row landed.
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "t,avg_pps\n3.000000,4.000000\n");
+    }
+
+    #[test]
     fn table_prints_without_panic() {
         let mut t = Table::new("demo", &["col1", "col2"]);
         t.row(&["a".into(), "b".into()]);
@@ -125,8 +386,107 @@ mod tests {
     }
 
     #[test]
+    fn table_rules_and_rows_share_one_width() {
+        // Wide enough that the old 120-char separator cap would have left
+        // the rules shorter than the rows.
+        let cols = ["c0", "c1", "c2", "c3", "c4", "c5", "c6", "c7"];
+        let mut t = Table::new("wide", &cols);
+        t.row(&vec!["x".repeat(24); cols.len()]);
+        let lines = t.render();
+        let width = lines[0].len();
+        assert!(width > 120, "test table not wide enough: {width}");
+        for line in &lines {
+            assert_eq!(line.len(), width, "line width drifted: {line:?}");
+        }
+    }
+
+    #[test]
     fn formatters() {
         assert_eq!(f(1.23456, 2), "1.23");
         assert_eq!(pct(0.9398), "93.98%");
+    }
+
+    #[test]
+    fn histogram_empty_is_finite_zero() {
+        let h = LatencyHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0.0);
+        assert_eq!(h.p999(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min_secs(), 0.0);
+        assert_eq!(h.max_secs(), 0.0);
+    }
+
+    #[test]
+    fn histogram_single_sample_is_exact() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.037);
+        assert_eq!(h.count(), 1);
+        for q in [0.0, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            assert_eq!(h.percentile(q), 0.037, "q={q}");
+        }
+        assert_eq!(h.min_secs(), 0.037);
+        assert_eq!(h.max_secs(), 0.037);
+        assert_eq!(h.mean(), 0.037);
+    }
+
+    #[test]
+    fn histogram_all_one_bucket_clamps_to_observed_range() {
+        // Samples inside one bucket: interpolation stays within [min, max].
+        let mut h = LatencyHistogram::new();
+        for v in [0.01001, 0.01002, 0.01003] {
+            h.record(v);
+        }
+        for q in [0.5, 0.9, 0.99] {
+            let p = h.percentile(q);
+            assert!((0.01001..=0.01003).contains(&p), "q={q} p={p}");
+        }
+    }
+
+    #[test]
+    fn histogram_percentiles_are_monotone() {
+        let mut h = LatencyHistogram::new();
+        let mut x = 1u64;
+        for _ in 0..5000 {
+            // Deterministic spread over several decades.
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = 1e-4 * (1.0 + (x >> 40) as f64 / 1e3);
+            h.record(v * ((x >> 60) + 1) as f64);
+        }
+        let (p50, p90, p99, p999) = (h.p50(), h.p90(), h.p99(), h.p999());
+        assert!(h.min_secs() <= p50, "{} > {p50}", h.min_secs());
+        assert!(p50 <= p90 && p90 <= p99 && p99 <= p999, "{p50} {p90} {p99} {p999}");
+        assert!(p999 <= h.max_secs());
+    }
+
+    #[test]
+    fn histogram_clamps_out_of_range_samples() {
+        let mut h = LatencyHistogram::new();
+        h.record(1e-9); // below bucket 0 lower edge
+        h.record(1e6); // above the last bucket
+        assert_eq!(h.count(), 2);
+        // Exact extremes survive the bucket clamp.
+        assert_eq!(h.min_secs(), 1e-9);
+        assert_eq!(h.max_secs(), 1e6);
+        assert!(h.p999() <= 1e6);
+    }
+
+    #[test]
+    fn histogram_merge_accumulates() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(0.001);
+        b.record(0.1);
+        b.record(0.2);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.min_secs(), 0.001);
+        assert_eq!(a.max_secs(), 0.2);
+        let mut empty = LatencyHistogram::new();
+        empty.merge(&a);
+        assert_eq!(empty.count(), 3);
+        a.merge(&LatencyHistogram::new());
+        assert_eq!(a.count(), 3);
     }
 }
