@@ -12,13 +12,15 @@ build:
 test:
 	cargo build --release && cargo test -q
 
-# The perf-trajectory benches: the simulation kernel and the cloud serving
-# layer (write BENCH_simkernel.json / BENCH_serving.json — the
-# machine-readable baselines CI's bench-smoke / serving-smoke jobs check)
-# plus the L3 hot-path microbenchmarks.  All run artifact-free.
+# The perf-trajectory benches: the simulation kernel, the cloud serving
+# layer and the multi-cell cluster (write BENCH_simkernel.json /
+# BENCH_serving.json / BENCH_cluster.json — the machine-readable baselines
+# CI's bench-smoke / serving-smoke / cluster-smoke jobs check) plus the L3
+# hot-path microbenchmarks.  All run artifact-free.
 bench:
 	cargo bench --bench simkernel -- --out BENCH_simkernel.json
 	cargo bench --bench serving -- --out BENCH_serving.json
+	cargo bench --bench cluster -- --out BENCH_cluster.json
 	cargo bench --bench scenario_matrix -- --out BENCH_scenario_matrix.json
 	cargo bench --bench hotpath
 
@@ -26,6 +28,7 @@ bench:
 bench-quick:
 	cargo bench --bench simkernel -- --quick --out BENCH_simkernel.json
 	cargo bench --bench serving -- --quick --out BENCH_serving.json
+	cargo bench --bench cluster -- --quick --out BENCH_cluster.json
 	cargo bench --bench scenario_matrix -- --quick --out BENCH_scenario_matrix.json
 	cargo bench --bench hotpath
 

@@ -1,0 +1,301 @@
+//! Bench: the multi-cell cloud cluster (DESIGN.md "Multi-cell cloud
+//! cluster") — machine-readable `BENCH_cluster.json` for the perf
+//! trajectory, parsed by CI's `cluster-smoke` job against
+//! `ci/bench_floor.json`.
+//!
+//! Sections:
+//!
+//! * **overload** — the same blocking submission flood against K ∈ {1, 2,
+//!   4} cells (one threaded worker and a fixed bounded queue per cell,
+//!   overflow spill on): cluster packets/sec and shed rate vs K.  Adding
+//!   cells grows admission capacity and gives the spill path somewhere to
+//!   go, so the shed rate must fall as K grows.
+//! * **spill_hops** — where the overloaded requests actually served, from
+//!   the largest-K run's per-hop counters (hop 0 = home cell).
+//! * **replication** — a hot home cell whose response cache thrashes (more
+//!   live classes than entries) backed by a ring sibling with headroom.
+//!   Without replication every repeat re-executes; with `--replicas 2`
+//!   each executed fill also lands on the sibling, so repeats come back as
+//!   remote cache hits (and read-repair refills the home cell).  The hit
+//!   rate with replication must be strictly higher.
+//!
+//! Usage: `cargo bench --bench cluster -- [--quick] [--out PATH]`
+//! (`--quick` is what CI runs; default writes `BENCH_cluster.json`).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use avery::bench::header;
+use avery::cloud::{
+    AdmissionPolicy, CloudCluster, CloudPool, ClusterConfig, ServeError, ServingConfig,
+};
+use avery::coordinator::{classify_intent, Lut, TierId};
+use avery::dataset::{Corpus, Dataset};
+use avery::edge::EdgePipeline;
+use avery::energy::DeviceModel;
+use avery::packet::Packet;
+use avery::runtime::Engine;
+
+struct Args {
+    quick: bool,
+    out: String,
+}
+
+fn parse_args() -> Args {
+    let mut args = Args { quick: false, out: "BENCH_cluster.json".to_string() };
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--quick" => args.quick = true,
+            "--out" => {
+                if let Some(v) = argv.get(i + 1) {
+                    args.out = v.clone();
+                    i += 1;
+                }
+            }
+            other => {
+                if let Some(v) = other.strip_prefix("--out=") {
+                    args.out = v.to_string();
+                }
+                // `cargo bench` passes `--bench`; ignore unknown flags.
+            }
+        }
+        i += 1;
+    }
+    args
+}
+
+/// Insight packets spread over `classes` distinct (split, tier) routing
+/// classes x `per_class` distinct scenes — a flood that exercises the
+/// consistent-hash router, not just one cell.
+fn build_class_mix(classes: usize, per_class: usize, img: usize) -> (Vec<Packet>, Vec<i32>) {
+    let engine = Engine::synthetic();
+    let ds = Dataset::synthetic(Corpus::Flood, per_class, img, 0xF10D0);
+    let mut edge = EdgePipeline::new(engine, DeviceModel::jetson_mode_30w(8), Lut::paper());
+    let mut pkts = Vec::with_capacity(classes * per_class);
+    for c in 0..classes {
+        let split = 1 + c % 3;
+        let tier = TierId::ALL[(c / 3) % 3];
+        for (i, s) in ds.scenes.iter().enumerate() {
+            pkts.push(edge.capture_insight(s, split, tier, i as f64).unwrap().0);
+        }
+    }
+    (pkts, classify_intent("highlight the stranded people").token_ids)
+}
+
+/// Flood a K-cell cluster (one threaded worker, bounded queue and shed
+/// admission per cell, spill on) from `submitters` blocking threads.
+/// Returns (completed, cluster_shed, packets_per_sec, shed_rate,
+/// served_at_hop).
+fn overload(
+    cells: usize,
+    pkts: &[Packet],
+    ids: &[i32],
+    submitters: usize,
+    per: usize,
+) -> (u64, u64, f64, f64, Vec<u64>) {
+    let serving = ServingConfig {
+        batch_max: 4,
+        queue_depth: 2,
+        admission: AdmissionPolicy::Shed,
+        ..ServingConfig::default()
+    };
+    // One *fresh* threaded engine per cell — a cloned threaded handle would
+    // share a single engine thread, and the point is that adding cells adds
+    // real capacity.
+    let pools = (0..cells)
+        .map(|_| CloudPool::with_config(vec![Engine::synthetic_threaded()], serving.clone()))
+        .collect();
+    let cluster = CloudCluster::from_pools(
+        pools,
+        ClusterConfig { spill_max: 3, serving, ..ClusterConfig::default() },
+    );
+    for p in pkts.iter().take(8) {
+        let _ = cluster.try_process(p, ids, "ft");
+    }
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..submitters {
+            let cluster = &cluster;
+            s.spawn(move || {
+                for i in 0..per {
+                    match cluster.try_process(&pkts[(t * per + i) % pkts.len()], ids, "ft") {
+                        Ok(_) | Err(ServeError::Shed { .. }) => {}
+                        Err(e) => panic!("overload flood hit a fatal error: {e}"),
+                    }
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let st = cluster.stats();
+    let completed = st.total.completed;
+    let shed = st.shed;
+    let pps = completed as f64 / elapsed.max(1e-9);
+    let shed_rate = shed as f64 / (completed + shed).max(1) as f64;
+    (completed, shed, pps, shed_rate, st.served_at_hop)
+}
+
+/// The replication arm: a two-cell cluster where every request class homes
+/// at a cell whose cache holds fewer entries than the live class count
+/// (guaranteed thrash), while the ring sibling has headroom.  Runs a
+/// round-robin repeated-query mix and returns (hit_rate, cache_hits,
+/// cache_misses, remote_hits).
+fn replication_arm(replicas: usize, rounds: usize) -> (f64, u64, u64, u64) {
+    let engine = Engine::synthetic();
+    let ds = Dataset::synthetic(Corpus::Flood, 1, 16, 0x5EED);
+    let mut edge =
+        EdgePipeline::new(engine.clone(), DeviceModel::jetson_mode_30w(8), Lut::paper());
+    let ids = classify_intent("highlight the stranded people").token_ids;
+
+    // Candidate classes over (split, tier); keep 5 that share a home cell.
+    let probe_cfg = ClusterConfig { cells: 2, ..ClusterConfig::default() };
+    let probe = CloudCluster::with_config(vec![engine.clone()], probe_cfg);
+    let mut classes: Vec<Packet> = Vec::new();
+    let mut home = None;
+    'outer: for split in 1..=8usize {
+        for tier in TierId::ALL {
+            let (pkt, _) = edge.capture_insight(&ds.scenes[0], split, tier, 0.0).unwrap();
+            let h = probe.placement(&pkt, "ft")[0];
+            if *home.get_or_insert(h) == h {
+                classes.push(pkt);
+                if classes.len() == 5 {
+                    break 'outer;
+                }
+            }
+        }
+    }
+    let home = home.expect("no routing classes found");
+    assert_eq!(classes.len(), 5, "not enough classes share home cell {home}");
+
+    // Home cell: cache smaller than the class count (thrashes).  Sibling:
+    // room for everything.  Both serve inline.
+    let pool = |entries: usize| {
+        CloudPool::with_config(
+            vec![engine.clone()],
+            ServingConfig { cache_entries: entries, ..ServingConfig::default() },
+        )
+    };
+    let pools: Vec<CloudPool> =
+        (0..2).map(|i| if i == home { pool(2) } else { pool(64) }).collect();
+    let cluster = CloudCluster::from_pools(
+        pools,
+        ClusterConfig {
+            replicas,
+            serving: ServingConfig { cache_entries: 2, ..ServingConfig::default() },
+            ..ClusterConfig::default()
+        },
+    );
+
+    for r in 0..rounds {
+        for pkt in &classes {
+            cluster.process_sync(pkt, &ids, "ft").unwrap_or_else(|e| {
+                panic!("replication mix failed on round {r}: {e}");
+            });
+        }
+    }
+    let st = cluster.stats();
+    let lookups = (st.total.cache_hits + st.total.cache_misses).max(1);
+    (
+        st.total.cache_hits as f64 / lookups as f64,
+        st.total.cache_hits,
+        st.total.cache_misses,
+        st.remote_hits_total(),
+    )
+}
+
+fn jf(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.4}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    let mode = if args.quick { "quick" } else { "full" };
+    let flood_per = if args.quick { 400 } else { 2_000 };
+    let rounds = if args.quick { 50 } else { 400 };
+    let submitters = 8;
+
+    // ---- overload: shed rate vs K ----------------------------------------
+    header("cluster overload: shed rate vs cell count (fixed flood, spill on)");
+    let (pkts, ids) = build_class_mix(6, 8, 16);
+    let mut over: Vec<(usize, u64, u64, f64, f64, Vec<u64>)> = Vec::new();
+    for &cells in &[1usize, 2, 4] {
+        let (completed, shed, pps, shed_rate, hops) =
+            overload(cells, &pkts, &ids, submitters, flood_per);
+        println!(
+            "K={cells}: {pps:>10.0} packets/s, {completed} served, {shed} shed \
+             ({:.1}% shed rate)",
+            shed_rate * 100.0
+        );
+        over.push((cells, completed, shed, pps, shed_rate, hops));
+    }
+    let (_, _, _, pps_kmax, shed_kmax, hops_kmax) = over.last().unwrap().clone();
+    let shed_k1 = over[0].4;
+    println!(
+        "shed rate K=1 -> K=4: {:.1}% -> {:.1}%",
+        shed_k1 * 100.0,
+        shed_kmax * 100.0
+    );
+
+    // ---- spill-hop distribution (largest K) ------------------------------
+    header("spill-hop distribution at K=4 (hop 0 = home cell)");
+    for (h, n) in hops_kmax.iter().enumerate() {
+        println!("hop {h}: {n} served");
+    }
+
+    // ---- replication: hit rate with/without ------------------------------
+    header("cache replication: thrashing home cell backed by a ring sibling");
+    let (rate_off, hits_off, misses_off, _) = replication_arm(1, rounds);
+    let (rate_on, hits_on, misses_on, remote_on) = replication_arm(2, rounds);
+    println!(
+        "replicas=1: hit rate {:>5.1}%  ({hits_off} hits / {misses_off} misses)",
+        rate_off * 100.0
+    );
+    println!(
+        "replicas=2: hit rate {:>5.1}%  ({hits_on} hits / {misses_on} misses, \
+         {remote_on} remote)",
+        rate_on * 100.0
+    );
+
+    // ---- machine-readable output -----------------------------------------
+    let over_json: Vec<String> = over
+        .iter()
+        .map(|(cells, completed, shed, pps, shed_rate, hops)| {
+            let hops: Vec<String> = hops.iter().map(|n| n.to_string()).collect();
+            format!(
+                "{{\"cells\":{cells},\"completed\":{completed},\"shed\":{shed},\
+                 \"packets_per_sec\":{},\"shed_rate\":{},\"spill_hops\":[{}]}}",
+                jf(*pps),
+                jf(*shed_rate),
+                hops.join(",")
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\"schema\":1,\"bench\":\"cluster\",\"mode\":\"{mode}\",\
+         \"overload\":[{}],\
+         \"cluster_packets_per_sec\":{},\
+         \"shed_rate_k1\":{},\
+         \"shed_rate_kmax\":{},\
+         \"replication\":{{\"classes\":5,\"rounds\":{rounds},\
+         \"hit_rate_without\":{},\"hit_rate_with\":{},\
+         \"hits_without\":{hits_off},\"misses_without\":{misses_off},\
+         \"hits_with\":{hits_on},\"misses_with\":{misses_on},\
+         \"remote_hits\":{remote_on}}}}}",
+        over_json.join(","),
+        jf(pps_kmax),
+        jf(shed_k1),
+        jf(shed_kmax),
+        jf(rate_off),
+        jf(rate_on),
+    );
+    std::fs::write(&args.out, format!("{json}\n"))?;
+    println!("\nwrote {}", args.out);
+    Ok(())
+}

@@ -1,0 +1,727 @@
+//! The multi-cell cloud cluster (DESIGN.md "Multi-cell cloud cluster"):
+//! K [`CloudPool`] cells behind a consistent-hash router, with overflow
+//! spill and optional response-cache replication.
+//!
+//! Three mechanisms compose on top of PR 5's single admission-controlled
+//! pool, all inert at the `--cells 1` default (a one-cell cluster delegates
+//! every request to its pool untouched, so defaults stay byte-identical to
+//! the pre-cluster output):
+//!
+//! * **Consistent-hash routing** — requests hash on (artifact, weight-set)
+//!   ([`route_key`]) onto a vnode ring ([`HashRing`]), so every request for
+//!   one artifact/set pair lands on the same *home* cell and micro-batches
+//!   stay compatible within a cell.  The ring is pure arithmetic
+//!   (splitmix64 vnode points, FNV-1a route keys) — no `HashMap` iteration,
+//!   no per-process seed — so placement is deterministic across runs and
+//!   platforms (pinned by `rust/tests/cluster.rs`).
+//! * **Overflow spill** — a `Shed` verdict at the home cell retries at the
+//!   next ring sibling, up to `spill_max` extra cells, each hop charging
+//!   `hop_latency_secs` of modeled inter-cell latency onto the request's
+//!   virtual tail.  An exhausted spill surfaces
+//!   [`ServeError::Shed`]` { hops }` — the typed shed now carries how far
+//!   the request traveled before giving up.
+//! * **Cache replication** — PR 5's content-addressed keys are
+//!   location-independent, so with `replicas R > 1` a home-cell cache miss
+//!   probes the R-1 ring-successor replica caches (one modeled hop); an
+//!   executed fill propagates to the whole replica set through
+//!   [`CloudPool::cache_replicate`] (which counts no extra misses — the
+//!   one executed miss is counted at the executing cell), and a remote hit
+//!   read-repairs the home cache so the next identical request is local.
+//!
+//! Aggregation: [`ClusterStats`] merges per-cell [`PoolStats`] through
+//! [`PoolStats::merge`] — counters add and the latency histograms merge
+//! bucket-wise, so cross-cell percentiles are exact.  Virtual latency
+//! ([`ServePackets::observe_latency`]) is recorded cluster-level: the trait
+//! observes a request *after* the mission charges it, with no cell
+//! identity, and the cluster is the serving endpoint the mission sees.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::coordinator::{classify_intent, TierId};
+use crate::edge::tail_artifact_name;
+use crate::packet::{Packet, StreamKind};
+use crate::runtime::Engine;
+use crate::telemetry::LatencyHistogram;
+use crate::transport::{decode_request, Transport, BUSY_FRAME};
+
+use super::serving::{cache_key, fnv64, CloudPool, PoolStats, ServeError, ServingConfig};
+use super::{ServePackets, Served};
+
+/// Default modeled inter-cell hop latency (virtual seconds): one
+/// intra-datacenter round trip between serving cells, an order of
+/// magnitude below the paper's edge–cloud tail latencies so spill helps
+/// rather than dominates.
+pub const DEFAULT_HOP_LATENCY_SECS: f64 = 0.002;
+
+/// Vnodes per cell on the ring: enough virtual points that the interned
+/// artifact table (≈100 route keys) spreads within a small imbalance
+/// factor across up to 16 cells, cheap enough that ring construction is
+/// microseconds.
+const VNODES_PER_CELL: usize = 96;
+
+/// SplitMix64 finalizer — the vnode point hash.  Pure arithmetic, so ring
+/// geometry is identical on every platform and run.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The cluster route key: FNV-1a over the artifact name the request will
+/// execute and the weight set it names — exactly the micro-batcher's
+/// compatibility class, so co-routable requests are co-batchable.  A
+/// packet with an invalid tier index cannot name an artifact; it routes on
+/// the raw (kind, tier, split) triple instead and errors at decode
+/// wherever it lands.
+pub fn route_key(pkt: &Packet, set: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let tier = match pkt.tier {
+        0 => Some(TierId::HighAccuracy),
+        1 => Some(TierId::Balanced),
+        2 => Some(TierId::HighThroughput),
+        _ => None,
+    };
+    match (pkt.kind, tier) {
+        (StreamKind::Context, _) => h = fnv64(h, b"context_respond"),
+        (StreamKind::Insight, Some(tier)) => {
+            h = fnv64(h, tail_artifact_name(pkt.split as usize, tier).as_bytes());
+        }
+        (StreamKind::Insight, None) => {
+            h = fnv64(h, &[pkt.kind as u8, pkt.tier, pkt.split]);
+        }
+    }
+    // Separator byte so (artifact, set) pairs cannot collide by
+    // concatenation ("a" + "bc" vs "ab" + "c").
+    h = fnv64(h, &[0xFF]);
+    fnv64(h, set.as_bytes())
+}
+
+/// A consistent-hash ring: each cell contributes [`VNODES_PER_CELL`]
+/// points; a key routes to the first point clockwise from its hash.
+/// Removing one cell removes only that cell's points, so only keys homed
+/// on it remap (the stability property, pinned by `rust/tests/cluster.rs`).
+#[derive(Clone, Debug)]
+pub struct HashRing {
+    /// (point hash, cell index), sorted by hash.
+    points: Vec<(u64, usize)>,
+    cells: usize,
+}
+
+impl HashRing {
+    pub fn new(cells: usize) -> Self {
+        Self::with_vnodes(cells, VNODES_PER_CELL)
+    }
+
+    pub fn with_vnodes(cells: usize, vnodes: usize) -> Self {
+        assert!(cells >= 1, "a ring needs at least one cell");
+        assert!(vnodes >= 1, "a cell needs at least one vnode");
+        let mut points = Vec::with_capacity(cells * vnodes);
+        for cell in 0..cells {
+            for v in 0..vnodes {
+                points.push((splitmix64(((cell as u64) << 32) | v as u64), cell));
+            }
+        }
+        // Sort by (hash, cell); on an (astronomically unlikely) point
+        // collision the lowest cell index deterministically keeps it.
+        points.sort_unstable();
+        points.dedup_by_key(|p| p.0);
+        Self { points, cells }
+    }
+
+    /// Number of cells this ring was built over (removed cells included —
+    /// cell indices are stable identities, not a dense range).
+    pub fn cells(&self) -> usize {
+        self.cells
+    }
+
+    /// First point clockwise from `key` (wrapping).
+    fn successor_idx(&self, key: u64) -> usize {
+        let i = self.points.partition_point(|p| p.0 < key);
+        if i == self.points.len() {
+            0
+        } else {
+            i
+        }
+    }
+
+    /// The home cell for `key`.
+    pub fn cell_for(&self, key: u64) -> usize {
+        assert!(!self.points.is_empty(), "ring has no cells left");
+        self.points[self.successor_idx(key)].1
+    }
+
+    /// All distinct cells in ring order starting from `key`'s home — the
+    /// spill order (element 0 is home, element 1 the first sibling, …) and
+    /// the replica placement (the first R elements hold the entry).
+    pub fn cells_from(&self, key: u64) -> Vec<usize> {
+        assert!(!self.points.is_empty(), "ring has no cells left");
+        let mut out = Vec::with_capacity(self.cells);
+        let mut seen = vec![false; self.cells];
+        let start = self.successor_idx(key);
+        for off in 0..self.points.len() {
+            let (_, cell) = self.points[(start + off) % self.points.len()];
+            if !seen[cell] {
+                seen[cell] = true;
+                out.push(cell);
+            }
+        }
+        out
+    }
+
+    /// Remove one cell's points (cluster shrink).  Every other cell's
+    /// points are untouched, so only keys homed on the removed cell remap.
+    /// The last cell cannot be removed.
+    pub fn remove_cell(&mut self, cell: usize) {
+        assert!(
+            self.points.iter().any(|&(_, c)| c != cell),
+            "cannot remove the last cell from the ring"
+        );
+        self.points.retain(|&(_, c)| c != cell);
+    }
+}
+
+/// Cluster configuration.  The defaults are a single cell with no
+/// replication — behaviorally identical to a bare [`CloudPool`] running
+/// `serving`, which is what keeps `--cells 1` (and flagless) mission
+/// output byte-identical to pre-cluster runs.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Number of pool cells (≥ 1; 1 = plain single pool).
+    pub cells: usize,
+    /// Cache replica count R (≥ 1; 1 = no replication).  An entry lives on
+    /// the first R cells in ring order from its route key.
+    pub replicas: usize,
+    /// Modeled inter-cell latency per hop (virtual seconds), charged onto
+    /// the request's tail for spill retries and sibling-cache hits.
+    pub hop_latency_secs: f64,
+    /// Maximum ring siblings to try after the home cell sheds (0 = no
+    /// spill).
+    pub spill_max: u32,
+    /// Per-cell serving configuration (batching, cache, admission — each
+    /// cell runs its own queue, cache and admission bound).
+    pub serving: ServingConfig,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            cells: 1,
+            replicas: 1,
+            hop_latency_secs: DEFAULT_HOP_LATENCY_SECS,
+            spill_max: 1,
+            serving: ServingConfig::default(),
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// True when the cluster layer is actually multi-cell — drives whether
+    /// the fleet/scenario missions emit the extra cluster telemetry
+    /// (single-cell reports stay byte-identical to pre-cluster ones).
+    pub fn multi_cell(&self) -> bool {
+        self.cells > 1
+    }
+}
+
+/// Aggregated cluster counters: per-cell [`PoolStats`] plus the merged
+/// total ([`PoolStats::merge`] — counters add, histograms merge
+/// bucket-wise) and the cluster-level routing telemetry.
+#[derive(Clone, Debug)]
+pub struct ClusterStats {
+    pub cells: usize,
+    pub per_cell: Vec<PoolStats>,
+    /// Merged across cells.  `lat_context`/`lat_insight` carry the
+    /// cluster-level virtual-latency histograms (recorded through
+    /// [`ServePackets::observe_latency`], which sees no cell identity);
+    /// the wall-clock histograms are exact bucket-wise merges of the
+    /// per-cell ones.
+    pub total: PoolStats,
+    /// Sibling-cache hits answered BY each cell for requests homed
+    /// elsewhere (the replication payoff, attributed to the cell that
+    /// held the entry).
+    pub remote_hits: Vec<u64>,
+    /// Requests served at spill hop h (index 0 = home, 1 = first sibling,
+    /// …) — the spill-hop distribution the bench reports.
+    pub served_at_hop: Vec<u64>,
+    /// Requests that exhausted spill and surfaced a cluster-level shed
+    /// (distinct from `total.shed`, which counts every per-cell refusal
+    /// along the way).
+    pub shed: u64,
+}
+
+impl ClusterStats {
+    /// Requests served off their home cell (spill successes).
+    pub fn spilled(&self) -> u64 {
+        self.served_at_hop.iter().skip(1).sum()
+    }
+
+    /// Sibling-cache hits across all cells.
+    pub fn remote_hits_total(&self) -> u64 {
+        self.remote_hits.iter().sum()
+    }
+}
+
+/// K [`CloudPool`] cells behind the consistent-hash router — the module
+/// docs describe the routing/spill/replication composition.  Implements
+/// [`ServePackets`], so the fleet simulator and the transport sessions use
+/// it exactly where a single pool went.
+pub struct CloudCluster {
+    pools: Vec<CloudPool>,
+    ring: HashRing,
+    cfg: ClusterConfig,
+    /// Cluster-level per-class virtual latency `[Context, Insight]` (the
+    /// mission observes latency against the cluster, not a cell).
+    vlat: Mutex<[LatencyHistogram; 2]>,
+    /// Per-cell sibling-cache hits (see [`ClusterStats::remote_hits`]).
+    remote_hits: Vec<AtomicU64>,
+    /// Served-at-hop distribution, length `min(cells, spill_max + 1)`.
+    served_at_hop: Vec<AtomicU64>,
+    /// Exhausted-spill sheds surfaced to callers.
+    shed: AtomicU64,
+}
+
+impl CloudCluster {
+    /// Build `cfg.cells` cells, each a [`CloudPool`] over a clone of
+    /// `cell_engines` (so a cluster with W workers per cell runs K·W
+    /// workers total) and a clone of `cfg.serving`.
+    pub fn with_config(cell_engines: Vec<Engine>, cfg: ClusterConfig) -> Self {
+        let cells = cfg.cells.max(1);
+        let pools = (0..cells)
+            .map(|_| CloudPool::with_config(cell_engines.clone(), cfg.serving.clone()))
+            .collect();
+        Self::from_pools_internal(pools, cfg)
+    }
+
+    /// Assemble a cluster from pre-built cells — the seam the tests and
+    /// benches use to give individual cells distinct shapes (a saturated
+    /// home next to an idle sibling).  `cfg.cells` is overridden by
+    /// `pools.len()`.
+    pub fn from_pools(pools: Vec<CloudPool>, cfg: ClusterConfig) -> Self {
+        Self::from_pools_internal(pools, cfg)
+    }
+
+    fn from_pools_internal(pools: Vec<CloudPool>, mut cfg: ClusterConfig) -> Self {
+        assert!(!pools.is_empty(), "a cluster needs at least one cell");
+        cfg.cells = pools.len();
+        let hops = (cfg.spill_max as usize + 1).min(pools.len());
+        Self {
+            ring: HashRing::new(pools.len()),
+            remote_hits: (0..pools.len()).map(|_| AtomicU64::new(0)).collect(),
+            served_at_hop: (0..hops).map(|_| AtomicU64::new(0)).collect(),
+            shed: AtomicU64::new(0),
+            vlat: Mutex::new([LatencyHistogram::new(); 2]),
+            pools,
+            cfg,
+        }
+    }
+
+    pub fn cells(&self) -> usize {
+        self.pools.len()
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    pub fn ring(&self) -> &HashRing {
+        &self.ring
+    }
+
+    /// One cell's pool (tests/benches introspect per-cell state).
+    pub fn cell(&self, i: usize) -> &CloudPool {
+        &self.pools[i]
+    }
+
+    /// The cells this request maps to, in ring order: element 0 is the
+    /// home cell, the first `replicas` elements are the replica set, and
+    /// the spill path walks the prefix.
+    pub fn placement(&self, pkt: &Packet, set: &str) -> Vec<usize> {
+        self.ring.cells_from(route_key(pkt, set))
+    }
+
+    /// Route, probe, spill: the cluster request path.  See the module docs
+    /// for the state machine; the single-cell fast path delegates straight
+    /// to the pool (no ring walk, no probe — byte-identical behavior and
+    /// counters to a bare pool).
+    pub fn try_process(
+        &self,
+        pkt: &Packet,
+        prompt_ids: &[i32],
+        set: &str,
+    ) -> Result<Served, ServeError> {
+        if self.pools.len() == 1 {
+            return self.pools[0].try_process(pkt, prompt_ids, set);
+        }
+        let order = self.ring.cells_from(route_key(pkt, set));
+        let home = order[0];
+        let caching = self.cfg.serving.cache_entries > 0;
+        let replicating = caching && self.cfg.replicas > 1;
+        let key = caching.then(|| cache_key(pkt, prompt_ids, set));
+
+        if replicating {
+            let key = key.expect("replication implies caching");
+            // Home probe first (free: same lookup the pool would do), then
+            // the R-1 sibling replicas.  Sibling probes model one parallel
+            // inter-cell round trip, so a remote hit costs exactly one hop
+            // whatever replica rank answered.
+            if let Some(resp) = self.pools[home].cache_probe(key, pkt.t_capture) {
+                self.served_at_hop[0].fetch_add(1, Ordering::Relaxed);
+                return Ok(Served { resp, cache_hit: true, hops: 0, hop_secs: 0.0, cell: home });
+            }
+            for &cell in order.iter().take(self.cfg.replicas).skip(1) {
+                let Some(resp) = self.pools[cell].cache_probe(key, pkt.t_capture) else {
+                    continue;
+                };
+                self.remote_hits[cell].fetch_add(1, Ordering::Relaxed);
+                // Read-repair: the next identical request hits home with
+                // zero hops.
+                self.pools[home].cache_replicate(key, &resp, pkt.t_capture);
+                return Ok(Served {
+                    resp,
+                    cache_hit: true,
+                    hops: 1,
+                    hop_secs: self.cfg.hop_latency_secs,
+                    cell,
+                });
+            }
+        }
+
+        // Execute at home; on a shed, spill clockwise up to `spill_max`
+        // ring siblings, each hop charging one inter-cell latency.
+        let tries = order.len().min(self.cfg.spill_max as usize + 1);
+        for (hop, &cell) in order.iter().take(tries).enumerate() {
+            match self.pools[cell].try_process(pkt, prompt_ids, set) {
+                Ok(served) => {
+                    self.served_at_hop[hop.min(self.served_at_hop.len() - 1)]
+                        .fetch_add(1, Ordering::Relaxed);
+                    if replicating && !served.cache_hit {
+                        let key = key.expect("replication implies caching");
+                        // Propagate the executed fill to the replica set;
+                        // the executing cell already filled its own cache
+                        // (and counted the one miss).
+                        for &rc in order.iter().take(self.cfg.replicas) {
+                            if rc != cell {
+                                self.pools[rc].cache_replicate(key, &served.resp, pkt.t_capture);
+                            }
+                        }
+                    }
+                    return Ok(Served {
+                        resp: served.resp,
+                        cache_hit: served.cache_hit,
+                        hops: hop as u32,
+                        hop_secs: hop as f64 * self.cfg.hop_latency_secs,
+                        cell,
+                    });
+                }
+                // A shed spills to the next sibling; Closed/Exec are
+                // request-fatal and surface immediately.
+                Err(ServeError::Shed { .. }) => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        Err(ServeError::Shed { hops: tries.saturating_sub(1) as u32 })
+    }
+
+    /// [`CloudCluster::try_process`] with the typed error folded into
+    /// anyhow (the [`ServePackets`] surface).
+    pub fn process_sync(&self, pkt: &Packet, prompt_ids: &[i32], set: &str) -> Result<Served> {
+        self.try_process(pkt, prompt_ids, set).map_err(anyhow::Error::from)
+    }
+
+    /// Per-cell and merged counters — see [`ClusterStats`].
+    pub fn stats(&self) -> ClusterStats {
+        let per_cell: Vec<PoolStats> = self.pools.iter().map(|p| p.stats()).collect();
+        let mut total = PoolStats::default();
+        for s in &per_cell {
+            total.merge(s);
+        }
+        // Virtual latency is recorded cluster-level (the per-cell virtual
+        // histograms are empty — observe_latency has no cell identity).
+        let [lat_context, lat_insight] = *self.vlat.lock().unwrap();
+        total.lat_context = lat_context;
+        total.lat_insight = lat_insight;
+        ClusterStats {
+            cells: per_cell.len(),
+            per_cell,
+            total,
+            remote_hits: self.remote_hits.iter().map(|a| a.load(Ordering::Relaxed)).collect(),
+            served_at_hop: self.served_at_hop.iter().map(|a| a.load(Ordering::Relaxed)).collect(),
+            shed: self.shed.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Serve one transport session against the cluster — the same wire
+    /// protocol as [`CloudPool::serve_session`] (`hello <set>` pinning,
+    /// [`super::encode_response`] framing), but requests route through the
+    /// ring: a session request whose home cell sheds spills before the
+    /// `busy` frame goes out, so the client sees backpressure only when
+    /// the whole spill path is saturated.
+    pub fn serve_session<T: Transport>(&self, transport: &mut T, default_set: &str) -> Result<u64> {
+        let mut session_set = default_set.to_string();
+        let mut served = 0u64;
+        loop {
+            let frame = match transport.recv() {
+                Ok(f) => f,
+                Err(_) => break, // peer closed
+            };
+            if frame == b"shutdown" {
+                break;
+            }
+            if let Some(set) = frame.strip_prefix(b"hello ") {
+                session_set = String::from_utf8_lossy(set).trim().to_string();
+                transport.send(b"ok")?;
+                continue;
+            }
+            let (pkt_bytes, prompt, set) = decode_request(&frame)?;
+            let pkt = Packet::decode(&pkt_bytes)?;
+            let intent = classify_intent(&prompt);
+            let set = if set.is_empty() { session_set.as_str() } else { set.as_str() };
+            match self.try_process(&pkt, &intent.token_ids, set) {
+                Ok(r) => {
+                    transport.send(&super::encode_response(&r.resp))?;
+                    served += 1;
+                }
+                Err(ServeError::Shed { .. }) => transport.send(BUSY_FRAME)?,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(served)
+    }
+}
+
+impl ServePackets for CloudCluster {
+    fn serve(&self, pkt: &Packet, prompt_ids: &[i32], set: &str) -> Result<Served> {
+        self.process_sync(pkt, prompt_ids, set)
+    }
+
+    fn observe_latency(&self, kind: StreamKind, virtual_secs: f64) {
+        self.vlat.lock().unwrap()[kind as usize].record(virtual_secs);
+    }
+
+    fn latency_histograms(&self) -> Option<(LatencyHistogram, LatencyHistogram)> {
+        let l = self.vlat.lock().unwrap();
+        Some((l[0], l[1]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{classify_intent, Lut};
+    use crate::dataset::{Corpus, Dataset};
+    use crate::edge::EdgePipeline;
+    use crate::energy::DeviceModel;
+
+    fn sample_packets(n: usize) -> (Vec<Packet>, Vec<i32>) {
+        let engine = Engine::synthetic();
+        let ds = Dataset::synthetic(Corpus::Flood, n, 16, 0xF10D0);
+        let mut edge = EdgePipeline::new(engine, DeviceModel::jetson_mode_30w(8), Lut::paper());
+        let pkts = ds
+            .scenes
+            .iter()
+            .map(|s| edge.capture_insight(s, 1, TierId::HighAccuracy, 0.0).unwrap().0)
+            .collect();
+        (pkts, classify_intent("highlight the stranded people").token_ids)
+    }
+
+    #[test]
+    fn single_cell_cluster_matches_bare_pool() {
+        let engine = Engine::synthetic();
+        let (pkts, ids) = sample_packets(2);
+        let serving = ServingConfig { cache_entries: 8, ..ServingConfig::default() };
+        let pool = CloudPool::with_config(vec![engine.clone()], serving.clone());
+        let cluster = CloudCluster::with_config(
+            vec![engine],
+            ClusterConfig { cells: 1, serving, ..ClusterConfig::default() },
+        );
+        for pkt in &pkts {
+            for _ in 0..2 {
+                let a = pool.process_sync(pkt, &ids, "ft").unwrap();
+                let b = cluster.process_sync(pkt, &ids, "ft").unwrap();
+                assert_eq!(a.resp.presence, b.resp.presence);
+                assert_eq!(a.resp.mask_logits, b.resp.mask_logits);
+                assert_eq!(a.cache_hit, b.cache_hit);
+                assert_eq!((b.hops, b.hop_secs, b.cell), (0, 0.0, 0));
+            }
+        }
+        let (ps, cs) = (pool.stats(), cluster.stats());
+        assert_eq!(ps.completed, cs.total.completed);
+        assert_eq!(ps.cache_hits, cs.total.cache_hits);
+        assert_eq!(ps.cache_misses, cs.total.cache_misses);
+        assert_eq!(cs.shed, 0);
+    }
+
+    #[test]
+    fn routing_keeps_batches_compatible_and_sticky() {
+        let (pkts, ids) = sample_packets(4);
+        let cluster = CloudCluster::with_config(
+            vec![Engine::synthetic()],
+            ClusterConfig { cells: 4, ..ClusterConfig::default() },
+        );
+        // Every packet here shares (kind, tier, split, set) — the batch
+        // compatibility class — so all land on one cell, repeatedly.
+        let homes: Vec<usize> =
+            pkts.iter().map(|p| cluster.placement(p, "ft")[0]).collect();
+        assert!(homes.windows(2).all(|w| w[0] == w[1]), "{homes:?}");
+        // A different weight set (a different compatibility class) may
+        // land elsewhere, and its placement is just as deterministic.
+        assert_eq!(cluster.placement(&pkts[0], "orig"), cluster.placement(&pkts[0], "orig"));
+        let _ = ids;
+    }
+
+    #[test]
+    fn spill_serves_at_sibling_when_home_sheds() {
+        let (pkts, ids) = sample_packets(1);
+        let serving = ServingConfig { queue_depth: 1, ..ServingConfig::default() };
+        let cfg = ClusterConfig {
+            replicas: 1,
+            hop_latency_secs: 0.25,
+            spill_max: 1,
+            serving: serving.clone(),
+            ..ClusterConfig::default()
+        };
+        let home = HashRing::new(2).cell_for(route_key(&pkts[0], "ft"));
+        // The home cell has no workers and one admission slot, which a
+        // parked ticket holds for the whole test — every arrival there
+        // sheds.  The sibling executes inline.
+        let mk_cell = |idx: usize| {
+            if idx == home {
+                CloudPool::with_config(Vec::new(), serving.clone())
+            } else {
+                CloudPool::with_config(vec![Engine::synthetic()], serving.clone())
+            }
+        };
+        let cluster = CloudCluster::from_pools(vec![mk_cell(0), mk_cell(1)], cfg);
+        let _parked = cluster.cell(home).submit(&pkts[0], &ids, "ft").unwrap();
+        let served = cluster.try_process(&pkts[0], &ids, "ft").unwrap();
+        assert_eq!(served.hops, 1);
+        assert!((served.hop_secs - 0.25).abs() < 1e-12);
+        assert_eq!(served.cell, 1 - home);
+        let st = cluster.stats();
+        assert_eq!(st.served_at_hop, vec![0, 1]);
+        assert_eq!(st.spilled(), 1);
+        assert_eq!(st.per_cell[home].shed, 1, "home refusal still counted per-cell");
+        assert_eq!(st.shed, 0, "spill succeeded — no cluster-level shed");
+    }
+
+    #[test]
+    fn exhausted_spill_sheds_with_hop_count() {
+        let (pkts, ids) = sample_packets(1);
+        let serving = ServingConfig { queue_depth: 1, ..ServingConfig::default() };
+        let cfg = ClusterConfig {
+            spill_max: 2,
+            serving: serving.clone(),
+            ..ClusterConfig::default()
+        };
+        // Three cells, all workerless with one slot each, all parked full.
+        let pools: Vec<CloudPool> =
+            (0..3).map(|_| CloudPool::with_config(Vec::new(), serving.clone())).collect();
+        let cluster = CloudCluster::from_pools(pools, cfg);
+        let parked: Vec<_> =
+            (0..3).map(|i| cluster.cell(i).submit(&pkts[0], &ids, "ft").unwrap()).collect();
+        match cluster.try_process(&pkts[0], &ids, "ft") {
+            Err(ServeError::Shed { hops }) => assert_eq!(hops, 2),
+            other => panic!("want exhausted-spill shed, got {other:?}"),
+        }
+        let st = cluster.stats();
+        assert_eq!(st.shed, 1);
+        assert_eq!(st.total.shed, 3, "each cell's refusal counted");
+        // spill_max 0 never leaves home: hops 0.
+        let serving0 = ServingConfig { queue_depth: 1, ..ServingConfig::default() };
+        let cfg0 = ClusterConfig { spill_max: 0, serving: serving0.clone(), ..cluster.cfg.clone() };
+        let pools0: Vec<CloudPool> =
+            (0..3).map(|_| CloudPool::with_config(Vec::new(), serving0.clone())).collect();
+        let cluster0 = CloudCluster::from_pools(pools0, cfg0);
+        let home = cluster0.placement(&pkts[0], "ft")[0];
+        let _p = cluster0.cell(home).submit(&pkts[0], &ids, "ft").unwrap();
+        assert!(matches!(
+            cluster0.try_process(&pkts[0], &ids, "ft"),
+            Err(ServeError::Shed { hops: 0 })
+        ));
+        drop(parked);
+    }
+
+    #[test]
+    fn remote_hit_charges_one_hop_and_read_repairs_home() {
+        let (pkts, ids) = sample_packets(1);
+        let serving = ServingConfig { cache_entries: 8, ..ServingConfig::default() };
+        let cluster = CloudCluster::with_config(
+            vec![Engine::synthetic()],
+            ClusterConfig {
+                cells: 3,
+                replicas: 2,
+                hop_latency_secs: 0.5,
+                serving,
+                ..ClusterConfig::default()
+            },
+        );
+        let order = cluster.placement(&pkts[0], "ft");
+        let (home, replica) = (order[0], order[1]);
+        let key = cache_key(&pkts[0], &ids, "ft");
+        // Seed ONLY the sibling replica (models the home entry having been
+        // evicted while the replica survived).
+        let resp = cluster.cell(replica).process_sync(&pkts[0], &ids, "ft").unwrap().resp;
+        assert!(cluster.cell(home).cache_probe(key, pkts[0].t_capture).is_none());
+        let served = cluster.try_process(&pkts[0], &ids, "ft").unwrap();
+        assert!(served.cache_hit);
+        assert_eq!((served.hops, served.cell), (1, replica));
+        assert!((served.hop_secs - 0.5).abs() < 1e-12);
+        assert_eq!(served.resp.presence, resp.presence);
+        let st = cluster.stats();
+        assert_eq!(st.remote_hits[replica], 1);
+        assert_eq!(st.remote_hits_total(), 1);
+        // Read-repair: the same request now hits home with zero hops.
+        let again = cluster.try_process(&pkts[0], &ids, "ft").unwrap();
+        assert!(again.cache_hit);
+        assert_eq!((again.hops, again.cell), (0, home));
+    }
+
+    #[test]
+    fn executed_fill_replicates_to_replica_set_only() {
+        let (pkts, ids) = sample_packets(1);
+        let serving = ServingConfig { cache_entries: 8, ..ServingConfig::default() };
+        let cluster = CloudCluster::with_config(
+            vec![Engine::synthetic()],
+            ClusterConfig { cells: 4, replicas: 2, serving, ..ClusterConfig::default() },
+        );
+        let order = cluster.placement(&pkts[0], "ft");
+        let key = cache_key(&pkts[0], &ids, "ft");
+        let served = cluster.try_process(&pkts[0], &ids, "ft").unwrap();
+        assert!(!served.cache_hit);
+        assert_eq!(served.cell, order[0]);
+        // The entry lives on exactly the first R ring cells.
+        let t = pkts[0].t_capture;
+        assert!(cluster.cell(order[0]).cache_probe(key, t).is_some());
+        assert!(cluster.cell(order[1]).cache_probe(key, t).is_some());
+        assert!(cluster.cell(order[2]).cache_probe(key, t).is_none());
+        assert!(cluster.cell(order[3]).cache_probe(key, t).is_none());
+        // Exactly one executed miss cluster-wide: replication counts none.
+        assert_eq!(cluster.stats().total.cache_misses, 1);
+    }
+
+    #[test]
+    fn route_key_separates_artifact_and_set() {
+        let (pkts, _) = sample_packets(2);
+        // Same content class routes identically regardless of capture
+        // time/sequence (routing is on artifact, not content).
+        let mut a = pkts[0].clone();
+        let mut b = pkts[1].clone();
+        a.t_capture = 0.0;
+        b.t_capture = 99.0;
+        assert_eq!(route_key(&a, "ft"), route_key(&b, "ft"));
+        assert_ne!(route_key(&a, "ft"), route_key(&a, "orig"));
+        let mut other_split = a.clone();
+        other_split.split = a.split + 1;
+        assert_ne!(route_key(&a, "ft"), route_key(&other_split, "ft"));
+        let mut bad_tier = a.clone();
+        bad_tier.tier = 9;
+        // Invalid tiers still route deterministically (and differently).
+        assert_eq!(route_key(&bad_tier, "ft"), route_key(&bad_tier, "ft"));
+        assert_ne!(route_key(&bad_tier, "ft"), route_key(&a, "ft"));
+    }
+}

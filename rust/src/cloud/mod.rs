@@ -18,8 +18,12 @@
 //! artifact -> response) and the wire-level response framing, including the
 //! admission controller's `busy` shed reply.
 
+pub mod cluster;
 pub mod serving;
 
+pub use cluster::{
+    route_key, CloudCluster, ClusterConfig, ClusterStats, HashRing, DEFAULT_HOP_LATENCY_SECS,
+};
 pub use serving::{
     cache_key, AdmissionPolicy, CloudPool, PoolStats, ResponseCache, ServeError, ServingConfig,
     Ticket,
@@ -67,17 +71,32 @@ impl CloudResponse {
 /// A served request: the response plus serving-layer provenance.  The
 /// virtual-time drivers feed `cache_hit` into the timing model — a hit is
 /// answered from the cache index, not by tail execution, so it is charged
-/// the (tiny) lookup latency instead of the artifact's tail latency.
+/// the (tiny) lookup latency instead of the artifact's tail latency —
+/// and add `hop_secs` (the cluster's modeled inter-cell transfer cost)
+/// to the request's virtual tail.
 #[derive(Clone, Debug)]
 pub struct Served {
     pub resp: CloudResponse,
-    /// True when the response came from the content-addressed cache.
+    /// True when the response came from the content-addressed cache
+    /// (the home cell's, or — when `hops > 0` — a sibling replica's).
     pub cache_hit: bool,
+    /// Ring hops beyond the home cell this request traveled: overflow
+    /// spill retries, or 1 for a sibling-replica cache hit.  Always 0 on
+    /// a single pool.
+    pub hops: u32,
+    /// Modeled inter-cell latency charged for those hops
+    /// (`hops × hop_latency`, virtual seconds).  Always 0.0 on a single
+    /// pool, so the K=1 timing model is byte-identical to pre-cluster.
+    pub hop_secs: f64,
+    /// Index of the cluster cell that answered (served or cache-hit);
+    /// 0 on a single pool.  Agents fold this into a per-UAV cells-hit
+    /// bitmask for the fleet telemetry.
+    pub cell: usize,
 }
 
 impl Served {
     pub(crate) fn executed(resp: CloudResponse) -> Self {
-        Self { resp, cache_hit: false }
+        Self { resp, cache_hit: false, hops: 0, hop_secs: 0.0, cell: 0 }
     }
 }
 

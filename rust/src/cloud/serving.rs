@@ -150,8 +150,12 @@ impl ServingConfig {
 #[derive(Debug)]
 pub enum ServeError {
     /// The admission controller refused the request (bounded queue full
-    /// under [`AdmissionPolicy::Shed`]).
-    Shed,
+    /// under [`AdmissionPolicy::Shed`]).  `hops` is how many ring siblings
+    /// a cluster retried after the home cell refused (0 for a single
+    /// pool — there is nowhere to spill).
+    Shed {
+        hops: u32,
+    },
     /// The pool shut down — or a worker died — before replying.
     Closed,
     /// The request executed and failed.
@@ -161,7 +165,13 @@ pub enum ServeError {
 impl std::fmt::Display for ServeError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            ServeError::Shed => write!(f, "cloud pool shed the request (queue full)"),
+            ServeError::Shed { hops: 0 } => {
+                write!(f, "cloud pool shed the request (queue full)")
+            }
+            ServeError::Shed { hops } => write!(
+                f,
+                "cloud cluster shed the request after {hops} spill hops (all cells full)"
+            ),
             ServeError::Closed => write!(f, "cloud pool closed before replying"),
             ServeError::Exec(e) => write!(f, "cloud execution failed: {e:#}"),
         }
@@ -170,8 +180,9 @@ impl std::fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
-/// FNV-1a 64-bit over raw bytes (cache-key folding).
-fn fnv64(h: u64, bytes: &[u8]) -> u64 {
+/// FNV-1a 64-bit over raw bytes (cache-key folding; the cluster router
+/// folds its (artifact, weight-set) route keys through the same mix).
+pub(crate) fn fnv64(h: u64, bytes: &[u8]) -> u64 {
     bytes
         .iter()
         .fold(h, |h, &b| (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3))
@@ -306,6 +317,18 @@ impl ResponseCache {
     /// executed miss — the counterpart of [`ResponseCache::get`]'s hits.
     pub fn insert(&mut self, key: u64, resp: CloudResponse, now: f64) {
         self.stats.misses += 1;
+        self.store(key, resp, now);
+    }
+
+    /// Store an entry WITHOUT counting a miss — the cluster's replication
+    /// path: the one executed fill counts its miss at the executing cell's
+    /// [`ResponseCache::insert`]; propagating the same response to R-1
+    /// replica cells is not R-1 extra misses.  Same LRU/TTL mechanics.
+    pub fn replicate(&mut self, key: u64, resp: CloudResponse, now: f64) {
+        self.store(key, resp, now);
+    }
+
+    fn store(&mut self, key: u64, resp: CloudResponse, now: f64) {
         if self.capacity == 0 {
             return;
         }
@@ -411,7 +434,7 @@ impl JobQueue {
             match policy {
                 AdmissionPolicy::Shed => {
                     if st.in_flight >= depth {
-                        return Err(ServeError::Shed);
+                        return Err(ServeError::Shed { hops: 0 });
                     }
                 }
                 AdmissionPolicy::Wait => {
@@ -539,10 +562,10 @@ impl JobQueue {
                 drop(st);
                 self.ready.notify_one();
                 let kind = dead.pkt.kind;
-                let _ = dead.reply.send(Err(ServeError::Shed));
+                let _ = dead.reply.send(Err(ServeError::Shed { hops: 0 }));
                 Ok(Some(kind))
             }
-            _ => Err(ServeError::Shed),
+            _ => Err(ServeError::Shed { hops: 0 }),
         }
     }
 
@@ -602,6 +625,34 @@ pub struct PoolStats {
 }
 
 impl PoolStats {
+    /// Merge another cell's counters into this one — the cluster
+    /// aggregation primitive ([`ClusterStats`]: counts, worker slots and
+    /// busy seconds add; the four latency histograms merge bucket-wise
+    /// through [`LatencyHistogram::merge`], so cross-cell percentiles are
+    /// exact, not approximated from per-cell quantiles.  Merged totals
+    /// cannot drift from per-cell accounting because this is the only
+    /// aggregation path (pinned by `merged_stats_equal_per_cell_sums`).
+    ///
+    /// [`ClusterStats`]: crate::cloud::ClusterStats
+    pub fn merge(&mut self, other: &PoolStats) {
+        self.workers += other.workers;
+        self.completed += other.completed;
+        self.busy_secs += other.busy_secs;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.cache_evictions += other.cache_evictions;
+        self.cache_expirations += other.cache_expirations;
+        self.shed += other.shed;
+        self.shed_context += other.shed_context;
+        self.shed_insight += other.shed_insight;
+        self.batches += other.batches;
+        self.batched_requests += other.batched_requests;
+        self.lat_context.merge(&other.lat_context);
+        self.lat_insight.merge(&other.lat_insight);
+        self.wall_lat_context.merge(&other.wall_lat_context);
+        self.wall_lat_insight.merge(&other.wall_lat_insight);
+    }
+
     /// Fraction of worker capacity used over a wall-clock window.
     pub fn utilization(&self, wall_secs: f64) -> f64 {
         if self.workers == 0 || wall_secs <= 0.0 {
@@ -810,7 +861,7 @@ impl CloudPool {
                     Ok(Ticket::pending(rx))
                 }
                 Err(e) => {
-                    if matches!(e, ServeError::Shed) {
+                    if matches!(e, ServeError::Shed { .. }) {
                         self.count_shed(pkt.kind);
                     }
                     Err(e)
@@ -896,13 +947,40 @@ impl CloudPool {
         }
     }
 
+    /// Probe this pool's response cache by precomputed key — the cluster's
+    /// sibling-replica lookup.  A hit refreshes recency and counts toward
+    /// this cell's cache hits and completed requests (the sibling served
+    /// the request); an absent key counts nothing (misses are counted at
+    /// fill), so a cluster probing several replicas cannot deflate any
+    /// cell's hit rate.  `None` when the cache is off or the key is
+    /// absent/expired.
+    pub fn cache_probe(&self, key: u64, now: f64) -> Option<CloudResponse> {
+        let cache = self.cache.as_ref()?;
+        let hit = cache.lock().unwrap().get(key, now)?;
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        Some(hit.as_ref().clone())
+    }
+
+    /// Propagate an already-executed response into this pool's cache — the
+    /// cluster's replication fill / read-repair path.  Unlike the executing
+    /// cell's own fill ([`ResponseCache::insert`]) this counts no miss.
+    /// No-op when the cache is off.
+    pub fn cache_replicate(&self, key: u64, resp: &CloudResponse, now: f64) {
+        if let Some(cache) = &self.cache {
+            // Clone outside the lock — the guard is only held for the
+            // O(log n) index update.
+            let stored = resp.clone();
+            cache.lock().unwrap().replicate(key, stored, now);
+        }
+    }
+
     /// Reserve one admission slot, counting a shed (total and per-class)
     /// on refusal.
     fn reserve_slot(&self, kind: StreamKind) -> Result<(), ServeError> {
         match self.queue.reserve(self.cfg.queue_depth, self.cfg.admission) {
             Ok(()) => Ok(()),
             Err(e) => {
-                if matches!(e, ServeError::Shed) {
+                if matches!(e, ServeError::Shed { .. }) {
                     self.count_shed(kind);
                 }
                 Err(e)
@@ -925,7 +1003,9 @@ impl CloudPool {
     ) -> Result<Served, ServeError> {
         if let Some(engine) = &self.direct {
             let key = match self.cache_lookup(pkt, prompt_ids, set) {
-                Ok(resp) => return Ok(Served { resp, cache_hit: true }),
+                Ok(resp) => {
+                    return Ok(Served { resp, cache_hit: true, hops: 0, hop_secs: 0.0, cell: 0 })
+                }
                 Err(key) => key,
             };
             // The direct path skips the queue, not the admission bound: it
@@ -957,7 +1037,7 @@ impl CloudPool {
         }
         let ticket = self.submit(pkt, prompt_ids, set)?;
         let cache_hit = ticket.cache_hit();
-        ticket.wait().map(|resp| Served { resp, cache_hit })
+        ticket.wait().map(|resp| Served { resp, cache_hit, hops: 0, hop_secs: 0.0, cell: 0 })
     }
 
     /// [`CloudPool::try_process`] with the typed error folded into anyhow
@@ -1027,7 +1107,7 @@ impl CloudPool {
                     transport.send(&encode_response(&r.resp))?;
                     served += 1;
                 }
-                Err(ServeError::Shed) => transport.send(BUSY_FRAME)?,
+                Err(ServeError::Shed { .. }) => transport.send(BUSY_FRAME)?,
                 Err(e) => return Err(e.into()),
             }
         }
@@ -1250,7 +1330,7 @@ mod tests {
             ServingConfig { queue_depth: 1, ..ServingConfig::default() },
         );
         let ticket = pool.submit(&pkts[0], &ids, "ft").unwrap();
-        assert!(matches!(pool.submit(&pkts[0], &ids, "ft"), Err(ServeError::Shed)));
+        assert!(matches!(pool.submit(&pkts[0], &ids, "ft"), Err(ServeError::Shed { hops: 0 })));
         assert_eq!(pool.stats().shed, 1);
         drop(pool);
         // The pool died with the job queued: Closed, not Exec.
@@ -1283,14 +1363,14 @@ mod tests {
             s.spawn(move || loop {
                 match pool.try_process(big, &blocker_ids, "ft") {
                     Ok(_) => break,
-                    Err(ServeError::Shed) => continue,
+                    Err(ServeError::Shed { .. }) => continue,
                     Err(e) => panic!("blocker: {e}"),
                 }
             });
             let mut shed_seen = false;
             for _ in 0..200_000 {
                 match pool.try_process(&small[0], &ids, "ft") {
-                    Err(ServeError::Shed) => {
+                    Err(ServeError::Shed { .. }) => {
                         shed_seen = true;
                         break;
                     }
@@ -1467,7 +1547,7 @@ mod tests {
         // their deadlines; the widest misser (deadline 10) is shed and the
         // arrival takes its slot.
         let t2 = pool.submit(&mk(100.0), &ids, "ft").unwrap();
-        assert!(matches!(t0.wait(), Err(ServeError::Shed)));
+        assert!(matches!(t0.wait(), Err(ServeError::Shed { hops: 0 })));
         assert!(!t2.cache_hit());
         let st = pool.stats();
         assert_eq!((st.shed, st.shed_context, st.shed_insight), (1, 0, 1));
@@ -1495,9 +1575,96 @@ mod tests {
         // plain shed-newest fallback.
         let _a = pool.submit(&mk(100.0), &ids, "ft").unwrap();
         let _b = pool.submit(&mk(100.0), &ids, "ft").unwrap();
-        assert!(matches!(pool.submit(&mk(0.0), &ids, "ft"), Err(ServeError::Shed)));
+        assert!(matches!(pool.submit(&mk(0.0), &ids, "ft"), Err(ServeError::Shed { .. })));
         let st = pool.stats();
         assert_eq!((st.shed, st.shed_insight), (1, 1));
+    }
+
+    #[test]
+    fn replicate_fills_without_counting_a_miss() {
+        let mut cache = ResponseCache::new(4, f64::INFINITY);
+        let resp = CloudResponse { mask_logits: None, presence: vec![1.0] };
+        cache.replicate(7, resp.clone(), 0.0);
+        assert_eq!(cache.len(), 1);
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses), (0, 0));
+        // The replicated entry serves hits like any executed fill.
+        assert_eq!(cache.get(7, 1.0).unwrap().presence, vec![1.0]);
+        assert_eq!(cache.stats().hits, 1);
+        // Replication still honors the LRU capacity bound.
+        let mut small = ResponseCache::new(1, f64::INFINITY);
+        small.replicate(1, resp.clone(), 0.0);
+        small.replicate(2, resp, 1.0);
+        assert_eq!(small.len(), 1);
+        assert_eq!(small.stats().evictions, 1);
+    }
+
+    #[test]
+    fn pool_cache_probe_and_replicate_roundtrip() {
+        let engine = Engine::synthetic();
+        let (pkts, ids) = sample_packets(1);
+        let a = CloudPool::with_config(
+            vec![engine.clone()],
+            ServingConfig { cache_entries: 8, ..ServingConfig::default() },
+        );
+        let b = CloudPool::with_config(
+            vec![engine],
+            ServingConfig { cache_entries: 8, ..ServingConfig::default() },
+        );
+        let key = cache_key(&pkts[0], &ids, "ft");
+        // Nothing cached anywhere yet; probing counts nothing.
+        assert!(a.cache_probe(key, 0.0).is_none());
+        let first = a.process_sync(&pkts[0], &ids, "ft").unwrap();
+        // Replicate a's executed fill into b: b answers the probe without
+        // ever executing, and the propagated fill counted no miss there.
+        b.cache_replicate(key, &first.resp, pkts[0].t_capture);
+        let remote = b.cache_probe(key, pkts[0].t_capture).unwrap();
+        assert_eq!(remote.presence, first.resp.presence);
+        let (sa, sb) = (a.stats(), b.stats());
+        assert_eq!((sa.cache_hits, sa.cache_misses), (0, 1));
+        assert_eq!((sb.cache_hits, sb.cache_misses), (1, 0));
+        assert_eq!(sb.completed, 1, "a probe hit counts as served by that cell");
+    }
+
+    #[test]
+    fn pool_stats_merge_sums_counters_and_histograms() {
+        let mut a = PoolStats {
+            workers: 2,
+            completed: 10,
+            busy_secs: 1.5,
+            cache_hits: 3,
+            cache_misses: 7,
+            shed: 2,
+            shed_insight: 2,
+            batches: 4,
+            batched_requests: 10,
+            ..PoolStats::default()
+        };
+        a.lat_insight.record(0.5);
+        let mut b = PoolStats {
+            workers: 1,
+            completed: 5,
+            busy_secs: 0.5,
+            cache_hits: 1,
+            cache_misses: 4,
+            shed: 1,
+            shed_context: 1,
+            batches: 5,
+            batched_requests: 5,
+            ..PoolStats::default()
+        };
+        b.lat_insight.record(0.7);
+        b.lat_context.record(0.02);
+        a.merge(&b);
+        assert_eq!(a.workers, 3);
+        assert_eq!(a.completed, 15);
+        assert!((a.busy_secs - 2.0).abs() < 1e-12);
+        assert_eq!((a.cache_hits, a.cache_misses), (4, 11));
+        assert_eq!((a.shed, a.shed_context, a.shed_insight), (3, 1, 2));
+        assert_eq!((a.batches, a.batched_requests), (9, 15));
+        assert_eq!(a.lat_insight.count(), 2);
+        assert_eq!(a.lat_context.count(), 1);
+        assert!(a.lat_insight.p99() >= 0.5);
     }
 
     #[test]

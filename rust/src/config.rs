@@ -155,6 +155,18 @@ pub struct RunConfig {
     /// Shed the request predicted to miss its deadline instead of the
     /// newest arrival (`--deadline-shed`).
     pub deadline_shed: bool,
+    /// Cloud cluster: number of serving cells behind the consistent-hash
+    /// router (`--cells K`); `None` = 1 (single pool, cluster inert).
+    pub cells: Option<usize>,
+    /// Cloud cluster: response-cache replication factor
+    /// (`--replicas R`); `None` = 1 (home cell only).
+    pub replicas: Option<usize>,
+    /// Cloud cluster: modeled inter-cell latency per ring hop in virtual
+    /// seconds (`--hop-latency SECS`); `None` = the cluster default.
+    pub hop_latency: Option<f64>,
+    /// Cloud cluster: max spill hops past the home cell before a typed
+    /// shed (`--spill-max H`); `None` = 1.
+    pub spill_max: Option<u32>,
     /// `avery scenario --list`.
     pub list: bool,
     /// Report rendering (`--format text|json`); CSVs are always written.
@@ -226,6 +238,45 @@ impl RunConfig {
                 }
             }
         }
+        let cells = match kv.get("cells") {
+            None => None,
+            Some(v) => Some(
+                v.parse::<usize>()
+                    .with_context(|| format!("config cells={v} not an integer"))?,
+            ),
+        };
+        if cells == Some(0) {
+            bail!("config cells=0: the cluster needs at least one cell");
+        }
+        let replicas = match kv.get("replicas") {
+            None => None,
+            Some(v) => Some(
+                v.parse::<usize>()
+                    .with_context(|| format!("config replicas={v} not an integer"))?,
+            ),
+        };
+        if replicas == Some(0) {
+            bail!("config replicas=0: the cache needs at least one replica (its home cell)");
+        }
+        let hop_latency = match kv.get("hop-latency") {
+            None => None,
+            Some(v) => Some(
+                v.parse::<f64>()
+                    .with_context(|| format!("config hop-latency={v} not a number"))?,
+            ),
+        };
+        if let Some(h) = hop_latency {
+            if !h.is_finite() || h < 0.0 {
+                bail!("config hop-latency={h} must be a finite number of seconds >= 0");
+            }
+        }
+        let spill_max = match kv.get("spill-max") {
+            None => None,
+            Some(v) => Some(
+                v.parse::<u32>()
+                    .with_context(|| format!("config spill-max={v} not an integer"))?,
+            ),
+        };
         Ok(Self {
             artifacts: kv.get("artifacts").map(|s| s.to_string()),
             out_dir: kv.get("out").unwrap_or("out").to_string(),
@@ -280,6 +331,10 @@ impl RunConfig {
             deadline_insight,
             edf: kv.get_bool("edf", false)?,
             deadline_shed: kv.get_bool("deadline-shed", false)?,
+            cells,
+            replicas,
+            hop_latency,
+            spill_max,
             list: kv.get_bool("list", false)?,
             format,
             jobs: kv.get_usize("jobs", 1)?,
@@ -419,6 +474,35 @@ mod tests {
             RunConfig::from_kv(&Kv::parse("cache-ttl = 60\ncache-entries = 0\n").unwrap())
                 .is_err()
         );
+    }
+
+    #[test]
+    fn cluster_keys_parse_and_reject() {
+        let kv = Kv::parse(
+            "cells = 3\nreplicas = 2\nhop-latency = 0.004\nspill-max = 2\n",
+        )
+        .unwrap();
+        let rc = RunConfig::from_kv(&kv).unwrap();
+        assert_eq!(rc.cells, Some(3));
+        assert_eq!(rc.replicas, Some(2));
+        assert_eq!(rc.hop_latency, Some(0.004));
+        assert_eq!(rc.spill_max, Some(2));
+        // Defaults keep the cluster inert (single pool).
+        let rc0 = RunConfig::from_kv(&Kv::default()).unwrap();
+        assert!(rc0.cells.is_none() && rc0.replicas.is_none());
+        assert!(rc0.hop_latency.is_none() && rc0.spill_max.is_none());
+        // Type and range errors are hard.
+        assert!(RunConfig::from_kv(&Kv::parse("cells = many\n").unwrap()).is_err());
+        assert!(RunConfig::from_kv(&Kv::parse("cells = 0\n").unwrap()).is_err());
+        assert!(RunConfig::from_kv(&Kv::parse("replicas = 0\n").unwrap()).is_err());
+        assert!(RunConfig::from_kv(&Kv::parse("hop-latency = soon\n").unwrap()).is_err());
+        assert!(RunConfig::from_kv(&Kv::parse("hop-latency = -0.1\n").unwrap()).is_err());
+        assert!(RunConfig::from_kv(&Kv::parse("hop-latency = inf\n").unwrap()).is_err());
+        assert!(RunConfig::from_kv(&Kv::parse("hop-latency = NaN\n").unwrap()).is_err());
+        assert!(RunConfig::from_kv(&Kv::parse("spill-max = -1\n").unwrap()).is_err());
+        // A spill bound of 0 is legal — it means "never spill past home".
+        let rcz = RunConfig::from_kv(&Kv::parse("spill-max = 0\n").unwrap()).unwrap();
+        assert_eq!(rcz.spill_max, Some(0));
     }
 
     #[test]

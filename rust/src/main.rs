@@ -33,7 +33,10 @@
 //! serving layer's `--batch-max N`, `--cache-entries N`, `--cache-ttl SECS`,
 //! `--queue-depth N`, `--deadline-context SECS`, `--deadline-insight SECS`,
 //! `--edf` and `--deadline-shed` (fleet/scenario; defaults preserve the
-//! unbatched, uncached, FIFO behavior byte-for-byte).
+//! unbatched, uncached, FIFO behavior byte-for-byte), plus the cloud
+//! cluster's `--cells K`, `--replicas R`, `--hop-latency SECS` and
+//! `--spill-max H` (fleet/scenario; `--cells 1` — the default — delegates
+//! to the single pool byte-for-byte).
 //!
 //! Every artifact-free-capable mission (all but `headline`) falls back to
 //! the synthetic closed-form engine when `artifacts/` is missing (control
@@ -82,6 +85,14 @@ missions: table3 fig7 fig8 fig9 fig10 headline streams fleet scenario matrix
                        (default: FIFO)
   --deadline-shed      shed the queued request predicted to miss its
                        deadline instead of the newest arrival
+  --cells K            cloud cluster cells behind the consistent-hash router
+                       (default 1 = single pool, byte-identical output)
+  --replicas R         response-cache replication factor across ring
+                       siblings (default 1 = home cell only)
+  --hop-latency SECS   modeled inter-cell latency charged per ring hop
+                       (default 0.002)
+  --spill-max H        max spill hops past a shedding home cell before the
+                       request is shed for good (default 1)
   --format FMT         text | json report rendering (CSVs always written)
   --jobs N             run missions N at a time (`avery all`); output bytes
                        are identical to --jobs 1 (default 1)

@@ -7,7 +7,7 @@
 
 use anyhow::Result;
 
-use crate::cloud::CloudPool;
+use crate::cloud::CloudCluster;
 use crate::coordinator::MissionGoal;
 use crate::netsim::{BandwidthTrace, LinkConfig, SharedLink, TraceConfig};
 use crate::report::{Report, ReportTable, Series};
@@ -74,6 +74,11 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
     // UAVs (a lone UAV gets no amortization no matter the flag).
     let serving = opts.serving();
     let effective_batch = serving.batch_max.min(uavs);
+    // Cloud cluster: K cells of `workers` workers each behind the
+    // consistent-hash router.  At the default K=1 the cluster delegates to
+    // its single pool and every output byte matches the pre-cluster path.
+    let cluster_cfg = opts.cluster();
+    let cells = cluster_cfg.cells;
     let fleet_cfg = FleetConfig {
         n_uavs: uavs,
         mission: MissionConfig {
@@ -86,12 +91,15 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
             batch_max: effective_batch,
             ..MissionConfig::default()
         },
-        workers,
+        // Server-utilization denominator: total workers across all cells
+        // (identical to the bare pool at K=1).
+        workers: workers * cells,
         schedule,
         ..FleetConfig::default()
     };
 
-    let pool = CloudPool::with_config(vec![env.engine.clone(); workers], serving.clone());
+    let cluster =
+        CloudCluster::with_config(vec![env.engine.clone(); workers], cluster_cfg.clone());
     let wall0 = std::time::Instant::now();
     let run = run_fleet_mission(
         &env.engine,
@@ -100,7 +108,7 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
         &env.device,
         &mut link,
         &fleet_cfg,
-        &pool,
+        &cluster,
     )?;
     let wall = wall0.elapsed().as_secs_f64();
 
@@ -255,6 +263,7 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
 
     // Serving-layer telemetry only exists when a serving feature is on, so
     // default runs stay byte-identical to the pre-serving-layer reports.
+    let cluster_stats = cluster.stats();
     if serving.enabled() {
         super::push_serving_telemetry(
             &mut report,
@@ -263,7 +272,17 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
             &run.per_uav,
             &serving,
             effective_batch,
-            &pool.stats(),
+            &cluster_stats.total,
+        );
+    }
+    // Cluster telemetry likewise only exists past K=1.
+    if cluster_cfg.multi_cell() {
+        super::push_cluster_telemetry(
+            &mut report,
+            "fleet_cluster",
+            &run,
+            &cluster_cfg,
+            &cluster_stats,
         );
     }
 
@@ -276,13 +295,13 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
     ));
     // Wall-clock is diagnostic only — it stays out of the report so reports
     // remain byte-deterministic per seed.
-    let pool_stats = pool.stats();
     eprintln!(
-        "cloud: {} workers, virtual utilization {:.1}%, {} requests served, wall busy {:.1}s / {:.1}s run",
+        "cloud: {} cells x {} workers, virtual utilization {:.1}%, {} requests served, wall busy {:.1}s / {:.1}s run",
+        cells,
         workers,
         run.server_utilization * 100.0,
-        pool_stats.completed,
-        pool_stats.busy_secs,
+        cluster_stats.total.completed,
+        cluster_stats.total.busy_secs,
         wall
     );
     Ok((run, report))

@@ -90,6 +90,12 @@ pub fn run_matrix(env: &Env, opts: &RunOptions) -> Result<Report> {
         duration_secs: MATRIX_SCENARIO_SECS,
         exec_every: opts.exec_every.max(25),
         seed: opts.seed,
+        // Cluster shape passes through so a clustered matrix sweep gates
+        // the same serving topology the fleet would run (defaults: K=1).
+        cells: opts.cells,
+        replicas: opts.replicas,
+        hop_latency: opts.hop_latency,
+        spill_max: opts.spill_max,
         ..RunOptions::default()
     };
 

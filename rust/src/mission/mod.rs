@@ -38,7 +38,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use crate::cloud::{PoolStats, ServingConfig};
+use crate::cloud::{ClusterConfig, ClusterStats, PoolStats, ServingConfig};
 use crate::config::RunConfig;
 use crate::coordinator::{Lut, MissionGoal};
 use crate::dataset::{Corpus, Dataset};
@@ -46,7 +46,7 @@ use crate::energy::DeviceModel;
 use crate::manifest::Manifest;
 use crate::report::{latency_table, Report, Series};
 use crate::runtime::{Engine, ExecMode};
-use crate::streams::fleet::UavOutcome;
+use crate::streams::fleet::{FleetRun, UavOutcome};
 use crate::telemetry::{f, LatencyHistogram};
 
 /// Default fleet size when neither the CLI nor a scenario specifies one.
@@ -158,6 +158,19 @@ pub struct RunOptions {
     /// Shed the queued request predicted to miss its deadline instead of
     /// the newest arrival (`--deadline-shed`); false = depth-based shed.
     pub deadline_shed: bool,
+    /// Cloud cluster (`--cells K`): serving cells behind the
+    /// consistent-hash router; `None` = 1 (single pool — the cluster
+    /// delegates and output is byte-identical to the pre-cluster path).
+    pub cells: Option<usize>,
+    /// Cloud cluster (`--replicas R`): response-cache replication factor;
+    /// `None` = 1 (home cell only, no sibling probes).
+    pub replicas: Option<usize>,
+    /// Cloud cluster (`--hop-latency SECS`): modeled inter-cell latency
+    /// charged per ring hop; `None` = `cloud::DEFAULT_HOP_LATENCY_SECS`.
+    pub hop_latency: Option<f64>,
+    /// Cloud cluster (`--spill-max H`): max ring hops past the home cell
+    /// before a typed shed; `None` = 1.
+    pub spill_max: Option<u32>,
 }
 
 impl Default for RunOptions {
@@ -182,6 +195,10 @@ impl Default for RunOptions {
             deadline_insight: None,
             edf: false,
             deadline_shed: false,
+            cells: None,
+            replicas: None,
+            hop_latency: None,
+            spill_max: None,
         }
     }
 }
@@ -209,6 +226,10 @@ impl RunOptions {
             deadline_insight: cfg.deadline_insight,
             edf: cfg.edf,
             deadline_shed: cfg.deadline_shed,
+            cells: cfg.cells,
+            replicas: cfg.replicas,
+            hop_latency: cfg.hop_latency,
+            spill_max: cfg.spill_max,
         }
     }
 
@@ -226,6 +247,21 @@ impl RunOptions {
             deadline_insight_secs: self.deadline_insight.unwrap_or(f64::INFINITY),
             edf: self.edf,
             deadline_shed: self.deadline_shed,
+        }
+    }
+
+    /// The cloud cluster configuration these options select — defaults
+    /// (one cell, one replica) make [`crate::cloud::CloudCluster`] delegate
+    /// straight to its single pool, byte-identical to the pre-cluster path.
+    pub fn cluster(&self) -> crate::cloud::ClusterConfig {
+        crate::cloud::ClusterConfig {
+            cells: self.cells.unwrap_or(1).max(1),
+            replicas: self.replicas.unwrap_or(1).max(1),
+            hop_latency_secs: self
+                .hop_latency
+                .unwrap_or(crate::cloud::DEFAULT_HOP_LATENCY_SECS),
+            spill_max: self.spill_max.unwrap_or(1),
+            serving: self.serving(),
         }
     }
 }
@@ -281,6 +317,79 @@ pub(crate) fn push_serving_telemetry(
         ps.cache_evictions,
         ps.cache_expirations,
         ps.shed
+    ));
+}
+
+/// Append the cluster-layer telemetry shared by the fleet and scenario
+/// reports: per-cell and spill-hop CSV series, per-UAV cells-hit rows, and
+/// the routing/spill/replication scalars.  Callers invoke this ONLY when
+/// the cluster is multi-cell, so single-pool runs stay byte-identical to
+/// the pre-cluster reports.  Everything surfaced is a deterministic count
+/// of the event-ordered request stream (never wall-clock).
+pub(crate) fn push_cluster_telemetry(
+    report: &mut Report,
+    series_prefix: &str,
+    run: &FleetRun,
+    cluster: &ClusterConfig,
+    st: &ClusterStats,
+) {
+    let mut cells = Series::new(
+        &format!("{series_prefix}_cells"),
+        &["cell", "completed", "batches", "cache_hits", "cache_misses", "remote_hits", "shed"],
+    );
+    for (i, ps) in st.per_cell.iter().enumerate() {
+        cells.row(&[
+            i.to_string(),
+            ps.completed.to_string(),
+            ps.batches.to_string(),
+            ps.cache_hits.to_string(),
+            ps.cache_misses.to_string(),
+            st.remote_hits[i].to_string(),
+            ps.shed.to_string(),
+        ]);
+    }
+    report.push_series(cells);
+
+    let mut hops = Series::new(&format!("{series_prefix}_spill_hops"), &["hop", "served"]);
+    for (h, n) in st.served_at_hop.iter().enumerate() {
+        hops.row(&[h.to_string(), n.to_string()]);
+    }
+    report.push_series(hops);
+
+    let mut uc = Series::new(
+        &format!("{series_prefix}_uav_cells"),
+        &["uav", "role", "spill_hops", "remote_hits", "cells_hit"],
+    );
+    for o in &run.per_uav {
+        let s = &o.summary;
+        uc.row(&[
+            o.id.to_string(),
+            o.role.name().to_string(),
+            s.spill_hops.to_string(),
+            s.remote_hits.to_string(),
+            s.cells_mask.count_ones().to_string(),
+        ]);
+    }
+    report.push_series(uc);
+
+    report.push_scalar("cells", st.cells as f64);
+    report.push_scalar("replicas", cluster.replicas as f64);
+    report.push_scalar("spill_max", cluster.spill_max as f64);
+    report.push_scalar("hop_latency_s", cluster.hop_latency_secs);
+    report.push_scalar("spilled", st.spilled() as f64);
+    report.push_scalar("spill_hops", run.spill_hops_total as f64);
+    report.push_scalar("remote_hits", st.remote_hits_total() as f64);
+    report.push_scalar("cluster_shed", st.shed as f64);
+    report.push_scalar("cells_hit", run.cells_hit as f64);
+    report.push_note(format!(
+        "cluster: {} cells, {} replicas, {} served after spill, {} remote cache hits, \
+         {} shed past {} max hops",
+        st.cells,
+        cluster.replicas,
+        st.spilled(),
+        st.remote_hits_total(),
+        st.shed,
+        cluster.spill_max
     ));
 }
 
@@ -420,7 +529,8 @@ mod tests {
              name = wildfire-ridge\nmanifest = scenarios/urban-flood.toml\n\
              matrix-count = 24\nbatch-max = 8\ncache-entries = 64\n\
              cache-ttl = 45\nqueue-depth = 32\ndeadline-context = 0.05\n\
-             deadline-insight = 2.5\nedf = true\ndeadline-shed = true\n",
+             deadline-insight = 2.5\nedf = true\ndeadline-shed = true\n\
+             cells = 3\nreplicas = 2\nhop-latency = 0.004\nspill-max = 2\n",
         )
         .unwrap();
         let cfg = RunConfig::from_kv(&kv).unwrap();
@@ -444,6 +554,17 @@ mod tests {
         assert_eq!(opts.deadline_insight, Some(2.5));
         assert!(opts.edf);
         assert!(opts.deadline_shed);
+        assert_eq!(opts.cells, Some(3));
+        assert_eq!(opts.replicas, Some(2));
+        assert_eq!(opts.hop_latency, Some(0.004));
+        assert_eq!(opts.spill_max, Some(2));
+        let cluster = opts.cluster();
+        assert!(cluster.multi_cell());
+        assert_eq!(cluster.cells, 3);
+        assert_eq!(cluster.replicas, 2);
+        assert_eq!(cluster.hop_latency_secs, 0.004);
+        assert_eq!(cluster.spill_max, 2);
+        assert_eq!(cluster.serving.batch_max, 8);
         let serving = opts.serving();
         assert!(serving.enabled());
         assert_eq!(serving.batch_max, 8);
@@ -474,5 +595,12 @@ mod tests {
         assert!(serving.deadline_insight_secs.is_infinite());
         assert!(!serving.edf);
         assert!(!serving.deadline_shed);
+        // Cluster defaults are the single-pool delegate path.
+        let cluster = defaults.cluster();
+        assert!(!cluster.multi_cell());
+        assert_eq!(cluster.cells, 1);
+        assert_eq!(cluster.replicas, 1);
+        assert_eq!(cluster.hop_latency_secs, crate::cloud::DEFAULT_HOP_LATENCY_SECS);
+        assert_eq!(cluster.spill_max, 1);
     }
 }

@@ -7,17 +7,18 @@
 //! virtual quantity, so two runs with the same `(name, seed, duration)`
 //! produce byte-identical summary CSVs *and* byte-identical JSON reports
 //! (pinned by `rust/tests/scenario.rs` and `rust/tests/mission_api.rs`).
-//! Serving goes through the concurrent [`CloudPool`] (one handle per
-//! worker, exactly like `avery fleet`) — real PJRT when artifacts are
-//! loaded, the synthetic closed-form model otherwise; either way responses
-//! are pure functions of the request, so pool scheduling cannot perturb
-//! the virtual-time results.
+//! Serving goes through the concurrent [`CloudCluster`] (K cells of
+//! worker pools, exactly like `avery fleet`; one pool at the default
+//! `--cells 1`) — real PJRT when artifacts are loaded, the synthetic
+//! closed-form model otherwise; either way responses are pure functions
+//! of the request, so pool scheduling cannot perturb the virtual-time
+//! results.
 
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::cloud::CloudPool;
+use crate::cloud::CloudCluster;
 use crate::coordinator::IntentLevel;
 use crate::netsim::{BandwidthTrace, SharedLink};
 use crate::report::{Report, ReportTable, Series};
@@ -97,6 +98,9 @@ pub fn run_compiled_scenario(
     // UAVs (see `run_fleet`).
     let serving = opts.serving();
     let effective_batch = serving.batch_max.min(n_uavs);
+    // Cloud cluster: K cells of `workers` workers each; the default K=1
+    // delegates to a single pool, byte-identical to the pre-cluster path.
+    let cluster_cfg = opts.cluster();
     let fleet_cfg = FleetConfig {
         n_uavs,
         mission: MissionConfig {
@@ -111,11 +115,13 @@ pub fn run_compiled_scenario(
         },
         context_every: sc.fleet.context_every,
         stagger_secs: sc.fleet.stagger_secs,
-        workers,
+        // Utilization denominator: total workers across all cells.
+        workers: workers * cluster_cfg.cells,
         schedule: sc.schedule.clone(),
     };
 
-    let pool = CloudPool::with_config(vec![env.engine.clone(); workers], serving.clone());
+    let cluster =
+        CloudCluster::with_config(vec![env.engine.clone(); workers], cluster_cfg.clone());
     let run = run_fleet_mission(
         &env.engine,
         &env.datasets(),
@@ -123,7 +129,7 @@ pub fn run_compiled_scenario(
         &env.device,
         &mut link,
         &fleet_cfg,
-        &pool,
+        &cluster,
     )?;
 
     let title = format!(
@@ -285,6 +291,7 @@ pub fn run_compiled_scenario(
     // Serving-layer telemetry, only when a serving feature is enabled —
     // default scenario reports stay byte-identical to the pre-layer ones
     // (pinned by the mission-api golden JSON test).
+    let cluster_stats = cluster.stats();
     if serving.enabled() {
         super::push_serving_telemetry(
             &mut report,
@@ -293,7 +300,17 @@ pub fn run_compiled_scenario(
             &run.per_uav,
             &serving,
             effective_batch,
-            &pool.stats(),
+            &cluster_stats.total,
+        );
+    }
+    // Cluster telemetry likewise only exists past K=1.
+    if cluster_cfg.multi_cell() {
+        super::push_cluster_telemetry(
+            &mut report,
+            &format!("{stem}_cluster"),
+            &run,
+            &cluster_cfg,
+            &cluster_stats,
         );
     }
 

@@ -107,6 +107,15 @@ pub struct FleetRun {
     /// Served requests answered from the cloud response cache (0 unless the
     /// serving layer's cache is enabled).
     pub cache_hits_total: u64,
+    /// Ring hops charged across the fleet by cluster spill / remote cache
+    /// probes (0 on a single-cell cluster or bare pool).
+    pub spill_hops_total: u64,
+    /// Cache hits answered by a sibling cell's replica rather than the home
+    /// cell (0 without cluster cache replication).
+    pub remote_hits_total: u64,
+    /// Distinct cluster cells that answered at least one request from any
+    /// UAV (popcount of the OR of per-UAV `cells_mask`; 1 on a single pool).
+    pub cells_hit: u32,
     /// Executed-weighted mean IoU over Insight UAVs.
     pub avg_iou: f64,
     /// Virtual server utilization: induced tail-seconds / (duration x workers).
@@ -281,6 +290,12 @@ pub fn run_fleet_mission(
         intent_switches_total: per_uav.iter().map(|o| o.summary.intent_switches).sum(),
         infeasible_total: per_uav.iter().map(|o| o.summary.infeasible_epochs).sum(),
         cache_hits_total: per_uav.iter().map(|o| o.summary.cache_hits).sum(),
+        spill_hops_total: per_uav.iter().map(|o| o.summary.spill_hops).sum(),
+        remote_hits_total: per_uav.iter().map(|o| o.summary.remote_hits).sum(),
+        cells_hit: per_uav
+            .iter()
+            .fold(0u64, |m, o| m | o.summary.cells_mask)
+            .count_ones(),
         avg_iou,
         server_utilization: server_secs / (duration.max(1e-9) * cfg.workers.max(1) as f64),
         total_energy_j: per_uav.iter().map(|o| o.summary.total_energy_j).sum(),

@@ -186,6 +186,15 @@ pub struct RunSummary {
     /// Served requests answered from the cloud's content-addressed response
     /// cache (0 unless the serving layer's cache is enabled).
     pub cache_hits: u64,
+    /// Cluster ring hops charged to this agent's requests — overflow-spill
+    /// retries plus sibling-cache round trips (0 at `--cells 1`).
+    pub spill_hops: u64,
+    /// Served requests answered from a sibling replica's cache instead of
+    /// the home cell's (0 unless `--replicas` > 1).
+    pub remote_hits: u64,
+    /// Bitmask of cluster cells that answered this agent (cell `i` sets
+    /// bit `min(i, 63)`); the popcount is the per-UAV cells-hit telemetry.
+    pub cells_mask: u64,
 }
 
 /// Full result of an Insight mission run.
@@ -245,6 +254,12 @@ pub struct UavAgent<'a> {
     executed: u64,
     /// Served requests answered from the cloud response cache.
     cache_hits: u64,
+    /// Cluster ring hops charged to this agent (spill + remote-hit trips).
+    spill_hops: u64,
+    /// Served requests answered from a sibling replica's cache.
+    remote_hits: u64,
+    /// Cells that answered this agent (one bit per cell, saturating at 64).
+    cells_mask: u64,
     /// Virtual seconds of server-side work this agent induced (utilization).
     pub server_secs: f64,
     ctx_correct: u64,
@@ -361,6 +376,9 @@ impl<'a> UavAgent<'a> {
             delivered: 0,
             executed: 0,
             cache_hits: 0,
+            spill_hops: 0,
+            remote_hits: 0,
+            cells_mask: 0,
             server_secs: 0.0,
             ctx_correct: 0,
             ctx_total: 0,
@@ -517,6 +535,18 @@ impl<'a> UavAgent<'a> {
                     self.cache_hits += 1;
                     tail = CACHE_HIT_TAIL_SECS;
                 }
+                // Cluster provenance: inter-cell hops (spill retries or a
+                // sibling-cache round trip) add their modeled latency to
+                // this request's tail.  Zero at --cells 1, so the default
+                // timing model is untouched.
+                if served.hops > 0 {
+                    self.spill_hops += served.hops as u64;
+                    if served.cache_hit {
+                        self.remote_hits += 1;
+                    }
+                    tail += served.hop_secs;
+                }
+                self.cells_mask |= 1u64 << served.cell.min(63);
                 let logits = served.resp.mask_logits.as_ref().expect("insight mask");
                 let s = mask_iou(logits.as_f32()?, &item.scene.masks[class_id], 0.0);
                 let mut one = IouAccumulator::default();
@@ -604,6 +634,15 @@ impl<'a> UavAgent<'a> {
                     self.cache_hits += 1;
                     tail = CACHE_HIT_TAIL_SECS;
                 }
+                // Same cluster hop charging as the Insight stream.
+                if served.hops > 0 {
+                    self.spill_hops += served.hops as u64;
+                    if served.cache_hit {
+                        self.remote_hits += 1;
+                    }
+                    tail += served.hop_secs;
+                }
+                self.cells_mask |= 1u64 << served.cell.min(63);
                 for (cls, &logit) in served.resp.presence.iter().enumerate() {
                     let gt = item.scene.masks[cls].iter().any(|&m| m > 0.5);
                     if (logit > 0.0) == gt {
@@ -656,6 +695,9 @@ impl<'a> UavAgent<'a> {
             intent_switches: self.intent_switches,
             infeasible_epochs: self.infeasible,
             cache_hits: self.cache_hits,
+            spill_hops: self.spill_hops,
+            remote_hits: self.remote_hits,
+            cells_mask: self.cells_mask,
         }
     }
 }

@@ -1,0 +1,263 @@
+//! Multi-cell cloud cluster integration tests (DESIGN.md "Multi-cell
+//! cloud cluster") — no artifacts required, never skipped.
+//!
+//! * **Ring properties** — every (artifact, weight-set) route key maps
+//!   deterministically; load over the interned artifact table stays within
+//!   a bounded imbalance factor across K cells; removing one cell remaps
+//!   only that cell's keys (consistent-hashing stability).
+//! * **Aggregation** — merged cluster counters equal the sum of per-cell
+//!   counters on a seeded run (`PoolStats::merge` cannot drift).
+//! * **Fleet parity + determinism** — `--cells 1` (and all-default) fleet
+//!   reports are byte-identical to the pre-cluster output and carry no
+//!   cluster telemetry; two same-seed multi-cell runs are byte-identical
+//!   and the cluster telemetry is present and consistent.
+
+mod common;
+
+use std::collections::BTreeMap;
+
+use avery::cloud::{route_key, CloudCluster, ClusterConfig, HashRing, ServingConfig};
+use avery::coordinator::{classify_intent, Lut, TierId};
+use avery::dataset::{Corpus, Dataset};
+use avery::edge::EdgePipeline;
+use avery::energy::DeviceModel;
+use avery::mission::{run_fleet, RunOptions};
+use avery::packet::{Packet, StreamKind};
+use avery::report::{to_json, Report};
+use avery::runtime::{Engine, MAX_STATIC_SPLIT};
+use avery::streams::fleet::FleetRun;
+
+use common::parse_json;
+
+/// One captured Insight packet to derive routing variants from.
+fn base_packet() -> Packet {
+    let engine = Engine::synthetic();
+    let ds = Dataset::synthetic(Corpus::Flood, 1, 16, 0xF10D0);
+    let mut edge = EdgePipeline::new(engine, DeviceModel::jetson_mode_30w(8), Lut::paper());
+    edge.capture_insight(&ds.scenes[0], 1, TierId::Balanced, 0.0).unwrap().0
+}
+
+/// Every route key the interned artifact table can produce: all tail
+/// artifacts (split 0..=MAX_STATIC_SPLIT x 3 tiers) x {orig, ft}, plus the
+/// context responder per set — the full (artifact, weight-set) key space
+/// the router sees in practice.
+fn artifact_table_keys() -> Vec<u64> {
+    let base = base_packet();
+    let mut keys = Vec::new();
+    for set in ["orig", "ft"] {
+        let mut ctx = base.clone();
+        ctx.kind = StreamKind::Context;
+        keys.push(route_key(&ctx, set));
+        for split in 0..=MAX_STATIC_SPLIT as u8 {
+            for tier in 0..3u8 {
+                let mut p = base.clone();
+                p.kind = StreamKind::Insight;
+                p.split = split;
+                p.tier = tier;
+                keys.push(route_key(&p, set));
+            }
+        }
+    }
+    keys.sort_unstable();
+    keys.dedup();
+    keys
+}
+
+// ---------------------------------------------------------------------------
+// Ring properties over the interned artifact table
+// ---------------------------------------------------------------------------
+
+#[test]
+fn routing_is_deterministic_across_ring_builds() {
+    let keys = artifact_table_keys();
+    assert!(keys.len() > 100, "artifact table yields {} keys", keys.len());
+    for cells in [1usize, 2, 3, 5, 8] {
+        let a = HashRing::new(cells);
+        let b = HashRing::new(cells);
+        for &k in &keys {
+            assert_eq!(a.cell_for(k), b.cell_for(k), "key {k:#x} on {cells} cells");
+            // The spill/replica order is a permutation of all cells with
+            // the home cell first.
+            let order = a.cells_from(k);
+            assert_eq!(order[0], a.cell_for(k));
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..cells).collect::<Vec<_>>(), "key {k:#x}");
+        }
+    }
+}
+
+#[test]
+fn load_imbalance_is_bounded_on_the_artifact_table() {
+    let keys = artifact_table_keys();
+    for cells in 2usize..=8 {
+        let ring = HashRing::new(cells);
+        let mut load = vec![0usize; cells];
+        for &k in &keys {
+            load[ring.cell_for(k)] += 1;
+        }
+        let mean = keys.len() as f64 / cells as f64;
+        for (cell, &n) in load.iter().enumerate() {
+            assert!(n >= 1, "cell {cell}/{cells} got no keys: {load:?}");
+            assert!(
+                (n as f64) <= 3.0 * mean,
+                "cell {cell}/{cells} holds {n} of {} keys (mean {mean:.1}): {load:?}",
+                keys.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn removing_one_cell_remaps_only_its_keys() {
+    let keys = artifact_table_keys();
+    let cells = 5usize;
+    let victim = 2usize;
+    let before: BTreeMap<u64, usize> =
+        keys.iter().map(|&k| (k, HashRing::new(cells).cell_for(k))).collect();
+    let mut ring = HashRing::new(cells);
+    ring.remove_cell(victim);
+    for (&k, &home) in &before {
+        let after = ring.cell_for(k);
+        if home == victim {
+            assert_ne!(after, victim, "key {k:#x} still routes to the removed cell");
+        } else {
+            assert_eq!(after, home, "key {k:#x} moved off surviving cell {home}");
+        }
+    }
+    // The removed cell also vanishes from every spill order.
+    for &k in &keys {
+        assert!(!ring.cells_from(k).contains(&victim));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Aggregation: merged counters == sum of per-cell counters
+// ---------------------------------------------------------------------------
+
+#[test]
+fn merged_stats_equal_per_cell_sums() {
+    // A seeded request mix spanning several routing classes so multiple
+    // cells do real work, with the cache on so hit/miss counters move.
+    let engine = Engine::synthetic();
+    let ds = Dataset::synthetic(Corpus::Flood, 6, 16, 0xC1A5);
+    let mut edge =
+        EdgePipeline::new(engine.clone(), DeviceModel::jetson_mode_30w(8), Lut::paper());
+    let ids = classify_intent("highlight the stranded people").token_ids;
+    let serving = ServingConfig { cache_entries: 32, ..ServingConfig::default() };
+    let cluster = CloudCluster::with_config(
+        vec![engine],
+        ClusterConfig { cells: 3, replicas: 2, serving, ..ClusterConfig::default() },
+    );
+    for (i, scene) in ds.scenes.iter().enumerate() {
+        let split = 1 + i % 3;
+        let tier = TierId::ALL[i % 3];
+        let (pkt, _) = edge.capture_insight(scene, split, tier, i as f64).unwrap();
+        for set in ["orig", "ft"] {
+            // Twice per class: the second pass exercises cache hits.
+            cluster.process_sync(&pkt, &ids, set).unwrap();
+            cluster.process_sync(&pkt, &ids, set).unwrap();
+        }
+    }
+    let st = cluster.stats();
+    assert!(st.per_cell.iter().filter(|p| p.completed > 0).count() >= 2, "one-cell run");
+    let sum = |f: fn(&avery::cloud::PoolStats) -> u64| -> u64 {
+        st.per_cell.iter().map(f).sum()
+    };
+    assert_eq!(st.total.completed, sum(|p| p.completed));
+    assert_eq!(st.total.cache_hits, sum(|p| p.cache_hits));
+    assert_eq!(st.total.cache_misses, sum(|p| p.cache_misses));
+    assert_eq!(st.total.shed, sum(|p| p.shed));
+    assert_eq!(st.total.batches, sum(|p| p.batches));
+    assert_eq!(st.total.batched_requests, sum(|p| p.batched_requests));
+    assert_eq!(
+        st.total.wall_lat_insight.count(),
+        st.per_cell.iter().map(|p| p.wall_lat_insight.count()).sum::<u64>()
+    );
+    assert!(st.total.cache_hits > 0, "repeat passes never hit the cache");
+    assert_eq!(st.shed, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Fleet parity and determinism end to end
+// ---------------------------------------------------------------------------
+
+fn fleet_json(tag: &str, opts: &RunOptions) -> (FleetRun, Report, String) {
+    let env = common::sim_env("cluster", tag);
+    let (run, report) = run_fleet(&env, opts).unwrap();
+    let json = to_json(&report);
+    parse_json(&json).unwrap_or_else(|e| panic!("fleet report JSON does not parse: {e}"));
+    (run, report, json)
+}
+
+fn base_opts() -> RunOptions {
+    RunOptions {
+        duration_secs: 120.0,
+        uavs: Some(8),
+        workers: Some(2),
+        seed: 7,
+        ..RunOptions::default()
+    }
+}
+
+#[test]
+fn single_cell_flags_are_byte_identical_to_flagless() {
+    let (_, _, flagless) = fleet_json("flagless", &base_opts());
+    let explicit = RunOptions {
+        cells: Some(1),
+        replicas: Some(1),
+        spill_max: Some(1),
+        ..base_opts()
+    };
+    let (_, report, single) = fleet_json("cells-1", &explicit);
+    assert_eq!(flagless, single, "--cells 1 must be a byte-level no-op");
+    // Single-cell reports carry no cluster telemetry at all.
+    assert!(!single.contains("fleet_cluster"));
+    assert!(report.scalar_value("cells").is_none());
+    assert!(report.scalar_value("remote_hits").is_none());
+}
+
+#[test]
+fn multi_cell_fleet_is_deterministic_with_consistent_telemetry() {
+    let clustered = RunOptions {
+        cells: Some(3),
+        replicas: Some(2),
+        cache_entries: Some(256),
+        cache_ttl: Some(120.0),
+        batch_max: Some(8),
+        ..base_opts()
+    };
+    let (run_a, report, a) = fleet_json("multi-a", &clustered);
+    let (_, _, b) = fleet_json("multi-b", &clustered);
+    assert_eq!(a, b, "same-seed multi-cell fleet reports differ");
+
+    assert_eq!(report.scalar_value("cells"), Some(3.0));
+    assert_eq!(report.scalar_value("replicas"), Some(2.0));
+    let cells_series = report
+        .series
+        .iter()
+        .find(|s| s.name == "fleet_cluster_cells")
+        .expect("per-cell series present on a multi-cell run");
+    assert_eq!(cells_series.rows.len(), 3);
+    let uav_series = report
+        .series
+        .iter()
+        .find(|s| s.name == "fleet_cluster_uav_cells")
+        .expect("per-UAV cells-hit series present");
+    assert_eq!(uav_series.rows.len(), 8);
+
+    // The fleet event loop keeps at most one request in flight per UAV, so
+    // nothing sheds or spills; routing still fans the request classes out.
+    assert_eq!(report.scalar_value("cluster_shed"), Some(0.0));
+    assert_eq!(report.scalar_value("spilled"), Some(0.0));
+    let cells_hit = report.scalar_value("cells_hit").unwrap();
+    assert!(
+        (1.0..=3.0).contains(&cells_hit),
+        "cells_hit {cells_hit} outside [1, 3]"
+    );
+    assert_eq!(cells_hit, run_a.cells_hit as f64);
+    // Serving telemetry rides along, merged across cells.
+    assert!(run_a.cache_hits_total > 0, "no cache reuse across the fleet");
+    let hit_rate = report.scalar_value("cache_hit_rate").unwrap();
+    assert!(hit_rate > 0.0 && hit_rate <= 1.0);
+}

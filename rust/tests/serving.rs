@@ -23,8 +23,9 @@
 mod common;
 
 use avery::cloud::{
-    cache_key, decode_reply, decode_response, encode_response, AdmissionPolicy, CloudPool,
-    CloudResponse, ResponseCache, ServerReply, ServingConfig,
+    cache_key, decode_reply, decode_response, encode_response, route_key, AdmissionPolicy,
+    CloudCluster, CloudPool, CloudResponse, ClusterConfig, HashRing, ResponseCache, ServeError,
+    ServerReply, ServingConfig,
 };
 use avery::coordinator::{classify_intent, Lut, TierId};
 use avery::dataset::{Corpus, Dataset};
@@ -281,6 +282,144 @@ fn session_replies_busy_while_queue_is_full() {
         client.send(b"shutdown").unwrap();
     });
     assert!(pool.stats().shed >= 1, "no shed was recorded");
+}
+
+// ---------------------------------------------------------------------------
+// Cluster sessions on the wire: spill before busy, typed shed hop counts
+// ---------------------------------------------------------------------------
+
+/// A two-cell cluster where the test request's home cell always sheds
+/// (workerless, single admission slot held by a parked ticket) while its
+/// ring sibling serves inline.  Returns the cluster, the home cell index
+/// and the parked ticket (dropping it frees the slot).
+fn shedding_home_cluster(
+    pkt: &Packet,
+    ids: &[i32],
+) -> (CloudCluster, usize, avery::cloud::Ticket) {
+    let serving = ServingConfig { queue_depth: 1, ..ServingConfig::default() };
+    let home = HashRing::new(2).cell_for(route_key(pkt, "ft"));
+    let pools = (0..2)
+        .map(|i| {
+            let engines = if i == home { Vec::new() } else { vec![Engine::synthetic()] };
+            CloudPool::with_config(engines, serving.clone())
+        })
+        .collect();
+    let cluster = CloudCluster::from_pools(
+        pools,
+        ClusterConfig { spill_max: 1, serving, ..ClusterConfig::default() },
+    );
+    let parked = cluster.cell(home).submit(pkt, ids, "ft").unwrap();
+    (cluster, home, parked)
+}
+
+#[test]
+fn cluster_session_spills_to_sibling_before_busy() {
+    let (pkts, ids) = insight_packets(1, 16);
+    let (cluster, home, _parked) = shedding_home_cluster(&pkts[0], &ids);
+
+    let frame = encode_request(&pkts[0].encode(), "highlight the stranded people", "ft");
+    let (mut client, mut server_side) = InProc::pair();
+    std::thread::scope(|s| {
+        let cluster = &cluster;
+        s.spawn(move || {
+            let served = cluster.serve_session(&mut server_side, "ft").unwrap();
+            assert_eq!(served, 1, "session served {served} requests");
+        });
+        // The home cell refuses, the sibling answers: the client sees a
+        // normal response, never the busy frame.
+        client.send(&frame).unwrap();
+        match decode_reply(&client.recv().unwrap()).unwrap() {
+            ServerReply::Response { presence, mask } => {
+                assert_eq!(presence.len(), 2);
+                assert!(!mask.is_empty());
+            }
+            ServerReply::Busy => panic!("home-cell shed surfaced as busy with an idle sibling"),
+        }
+        client.send(b"shutdown").unwrap();
+    });
+
+    let st = cluster.stats();
+    assert_eq!(st.served_at_hop, vec![0, 1], "request did not serve at hop 1");
+    assert_eq!(st.per_cell[home].shed, 1);
+    assert_eq!(st.shed, 0, "a spilled request is not a cluster-level shed");
+}
+
+#[test]
+fn exhausted_cluster_sheds_typed_in_process_and_busy_on_the_wire() {
+    let (pkts, ids) = insight_packets(1, 16);
+    let serving = ServingConfig { queue_depth: 1, ..ServingConfig::default() };
+    let cluster = CloudCluster::from_pools(
+        (0..3)
+            .map(|_| CloudPool::with_config(Vec::new(), serving.clone()))
+            .collect(),
+        ClusterConfig { spill_max: 2, serving, ..ClusterConfig::default() },
+    );
+    // Park every cell's only admission slot: the spill walk finds no room
+    // anywhere on the ring.
+    let _parked: Vec<_> =
+        (0..3).map(|i| cluster.cell(i).submit(&pkts[0], &ids, "ft").unwrap()).collect();
+
+    // In process the walk surfaces as a typed shed carrying the hop count.
+    match cluster.try_process(&pkts[0], &ids, "ft") {
+        Err(ServeError::Shed { hops }) => assert_eq!(hops, 2, "walk length"),
+        Err(e) => panic!("expected a shed, got {e:?}"),
+        Ok(_) => panic!("served from a fully parked cluster"),
+    }
+
+    // On the wire the same walk degrades to the protocol's busy frame.
+    let frame = encode_request(&pkts[0].encode(), "highlight the stranded people", "ft");
+    let (mut client, mut server_side) = InProc::pair();
+    std::thread::scope(|s| {
+        let cluster = &cluster;
+        s.spawn(move || {
+            cluster.serve_session(&mut server_side, "ft").unwrap();
+        });
+        client.send(&frame).unwrap();
+        assert_eq!(decode_reply(&client.recv().unwrap()).unwrap(), ServerReply::Busy);
+        client.send(b"shutdown").unwrap();
+    });
+
+    let st = cluster.stats();
+    assert_eq!(st.shed, 2, "both exhausted walks count at the cluster");
+    assert_eq!(st.total.shed, 6, "each walk refuses once per cell");
+    assert_eq!(st.served_at_hop, vec![0, 0, 0]);
+}
+
+#[test]
+fn spill_reply_frames_survive_truncation_and_bit_flips() {
+    // A reply produced by the spill path is framed exactly like a
+    // home-served one: every strict prefix errors, and no single-bit
+    // corruption can panic either decoder.
+    let (pkts, ids) = insight_packets(1, 16);
+    let (cluster, _, _parked) = shedding_home_cluster(&pkts[0], &ids);
+    let frame = encode_request(&pkts[0].encode(), "highlight the stranded people", "ft");
+    let (mut client, mut server_side) = InProc::pair();
+    let mut reply = Vec::new();
+    std::thread::scope(|s| {
+        let cluster = &cluster;
+        s.spawn(move || {
+            cluster.serve_session(&mut server_side, "ft").unwrap();
+        });
+        client.send(&frame).unwrap();
+        reply = client.recv().unwrap();
+        client.send(b"shutdown").unwrap();
+    });
+    assert!(decode_reply(&reply).is_ok());
+
+    for n in 0..reply.len() {
+        assert!(decode_reply(&reply[..n]).is_err(), "{n}-byte reply prefix decoded");
+        assert!(decode_response(&reply[..n]).is_err(), "{n}-byte response prefix decoded");
+    }
+    let mut rng = Rng::new(0xC1F11);
+    for _ in 0..400 {
+        let mut bad = reply.clone();
+        let bit = (rng.next_u64() as usize) % (bad.len() * 8);
+        bad[bit / 8] ^= 1 << (bit % 8);
+        // Any outcome but a panic is acceptable: a flipped float payload
+        // still decodes, a flipped length prefix must error.
+        let _ = decode_reply(&bad);
+        let _ = decode_response(&bad);
+    }
 }
 
 // ---------------------------------------------------------------------------
