@@ -13,14 +13,16 @@ test:
 	cargo build --release && cargo test -q
 
 # The perf-trajectory benches: the simulation kernel, the cloud serving
-# layer and the multi-cell cluster (write BENCH_simkernel.json /
-# BENCH_serving.json / BENCH_cluster.json — the machine-readable baselines
-# CI's bench-smoke / serving-smoke / cluster-smoke jobs check) plus the L3
+# layer, the multi-cell cluster and the chaos layer (write
+# BENCH_simkernel.json / BENCH_serving.json / BENCH_cluster.json /
+# BENCH_chaos.json — the machine-readable baselines CI's bench-smoke /
+# serving-smoke / cluster-smoke / chaos-smoke jobs check) plus the L3
 # hot-path microbenchmarks.  All run artifact-free.
 bench:
 	cargo bench --bench simkernel -- --out BENCH_simkernel.json
 	cargo bench --bench serving -- --out BENCH_serving.json
 	cargo bench --bench cluster -- --out BENCH_cluster.json
+	cargo bench --bench chaos -- --out BENCH_chaos.json
 	cargo bench --bench scenario_matrix -- --out BENCH_scenario_matrix.json
 	cargo bench --bench hotpath
 
@@ -29,6 +31,7 @@ bench-quick:
 	cargo bench --bench simkernel -- --quick --out BENCH_simkernel.json
 	cargo bench --bench serving -- --quick --out BENCH_serving.json
 	cargo bench --bench cluster -- --quick --out BENCH_cluster.json
+	cargo bench --bench chaos -- --quick --out BENCH_chaos.json
 	cargo bench --bench scenario_matrix -- --quick --out BENCH_scenario_matrix.json
 	cargo bench --bench hotpath
 

@@ -1,0 +1,227 @@
+//! Bench: the chaos layer (DESIGN.md "Chaos & recovery") —
+//! machine-readable `BENCH_chaos.json` for the resilience trajectory,
+//! parsed by CI's `chaos-smoke` job against `ci/bench_floor.json`.
+//!
+//! Every measured quantity is *virtual*: the fleet mission replays the
+//! same seeded timeline whatever the host, so availability/MTTR numbers
+//! are byte-stable across machines and the CI floors never flake on a
+//! slow runner (wall-clock is reported, never gated).
+//!
+//! Sections:
+//!
+//! * **cell_kill** — a two-cell fleet where cell 0 crashes mid-mission and
+//!   recovers: availability, MTTR/TTD percentiles and the Insight p99
+//!   against a fault-free baseline.  CI floors availability and ceilings
+//!   MTTR p99.
+//! * **mttr_vs_backoff** — the same crash under a sweep of re-probe base
+//!   backoffs: recovery time as a function of the quarantine schedule.
+//! * **availability_vs_rate** — an exec-error window under a failure-rate
+//!   sweep with the default retry/degrade resilience: how hard the layer
+//!   has to work (retries, degradations) to hold availability up.
+//!
+//! Usage: `cargo bench --bench chaos -- [--quick] [--out PATH]`
+//! (`--quick` is what CI runs; default writes `BENCH_chaos.json`).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use avery::bench::header;
+use avery::faults::{FaultKind, FaultSpec};
+use avery::mission::{run_fleet, Env, RunOptions};
+use avery::report::Report;
+use avery::streams::fleet::FleetRun;
+
+struct Args {
+    quick: bool,
+    out: String,
+}
+
+fn parse_args() -> Args {
+    let mut args = Args { quick: false, out: "BENCH_chaos.json".to_string() };
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--quick" => args.quick = true,
+            "--out" => {
+                if let Some(v) = argv.get(i + 1) {
+                    args.out = v.clone();
+                    i += 1;
+                }
+            }
+            other => {
+                if let Some(v) = other.strip_prefix("--out=") {
+                    args.out = v.to_string();
+                }
+                // `cargo bench` passes `--bench`; ignore unknown flags.
+            }
+        }
+        i += 1;
+    }
+    args
+}
+
+fn spec(
+    kind: FaultKind,
+    cell: usize,
+    at: f64,
+    duration: f64,
+    rate: f64,
+    stall_secs: f64,
+) -> FaultSpec {
+    FaultSpec { kind, cell, at, duration, rate, stall_secs }
+}
+
+/// One seeded fleet run over a fault schedule; returns the run, its report
+/// and the wall-clock seconds it took to simulate.
+fn run(env: &Env, opts: &RunOptions) -> (FleetRun, Report, f64) {
+    let t0 = Instant::now();
+    let (fleet, report) = run_fleet(env, opts).expect("fleet mission failed");
+    (fleet, report, t0.elapsed().as_secs_f64())
+}
+
+fn availability(r: &FleetRun) -> f64 {
+    (r.executed_total + r.degraded_total) as f64 / r.captures_total.max(1) as f64
+}
+
+fn scalar(report: &Report, name: &str) -> f64 {
+    report.scalar_value(name).unwrap_or(0.0)
+}
+
+fn jf(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.4}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    let mode = if args.quick { "quick" } else { "full" };
+    let duration = if args.quick { 180.0 } else { 600.0 };
+    let uavs = if args.quick { 6 } else { 12 };
+    let env = Env::synthetic(Path::new("target/bench-out/chaos"))?;
+
+    let base = RunOptions {
+        duration_secs: duration,
+        uavs: Some(uavs),
+        workers: Some(2),
+        cells: Some(2),
+        seed: 7,
+        exec_every: 1,
+        ..RunOptions::default()
+    };
+    // Cell 0 dark for the middle fifth of the mission.
+    let crash = vec![spec(FaultKind::CellCrash, 0, 0.4, 0.2, 0.0, 0.0)];
+
+    // ---- cell kill vs fault-free baseline --------------------------------
+    header("cell kill: two-cell fleet, cell 0 dark for 20% of the mission");
+    let (baseline, _, wall_base) = run(&env, &base);
+    let (killed, kreport, wall_kill) =
+        run(&env, &RunOptions { fault_specs: crash.clone(), ..base.clone() });
+    let avail_kill = availability(&killed);
+    let mttr_p50 = scalar(&kreport, "mttr_p50_s");
+    let mttr_p99 = scalar(&kreport, "mttr_p99_s");
+    let ttd_p99 = scalar(&kreport, "ttd_p99_s");
+    let recoveries = scalar(&kreport, "recoveries");
+    println!(
+        "baseline : {} captures, availability {:.4}, ins p99 {:.4}s  ({wall_base:.2}s wall)",
+        baseline.captures_total,
+        availability(&baseline),
+        baseline.lat_insight.p99()
+    );
+    println!(
+        "cell kill: {} captures, availability {avail_kill:.4}, ins p99 {:.4}s, \
+         MTTR p50/p99 {mttr_p50:.2}/{mttr_p99:.2}s, TTD p99 {ttd_p99:.3}s, \
+         {recoveries:.0} recoveries  ({wall_kill:.2}s wall)",
+        killed.captures_total,
+        killed.lat_insight.p99()
+    );
+
+    // ---- MTTR vs re-probe backoff ----------------------------------------
+    header("MTTR vs re-probe base backoff (same crash, quarantine sweep)");
+    let backoffs: &[f64] = if args.quick { &[0.25, 1.0, 4.0] } else { &[0.25, 0.5, 1.0, 2.0, 4.0] };
+    let mut mttr_rows: Vec<String> = Vec::new();
+    for &b in backoffs {
+        let (_, report, _) = run(
+            &env,
+            &RunOptions {
+                fault_specs: crash.clone(),
+                probe_backoff: Some(b),
+                ..base.clone()
+            },
+        );
+        let p50 = scalar(&report, "mttr_p50_s");
+        let p99 = scalar(&report, "mttr_p99_s");
+        let rec = scalar(&report, "recoveries");
+        println!("backoff {b:>5.2}s: MTTR p50 {p50:>7.2}s  p99 {p99:>7.2}s  ({rec:.0} recoveries)");
+        mttr_rows.push(format!(
+            "{{\"backoff_secs\":{},\"mttr_p50_s\":{},\"mttr_p99_s\":{},\"recoveries\":{}}}",
+            jf(b),
+            jf(p50),
+            jf(p99),
+            jf(rec)
+        ));
+    }
+
+    // ---- availability vs exec-error rate ---------------------------------
+    header("availability vs exec-error rate (default retry + degrade resilience)");
+    let rates: &[f64] = if args.quick { &[0.1, 0.5, 0.9] } else { &[0.1, 0.3, 0.5, 0.7, 0.9] };
+    let mut rate_rows: Vec<String> = Vec::new();
+    let mut min_avail_rate = f64::INFINITY;
+    for &r in rates {
+        let faults = vec![spec(FaultKind::ExecError, 0, 0.2, 0.6, r, 0.0)];
+        let (fleet, _, _) = run(&env, &RunOptions { fault_specs: faults, ..base.clone() });
+        let avail = availability(&fleet);
+        min_avail_rate = min_avail_rate.min(avail);
+        println!(
+            "rate {r:.1}: availability {avail:.4}  ({} retries, {} degraded, {} abandoned \
+             of {} captures)",
+            fleet.retries_total, fleet.degraded_total, fleet.abandoned_total,
+            fleet.captures_total
+        );
+        rate_rows.push(format!(
+            "{{\"rate\":{},\"availability\":{},\"retries\":{},\"degraded\":{},\
+             \"abandoned\":{},\"captures\":{}}}",
+            jf(r),
+            jf(avail),
+            fleet.retries_total,
+            fleet.degraded_total,
+            fleet.abandoned_total,
+            fleet.captures_total
+        ));
+    }
+
+    // ---- machine-readable output -----------------------------------------
+    let json = format!(
+        "{{\"schema\":1,\"bench\":\"chaos\",\"mode\":\"{mode}\",\
+         \"availability\":{},\
+         \"mttr_p50_s\":{},\
+         \"mttr_p99_s\":{},\
+         \"ttd_p99_s\":{},\
+         \"recoveries\":{},\
+         \"baseline_availability\":{},\
+         \"baseline_ins_p99_s\":{},\
+         \"cell_kill_ins_p99_s\":{},\
+         \"min_availability_rate_sweep\":{},\
+         \"mttr_vs_backoff\":[{}],\
+         \"availability_vs_rate\":[{}]}}",
+        jf(avail_kill),
+        jf(mttr_p50),
+        jf(mttr_p99),
+        jf(ttd_p99),
+        jf(recoveries),
+        jf(availability(&baseline)),
+        jf(baseline.lat_insight.p99()),
+        jf(killed.lat_insight.p99()),
+        jf(min_avail_rate),
+        mttr_rows.join(","),
+        rate_rows.join(",")
+    );
+    std::fs::write(&args.out, format!("{json}\n"))?;
+    println!("\nwrote {}", args.out);
+    Ok(())
+}

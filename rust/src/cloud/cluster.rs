@@ -42,10 +42,12 @@ use anyhow::Result;
 
 use crate::coordinator::{classify_intent, TierId};
 use crate::edge::tail_artifact_name;
+use crate::faults::{FaultCounts, FaultInjector, FaultKind, FaultPlan};
 use crate::packet::{Packet, StreamKind};
 use crate::runtime::Engine;
 use crate::telemetry::LatencyHistogram;
 use crate::transport::{decode_request, Transport, BUSY_FRAME};
+use crate::util::Rng;
 
 use super::serving::{cache_key, fnv64, CloudPool, PoolStats, ServeError, ServingConfig};
 use super::{ServePackets, Served};
@@ -109,6 +111,9 @@ pub struct HashRing {
     /// (point hash, cell index), sorted by hash.
     points: Vec<(u64, usize)>,
     cells: usize,
+    /// Vnodes each cell contributes (needed to rebuild a cell's points on
+    /// [`HashRing::add_cell`]).
+    vnodes: usize,
 }
 
 impl HashRing {
@@ -129,7 +134,7 @@ impl HashRing {
         // collision the lowest cell index deterministically keeps it.
         points.sort_unstable();
         points.dedup_by_key(|p| p.0);
-        Self { points, cells }
+        Self { points, cells, vnodes }
     }
 
     /// Number of cells this ring was built over (removed cells included —
@@ -172,15 +177,48 @@ impl HashRing {
         out
     }
 
-    /// Remove one cell's points (cluster shrink).  Every other cell's
-    /// points are untouched, so only keys homed on the removed cell remap.
-    /// The last cell cannot be removed.
+    /// Remove one cell's points (cluster shrink, or a health-layer
+    /// quarantine).  Every other cell's points are untouched, so only keys
+    /// homed on the removed cell remap.  The last cell cannot be removed.
     pub fn remove_cell(&mut self, cell: usize) {
         assert!(
             self.points.iter().any(|&(_, c)| c != cell),
             "cannot remove the last cell from the ring"
         );
         self.points.retain(|&(_, c)| c != cell);
+    }
+
+    /// Re-insert one cell's points — the inverse of
+    /// [`HashRing::remove_cell`], used when a quarantined cell recovers.
+    /// Points merge under the same (sort, lowest-cell-keeps-collisions)
+    /// rule as construction, so insertion order does not matter: any
+    /// remove/re-add sequence that ends with the same cell set yields the
+    /// byte-identical ring (pinned by `rust/tests/chaos.rs`).  Re-adding a
+    /// present cell is a no-op.
+    pub fn add_cell(&mut self, cell: usize) {
+        assert!(cell < self.cells, "cell {cell} outside this ring's 0..{} id space", self.cells);
+        if self.has_cell(cell) {
+            return;
+        }
+        for v in 0..self.vnodes {
+            self.points.push((splitmix64(((cell as u64) << 32) | v as u64), cell));
+        }
+        self.points.sort_unstable();
+        self.points.dedup_by_key(|p| p.0);
+    }
+
+    /// Whether `cell` currently contributes points to the ring.
+    pub fn has_cell(&self, cell: usize) -> bool {
+        self.points.iter().any(|&(_, c)| c == cell)
+    }
+
+    /// Distinct cells currently contributing points.
+    pub fn live_cells(&self) -> usize {
+        let mut seen = vec![false; self.cells];
+        for &(_, c) in &self.points {
+            seen[c] = true;
+        }
+        seen.iter().filter(|&&s| s).count()
     }
 }
 
@@ -204,6 +242,12 @@ pub struct ClusterConfig {
     /// Per-cell serving configuration (batching, cache, admission — each
     /// cell runs its own queue, cache and admission bound).
     pub serving: ServingConfig,
+    /// Chaos layer: the fault schedule this cluster runs under (`None` =
+    /// fault-free, taking the exact pre-chaos request path).
+    pub faults: Option<FaultPlan>,
+    /// Failure-domain health parameters — only consulted when a fault plan
+    /// is armed.
+    pub health: HealthConfig,
 }
 
 impl Default for ClusterConfig {
@@ -214,6 +258,8 @@ impl Default for ClusterConfig {
             hop_latency_secs: DEFAULT_HOP_LATENCY_SECS,
             spill_max: 1,
             serving: ServingConfig::default(),
+            faults: None,
+            health: HealthConfig::default(),
         }
     }
 }
@@ -224,6 +270,231 @@ impl ClusterConfig {
     /// (single-cell reports stay byte-identical to pre-cluster ones).
     pub fn multi_cell(&self) -> bool {
         self.cells > 1
+    }
+
+    /// True when a fault plan is armed (drives the chaos request path and
+    /// the recovery telemetry).
+    pub fn chaos_enabled(&self) -> bool {
+        self.faults.is_some()
+    }
+}
+
+/// Parameters of the per-cell health state machine (DESIGN.md "Chaos &
+/// recovery"): Up → Suspect on a typed error, Suspect → Down after
+/// `down_after` consecutive errors (virtual-time quarantine, routed
+/// around), Down → Up when a re-probe on seeded exponential backoff
+/// succeeds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HealthConfig {
+    /// Consecutive typed errors that quarantine a cell (the first error
+    /// only suspects it; `down_after` total take it Down).
+    pub down_after: u32,
+    /// Initial quarantine before the first re-probe (virtual seconds).
+    pub backoff_base_secs: f64,
+    /// Quarantine cap — the backoff doubles per failed probe up to this.
+    pub backoff_max_secs: f64,
+    /// Jitter fraction: each quarantine interval is scaled by
+    /// `1 + jitter·u` with a seeded uniform `u ∈ [0, 1)`, decorrelating
+    /// re-probe storms while staying deterministic per seed.
+    pub jitter: f64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        Self { down_after: 2, backoff_base_secs: 0.5, backoff_max_secs: 8.0, jitter: 0.1 }
+    }
+}
+
+/// One cell's health verdict (see [`HealthConfig`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CellState {
+    Up,
+    Suspect,
+    Down,
+}
+
+impl CellState {
+    pub fn name(self) -> &'static str {
+        match self {
+            CellState::Up => "up",
+            CellState::Suspect => "suspect",
+            CellState::Down => "down",
+        }
+    }
+}
+
+/// Per-cell health bookkeeping (chaos path only).
+#[derive(Clone, Debug)]
+struct CellHealth {
+    state: CellState,
+    consec_errors: u32,
+    suspect_since: f64,
+    down_since: f64,
+    /// Next re-probe time while Down.
+    probe_at: f64,
+    /// Current quarantine interval (doubles per failed probe).
+    backoff: f64,
+    /// Whether the cell currently contributes points to the live ring.
+    in_ring: bool,
+}
+
+impl CellHealth {
+    fn up() -> Self {
+        Self {
+            state: CellState::Up,
+            consec_errors: 0,
+            suspect_since: 0.0,
+            down_since: 0.0,
+            probe_at: 0.0,
+            backoff: 0.0,
+            in_ring: true,
+        }
+    }
+}
+
+/// Recovery observability the chaos path accumulates — surfaced through
+/// [`CloudCluster::chaos_stats`] into the fleet/scenario reports and
+/// `BENCH_chaos.json`.
+#[derive(Clone, Debug)]
+pub struct ChaosStats {
+    /// Injections per fault kind (index via [`FaultKind::index`]).
+    pub injected: FaultCounts,
+    /// Mean-time-to-recovery samples: virtual seconds from quarantine
+    /// (Down) to the successful re-probe, one sample per recovery.
+    pub mttr: LatencyHistogram,
+    /// Time-to-detect samples: virtual seconds from first Suspect to the
+    /// Down transition, one sample per quarantine.
+    pub ttd: LatencyHistogram,
+    /// Total virtual seconds of completed cell downtime (Down → Up spans;
+    /// cells still Down at the end of the run are not counted here).
+    pub downtime_secs: f64,
+    /// Completed Down → Up recoveries.
+    pub recoveries: u64,
+    /// Per-cell health transitions in virtual-time order.
+    pub timeline: Vec<(f64, usize, CellState)>,
+    /// Cells still Down when the stats were taken.
+    pub down_now: u32,
+}
+
+/// The chaos path's mutable state: the fault injector, the per-cell health
+/// machines, the *live* ring (quarantined cells removed) and the recovery
+/// telemetry.  One mutex guards it all — the virtual-time fleet loop is
+/// serial, so the lock is uncontended and the seeded draws stay in request
+/// order (byte-determinism).
+struct ChaosState {
+    injector: FaultInjector,
+    hcfg: HealthConfig,
+    rng: Rng,
+    cells: Vec<CellHealth>,
+    live: HashRing,
+    mttr: LatencyHistogram,
+    ttd: LatencyHistogram,
+    downtime_secs: f64,
+    recoveries: u64,
+    timeline: Vec<(f64, usize, CellState)>,
+}
+
+impl ChaosState {
+    fn new(plan: FaultPlan, hcfg: HealthConfig, n_cells: usize) -> Self {
+        let seed = plan.seed;
+        Self {
+            injector: FaultInjector::new(plan),
+            hcfg,
+            rng: Rng::new(seed ^ 0xBACC_0FF),
+            cells: (0..n_cells).map(|_| CellHealth::up()).collect(),
+            live: HashRing::new(n_cells),
+            mttr: LatencyHistogram::new(),
+            ttd: LatencyHistogram::new(),
+            downtime_secs: 0.0,
+            recoveries: 0,
+            timeline: Vec::new(),
+        }
+    }
+
+    /// Re-probe every quarantined cell whose backoff expired at `t`: a
+    /// probe succeeds iff no crash window is open (a health-check ping,
+    /// not a request), taking the cell Up and back into the live ring;
+    /// a failed probe doubles the quarantine with seeded jitter.
+    fn reprobe_due(&mut self, t: f64) {
+        for cell in 0..self.cells.len() {
+            if self.cells[cell].state != CellState::Down || t < self.cells[cell].probe_at {
+                continue;
+            }
+            if self.injector.crash_active(cell, t) {
+                let jitter = 1.0 + self.hcfg.jitter * self.rng.f64();
+                let h = &mut self.cells[cell];
+                h.backoff = (h.backoff * 2.0).min(self.hcfg.backoff_max_secs);
+                h.probe_at = t + h.backoff * jitter;
+            } else {
+                let down_for = (t - self.cells[cell].down_since).max(0.0);
+                self.mttr.record(down_for);
+                self.downtime_secs += down_for;
+                self.recoveries += 1;
+                let h = &mut self.cells[cell];
+                h.state = CellState::Up;
+                h.consec_errors = 0;
+                if !h.in_ring {
+                    h.in_ring = true;
+                    self.live.add_cell(cell);
+                }
+                self.timeline.push((t, cell, CellState::Up));
+            }
+        }
+    }
+
+    /// One typed error at `cell`: Up → Suspect, Suspect → Down after
+    /// `down_after` consecutive errors.
+    fn cell_error(&mut self, cell: usize, t: f64) {
+        match self.cells[cell].state {
+            CellState::Down => {}
+            CellState::Up => {
+                let h = &mut self.cells[cell];
+                h.state = CellState::Suspect;
+                h.consec_errors = 1;
+                h.suspect_since = t;
+                self.timeline.push((t, cell, CellState::Suspect));
+                if self.hcfg.down_after <= 1 {
+                    self.quarantine(cell, t);
+                }
+            }
+            CellState::Suspect => {
+                self.cells[cell].consec_errors += 1;
+                if self.cells[cell].consec_errors >= self.hcfg.down_after {
+                    self.quarantine(cell, t);
+                }
+            }
+        }
+    }
+
+    /// A successful serve at `cell` clears suspicion.
+    fn cell_ok(&mut self, cell: usize, t: f64) {
+        if self.cells[cell].state == CellState::Suspect {
+            self.cells[cell].state = CellState::Up;
+            self.timeline.push((t, cell, CellState::Up));
+        }
+        self.cells[cell].consec_errors = 0;
+    }
+
+    /// Take `cell` Down: record time-to-detect, start the quarantine clock
+    /// and route around it (unless it is the last live cell — the ring
+    /// never empties; requests keep failing there and the agents degrade).
+    fn quarantine(&mut self, cell: usize, t: f64) {
+        let ttd = (t - self.cells[cell].suspect_since).max(0.0);
+        self.ttd.record(ttd);
+        let jitter = 1.0 + self.hcfg.jitter * self.rng.f64();
+        {
+            let base = self.hcfg.backoff_base_secs;
+            let h = &mut self.cells[cell];
+            h.state = CellState::Down;
+            h.down_since = t;
+            h.backoff = base;
+            h.probe_at = t + base * jitter;
+        }
+        self.timeline.push((t, cell, CellState::Down));
+        if self.cells[cell].in_ring && self.live.live_cells() > 1 {
+            self.cells[cell].in_ring = false;
+            self.live.remove_cell(cell);
+        }
     }
 }
 
@@ -282,6 +553,10 @@ pub struct CloudCluster {
     served_at_hop: Vec<AtomicU64>,
     /// Exhausted-spill sheds surfaced to callers.
     shed: AtomicU64,
+    /// Chaos layer (fault injector + health machines + live ring) — `None`
+    /// unless a fault plan is armed, keeping the fault-free request path
+    /// byte-identical to pre-chaos builds.
+    chaos: Option<Mutex<ChaosState>>,
 }
 
 impl CloudCluster {
@@ -308,12 +583,17 @@ impl CloudCluster {
         assert!(!pools.is_empty(), "a cluster needs at least one cell");
         cfg.cells = pools.len();
         let hops = (cfg.spill_max as usize + 1).min(pools.len());
+        let chaos = cfg.faults.clone().map(|plan| {
+            plan.validate().expect("fault plan failed validation");
+            Mutex::new(ChaosState::new(plan, cfg.health.clone(), pools.len()))
+        });
         Self {
             ring: HashRing::new(pools.len()),
             remote_hits: (0..pools.len()).map(|_| AtomicU64::new(0)).collect(),
             served_at_hop: (0..hops).map(|_| AtomicU64::new(0)).collect(),
             shed: AtomicU64::new(0),
             vlat: Mutex::new([LatencyHistogram::new(); 2]),
+            chaos,
             pools,
             cfg,
         }
@@ -353,6 +633,9 @@ impl CloudCluster {
         prompt_ids: &[i32],
         set: &str,
     ) -> Result<Served, ServeError> {
+        if self.chaos.is_some() {
+            return self.try_process_chaos(pkt, prompt_ids, set);
+        }
         if self.pools.len() == 1 {
             return self.pools[0].try_process(pkt, prompt_ids, set);
         }
@@ -425,6 +708,141 @@ impl CloudCluster {
         }
         self.shed.fetch_add(1, Ordering::Relaxed);
         Err(ServeError::Shed { hops: tries.saturating_sub(1) as u32 })
+    }
+
+    /// The chaos-armed request path: the same route/probe/spill state
+    /// machine as [`CloudCluster::try_process`], but routed on the *live*
+    /// ring (quarantined cells removed), with fault injection at every
+    /// stage and every typed error feeding the per-cell health machines.
+    /// A separate function — not branches inside the hot path — so the
+    /// fault-free path stays textually and behaviorally untouched.
+    fn try_process_chaos(
+        &self,
+        pkt: &Packet,
+        prompt_ids: &[i32],
+        set: &str,
+    ) -> Result<Served, ServeError> {
+        let t = pkt.t_capture;
+        let mut st = self.chaos.as_ref().expect("chaos path without state").lock().unwrap();
+        // Link-level faults fire before any routing — the wire is at
+        // fault, not a cell, so the health machines never see them.
+        if st.injector.take_session_drop(t) {
+            return Err(ServeError::Fault { kind: FaultKind::SessionDrop });
+        }
+        if st.injector.draw_wire_corrupt(t) {
+            return Err(ServeError::Fault { kind: FaultKind::WireCorrupt });
+        }
+        // Quarantined cells whose backoff expired re-probe now, so a
+        // recovered cell rejoins the live ring before this request routes.
+        st.reprobe_due(t);
+        let order = st.live.cells_from(route_key(pkt, set));
+        let home = order[0];
+        let caching = self.cfg.serving.cache_entries > 0;
+        let replicating = caching && self.cfg.replicas > 1;
+        let key = caching.then(|| cache_key(pkt, prompt_ids, set));
+
+        if replicating {
+            let key = key.expect("replication implies caching");
+            if st.cells[home].state != CellState::Down {
+                if let Some(resp) = self.pools[home].cache_probe(key, t) {
+                    self.served_at_hop[0].fetch_add(1, Ordering::Relaxed);
+                    return Ok(Served { resp, cache_hit: true, hops: 0, hop_secs: 0.0, cell: home });
+                }
+            }
+            // Sibling replica probes walk the live order, so quarantined
+            // replicas are skipped without spending a hop on them.
+            for &cell in order.iter().take(self.cfg.replicas).skip(1) {
+                let Some(resp) = self.pools[cell].cache_probe(key, t) else {
+                    continue;
+                };
+                self.remote_hits[cell].fetch_add(1, Ordering::Relaxed);
+                self.pools[home].cache_replicate(key, &resp, t);
+                return Ok(Served {
+                    resp,
+                    cache_hit: true,
+                    hops: 1,
+                    hop_secs: self.cfg.hop_latency_secs,
+                    cell,
+                });
+            }
+        }
+
+        let tries = order.len().min(self.cfg.spill_max as usize + 1);
+        let mut last_fault: Option<FaultKind> = None;
+        for (hop, &cell) in order.iter().take(tries).enumerate() {
+            if st.cells[cell].state == CellState::Down {
+                // Only reachable when the ring is down to its last cell
+                // (quarantined cells leave the live ring otherwise) — the
+                // quarantine stands until its re-probe clears it.
+                last_fault = Some(FaultKind::CellCrash);
+                continue;
+            }
+            if st.injector.crash_active(cell, t) {
+                // Connection refused: record, feed the health machine and
+                // spill to the next ring sibling like a shed would.
+                st.injector.record(FaultKind::CellCrash);
+                st.cell_error(cell, t);
+                last_fault = Some(FaultKind::CellCrash);
+                continue;
+            }
+            if st.injector.draw_exec_error(cell, t) {
+                // The request died mid-execution at this cell: request-
+                // fatal here (the agent's retry budget owns recovery),
+                // and one more strike against the cell.
+                st.cell_error(cell, t);
+                return Err(ServeError::Fault { kind: FaultKind::ExecError });
+            }
+            match self.pools[cell].try_process(pkt, prompt_ids, set) {
+                Ok(served) => {
+                    st.cell_ok(cell, t);
+                    let stall = st.injector.stall_secs(cell, t);
+                    self.served_at_hop[hop.min(self.served_at_hop.len() - 1)]
+                        .fetch_add(1, Ordering::Relaxed);
+                    if replicating && !served.cache_hit {
+                        let key = key.expect("replication implies caching");
+                        for &rc in order.iter().take(self.cfg.replicas) {
+                            if rc != cell {
+                                self.pools[rc].cache_replicate(key, &served.resp, t);
+                            }
+                        }
+                    }
+                    return Ok(Served {
+                        resp: served.resp,
+                        cache_hit: served.cache_hit,
+                        hops: hop as u32,
+                        hop_secs: hop as f64 * self.cfg.hop_latency_secs + stall,
+                        cell,
+                    });
+                }
+                Err(ServeError::Shed { .. }) => continue,
+                Err(e) => {
+                    // A real per-cell failure (worker death, execution
+                    // error) is a strike against the cell too.
+                    st.cell_error(cell, t);
+                    return Err(e);
+                }
+            }
+        }
+        if let Some(kind) = last_fault {
+            return Err(ServeError::Fault { kind });
+        }
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        Err(ServeError::Shed { hops: tries.saturating_sub(1) as u32 })
+    }
+
+    /// Recovery observability when a fault plan is armed (`None`
+    /// otherwise) — see [`ChaosStats`].
+    pub fn chaos_stats(&self) -> Option<ChaosStats> {
+        let st = self.chaos.as_ref()?.lock().unwrap();
+        Some(ChaosStats {
+            injected: st.injector.counts(),
+            mttr: st.mttr,
+            ttd: st.ttd,
+            downtime_secs: st.downtime_secs,
+            recoveries: st.recoveries,
+            timeline: st.timeline.clone(),
+            down_now: st.cells.iter().filter(|c| c.state == CellState::Down).count() as u32,
+        })
     }
 
     /// [`CloudCluster::try_process`] with the typed error folded into

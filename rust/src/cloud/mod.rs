@@ -22,7 +22,8 @@ pub mod cluster;
 pub mod serving;
 
 pub use cluster::{
-    route_key, CloudCluster, ClusterConfig, ClusterStats, HashRing, DEFAULT_HOP_LATENCY_SECS,
+    route_key, CellState, ChaosStats, CloudCluster, ClusterConfig, ClusterStats, HashRing,
+    HealthConfig, DEFAULT_HOP_LATENCY_SECS,
 };
 pub use serving::{
     cache_key, AdmissionPolicy, CloudPool, PoolStats, ResponseCache, ServeError, ServingConfig,
@@ -253,7 +254,11 @@ pub fn decode_reply(frame: &[u8]) -> Result<ServerReply> {
 /// Context.  Section counts are sanity-capped against the bytes actually
 /// present *before* any offset arithmetic, so a corrupt or hostile length
 /// prefix (up to the u32 maximum — 4 GiB of declared payload) is rejected
-/// instead of driving a huge allocation or overflowing index math.
+/// instead of driving a huge allocation or overflowing index math.  Every
+/// shortfall — a session dying mid-frame cuts the stream at an arbitrary
+/// byte — surfaces the typed [`crate::transport::TruncatedStream`] naming
+/// the section the frame died in (every cut point is pinned by the tests
+/// below).
 pub fn decode_response(frame: &[u8]) -> Result<(Vec<f32>, Vec<f32>)> {
     if frame == BUSY_FRAME {
         bail!("server is busy (admission controller shed the request)");
@@ -265,20 +270,35 @@ pub fn decode_response(frame: &[u8]) -> Result<(Vec<f32>, Vec<f32>)> {
             .collect()
     };
     if frame.len() < 8 {
-        bail!("response truncated: {} bytes", frame.len());
+        return Err(crate::transport::TruncatedStream {
+            section: "header",
+            wanted: 8,
+            got: frame.len(),
+        }
+        .into());
     }
     let np = u32::from_le_bytes(frame[0..4].try_into().unwrap()) as usize;
     let mut off = 4;
     // The presence section plus the mask-count prefix must fit what's left.
     if np > (frame.len() - off - 4) / 4 {
-        bail!("response declares {np} presence values, frame has {} bytes", frame.len());
+        return Err(crate::transport::TruncatedStream {
+            section: "presence",
+            wanted: np * 4,
+            got: frame.len() - off - 4,
+        }
+        .into());
     }
     let presence = f32s(&frame[off..off + np * 4]);
     off += np * 4;
     let nm = u32::from_le_bytes(frame[off..off + 4].try_into().unwrap()) as usize;
     off += 4;
     if nm > (frame.len() - off) / 4 {
-        bail!("response declares {nm} mask values, frame has {} bytes", frame.len());
+        return Err(crate::transport::TruncatedStream {
+            section: "mask",
+            wanted: nm * 4,
+            got: frame.len() - off,
+        }
+        .into());
     }
     let mask = f32s(&frame[off..off + nm * 4]);
     Ok((presence, mask))
@@ -322,6 +342,35 @@ mod tests {
         let frame = encode_response(&r);
         assert!(decode_response(&frame[..frame.len() - 2]).is_err());
         assert!(decode_response(&[]).is_err());
+    }
+
+    #[test]
+    fn every_reply_cut_point_surfaces_typed_truncation() {
+        // The reply to a spilled Insight request (presence logits + mask
+        // payload), cut at every possible byte — a session can die
+        // mid-frame anywhere.  Each strict prefix must surface the
+        // dedicated TruncatedStream error, never a generic one and never a
+        // bogus success, on both decode surfaces.
+        let r = CloudResponse {
+            mask_logits: Some(Tensor::f32(vec![2, 2], vec![0.5, -0.5, 1.0, -1.0]).unwrap()),
+            presence: vec![1.5, -2.5],
+        };
+        let frame = encode_response(&r);
+        for cut in 0..frame.len() {
+            let err = decode_response(&frame[..cut])
+                .expect_err(&format!("prefix of {cut} bytes decoded"));
+            assert!(
+                err.downcast_ref::<crate::transport::TruncatedStream>().is_some(),
+                "cut at {cut}: untyped error {err:#}"
+            );
+            let err = decode_reply(&frame[..cut])
+                .expect_err(&format!("reply prefix of {cut} bytes decoded"));
+            assert!(
+                err.downcast_ref::<crate::transport::TruncatedStream>().is_some(),
+                "reply cut at {cut}: untyped error {err:#}"
+            );
+        }
+        assert!(decode_response(&frame).is_ok());
     }
 
     #[test]

@@ -48,6 +48,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::classify_intent;
+use crate::faults::{FaultInjector, FaultKind, FaultPlan};
 use crate::packet::{Packet, StreamKind};
 use crate::runtime::Engine;
 use crate::telemetry::LatencyHistogram;
@@ -160,6 +161,12 @@ pub enum ServeError {
     Closed,
     /// The request executed and failed.
     Exec(anyhow::Error),
+    /// The chaos layer injected a failure (see [`crate::faults`]): a
+    /// crashed cell, a failed execution draw, a corrupted frame or a
+    /// dropped session.  Typed so the failover/retry layers can tell an
+    /// injected fault from a real execution bug ([`ServeError::Exec`]
+    /// stays request-fatal; faults are retryable).
+    Fault { kind: FaultKind },
 }
 
 impl std::fmt::Display for ServeError {
@@ -174,6 +181,7 @@ impl std::fmt::Display for ServeError {
             ),
             ServeError::Closed => write!(f, "cloud pool closed before replying"),
             ServeError::Exec(e) => write!(f, "cloud execution failed: {e:#}"),
+            ServeError::Fault { kind } => write!(f, "injected fault: {}", kind.name()),
         }
     }
 }
@@ -738,6 +746,11 @@ pub struct CloudPool {
     /// which case an in-process request needs no job-queue hop — and no
     /// `Packet` clone.
     direct: Option<Engine>,
+    /// Programmatically injected fault plan (chaos layer) — `None` by
+    /// default, so fault-free pools take no lock and behave byte-identically
+    /// to pre-chaos builds.  A cluster injects at the cluster level instead
+    /// (cell identity lives there); this hook covers bare-pool serving.
+    faults: Option<Mutex<FaultInjector>>,
 }
 
 impl CloudPool {
@@ -818,7 +831,22 @@ impl CloudPool {
             batched_requests,
             cache,
             direct,
+            faults: None,
         }
+    }
+
+    /// Arm this pool with a fault plan: requests consult the injector at
+    /// entry (crash window → [`ServeError::Fault`], seeded exec-error draw
+    /// → [`ServeError::Fault`], stall window → extra `hop_secs` on the
+    /// [`Served`]).  Cell-scoped events target cell 0 — a bare pool is its
+    /// own (only) failure domain.
+    pub fn inject_faults(&mut self, plan: FaultPlan) {
+        self.faults = Some(Mutex::new(FaultInjector::new(plan)));
+    }
+
+    /// Per-kind injection counters when a fault plan is armed.
+    pub fn fault_counts(&self) -> Option<crate::faults::FaultCounts> {
+        self.faults.as_ref().map(|f| f.lock().unwrap().counts())
     }
 
     pub fn workers(&self) -> usize {
@@ -996,6 +1024,44 @@ impl CloudPool {
     /// flag) flow through here, and responses are pure functions of the
     /// request on either route.
     pub fn try_process(
+        &self,
+        pkt: &Packet,
+        prompt_ids: &[i32],
+        set: &str,
+    ) -> Result<Served, ServeError> {
+        let Some(faults) = &self.faults else {
+            return self.try_process_inner(pkt, prompt_ids, set);
+        };
+        // Chaos hook (armed via [`CloudPool::inject_faults`] only): consult
+        // the injector at entry — link faults first, then cell-scoped ones
+        // against cell 0 — before any cache or queue work, so an injected
+        // failure costs the caller nothing but the typed error.
+        let stall = {
+            let mut inj = faults.lock().unwrap();
+            let t = pkt.t_capture;
+            if inj.take_session_drop(t) {
+                return Err(ServeError::Fault { kind: FaultKind::SessionDrop });
+            }
+            if inj.draw_wire_corrupt(t) {
+                return Err(ServeError::Fault { kind: FaultKind::WireCorrupt });
+            }
+            if inj.crash_active(0, t) {
+                inj.record(FaultKind::CellCrash);
+                return Err(ServeError::Fault { kind: FaultKind::CellCrash });
+            }
+            if inj.draw_exec_error(0, t) {
+                return Err(ServeError::Fault { kind: FaultKind::ExecError });
+            }
+            inj.stall_secs(0, t)
+        };
+        let mut served = self.try_process_inner(pkt, prompt_ids, set)?;
+        // A stalled worker still answers — late.  The stall rides the
+        // hop-latency channel the timing model already charges.
+        served.hop_secs += stall;
+        Ok(served)
+    }
+
+    fn try_process_inner(
         &self,
         pkt: &Packet,
         prompt_ids: &[i32],

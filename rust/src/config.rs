@@ -167,6 +167,28 @@ pub struct RunConfig {
     /// Cloud cluster: max spill hops past the home cell before a typed
     /// shed (`--spill-max H`); `None` = 1.
     pub spill_max: Option<u32>,
+    /// Chaos layer: standalone fault-plan manifest path
+    /// (`--fault-plan PATH`, `[[fault]]` sections only); `None` = no
+    /// injected faults unless the scenario manifest declares them.
+    pub fault_plan: Option<String>,
+    /// Agent resilience: per-request retry budget against retryable
+    /// cloud failures (`--retry-budget N`); `None` = mission default
+    /// (0, or 2 once a fault plan arms the chaos layer).
+    pub retry_budget: Option<u32>,
+    /// Agent resilience: first retry backoff in virtual seconds,
+    /// doubling per attempt (`--retry-backoff SECS`); `None` = 0.05.
+    pub retry_backoff: Option<f64>,
+    /// Agent resilience: accumulated-backoff deadline in virtual seconds
+    /// (`--retry-deadline SECS`); `None` = infinite (budget-only).
+    pub retry_deadline: Option<f64>,
+    /// Agent resilience: degrade unreachable Insight requests to
+    /// edge-local Context execution (`--degrade`); `None` = mission
+    /// default (off, or on once a fault plan arms the chaos layer).
+    pub degrade: Option<bool>,
+    /// Cell health: first re-probe backoff after quarantine in virtual
+    /// seconds, doubling per failed probe (`--probe-backoff SECS`);
+    /// `None` = the health-machine default (0.5).
+    pub probe_backoff: Option<f64>,
     /// `avery scenario --list`.
     pub list: bool,
     /// Report rendering (`--format text|json`); CSVs are always written.
@@ -277,6 +299,60 @@ impl RunConfig {
                     .with_context(|| format!("config spill-max={v} not an integer"))?,
             ),
         };
+        let retry_budget = match kv.get("retry-budget") {
+            None => None,
+            Some(v) => Some(
+                v.parse::<u32>()
+                    .with_context(|| format!("config retry-budget={v} not an integer"))?,
+            ),
+        };
+        let retry_backoff = match kv.get("retry-backoff") {
+            None => None,
+            Some(v) => Some(
+                v.parse::<f64>()
+                    .with_context(|| format!("config retry-backoff={v} not a number"))?,
+            ),
+        };
+        // A non-positive (or non-finite) backoff would retry in zero
+        // virtual time — an infinite-rate hammer the simulation can't
+        // model honestly.
+        if let Some(b) = retry_backoff {
+            if !b.is_finite() || b <= 0.0 {
+                bail!("config retry-backoff={b} must be a finite number of seconds > 0");
+            }
+        }
+        let retry_deadline = match kv.get("retry-deadline") {
+            None => None,
+            Some(v) => Some(
+                v.parse::<f64>()
+                    .with_context(|| format!("config retry-deadline={v} not a number"))?,
+            ),
+        };
+        // `inf` spells "budget-only"; zero/negative/NaN would silently
+        // disable every retry while leaving the budget knob lying.
+        if let Some(d) = retry_deadline {
+            if d.is_nan() || d <= 0.0 {
+                bail!("config retry-deadline={d} must be a positive number of seconds");
+            }
+        }
+        let degrade = match kv.get("degrade") {
+            None => None,
+            Some("true") | Some("1") | Some("yes") => Some(true),
+            Some("false") | Some("0") | Some("no") => Some(false),
+            Some(v) => bail!("config degrade={v} not a bool"),
+        };
+        let probe_backoff = match kv.get("probe-backoff") {
+            None => None,
+            Some(v) => Some(
+                v.parse::<f64>()
+                    .with_context(|| format!("config probe-backoff={v} not a number"))?,
+            ),
+        };
+        if let Some(p) = probe_backoff {
+            if !p.is_finite() || p <= 0.0 {
+                bail!("config probe-backoff={p} must be a finite number of seconds > 0");
+            }
+        }
         Ok(Self {
             artifacts: kv.get("artifacts").map(|s| s.to_string()),
             out_dir: kv.get("out").unwrap_or("out").to_string(),
@@ -335,6 +411,12 @@ impl RunConfig {
             replicas,
             hop_latency,
             spill_max,
+            fault_plan: kv.get("fault-plan").map(|s| s.to_string()),
+            retry_budget,
+            retry_backoff,
+            retry_deadline,
+            degrade,
+            probe_backoff,
             list: kv.get_bool("list", false)?,
             format,
             jobs: kv.get_usize("jobs", 1)?,
@@ -503,6 +585,46 @@ mod tests {
         // A spill bound of 0 is legal — it means "never spill past home".
         let rcz = RunConfig::from_kv(&Kv::parse("spill-max = 0\n").unwrap()).unwrap();
         assert_eq!(rcz.spill_max, Some(0));
+    }
+
+    #[test]
+    fn chaos_keys_parse_and_reject() {
+        let kv = Kv::parse(
+            "fault-plan = plans/killcell.toml\nretry-budget = 3\nretry-backoff = 0.1\n\
+             retry-deadline = 4\ndegrade = true\nprobe-backoff = 0.25\n",
+        )
+        .unwrap();
+        let rc = RunConfig::from_kv(&kv).unwrap();
+        assert_eq!(rc.fault_plan.as_deref(), Some("plans/killcell.toml"));
+        assert_eq!(rc.retry_budget, Some(3));
+        assert_eq!(rc.retry_backoff, Some(0.1));
+        assert_eq!(rc.retry_deadline, Some(4.0));
+        assert_eq!(rc.degrade, Some(true));
+        assert_eq!(rc.probe_backoff, Some(0.25));
+        // Defaults keep the chaos layer disarmed (every knob unset).
+        let rc0 = RunConfig::from_kv(&Kv::default()).unwrap();
+        assert!(rc0.fault_plan.is_none() && rc0.retry_budget.is_none());
+        assert!(rc0.retry_backoff.is_none() && rc0.retry_deadline.is_none());
+        assert!(rc0.degrade.is_none() && rc0.probe_backoff.is_none());
+        // `--degrade` as a bare CLI flag arrives as `degrade = true`;
+        // an explicit `degrade = false` survives as Some(false) so the
+        // mission layer can tell "user said no" from "unset".
+        let mut flags = Kv::default();
+        flags.apply_cli(&["--degrade".to_string()]).unwrap();
+        assert_eq!(RunConfig::from_kv(&flags).unwrap().degrade, Some(true));
+        let off = RunConfig::from_kv(&Kv::parse("degrade = false\n").unwrap()).unwrap();
+        assert_eq!(off.degrade, Some(false));
+        // Type and range errors are hard.
+        assert!(RunConfig::from_kv(&Kv::parse("retry-budget = lots\n").unwrap()).is_err());
+        assert!(RunConfig::from_kv(&Kv::parse("retry-backoff = 0\n").unwrap()).is_err());
+        assert!(RunConfig::from_kv(&Kv::parse("retry-backoff = inf\n").unwrap()).is_err());
+        assert!(RunConfig::from_kv(&Kv::parse("retry-deadline = -1\n").unwrap()).is_err());
+        assert!(RunConfig::from_kv(&Kv::parse("retry-deadline = NaN\n").unwrap()).is_err());
+        assert!(RunConfig::from_kv(&Kv::parse("degrade = maybe\n").unwrap()).is_err());
+        assert!(RunConfig::from_kv(&Kv::parse("probe-backoff = -0.5\n").unwrap()).is_err());
+        // `inf` retry-deadline spells "budget-only" and is accepted.
+        let inf = RunConfig::from_kv(&Kv::parse("retry-deadline = inf\n").unwrap()).unwrap();
+        assert_eq!(inf.retry_deadline, Some(f64::INFINITY));
     }
 
     #[test]

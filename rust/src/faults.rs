@@ -1,0 +1,524 @@
+//! Deterministic fault injection — the chaos layer (DESIGN.md "Chaos &
+//! recovery").
+//!
+//! A [`FaultPlan`] is a validated, time-ordered schedule of infrastructure
+//! failures over *virtual* mission time: cells crash and recover, workers
+//! stall, executions fail at a rate, the wire corrupts frames, sessions
+//! drop.  The plan is data (compiled from `[[fault]]` manifest sections or
+//! built programmatically) and the [`FaultInjector`] is its runtime: every
+//! probabilistic draw comes from one seeded xorshift stream consumed in
+//! request order, so the serial virtual-time fleet loop replays the exact
+//! same fault sequence for a fixed seed — chaos runs are byte-deterministic
+//! (pinned by `rust/tests/chaos.rs`).
+//!
+//! The injector answers point-in-time queries against a request's virtual
+//! capture time.  The fleet event loop steps agents in clock order, so the
+//! request stream's times are non-decreasing and window membership is a
+//! pure function of the event-ordered stream — no wall clock anywhere.
+
+use anyhow::{bail, Result};
+
+use crate::util::Rng;
+
+/// The fault taxonomy — one discriminant per injectable failure mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// A serving cell is unreachable for a window (connection refused).
+    CellCrash,
+    /// A cell's workers stall: requests still complete but each one is
+    /// charged extra virtual latency while the window is open.
+    WorkerStall,
+    /// Executions at a cell fail with probability `rate` inside the window.
+    ExecError,
+    /// The edge–cloud wire corrupts frames with probability `rate` inside
+    /// the window (cell-agnostic — the link, not a cell, is at fault).
+    WireCorrupt,
+    /// One session teardown: the first request at or after `at` is dropped.
+    SessionDrop,
+}
+
+impl FaultKind {
+    pub const ALL: [FaultKind; 5] = [
+        FaultKind::CellCrash,
+        FaultKind::WorkerStall,
+        FaultKind::ExecError,
+        FaultKind::WireCorrupt,
+        FaultKind::SessionDrop,
+    ];
+
+    /// Stable manifest/report name (the `[[fault]] kind = "..."` key).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::CellCrash => "cell-crash",
+            FaultKind::WorkerStall => "worker-stall",
+            FaultKind::ExecError => "exec-error",
+            FaultKind::WireCorrupt => "wire-corrupt",
+            FaultKind::SessionDrop => "session-drop",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FaultKind> {
+        FaultKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+
+    /// Dense index for per-kind counter arrays.
+    pub fn index(self) -> usize {
+        match self {
+            FaultKind::CellCrash => 0,
+            FaultKind::WorkerStall => 1,
+            FaultKind::ExecError => 2,
+            FaultKind::WireCorrupt => 3,
+            FaultKind::SessionDrop => 4,
+        }
+    }
+}
+
+/// One scheduled fault, in absolute virtual seconds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultEvent {
+    /// Cell `cell` refuses every request in `[at, at + recover_after)`.
+    CellCrash { cell: usize, at: f64, recover_after: f64 },
+    /// Requests served by `cell` in `[at, at + duration)` are each charged
+    /// `stall_secs` extra virtual latency.
+    WorkerStall { cell: usize, at: f64, duration: f64, stall_secs: f64 },
+    /// Executions at `cell` in `[at, at + duration)` fail with probability
+    /// `rate` (one seeded draw per request).
+    ExecError { cell: usize, at: f64, duration: f64, rate: f64 },
+    /// Any request in `[at, at + duration)` is corrupted on the wire with
+    /// probability `rate`.
+    WireCorrupt { at: f64, duration: f64, rate: f64 },
+    /// The first request at or after `at` is dropped (one-shot).
+    SessionDrop { at: f64 },
+}
+
+impl FaultEvent {
+    pub fn kind(&self) -> FaultKind {
+        match self {
+            FaultEvent::CellCrash { .. } => FaultKind::CellCrash,
+            FaultEvent::WorkerStall { .. } => FaultKind::WorkerStall,
+            FaultEvent::ExecError { .. } => FaultKind::ExecError,
+            FaultEvent::WireCorrupt { .. } => FaultKind::WireCorrupt,
+            FaultEvent::SessionDrop { .. } => FaultKind::SessionDrop,
+        }
+    }
+
+    /// Start of the event's window.
+    pub fn at(&self) -> f64 {
+        match *self {
+            FaultEvent::CellCrash { at, .. }
+            | FaultEvent::WorkerStall { at, .. }
+            | FaultEvent::ExecError { at, .. }
+            | FaultEvent::WireCorrupt { at, .. }
+            | FaultEvent::SessionDrop { at } => at,
+        }
+    }
+
+    /// `[start, end)` window (a [`FaultKind::SessionDrop`] is a point).
+    pub fn window(&self) -> (f64, f64) {
+        match *self {
+            FaultEvent::CellCrash { at, recover_after, .. } => (at, at + recover_after),
+            FaultEvent::WorkerStall { at, duration, .. }
+            | FaultEvent::ExecError { at, duration, .. }
+            | FaultEvent::WireCorrupt { at, duration, .. } => (at, at + duration),
+            FaultEvent::SessionDrop { at } => (at, at),
+        }
+    }
+
+    /// The cell this event targets (None for link-level faults).
+    pub fn cell(&self) -> Option<usize> {
+        match *self {
+            FaultEvent::CellCrash { cell, .. }
+            | FaultEvent::WorkerStall { cell, .. }
+            | FaultEvent::ExecError { cell, .. } => Some(cell),
+            FaultEvent::WireCorrupt { .. } | FaultEvent::SessionDrop { .. } => None,
+        }
+    }
+}
+
+/// A fraction-based fault specification — what `[[fault]]` manifest
+/// sections lower to.  Temporal fields (`at`, `duration`) are fractions of
+/// the mission duration, bound to absolute seconds by [`FaultSpec::bind`]
+/// exactly like the intent schedule's fractions; `stall_secs` is already
+/// absolute (a latency, not a window).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    pub cell: usize,
+    /// Window start as a fraction of mission duration, in `[0, 1]`.
+    pub at: f64,
+    /// Window length as a fraction of mission duration (`recover_after`
+    /// for a [`FaultKind::CellCrash`]).
+    pub duration: f64,
+    /// Failure probability per request for rate faults, in `[0, 1]`.
+    pub rate: f64,
+    /// Extra virtual seconds per request for a [`FaultKind::WorkerStall`].
+    pub stall_secs: f64,
+}
+
+impl FaultSpec {
+    pub fn bind(&self, duration_secs: f64) -> FaultEvent {
+        let at = self.at * duration_secs;
+        let dur = self.duration * duration_secs;
+        match self.kind {
+            FaultKind::CellCrash => {
+                FaultEvent::CellCrash { cell: self.cell, at, recover_after: dur }
+            }
+            FaultKind::WorkerStall => FaultEvent::WorkerStall {
+                cell: self.cell,
+                at,
+                duration: dur,
+                stall_secs: self.stall_secs,
+            },
+            FaultKind::ExecError => {
+                FaultEvent::ExecError { cell: self.cell, at, duration: dur, rate: self.rate }
+            }
+            FaultKind::WireCorrupt => {
+                FaultEvent::WireCorrupt { at, duration: dur, rate: self.rate }
+            }
+            FaultKind::SessionDrop => FaultEvent::SessionDrop { at },
+        }
+    }
+}
+
+/// Bind a spec list against a mission duration (the scenario instantiation
+/// step for faults).
+pub fn bind_specs(specs: &[FaultSpec], duration_secs: f64) -> Vec<FaultEvent> {
+    specs.iter().map(|s| s.bind(duration_secs)).collect()
+}
+
+/// A validated, time-ordered fault schedule plus the seed its injector's
+/// probabilistic draws run on.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Self {
+        Self { events: Vec::new(), seed }
+    }
+
+    /// Build and validate in one step.
+    pub fn with_events(seed: u64, events: Vec<FaultEvent>) -> Result<Self> {
+        let plan = Self { events, seed };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Largest cell index any event targets (sizing check for clusters).
+    pub fn max_cell(&self) -> Option<usize> {
+        self.events.iter().filter_map(|e| e.cell()).max()
+    }
+
+    /// Structural validation, mirroring the scenario compiler's rules so a
+    /// programmatic plan cannot express what a manifest cannot: finite
+    /// non-negative times, rates in `[0, 1]`, events ordered by start time,
+    /// and no overlapping crash windows on the same cell (an overlapped
+    /// crash has no well-defined recovery point).
+    pub fn validate(&self) -> Result<()> {
+        let mut prev_at = f64::NEG_INFINITY;
+        for (i, ev) in self.events.iter().enumerate() {
+            let (start, end) = ev.window();
+            if !start.is_finite() || start < 0.0 || !end.is_finite() || end < start {
+                bail!("fault[{i}]: window [{start}, {end}) is not a finite forward range");
+            }
+            if start < prev_at {
+                bail!("fault[{i}]: events must be ordered by start time ({start} < {prev_at})");
+            }
+            prev_at = start;
+            match *ev {
+                FaultEvent::ExecError { rate, .. } | FaultEvent::WireCorrupt { rate, .. } => {
+                    if !(0.0..=1.0).contains(&rate) {
+                        bail!("fault[{i}]: rate {rate} outside [0, 1]");
+                    }
+                }
+                FaultEvent::WorkerStall { stall_secs, .. } => {
+                    if !stall_secs.is_finite() || stall_secs < 0.0 {
+                        bail!("fault[{i}]: stall of {stall_secs}s is not a finite non-negative latency");
+                    }
+                }
+                _ => {}
+            }
+            if let FaultEvent::CellCrash { cell, .. } = *ev {
+                for (j, other) in self.events[..i].iter().enumerate() {
+                    if let FaultEvent::CellCrash { cell: oc, .. } = *other {
+                        let (os, oe) = other.window();
+                        if oc == cell && start < oe && os < end {
+                            bail!("fault[{i}]: crash window overlaps fault[{j}] on cell {cell}");
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-kind injection counters (index via [`FaultKind::index`]).
+pub type FaultCounts = [u64; 5];
+
+/// The plan's runtime: point-in-time fault queries with seeded per-request
+/// draws and per-kind injection counters.  Methods take `&mut self` — the
+/// caller serializes access (the cluster holds the injector inside its
+/// chaos mutex; the fleet loop is serial anyway), which is exactly what
+/// keeps the draw stream deterministic.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    rng: Rng,
+    /// Consumed flags, one per SessionDrop event in plan order.
+    drops_taken: Vec<bool>,
+    counts: FaultCounts,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        let drops = plan
+            .events
+            .iter()
+            .filter(|e| matches!(e, FaultEvent::SessionDrop { .. }))
+            .count();
+        Self {
+            rng: Rng::new(plan.seed ^ 0xFA_17),
+            drops_taken: vec![false; drops],
+            counts: [0; 5],
+            plan,
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Injections recorded so far, per kind.
+    pub fn counts(&self) -> FaultCounts {
+        self.counts
+    }
+
+    pub fn record(&mut self, kind: FaultKind) {
+        self.counts[kind.index()] += 1;
+    }
+
+    /// Is `cell` inside an open crash window at `t`?  Pure query — the
+    /// caller records the injection only when a request actually hits it.
+    pub fn crash_active(&self, cell: usize, t: f64) -> bool {
+        self.plan.events.iter().any(|e| match *e {
+            FaultEvent::CellCrash { cell: c, .. } => {
+                let (s, end) = e.window();
+                c == cell && t >= s && t < end
+            }
+            _ => false,
+        })
+    }
+
+    /// Total stall latency open at `cell` for a request at `t` (0.0 when
+    /// no stall window covers it).  Records the injection when non-zero.
+    pub fn stall_secs(&mut self, cell: usize, t: f64) -> f64 {
+        let total: f64 = self
+            .plan
+            .events
+            .iter()
+            .filter_map(|e| match *e {
+                FaultEvent::WorkerStall { cell: c, stall_secs, .. } if c == cell => {
+                    let (s, end) = e.window();
+                    (t >= s && t < end).then_some(stall_secs)
+                }
+                _ => None,
+            })
+            .sum();
+        if total > 0.0 {
+            self.record(FaultKind::WorkerStall);
+        }
+        total
+    }
+
+    /// One seeded draw against every exec-error window open at (`cell`,
+    /// `t`); true = this request's execution fails.  Draws are consumed
+    /// only inside a window, so runs without rate faults burn no rng state.
+    pub fn draw_exec_error(&mut self, cell: usize, t: f64) -> bool {
+        for e in &self.plan.events {
+            if let FaultEvent::ExecError { cell: c, rate, .. } = *e {
+                let (s, end) = e.window();
+                if c == cell && t >= s && t < end && self.rng.f64() < rate {
+                    self.counts[FaultKind::ExecError.index()] += 1;
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// One seeded draw against every wire-corruption window open at `t`.
+    pub fn draw_wire_corrupt(&mut self, t: f64) -> bool {
+        for e in &self.plan.events {
+            if let FaultEvent::WireCorrupt { rate, .. } = *e {
+                let (s, end) = e.window();
+                if t >= s && t < end && self.rng.f64() < rate {
+                    self.counts[FaultKind::WireCorrupt.index()] += 1;
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Consume the next un-taken session drop due at or before `t`
+    /// (one-shot per event); true = this request is dropped.
+    pub fn take_session_drop(&mut self, t: f64) -> bool {
+        let mut di = 0;
+        for e in &self.plan.events {
+            if let FaultEvent::SessionDrop { at } = *e {
+                if !self.drops_taken[di] && t >= at {
+                    self.drops_taken[di] = true;
+                    self.counts[FaultKind::SessionDrop.index()] += 1;
+                    return true;
+                }
+                di += 1;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn crash(cell: usize, at: f64, dur: f64) -> FaultEvent {
+        FaultEvent::CellCrash { cell, at, recover_after: dur }
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in FaultKind::ALL {
+            assert_eq!(FaultKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(FaultKind::parse("segfault"), None);
+        // Dense indices cover 0..5 exactly once.
+        let mut seen = [false; 5];
+        for k in FaultKind::ALL {
+            assert!(!seen[k.index()]);
+            seen[k.index()] = true;
+        }
+    }
+
+    #[test]
+    fn validation_rejects_disorder_overlap_and_bad_rates() {
+        // Ordered, disjoint: fine.
+        FaultPlan::with_events(1, vec![crash(0, 10.0, 5.0), crash(0, 20.0, 5.0)]).unwrap();
+        // Same window, different cells: fine.
+        FaultPlan::with_events(1, vec![crash(0, 10.0, 5.0), crash(1, 10.0, 5.0)]).unwrap();
+        // Out of order.
+        let e = FaultPlan::with_events(1, vec![crash(0, 20.0, 5.0), crash(1, 10.0, 5.0)])
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("ordered"), "{e}");
+        // Overlapping crash on the same cell.
+        let e = FaultPlan::with_events(1, vec![crash(0, 10.0, 15.0), crash(0, 20.0, 5.0)])
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("overlaps"), "{e}");
+        // Rate outside [0, 1].
+        let e = FaultPlan::with_events(
+            1,
+            vec![FaultEvent::ExecError { cell: 0, at: 0.0, duration: 1.0, rate: 1.5 }],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("rate"), "{e}");
+        // Negative / non-finite times.
+        assert!(FaultPlan::with_events(1, vec![crash(0, -1.0, 5.0)]).is_err());
+        assert!(FaultPlan::with_events(1, vec![crash(0, f64::NAN, 5.0)]).is_err());
+        assert!(
+            FaultPlan::with_events(1, vec![crash(0, 1.0, f64::INFINITY)]).is_err(),
+            "open-ended crash has no recovery point"
+        );
+    }
+
+    #[test]
+    fn spec_binding_scales_fractions() {
+        let spec = FaultSpec {
+            kind: FaultKind::CellCrash,
+            cell: 2,
+            at: 0.25,
+            duration: 0.5,
+            rate: 0.0,
+            stall_secs: 0.0,
+        };
+        assert_eq!(
+            spec.bind(400.0),
+            FaultEvent::CellCrash { cell: 2, at: 100.0, recover_after: 200.0 }
+        );
+        let wire = FaultSpec {
+            kind: FaultKind::WireCorrupt,
+            cell: 0,
+            at: 0.5,
+            duration: 0.1,
+            rate: 0.3,
+            stall_secs: 0.0,
+        };
+        assert_eq!(wire.bind(100.0), FaultEvent::WireCorrupt { at: 50.0, duration: 10.0, rate: 0.3 });
+    }
+
+    #[test]
+    fn injector_windows_and_one_shots() {
+        let plan = FaultPlan::with_events(
+            9,
+            vec![
+                crash(1, 10.0, 5.0),
+                FaultEvent::WorkerStall { cell: 0, at: 12.0, duration: 4.0, stall_secs: 0.25 },
+                FaultEvent::SessionDrop { at: 30.0 },
+            ],
+        )
+        .unwrap();
+        let mut inj = FaultInjector::new(plan);
+        assert!(!inj.crash_active(1, 9.9));
+        assert!(inj.crash_active(1, 10.0));
+        assert!(inj.crash_active(1, 14.9));
+        assert!(!inj.crash_active(1, 15.0), "window is half-open");
+        assert!(!inj.crash_active(0, 12.0), "other cells unaffected");
+        assert_eq!(inj.stall_secs(0, 13.0), 0.25);
+        assert_eq!(inj.stall_secs(0, 20.0), 0.0);
+        assert_eq!(inj.stall_secs(1, 13.0), 0.0);
+        // The drop fires exactly once, at the first request past its time.
+        assert!(!inj.take_session_drop(29.0));
+        assert!(inj.take_session_drop(31.0));
+        assert!(!inj.take_session_drop(32.0));
+        let c = inj.counts();
+        assert_eq!(c[FaultKind::WorkerStall.index()], 1);
+        assert_eq!(c[FaultKind::SessionDrop.index()], 1);
+    }
+
+    #[test]
+    fn rate_draws_are_seed_deterministic() {
+        let plan = FaultPlan::with_events(
+            42,
+            vec![FaultEvent::ExecError { cell: 0, at: 0.0, duration: 100.0, rate: 0.5 }],
+        )
+        .unwrap();
+        let seq = |mut inj: FaultInjector| -> Vec<bool> {
+            (0..64).map(|i| inj.draw_exec_error(0, i as f64)).collect()
+        };
+        let a = seq(FaultInjector::new(plan.clone()));
+        let b = seq(FaultInjector::new(plan.clone()));
+        assert_eq!(a, b, "same seed, same draw stream");
+        assert!(a.iter().any(|&x| x) && a.iter().any(|&x| !x), "rate 0.5 mixes outcomes");
+        let other = FaultPlan { seed: 43, ..plan };
+        let c = seq(FaultInjector::new(other));
+        assert_ne!(a, c, "different seed, different stream");
+        // Outside the window: no draw consumed, never fires.
+        let plan2 = FaultPlan::with_events(
+            42,
+            vec![FaultEvent::ExecError { cell: 0, at: 50.0, duration: 1.0, rate: 1.0 }],
+        )
+        .unwrap();
+        let mut inj = FaultInjector::new(plan2);
+        assert!(!inj.draw_exec_error(0, 10.0));
+        assert!(inj.draw_exec_error(0, 50.5), "rate 1.0 always fires in-window");
+    }
+}

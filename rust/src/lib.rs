@@ -48,6 +48,7 @@ pub mod dataset;
 pub mod edge;
 pub mod energy;
 pub mod eval;
+pub mod faults;
 pub mod manifest;
 pub mod mission;
 pub mod netsim;

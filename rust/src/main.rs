@@ -21,6 +21,7 @@
 //! fleet      multi-UAV contended-uplink mission (beyond the paper)
 //! scenario   scenario library: named disaster/network regimes
 //! matrix     generated scenario matrix under invariant gates
+//! chaos      fault-schedule matrix under conservation/determinism gates
 //! ```
 //!
 //! Common options: `--artifacts DIR`, `--out DIR`, `--duration SECS`,
@@ -36,7 +37,11 @@
 //! unbatched, uncached, FIFO behavior byte-for-byte), plus the cloud
 //! cluster's `--cells K`, `--replicas R`, `--hop-latency SECS` and
 //! `--spill-max H` (fleet/scenario; `--cells 1` — the default — delegates
-//! to the single pool byte-for-byte).
+//! to the single pool byte-for-byte), plus the chaos layer's
+//! `--fault-plan PATH`, `--retry-budget N`, `--retry-backoff SECS`,
+//! `--retry-deadline SECS`, `--degrade` and `--probe-backoff SECS`
+//! (fleet/scenario/chaos; with no fault plan armed every knob defaults
+//! off and outputs stay byte-identical).
 //!
 //! Every artifact-free-capable mission (all but `headline`) falls back to
 //! the synthetic closed-form engine when `artifacts/` is missing (control
@@ -56,7 +61,7 @@ use avery::mission::{self, EnvSpec, Mission, RunOptions};
 use avery::report::{emit_text, CsvSink, JsonSink, OutputFormat, Sink};
 
 const USAGE: &str = "usage: avery <run <mission>|list|all|MISSION> [--options]
-missions: table3 fig7 fig8 fig9 fig10 headline streams fleet scenario matrix
+missions: table3 fig7 fig8 fig9 fig10 headline streams fleet scenario matrix chaos
   --artifacts DIR      artifact directory (default: discover ./artifacts)
   --out DIR            CSV output directory (default: out)
   --duration SECS      mission length for fig9/fig10/headline/fleet/scenario (default 1200)
@@ -93,6 +98,19 @@ missions: table3 fig7 fig8 fig9 fig10 headline streams fleet scenario matrix
                        (default 0.002)
   --spill-max H        max spill hops past a shedding home cell before the
                        request is shed for good (default 1)
+  --fault-plan PATH    standalone [[fault]] manifest armed for fleet/scenario
+                       (default: no injected faults)
+  --retry-budget N     agent retries per request once served an outage
+                       (default 0, or 2 when a fault plan is armed)
+  --retry-backoff SECS first retry backoff, doubling per attempt, in virtual
+                       seconds (default 0.05)
+  --retry-deadline S   give up retrying once cumulative backoff exceeds S
+                       virtual seconds (default: never)
+  --degrade            degrade abandoned Insight requests to edge-local
+                       Context-tier execution (default off; on when a fault
+                       plan is armed — disable with --degrade false)
+  --probe-backoff SECS first re-probe backoff for a quarantined cell,
+                       doubling per failed probe (default 0.5)
   --format FMT         text | json report rendering (CSVs always written)
   --jobs N             run missions N at a time (`avery all`); output bytes
                        are identical to --jobs 1 (default 1)

@@ -1,0 +1,277 @@
+//! `avery run chaos` — drive a canonical fault-schedule matrix through the
+//! full fleet mission and gate every schedule on the chaos layer's two
+//! structural invariants:
+//!
+//! * **conservation** — every sampled capture resolves to exactly one
+//!   terminal outcome: `executed + shed_lost + degraded + abandoned ==
+//!   captures`.  A violation means a request was double-counted or lost in
+//!   the resilience path, so the mission fails hard rather than reporting a
+//!   soft gate.
+//! * **determinism** — the same `(schedule, seed)` replays to an identical
+//!   counter fingerprint.  Every probabilistic fault draw comes from one
+//!   seeded stream consumed in request order (`faults::FaultInjector`), so
+//!   a mismatch means wall-clock or scheduling state leaked into the
+//!   virtual timeline.
+//!
+//! Each schedule runs at a fixed internal duration so `--duration` (meant
+//! for single-mission runs) cannot turn the matrix into an hours-long
+//! sweep, mirroring `avery run matrix`.  Availability per schedule is
+//! reported (and floor-gated by CI via `benches/chaos.rs`), not gated
+//! here: it is a measurement, while conservation is an invariant.
+
+use anyhow::{bail, Result};
+
+use crate::faults::{FaultKind, FaultSpec};
+use crate::report::{Report, ReportTable, Series};
+use crate::streams::fleet::FleetRun;
+use crate::telemetry::f;
+
+use super::{run_fleet, Env, Mission, RunOptions};
+
+/// Fixed per-schedule mission length (virtual seconds).
+const CHAOS_SCHEDULE_SECS: f64 = 240.0;
+
+/// `avery run chaos` — invariant-gated sweep over fault schedules.
+pub struct ChaosMission;
+
+impl Mission for ChaosMission {
+    fn name(&self) -> &'static str {
+        "chaos"
+    }
+
+    fn summary(&self) -> &'static str {
+        "chaos matrix: canonical fault schedules under conservation + determinism gates"
+    }
+
+    fn needs_artifacts(&self) -> bool {
+        false
+    }
+
+    fn run(&self, env: &Env, opts: &RunOptions) -> Result<Report> {
+        run_chaos(env, opts)
+    }
+}
+
+fn spec(
+    kind: FaultKind,
+    cell: usize,
+    at: f64,
+    duration: f64,
+    rate: f64,
+    stall_secs: f64,
+) -> FaultSpec {
+    FaultSpec { kind, cell, at, duration, rate, stall_secs }
+}
+
+/// The canonical schedule matrix: one row per fault kind (plus a fault-free
+/// baseline and a mixed storm), all fraction-based so they bind to the
+/// fixed internal duration.
+fn schedules() -> Vec<(&'static str, Vec<FaultSpec>)> {
+    vec![
+        ("none", Vec::new()),
+        ("cell-crash", vec![spec(FaultKind::CellCrash, 0, 0.25, 0.25, 0.0, 0.0)]),
+        ("worker-stall", vec![spec(FaultKind::WorkerStall, 0, 0.30, 0.30, 0.0, 0.4)]),
+        ("exec-error", vec![spec(FaultKind::ExecError, 0, 0.20, 0.50, 0.25, 0.0)]),
+        ("wire-corrupt", vec![spec(FaultKind::WireCorrupt, 0, 0.20, 0.50, 0.20, 0.0)]),
+        ("session-drop", vec![spec(FaultKind::SessionDrop, 0, 0.50, 0.0, 0.0, 0.0)]),
+        (
+            "mixed",
+            vec![
+                spec(FaultKind::CellCrash, 0, 0.20, 0.20, 0.0, 0.0),
+                spec(FaultKind::ExecError, 1, 0.50, 0.30, 0.30, 0.0),
+                spec(FaultKind::SessionDrop, 0, 0.80, 0.0, 0.0, 0.0),
+            ],
+        ),
+    ]
+}
+
+/// Counter fingerprint for the determinism gate: every field is a pure
+/// function of the event-ordered virtual timeline, so two same-seed runs
+/// must match byte-for-byte once formatted.
+fn fingerprint(run: &FleetRun) -> String {
+    format!(
+        "{}|{}|{}|{}|{}|{}|{}|{:.9}|{:.9}|{:.9}|{:.6}|{:.9}",
+        run.delivered_total,
+        run.executed_total,
+        run.captures_total,
+        run.retries_total,
+        run.shed_lost_total,
+        run.degraded_total,
+        run.abandoned_total,
+        run.degraded_secs_total,
+        run.retry_wait_secs_total,
+        run.avg_iou,
+        run.total_energy_j,
+        run.lat_insight.p99(),
+    )
+}
+
+/// One schedule's outcomes.
+struct ChaosRow {
+    name: &'static str,
+    faults: usize,
+    captures: u64,
+    executed: u64,
+    retries: u64,
+    shed_lost: u64,
+    degraded: u64,
+    abandoned: u64,
+    degraded_secs: f64,
+    retry_wait_secs: f64,
+    availability: f64,
+}
+
+/// Run the schedule matrix and build the gated report.  Conservation or
+/// determinism violations fail the mission (they are invariants of the
+/// chaos layer, not measurements of it).
+pub fn run_chaos(env: &Env, opts: &RunOptions) -> Result<Report> {
+    let mut rows = Vec::new();
+    for (name, schedule) in schedules() {
+        // The sweep pins its own duration and a coarse execute cadence;
+        // cluster shape passes through but is floored at two cells so
+        // cell-targeted faults always have a failover destination.
+        let child = RunOptions {
+            duration_secs: CHAOS_SCHEDULE_SECS,
+            exec_every: opts.exec_every.max(25),
+            seed: opts.seed,
+            uavs: opts.uavs,
+            workers: opts.workers,
+            cells: Some(opts.cells.unwrap_or(2).max(2)),
+            replicas: opts.replicas,
+            hop_latency: opts.hop_latency,
+            spill_max: opts.spill_max,
+            retry_budget: opts.retry_budget,
+            retry_backoff: opts.retry_backoff,
+            retry_deadline: opts.retry_deadline,
+            degrade: opts.degrade,
+            probe_backoff: opts.probe_backoff,
+            fault_specs: schedule.clone(),
+            ..RunOptions::default()
+        };
+        let (run, _) = run_fleet(env, &child)?;
+
+        let resolved = run.executed_total
+            + run.shed_lost_total
+            + run.degraded_total
+            + run.abandoned_total;
+        if resolved != run.captures_total {
+            bail!(
+                "chaos schedule `{name}`: conservation violated — \
+                 executed {} + shed {} + degraded {} + abandoned {} = {} != {} captures",
+                run.executed_total,
+                run.shed_lost_total,
+                run.degraded_total,
+                run.abandoned_total,
+                resolved,
+                run.captures_total
+            );
+        }
+
+        // Determinism gate: replay the identical (schedule, seed) and
+        // compare counter fingerprints.
+        let (replay, _) = run_fleet(env, &child)?;
+        let (a, b) = (fingerprint(&run), fingerprint(&replay));
+        if a != b {
+            bail!(
+                "chaos schedule `{name}`: same-seed replay diverged\n first: {a}\nreplay: {b}"
+            );
+        }
+
+        let captures = run.captures_total.max(1);
+        rows.push(ChaosRow {
+            name,
+            faults: schedule.len(),
+            captures: run.captures_total,
+            executed: run.executed_total,
+            retries: run.retries_total,
+            shed_lost: run.shed_lost_total,
+            degraded: run.degraded_total,
+            abandoned: run.abandoned_total,
+            degraded_secs: run.degraded_secs_total,
+            retry_wait_secs: run.retry_wait_secs_total,
+            availability: (run.executed_total + run.degraded_total) as f64 / captures as f64,
+        });
+    }
+
+    let min_availability = rows
+        .iter()
+        .filter(|r| r.faults > 0)
+        .map(|r| r.availability)
+        .fold(f64::INFINITY, f64::min);
+    let title = format!(
+        "Chaos matrix — {} schedules conserved + deterministic (seed {}, min availability {:.3})",
+        rows.len(),
+        opts.seed,
+        min_availability
+    );
+    let mut report = Report::new("chaos", &title);
+
+    let mut table = ReportTable::new(
+        "chaos_gates",
+        &title,
+        &[
+            "Schedule", "Faults", "Captures", "Served", "Retries", "Degraded", "Shed",
+            "Abandoned", "Availability",
+        ],
+    );
+    let mut sm = Series::new(
+        "chaos_matrix",
+        &[
+            "schedule", "seed", "duration_s", "faults", "captures", "executed", "retries",
+            "shed_lost", "degraded", "abandoned", "degraded_secs", "retry_wait_secs",
+            "availability",
+        ],
+    );
+    for r in &rows {
+        table.row(&[
+            r.name.to_string(),
+            r.faults.to_string(),
+            r.captures.to_string(),
+            r.executed.to_string(),
+            r.retries.to_string(),
+            r.degraded.to_string(),
+            r.shed_lost.to_string(),
+            r.abandoned.to_string(),
+            f(r.availability, 3),
+        ]);
+        sm.row(&[
+            r.name.to_string(),
+            opts.seed.to_string(),
+            f(CHAOS_SCHEDULE_SECS, 0),
+            r.faults.to_string(),
+            r.captures.to_string(),
+            r.executed.to_string(),
+            r.retries.to_string(),
+            r.shed_lost.to_string(),
+            r.degraded.to_string(),
+            r.abandoned.to_string(),
+            f(r.degraded_secs, 4),
+            f(r.retry_wait_secs, 4),
+            f(r.availability, 6),
+        ]);
+    }
+    report.push_table(table);
+    report.push_series(sm);
+
+    report.push_scalar("schedules_run", rows.len() as f64);
+    report.push_scalar("min_availability", min_availability);
+    report.push_scalar(
+        "captures_total",
+        rows.iter().map(|r| r.captures as f64).sum::<f64>(),
+    );
+    report.push_scalar(
+        "retries_total",
+        rows.iter().map(|r| r.retries as f64).sum::<f64>(),
+    );
+    report.push_scalar(
+        "degraded_total",
+        rows.iter().map(|r| r.degraded as f64).sum::<f64>(),
+    );
+    report.push_note(format!(
+        "gates: request conservation (served + shed + degraded + abandoned == captures) \
+         and same-seed replay determinism; each schedule ran {CHAOS_SCHEDULE_SECS:.0} \
+         virtual seconds twice over a {}-cell cluster",
+        opts.cells.unwrap_or(2).max(2)
+    ));
+    Ok(report)
+}

@@ -47,12 +47,20 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
     // The paper's scripted trace by default, or a scenario-library regime
     // (whose own goal applies unless the caller set one explicitly; fleet
     // size/workers stay the caller's).
-    let (trace_cfg, link_cfg, schedule, hysteresis, min_dwell, scenario_goal) =
+    let (trace_cfg, link_cfg, schedule, hysteresis, min_dwell, scenario_goal, scenario_faults) =
         match &opts.scenario {
             Some(name) => {
                 let sc = crate::scenario::build(name, opts.seed, opts.duration_secs)?;
                 eprintln!("fleet over scenario `{}`: {}", sc.name, sc.summary);
-                (sc.trace, sc.link, sc.schedule, sc.hysteresis, sc.min_dwell, Some(sc.goal))
+                (
+                    sc.trace,
+                    sc.link,
+                    sc.schedule,
+                    sc.hysteresis,
+                    sc.min_dwell,
+                    Some(sc.goal),
+                    sc.faults,
+                )
             }
             None => (
                 TraceConfig::paper_20min(opts.seed).scaled_to(opts.duration_secs),
@@ -61,6 +69,7 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
                 0.0,
                 0,
                 None,
+                Vec::new(),
             ),
         };
     let goal = opts.goal.or(scenario_goal).unwrap_or(MissionGoal::PrioritizeAccuracy);
@@ -77,8 +86,25 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
     // Cloud cluster: K cells of `workers` workers each behind the
     // consistent-hash router.  At the default K=1 the cluster delegates to
     // its single pool and every output byte matches the pre-cluster path.
-    let cluster_cfg = opts.cluster();
+    let mut cluster_cfg = opts.cluster();
     let cells = cluster_cfg.cells;
+    // Chaos layer: union the scenario's bound fault events with the CLI
+    // fault plan (and any programmatic specs), then arm the cluster's
+    // injector + health machine.  Unarmed — the default — `cfg.faults`
+    // stays `None`, the chaos dispatch is never entered, and every output
+    // byte matches the pre-chaos path.
+    let mut fault_events = scenario_faults;
+    fault_events
+        .extend(crate::faults::bind_specs(&opts.load_fault_specs()?, opts.duration_secs));
+    fault_events.sort_by(|a, b| a.at().partial_cmp(&b.at()).expect("finite fault times"));
+    let chaos_armed = !fault_events.is_empty();
+    if chaos_armed {
+        cluster_cfg.faults =
+            Some(crate::faults::FaultPlan::with_events(opts.seed, fault_events)?);
+        cluster_cfg.health = opts.health();
+    }
+    let (retry_budget, retry_backoff_secs, retry_deadline_secs, degrade) =
+        opts.resilience(chaos_armed);
     let fleet_cfg = FleetConfig {
         n_uavs: uavs,
         mission: MissionConfig {
@@ -89,6 +115,10 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
             hysteresis,
             min_dwell,
             batch_max: effective_batch,
+            retry_budget,
+            retry_backoff_secs,
+            retry_deadline_secs,
+            degrade,
             ..MissionConfig::default()
         },
         // Server-utilization denominator: total workers across all cells
@@ -284,6 +314,12 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
             &cluster_cfg,
             &cluster_stats,
         );
+    }
+    // Chaos telemetry only exists when a fault schedule was armed.
+    if chaos_armed {
+        let cs = cluster.chaos_stats();
+        let injected = cs.as_ref().map(|s| s.injected).unwrap_or([0; 5]);
+        super::push_chaos_telemetry(&mut report, "fleet_chaos", &run, &injected, cs.as_ref());
     }
 
     report.push_note(format!(

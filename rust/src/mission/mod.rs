@@ -6,10 +6,11 @@
 //! artifacts, and runs against a shared [`Env`] + [`RunOptions`] to a
 //! structured [`Report`] (scalars, tables, CSV series, notes) that the
 //! caller renders through the sinks in [`crate::report`].  The
-//! [`registry`] enumerates all ten missions in the canonical `avery all`
-//! order; `avery run <name>`, the legacy subcommands, the benches and the
-//! integration tests all resolve missions through it.
+//! [`registry`] enumerates all eleven missions in the canonical `avery
+//! all` order; `avery run <name>`, the legacy subcommands, the benches and
+//! the integration tests all resolve missions through it.
 
+mod chaos;
 mod context;
 mod fig10;
 mod fig7;
@@ -22,6 +23,7 @@ mod runner;
 mod scenario;
 mod table3;
 
+pub use chaos::{run_chaos, ChaosMission};
 pub use context::{run_streams, StreamsMission};
 pub use runner::{run_collect, EnvSpec};
 pub use fig10::{run_fig10, Fig10Mission};
@@ -89,6 +91,7 @@ pub fn registry() -> Vec<Box<dyn Mission>> {
         Box::new(FleetMission),
         Box::new(ScenarioMission),
         Box::new(MatrixMission),
+        Box::new(ChaosMission),
     ]
 }
 
@@ -171,7 +174,32 @@ pub struct RunOptions {
     /// Cloud cluster (`--spill-max H`): max ring hops past the home cell
     /// before a typed shed; `None` = 1.
     pub spill_max: Option<u32>,
+    /// Chaos layer (`--fault-plan PATH`): standalone `[[fault]]` manifest
+    /// compiled into a fraction-based schedule; `None` = no injected
+    /// faults unless a scenario manifest declares them or `fault_specs`
+    /// is set programmatically.
+    pub fault_plan: Option<String>,
+    /// Programmatic fault schedule (benches/tests inject here without a
+    /// manifest file); unioned after any `fault_plan` specs.
+    pub fault_specs: Vec<crate::faults::FaultSpec>,
+    /// Agent resilience (`--retry-budget N`); `None` = 0, or
+    /// [`CHAOS_DEFAULT_RETRY_BUDGET`] once the chaos layer is armed.
+    pub retry_budget: Option<u32>,
+    /// Agent resilience (`--retry-backoff SECS`); `None` = 0.05.
+    pub retry_backoff: Option<f64>,
+    /// Agent resilience (`--retry-deadline SECS`); `None` = infinite.
+    pub retry_deadline: Option<f64>,
+    /// Agent resilience (`--degrade`); `None` = off, or on once the chaos
+    /// layer is armed.
+    pub degrade: Option<bool>,
+    /// Cell health (`--probe-backoff SECS`): first re-probe backoff;
+    /// `None` = the health-machine default.
+    pub probe_backoff: Option<f64>,
 }
+
+/// Retry budget the resilience layer defaults to once faults are armed
+/// and the user left `--retry-budget` unset.
+pub const CHAOS_DEFAULT_RETRY_BUDGET: u32 = 2;
 
 impl Default for RunOptions {
     fn default() -> Self {
@@ -199,6 +227,13 @@ impl Default for RunOptions {
             replicas: None,
             hop_latency: None,
             spill_max: None,
+            fault_plan: None,
+            fault_specs: Vec::new(),
+            retry_budget: None,
+            retry_backoff: None,
+            retry_deadline: None,
+            degrade: None,
+            probe_backoff: None,
         }
     }
 }
@@ -230,6 +265,13 @@ impl RunOptions {
             replicas: cfg.replicas,
             hop_latency: cfg.hop_latency,
             spill_max: cfg.spill_max,
+            fault_plan: cfg.fault_plan.clone(),
+            fault_specs: Vec::new(),
+            retry_budget: cfg.retry_budget,
+            retry_backoff: cfg.retry_backoff,
+            retry_deadline: cfg.retry_deadline,
+            degrade: cfg.degrade,
+            probe_backoff: cfg.probe_backoff,
         }
     }
 
@@ -263,6 +305,45 @@ impl RunOptions {
             spill_max: self.spill_max.unwrap_or(1),
             serving: self.serving(),
         }
+    }
+
+    /// Resolve the fraction-based fault schedule these options select:
+    /// the `--fault-plan` manifest's specs (if any) followed by any
+    /// programmatic `fault_specs`.  Empty = chaos layer disarmed.
+    pub fn load_fault_specs(&self) -> Result<Vec<crate::faults::FaultSpec>> {
+        let mut specs = match &self.fault_plan {
+            None => Vec::new(),
+            Some(path) => {
+                crate::scenario::compile::compile_fault_plan_file(Path::new(path))
+                    .with_context(|| format!("compiling fault plan {path}"))?
+            }
+        };
+        specs.extend(self.fault_specs.iter().cloned());
+        Ok(specs)
+    }
+
+    /// The cell-health recovery configuration these options select.
+    pub fn health(&self) -> crate::cloud::HealthConfig {
+        let mut h = crate::cloud::HealthConfig::default();
+        if let Some(b) = self.probe_backoff {
+            h.backoff_base_secs = b;
+        }
+        h
+    }
+
+    /// Effective agent-resilience knobs: `(retry_budget, retry_backoff,
+    /// retry_deadline, degrade)`.  With the chaos layer armed, unset
+    /// budget/degrade default on (a fault plan with no recovery path
+    /// would only measure losses); disarmed, everything defaults off so
+    /// flag-free runs stay byte-identical.
+    pub fn resilience(&self, chaos_armed: bool) -> (u32, f64, f64, bool) {
+        let budget = self
+            .retry_budget
+            .unwrap_or(if chaos_armed { CHAOS_DEFAULT_RETRY_BUDGET } else { 0 });
+        let backoff = self.retry_backoff.unwrap_or(0.05);
+        let deadline = self.retry_deadline.unwrap_or(f64::INFINITY);
+        let degrade = self.degrade.unwrap_or(chaos_armed);
+        (budget, backoff, deadline, degrade)
     }
 }
 
@@ -393,6 +474,73 @@ pub(crate) fn push_cluster_telemetry(
     ));
 }
 
+/// Append the chaos-layer telemetry shared by the fleet, scenario and
+/// chaos reports: per-fault-kind injection counts, the resilience
+/// counters and conservation/availability scalars, and — when the cluster
+/// health machine ran — MTTR/time-to-detect percentiles plus the per-cell
+/// health timeline.  Callers invoke this ONLY when the chaos layer is
+/// armed, so fault-free reports stay byte-identical to the pre-chaos
+/// ones.  Everything surfaced is a deterministic function of the
+/// event-ordered virtual timeline (never wall-clock).
+pub(crate) fn push_chaos_telemetry(
+    report: &mut Report,
+    series_prefix: &str,
+    run: &FleetRun,
+    injected: &crate::faults::FaultCounts,
+    chaos: Option<&crate::cloud::ChaosStats>,
+) {
+    use crate::faults::FaultKind;
+
+    let mut fs = Series::new(&format!("{series_prefix}_faults"), &["kind", "injected"]);
+    for kind in FaultKind::ALL {
+        fs.row(&[kind.name().to_string(), injected[kind.index()].to_string()]);
+    }
+    report.push_series(fs);
+
+    let captures = run.captures_total.max(1);
+    // Availability counts every request that got *an* answer — a cloud
+    // serve or an edge-degraded one; sheds and abandonments are the
+    // unavailable tail.
+    let answered = run.executed_total + run.degraded_total;
+    report.push_scalar("captures", run.captures_total as f64);
+    report.push_scalar("retries", run.retries_total as f64);
+    report.push_scalar("shed_lost", run.shed_lost_total as f64);
+    report.push_scalar("degraded", run.degraded_total as f64);
+    report.push_scalar("abandoned", run.abandoned_total as f64);
+    report.push_scalar("degraded_secs", run.degraded_secs_total);
+    report.push_scalar("retry_wait_secs", run.retry_wait_secs_total);
+    report.push_scalar("availability", answered as f64 / captures as f64);
+    report.push_scalar(
+        "faults_injected",
+        injected.iter().map(|&n| n as f64).sum::<f64>(),
+    );
+
+    if let Some(cs) = chaos {
+        report.push_latency_scalars("mttr", &cs.mttr);
+        report.push_latency_scalars("ttd", &cs.ttd);
+        report.push_scalar("downtime_secs", cs.downtime_secs);
+        report.push_scalar("recoveries", cs.recoveries as f64);
+        report.push_scalar("cells_down_now", cs.down_now as f64);
+        let mut hs =
+            Series::new(&format!("{series_prefix}_health"), &["t", "cell", "state"]);
+        for (t, cell, state) in &cs.timeline {
+            hs.row(&[f(*t, 3), cell.to_string(), state.name().to_string()]);
+        }
+        report.push_series(hs);
+    }
+
+    report.push_note(format!(
+        "chaos: {} faults injected, {} retries, {} degraded to edge, {} shed, \
+         {} abandoned ({} captures)",
+        injected.iter().sum::<u64>(),
+        run.retries_total,
+        run.degraded_total,
+        run.shed_lost_total,
+        run.abandoned_total,
+        run.captures_total
+    ));
+}
+
 /// Append per-class virtual-latency percentiles shared by the fleet and
 /// scenario reports: `ctx_*`/`ins_*` scalars plus a rendered table.  Pushed
 /// unconditionally — unlike the serving telemetry, the scalars are
@@ -500,9 +648,9 @@ mod tests {
     use crate::config::Kv;
 
     #[test]
-    fn registry_has_ten_unique_missions() {
+    fn registry_has_eleven_unique_missions() {
         let reg = registry();
-        assert_eq!(reg.len(), 10);
+        assert_eq!(reg.len(), 11);
         let names: Vec<&str> = reg.iter().map(|m| m.name()).collect();
         let mut dedup = names.clone();
         dedup.sort_unstable();
@@ -530,7 +678,9 @@ mod tests {
              matrix-count = 24\nbatch-max = 8\ncache-entries = 64\n\
              cache-ttl = 45\nqueue-depth = 32\ndeadline-context = 0.05\n\
              deadline-insight = 2.5\nedf = true\ndeadline-shed = true\n\
-             cells = 3\nreplicas = 2\nhop-latency = 0.004\nspill-max = 2\n",
+             cells = 3\nreplicas = 2\nhop-latency = 0.004\nspill-max = 2\n\
+             fault-plan = plans/kill.toml\nretry-budget = 3\nretry-backoff = 0.1\n\
+             retry-deadline = 4\ndegrade = true\nprobe-backoff = 0.25\n",
         )
         .unwrap();
         let cfg = RunConfig::from_kv(&kv).unwrap();
@@ -558,6 +708,16 @@ mod tests {
         assert_eq!(opts.replicas, Some(2));
         assert_eq!(opts.hop_latency, Some(0.004));
         assert_eq!(opts.spill_max, Some(2));
+        assert_eq!(opts.fault_plan.as_deref(), Some("plans/kill.toml"));
+        assert!(opts.fault_specs.is_empty());
+        assert_eq!(opts.retry_budget, Some(3));
+        assert_eq!(opts.retry_backoff, Some(0.1));
+        assert_eq!(opts.retry_deadline, Some(4.0));
+        assert_eq!(opts.degrade, Some(true));
+        assert_eq!(opts.probe_backoff, Some(0.25));
+        // Explicit knobs win over the chaos-armed fallbacks.
+        assert_eq!(opts.resilience(true), (3, 0.1, 4.0, true));
+        assert_eq!(opts.health().backoff_base_secs, 0.25);
         let cluster = opts.cluster();
         assert!(cluster.multi_cell());
         assert_eq!(cluster.cells, 3);
@@ -602,5 +762,16 @@ mod tests {
         assert_eq!(cluster.replicas, 1);
         assert_eq!(cluster.hop_latency_secs, crate::cloud::DEFAULT_HOP_LATENCY_SECS);
         assert_eq!(cluster.spill_max, 1);
+        assert!(cluster.faults.is_none());
+        // Chaos defaults: disarmed everything stays off; armed, the
+        // retry budget and degradation switch on unless the user said
+        // otherwise.
+        assert!(defaults.fault_plan.is_none());
+        assert!(defaults.load_fault_specs().unwrap().is_empty());
+        assert_eq!(defaults.resilience(false), (0, 0.05, f64::INFINITY, false));
+        assert_eq!(
+            defaults.resilience(true),
+            (CHAOS_DEFAULT_RETRY_BUDGET, 0.05, f64::INFINITY, true)
+        );
     }
 }

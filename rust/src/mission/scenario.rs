@@ -100,7 +100,24 @@ pub fn run_compiled_scenario(
     let effective_batch = serving.batch_max.min(n_uavs);
     // Cloud cluster: K cells of `workers` workers each; the default K=1
     // delegates to a single pool, byte-identical to the pre-cluster path.
-    let cluster_cfg = opts.cluster();
+    let mut cluster_cfg = opts.cluster();
+    // Chaos layer: a scenario's `[[fault]]` sections arrive pre-bound to
+    // mission seconds; union them with any `--fault-plan` specs, then arm
+    // the cluster injector + health machine.  Unarmed (the default for
+    // every built-in scenario), `faults` stays `None` and the report is
+    // byte-identical to the pre-chaos path.
+    let mut fault_events = sc.faults.clone();
+    fault_events
+        .extend(crate::faults::bind_specs(&opts.load_fault_specs()?, opts.duration_secs));
+    fault_events.sort_by(|a, b| a.at().partial_cmp(&b.at()).expect("finite fault times"));
+    let chaos_armed = !fault_events.is_empty();
+    if chaos_armed {
+        cluster_cfg.faults =
+            Some(crate::faults::FaultPlan::with_events(opts.seed, fault_events)?);
+        cluster_cfg.health = opts.health();
+    }
+    let (retry_budget, retry_backoff_secs, retry_deadline_secs, degrade) =
+        opts.resilience(chaos_armed);
     let fleet_cfg = FleetConfig {
         n_uavs,
         mission: MissionConfig {
@@ -111,6 +128,10 @@ pub fn run_compiled_scenario(
             hysteresis: sc.hysteresis,
             min_dwell: sc.min_dwell,
             batch_max: effective_batch,
+            retry_budget,
+            retry_backoff_secs,
+            retry_deadline_secs,
+            degrade,
             ..MissionConfig::default()
         },
         context_every: sc.fleet.context_every,
@@ -311,6 +332,18 @@ pub fn run_compiled_scenario(
             &run,
             &cluster_cfg,
             &cluster_stats,
+        );
+    }
+    // Chaos telemetry only exists when a fault schedule was armed.
+    if chaos_armed {
+        let cs = cluster.chaos_stats();
+        let injected = cs.as_ref().map(|s| s.injected).unwrap_or([0; 5]);
+        super::push_chaos_telemetry(
+            &mut report,
+            &format!("{stem}_chaos"),
+            &run,
+            &injected,
+            cs.as_ref(),
         );
     }
 

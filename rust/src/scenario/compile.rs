@@ -33,6 +33,7 @@ use std::fmt;
 use std::path::{Path, PathBuf};
 
 use crate::coordinator::MissionGoal;
+use crate::faults::{bind_specs, FaultKind, FaultSpec};
 use crate::netsim::{LinkConfig, Phase, PhaseKind, TraceConfig, OUTAGE_FLOOR_MBPS};
 use crate::streams::IntentSwitch;
 
@@ -69,6 +70,9 @@ pub enum CompileError {
     ScheduleOrder { key: String, msg: String },
     /// Fleet composition out of range.
     FleetSpec { key: String, msg: String },
+    /// Fault schedule: bad kind, out-of-domain window/rate, disorder, or
+    /// overlapping same-cell crash windows.
+    FaultSchedule { key: String, msg: String },
 }
 
 impl CompileError {
@@ -85,7 +89,8 @@ impl CompileError {
             | CompileError::PhaseWindow { key, .. }
             | CompileError::RateBound { key, .. }
             | CompileError::ScheduleOrder { key, .. }
-            | CompileError::FleetSpec { key, .. } => Some(key),
+            | CompileError::FleetSpec { key, .. }
+            | CompileError::FaultSchedule { key, .. } => Some(key),
         }
     }
 }
@@ -111,6 +116,9 @@ impl fmt::Display for CompileError {
                 write!(f, "intent schedule at `{key}`: {msg}")
             }
             CompileError::FleetSpec { key, msg } => write!(f, "fleet spec at `{key}`: {msg}"),
+            CompileError::FaultSchedule { key, msg } => {
+                write!(f, "fault schedule at `{key}`: {msg}")
+            }
         }
     }
 }
@@ -148,6 +156,9 @@ pub struct CompiledScenario {
     pub fleet: FleetSpec,
     /// `(mission fraction, prompt)`, strictly increasing in fraction.
     pub schedule: Vec<(f64, String)>,
+    /// Fraction-based fault schedule, bound to mission seconds at
+    /// instantiation (empty unless the manifest declares `[[fault]]`).
+    pub faults: Vec<FaultSpec>,
 }
 
 impl CompiledScenario {
@@ -207,6 +218,7 @@ impl CompiledScenario {
             goal: self.goal,
             hysteresis: self.hysteresis,
             min_dwell: self.min_dwell,
+            faults: bind_specs(&self.faults, d),
         }
     }
 }
@@ -382,7 +394,7 @@ fn lower(doc: &Doc) -> Result<CompiledScenario, CompileError> {
         }
     }
     for (name, _) in &doc.arrays {
-        if !["phase", "intent"].contains(&name.as_str()) {
+        if !["phase", "intent", "fault"].contains(&name.as_str()) {
             return Err(CompileError::UnknownKey { key: format!("[[{name}]]") });
         }
     }
@@ -698,6 +710,116 @@ fn lower(doc: &Doc) -> Result<CompiledScenario, CompileError> {
         schedule.push((frac, prompt));
     }
 
+    // ---- [[fault]] schedule ---------------------------------------------
+    // Fraction-based like the intent schedule; every symbolic rule the
+    // runtime `FaultPlan::validate` enforces in seconds is checked here in
+    // fraction space first, so a bad manifest fails before any simulation.
+    let mut faults = Vec::new();
+    let mut prev_at = 0.0_f64;
+    let mut crash_end: Vec<(usize, f64)> = Vec::new();
+    for (i, ft) in doc.array("fault").iter().enumerate() {
+        let at_key = |k: &str| format!("fault[{i}].{k}");
+        audit_keys(
+            ft,
+            &format!("fault[{i}]"),
+            &["kind", "cell", "at", "duration", "rate", "stall"],
+        )?;
+        let kind = match ft.get("kind") {
+            None => return Err(CompileError::MissingKey { key: at_key("kind") }),
+            Some(v) => {
+                let s = want_str(v, &at_key("kind"))?;
+                FaultKind::parse(s).ok_or_else(|| CompileError::FaultSchedule {
+                    key: at_key("kind"),
+                    msg: format!(
+                        "unknown fault kind `{s}` \
+                         (cell-crash|worker-stall|exec-error|wire-corrupt|session-drop)"
+                    ),
+                })?
+            }
+        };
+        let cell = opt_usize(ft, &format!("fault[{i}]"), "cell", 0)?;
+        if cell >= 256 {
+            return Err(CompileError::FaultSchedule {
+                key: at_key("cell"),
+                msg: format!("cell index {cell} outside [0, 256)"),
+            });
+        }
+        let at = match ft.get("at") {
+            None => return Err(CompileError::MissingKey { key: at_key("at") }),
+            Some(v) => want_num(v, &at_key("at"))?,
+        };
+        if !(0.0..1.0).contains(&at) {
+            return Err(CompileError::FaultSchedule {
+                key: at_key("at"),
+                msg: format!("start fraction {at} outside [0, 1)"),
+            });
+        }
+        if at < prev_at {
+            return Err(CompileError::FaultSchedule {
+                key: at_key("at"),
+                msg: format!("start fraction {at} before previous fault at {prev_at}"),
+            });
+        }
+        prev_at = at;
+        let duration = opt_num(ft, &format!("fault[{i}]"), "duration", 0.0)?;
+        if !(0.0..=1.0).contains(&duration) || at + duration > 1.0 + 1e-9 {
+            return Err(CompileError::FaultSchedule {
+                key: at_key("duration"),
+                msg: format!("window [{at}, {}) leaves the mission", at + duration),
+            });
+        }
+        let rate = opt_num(ft, &format!("fault[{i}]"), "rate", 0.0)?;
+        if !(0.0..=1.0).contains(&rate) {
+            return Err(CompileError::FaultSchedule {
+                key: at_key("rate"),
+                msg: format!("failure rate {rate} outside [0, 1]"),
+            });
+        }
+        let stall_secs = opt_num(ft, &format!("fault[{i}]"), "stall", 0.0)?;
+        if !stall_secs.is_finite() || stall_secs < 0.0 {
+            return Err(CompileError::FaultSchedule {
+                key: at_key("stall"),
+                msg: format!("stall {stall_secs} must be a finite non-negative latency"),
+            });
+        }
+        match kind {
+            FaultKind::CellCrash if duration <= 0.0 => {
+                return Err(CompileError::FaultSchedule {
+                    key: at_key("duration"),
+                    msg: "a cell-crash needs a positive recovery window".to_string(),
+                })
+            }
+            FaultKind::CellCrash => {
+                if let Some((_, end)) =
+                    crash_end.iter().find(|(c, end)| *c == cell && at < *end)
+                {
+                    return Err(CompileError::FaultSchedule {
+                        key: at_key("at"),
+                        msg: format!(
+                            "crash window overlaps an earlier crash on cell {cell} \
+                             (recovers at fraction {end})"
+                        ),
+                    });
+                }
+                crash_end.push((cell, at + duration));
+            }
+            FaultKind::ExecError | FaultKind::WireCorrupt if rate <= 0.0 => {
+                return Err(CompileError::FaultSchedule {
+                    key: at_key("rate"),
+                    msg: format!("a {} fault needs rate > 0", kind.name()),
+                })
+            }
+            FaultKind::WorkerStall if stall_secs <= 0.0 => {
+                return Err(CompileError::FaultSchedule {
+                    key: at_key("stall"),
+                    msg: "a worker-stall fault needs stall > 0".to_string(),
+                })
+            }
+            _ => {}
+        }
+        faults.push(FaultSpec { kind, cell, at, duration, rate, stall_secs });
+    }
+
     Ok(CompiledScenario {
         name,
         summary,
@@ -713,7 +835,51 @@ fn lower(doc: &Doc) -> Result<CompiledScenario, CompileError> {
         extra_latency_s,
         fleet: FleetSpec { n_uavs, context_every, stagger_secs, workers },
         schedule,
+        faults,
     })
+}
+
+/// Compile a standalone fault-plan manifest: a document whose only content
+/// is `[[fault]]` sections (plus an optional `schema`) — the `--fault-plan`
+/// CLI path.  Returns fraction-based specs; bind them with
+/// [`crate::faults::bind_specs`] once the mission duration is known.
+pub fn compile_fault_plan_str(text: &str) -> Result<Vec<FaultSpec>, CompileError> {
+    let doc = Doc::parse(text).map_err(|e| CompileError::Parse {
+        path: "<inline>".to_string(),
+        line: e.line,
+        msg: e.msg,
+    })?;
+    // Reuse the scenario lowering by grafting the fault sections onto a
+    // minimal valid manifest — one validation implementation, two surfaces.
+    let mut host = Doc::parse(
+        "name = \"fault-plan\"\n[[phase]]\nkind = \"stable\"\nfrac = 1.0\nlevel_mbps = 16\n",
+    )
+    .expect("static host manifest");
+    if let Some((name, _)) = doc.tables.first() {
+        return Err(CompileError::UnknownKey { key: format!("[{name}]") });
+    }
+    for key in doc.root.keys() {
+        if key != "schema" {
+            return Err(CompileError::UnknownKey { key: key.to_string() });
+        }
+    }
+    for (name, tables) in doc.arrays {
+        if name != "fault" {
+            return Err(CompileError::UnknownKey { key: format!("[[{name}]]") });
+        }
+        host.arrays.push((name, tables));
+    }
+    Ok(lower(&host)?.faults)
+}
+
+/// Compile a standalone fault-plan manifest file (no include resolution —
+/// fault plans are small enough to be self-contained).
+pub fn compile_fault_plan_file(path: &Path) -> Result<Vec<FaultSpec>, CompileError> {
+    let text = std::fs::read_to_string(path).map_err(|e| CompileError::Io {
+        path: path.display().to_string(),
+        msg: e.to_string(),
+    })?;
+    compile_fault_plan_str(&text)
 }
 
 #[cfg(test)]
@@ -736,6 +902,7 @@ mod tests {
         assert_eq!(c.fleet.n_uavs, 1);
         assert_eq!(c.fleet.workers, 1);
         assert!(c.schedule.is_empty());
+        assert!(c.faults.is_empty());
         let sc = c.instantiate(7, 300.0);
         assert_eq!(sc.trace.phases.len(), 1);
         assert!((sc.trace.total_secs() - 300.0).abs() < 1e-9);
@@ -772,7 +939,7 @@ mod tests {
 
     #[test]
     fn each_validation_pass_names_its_key() {
-        let cases: [(&str, fn(&CompileError) -> bool, &str); 8] = [
+        let cases: [(&str, fn(&CompileError) -> bool, &str); 10] = [
             ("[[phase]]\nkind = \"stable\"\nfrac = 1.0\nlevel_mbps = 16\n",
              |e| matches!(e, CompileError::MissingKey { .. }), "name"),
             ("name = \"x\"\nbogus = 1\n[[phase]]\nkind = \"stable\"\nfrac = 1.0\n\
@@ -795,12 +962,59 @@ mod tests {
             ("name = \"x\"\n[[phase]]\nkind = \"stable\"\nfrac = 0.5\nlevel_mbps = 16\n\
               [[phase]]\nkind = \"drop\"\nsecs = 60\nlevel_mbps = 9\n",
              |e| matches!(e, CompileError::PhaseWindow { .. }), "phase[1].secs"),
+            ("name = \"x\"\n[[phase]]\nkind = \"stable\"\nfrac = 1.0\nlevel_mbps = 16\n\
+              [[fault]]\nkind = \"meteor\"\nat = 0.5\n",
+             |e| matches!(e, CompileError::FaultSchedule { .. }), "fault[0].kind"),
+            ("name = \"x\"\n[[phase]]\nkind = \"stable\"\nfrac = 1.0\nlevel_mbps = 16\n\
+              [[fault]]\nkind = \"cell-crash\"\nat = 0.2\nduration = 0.3\n\
+              [[fault]]\nkind = \"cell-crash\"\nat = 0.4\nduration = 0.1\n",
+             |e| matches!(e, CompileError::FaultSchedule { .. }), "fault[1].at"),
         ];
         for (text, variant_ok, key) in cases {
             let err = compile_str(text).unwrap_err();
             assert!(variant_ok(&err), "{text:?} -> {err}");
             assert_eq!(err.key_path(), Some(key), "{err}");
         }
+    }
+
+    #[test]
+    fn fault_sections_lower_and_bind_to_mission_seconds() {
+        let c = compile_str(
+            "name = \"chaotic\"\n\
+             [[phase]]\nkind = \"stable\"\nfrac = 1.0\nlevel_mbps = 16\n\
+             [[fault]]\nkind = \"cell-crash\"\ncell = 1\nat = 0.25\nduration = 0.1\n\
+             [[fault]]\nkind = \"exec-error\"\nat = 0.5\nduration = 0.2\nrate = 0.3\n\
+             [[fault]]\nkind = \"session-drop\"\nat = 0.9\n",
+        )
+        .unwrap();
+        assert_eq!(c.faults.len(), 3);
+        assert_eq!(c.faults[0].kind, FaultKind::CellCrash);
+        assert_eq!(c.faults[0].cell, 1);
+        let sc = c.instantiate(7, 400.0);
+        assert_eq!(sc.faults.len(), 3);
+        assert_eq!(sc.faults[0].window(), (100.0, 140.0));
+        assert_eq!(sc.faults[1].window(), (200.0, 280.0));
+        // A bound schedule passes the runtime plan validation too.
+        crate::faults::FaultPlan::with_events(7, sc.faults.clone()).unwrap();
+    }
+
+    #[test]
+    fn standalone_fault_plans_compile_and_reject_foreign_keys() {
+        let specs = compile_fault_plan_str(
+            "[[fault]]\nkind = \"wire-corrupt\"\nat = 0.1\nduration = 0.4\nrate = 0.05\n",
+        )
+        .unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].kind, FaultKind::WireCorrupt);
+        assert!((specs[0].rate - 0.05).abs() < 1e-12);
+        // Anything beyond `[[fault]]` (and `schema`) is a foreign key here.
+        let err = compile_fault_plan_str("name = \"x\"\n[[fault]]\nkind = \"session-drop\"\nat = 0.5\n")
+            .unwrap_err();
+        assert!(matches!(err, CompileError::UnknownKey { .. }), "{err}");
+        let err =
+            compile_fault_plan_str("[[fault]]\nkind = \"worker-stall\"\nat = 0.1\nduration = 0.2\n")
+                .unwrap_err();
+        assert_eq!(err.key_path(), Some("fault[0].stall"), "{err}");
     }
 
     #[test]

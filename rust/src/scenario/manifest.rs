@@ -12,7 +12,7 @@
 //! key = ["a", "b"]          # flat lists of scalars
 //! [section]                 # named table ([trace], [link], [fleet])
 //! key = value
-//! [[entry]]                 # array-of-tables ([[phase]], [[intent]])
+//! [[entry]]                 # array-of-tables ([[phase]], [[intent]], [[fault]])
 //! key = value
 //! ```
 //!

@@ -27,6 +27,7 @@ pub mod manifest;
 use anyhow::{bail, Result};
 
 use crate::coordinator::MissionGoal;
+use crate::faults::FaultEvent;
 use crate::netsim::{BandwidthTrace, LinkConfig, Phase, PhaseKind, TraceConfig};
 use crate::streams::IntentSwitch;
 
@@ -55,6 +56,10 @@ pub struct Scenario {
     pub hysteresis: f64,
     /// Controller minimum-dwell decisions used by scenario missions.
     pub min_dwell: u64,
+    /// Deterministic fault schedule, already bound to mission seconds
+    /// (empty for every built-in — chaos is opt-in via `[[fault]]`
+    /// manifest sections or `--fault-plan`).
+    pub faults: Vec<FaultEvent>,
 }
 
 /// `(name, one-line summary)` for every registered scenario, in listing
@@ -125,6 +130,7 @@ pub fn build(name: &str, seed: u64, duration_secs: f64) -> Result<Scenario> {
             goal: MissionGoal::PrioritizeAccuracy,
             hysteresis: 0.0,
             min_dwell: 0,
+            faults: Vec::new(),
         }),
 
         // Smoke plumes drifting across the ridge line: Markov-modulated
@@ -150,6 +156,7 @@ pub fn build(name: &str, seed: u64, duration_secs: f64) -> Result<Scenario> {
             goal: MissionGoal::PrioritizeAccuracy,
             hysteresis: 0.10,
             min_dwell: 2,
+            faults: Vec::new(),
         }),
 
         // The §4.3 triage-escalation story on a flooded urban canyon: a
@@ -182,6 +189,7 @@ pub fn build(name: &str, seed: u64, duration_secs: f64) -> Result<Scenario> {
             goal: MissionGoal::PrioritizeAccuracy,
             hysteresis: 0.10,
             min_dwell: 2,
+            faults: Vec::new(),
         }),
 
         // Aftershock terrain: repeated full blackouts between survey legs —
@@ -210,6 +218,7 @@ pub fn build(name: &str, seed: u64, duration_secs: f64) -> Result<Scenario> {
             goal: MissionGoal::PrioritizeAccuracy,
             hysteresis: 0.10,
             min_dwell: 2,
+            faults: Vec::new(),
         }),
 
         // Coastal relay through a LEO constellation: per-pass sawtooth
@@ -242,6 +251,7 @@ pub fn build(name: &str, seed: u64, duration_secs: f64) -> Result<Scenario> {
             goal: MissionGoal::PrioritizeThroughput,
             hysteresis: 0.10,
             min_dwell: 2,
+            faults: Vec::new(),
         }),
 
         other => bail!(

@@ -127,6 +127,22 @@ pub struct FleetRun {
     pub lat_context: LatencyHistogram,
     /// Same, for Insight-class requests.
     pub lat_insight: LatencyHistogram,
+    // ---- resilience totals (all 0 with the chaos layer disarmed) ----
+    /// Sampled serve attempts entering the resilience layer: conservation
+    /// denominator (`executed + shed_lost + degraded + abandoned`).
+    pub captures_total: u64,
+    /// Retry attempts issued fleet-wide.
+    pub retries_total: u64,
+    /// Requests lost to a terminal shed past the retry budget.
+    pub shed_lost_total: u64,
+    /// Insight requests that degraded to edge-local Context execution.
+    pub degraded_total: u64,
+    /// Requests abandoned with no answer at all.
+    pub abandoned_total: u64,
+    /// Virtual seconds spent in degraded handling fleet-wide.
+    pub degraded_secs_total: f64,
+    /// Virtual seconds spent backing off between retries fleet-wide.
+    pub retry_wait_secs_total: f64,
 }
 
 /// Jain's fairness index: (Σx)² / (n · Σx²) — 1.0 when every UAV gets an
@@ -301,6 +317,13 @@ pub fn run_fleet_mission(
         total_energy_j: per_uav.iter().map(|o| o.summary.total_energy_j).sum(),
         lat_context,
         lat_insight,
+        captures_total: per_uav.iter().map(|o| o.summary.captures).sum(),
+        retries_total: per_uav.iter().map(|o| o.summary.retries).sum(),
+        shed_lost_total: per_uav.iter().map(|o| o.summary.shed_lost).sum(),
+        degraded_total: per_uav.iter().map(|o| o.summary.degraded).sum(),
+        abandoned_total: per_uav.iter().map(|o| o.summary.abandoned).sum(),
+        degraded_secs_total: per_uav.iter().map(|o| o.summary.degraded_secs).sum(),
+        retry_wait_secs_total: per_uav.iter().map(|o| o.summary.retry_wait_secs).sum(),
         per_uav,
         epochs,
     })

@@ -23,7 +23,7 @@ pub mod fleet;
 
 use anyhow::Result;
 
-use crate::cloud::{CloudServer, ServePackets};
+use crate::cloud::{CloudServer, ServeError, ServePackets, Served};
 use crate::coordinator::{
     classify_intent, ControllerDecision, ControllerError, Intent, IntentLevel, Lut,
     MissionGoal, RuntimeState, SplitController, TierId,
@@ -33,6 +33,7 @@ use crate::edge::EdgePipeline;
 use crate::energy::DeviceModel;
 use crate::eval::{mask_iou, IouAccumulator};
 use crate::netsim::{BandwidthEstimator, Link, Uplink};
+use crate::packet::{Packet, StreamKind};
 use crate::runtime::Engine;
 use crate::util::Rng;
 
@@ -95,6 +96,20 @@ pub struct MissionConfig {
     /// the timing model amortizes the per-request tail setup across the
     /// batch ([`crate::energy::DeviceModel::cloud_tail_latency_batched`]).
     pub batch_max: usize,
+    /// Per-request retry budget against retryable cloud failures (sheds
+    /// and injected faults): 0 = off, errors propagate exactly as before
+    /// the chaos layer existed.
+    pub retry_budget: u32,
+    /// First retry backoff (virtual seconds); doubles per attempt.
+    pub retry_backoff_secs: f64,
+    /// Deadline on accumulated backoff: a retry whose wait would pass this
+    /// is abandoned instead (`f64::INFINITY` = budget-only).
+    pub retry_deadline_secs: f64,
+    /// Graceful degradation: when the cloud is unreachable past the retry
+    /// budget, an Insight request degrades to edge-local Context-tier
+    /// execution (the paper's functional split as a fallback path) instead
+    /// of being lost.
+    pub degrade: bool,
 }
 
 impl Default for MissionConfig {
@@ -110,6 +125,10 @@ impl Default for MissionConfig {
             split: 1,
             seed: 7,
             batch_max: 1,
+            retry_budget: 0,
+            retry_backoff_secs: 0.05,
+            retry_deadline_secs: f64::INFINITY,
+            degrade: false,
         }
     }
 }
@@ -195,6 +214,26 @@ pub struct RunSummary {
     /// Bitmask of cluster cells that answered this agent (cell `i` sets
     /// bit `min(i, 63)`); the popcount is the per-UAV cells-hit telemetry.
     pub cells_mask: u64,
+    /// Sampled serve attempts that entered the resilience layer: the
+    /// conservation denominator (`executed + shed_lost + degraded +
+    /// abandoned == captures`, pinned by `rust/tests/chaos.rs`).
+    pub captures: u64,
+    /// Retry attempts issued against retryable cloud failures.
+    pub retries: u64,
+    /// Requests lost to a terminal shed (admission refusal past the
+    /// retry budget).
+    pub shed_lost: u64,
+    /// Insight requests that degraded to edge-local Context-tier
+    /// execution after the cloud stayed unreachable past the budget.
+    pub degraded: u64,
+    /// Requests abandoned outright (unreachable cloud, degradation off
+    /// or not applicable).
+    pub abandoned: u64,
+    /// Virtual seconds spent inside degraded handling (terminal backoff
+    /// plus the edge fallback execution).
+    pub degraded_secs: f64,
+    /// Virtual seconds spent backing off between retry attempts.
+    pub retry_wait_secs: f64,
 }
 
 /// Full result of an Insight mission run.
@@ -262,6 +301,14 @@ pub struct UavAgent<'a> {
     cells_mask: u64,
     /// Virtual seconds of server-side work this agent induced (utilization).
     pub server_secs: f64,
+    // ---- resilience telemetry (all 0 with retry/degrade off) ----
+    captures: u64,
+    retries: u64,
+    shed_lost: u64,
+    degraded: u64,
+    abandoned: u64,
+    degraded_secs: f64,
+    retry_wait_secs: f64,
     ctx_correct: u64,
     ctx_total: u64,
     next_epoch_log: f64,
@@ -276,6 +323,17 @@ pub const CONTEXT_TAIL_SECS: f64 = 0.02;
 /// request from its content-addressed response cache: one index lookup and
 /// a reply — no tail execution at all (DESIGN.md "Cloud serving layer").
 pub const CACHE_HIT_TAIL_SECS: f64 = 0.002;
+
+/// Terminal resolution of one sampled serve attempt under the resilience
+/// policy ([`UavAgent::serve_resilient`]).  `waited` is the virtual time
+/// the agent spent backing off before resolving; it rides the agent's
+/// clock so retries consume mission time.
+enum Resolved {
+    Served { served: Served, waited: f64 },
+    Shed { waited: f64 },
+    Degraded { waited: f64 },
+    Abandoned { waited: f64 },
+}
 
 impl<'a> UavAgent<'a> {
     /// An Insight-stream agent (the paper's dynamic-mission loop).
@@ -380,6 +438,13 @@ impl<'a> UavAgent<'a> {
             remote_hits: 0,
             cells_mask: 0,
             server_secs: 0.0,
+            captures: 0,
+            retries: 0,
+            shed_lost: 0,
+            degraded: 0,
+            abandoned: 0,
+            degraded_secs: 0.0,
+            retry_wait_secs: 0.0,
             ctx_correct: 0,
             ctx_total: 0,
             next_epoch_log: start_t,
@@ -443,6 +508,81 @@ impl<'a> UavAgent<'a> {
         match self.role {
             UavRole::Insight => self.step_insight(uplink, server),
             UavRole::Context => self.step_context(uplink, server),
+        }
+    }
+
+    /// Whether the resilience layer (retry budget / degradation) is armed.
+    fn resilient(&self) -> bool {
+        self.cfg.retry_budget > 0 || self.cfg.degrade
+    }
+
+    /// One sampled serve attempt under the resilience policy: retry
+    /// retryable failures (sheds and injected faults) on exponential
+    /// backoff in virtual time within the budget and deadline, then
+    /// resolve terminally — served, shed, degraded, or abandoned.  Every
+    /// attempt resolves to exactly one variant, which is what makes the
+    /// request-conservation invariant hold by construction.  Flags off,
+    /// this is a single `serve` call with errors propagated unchanged.
+    fn serve_resilient(
+        &mut self,
+        server: &dyn ServePackets,
+        pkt: &Packet,
+        prompt_ids: &[i32],
+        set: &str,
+    ) -> Result<Resolved> {
+        if !self.resilient() {
+            return Ok(Resolved::Served { served: server.serve(pkt, prompt_ids, set)?, waited: 0.0 });
+        }
+        let mut waited = 0.0f64;
+        let mut backoff = self.cfg.retry_backoff_secs.max(1e-6);
+        let mut attempts = 0u32;
+        let mut retry_pkt = None::<Packet>;
+        loop {
+            let attempt_pkt: &Packet = retry_pkt.as_ref().unwrap_or(pkt);
+            match server.serve(attempt_pkt, prompt_ids, set) {
+                Ok(served) => {
+                    self.retry_wait_secs += waited;
+                    return Ok(Resolved::Served { served, waited });
+                }
+                Err(e) => {
+                    // Only typed, retryable serving failures enter the
+                    // policy: sheds (overload) and injected faults
+                    // (unreachability).  Closed is terminal by definition
+                    // and execution errors are request-fatal — both
+                    // resolve without burning retries.
+                    let (retryable, shed) = match e.downcast_ref::<ServeError>() {
+                        Some(ServeError::Shed { .. }) => (true, true),
+                        Some(ServeError::Fault { .. }) => (true, false),
+                        Some(ServeError::Closed) => (false, false),
+                        Some(ServeError::Exec(_)) | None => return Err(e),
+                    };
+                    if retryable
+                        && attempts < self.cfg.retry_budget
+                        && waited + backoff <= self.cfg.retry_deadline_secs
+                    {
+                        attempts += 1;
+                        self.retries += 1;
+                        waited += backoff;
+                        backoff *= 2.0;
+                        // The retried request re-enters the cloud at the
+                        // post-backoff virtual time, so fault windows and
+                        // health re-probes see time advance while the
+                        // agent backs off.
+                        let mut p = pkt.clone();
+                        p.t_capture = pkt.t_capture + waited;
+                        retry_pkt = Some(p);
+                        continue;
+                    }
+                    self.retry_wait_secs += waited;
+                    if shed {
+                        return Ok(Resolved::Shed { waited });
+                    }
+                    if self.cfg.degrade && pkt.kind == StreamKind::Insight {
+                        return Ok(Resolved::Degraded { waited });
+                    }
+                    return Ok(Resolved::Abandoned { waited });
+                }
+            }
         }
     }
 
@@ -520,6 +660,7 @@ impl<'a> UavAgent<'a> {
         self.tier_secs[tier.index()] += cycle;
 
         let mut iou = None;
+        let mut waited = 0.0;
         if tx.delivered {
             self.delivered += 1;
             // Sample packets for real HLO execution with probability
@@ -528,44 +669,90 @@ impl<'a> UavAgent<'a> {
             // corpus of accuracy samples.
             let sample = self.cfg.exec_every <= 1
                 || self.probe_noise.below(self.cfg.exec_every) == 0;
+            // Whether the cloud did the tail work (false once the request
+            // resolved shed/degraded/abandoned — those charge no server
+            // time).
+            let mut server_side = true;
             if sample {
-                let served =
-                    server.serve(&pkt, &intent.token_ids, item.corpus.weight_set())?;
-                if served.cache_hit {
-                    self.cache_hits += 1;
-                    tail = CACHE_HIT_TAIL_SECS;
-                }
-                // Cluster provenance: inter-cell hops (spill retries or a
-                // sibling-cache round trip) add their modeled latency to
-                // this request's tail.  Zero at --cells 1, so the default
-                // timing model is untouched.
-                if served.hops > 0 {
-                    self.spill_hops += served.hops as u64;
-                    if served.cache_hit {
-                        self.remote_hits += 1;
+                self.captures += 1;
+                match self.serve_resilient(
+                    server,
+                    &pkt,
+                    &intent.token_ids,
+                    item.corpus.weight_set(),
+                )? {
+                    Resolved::Served { served, waited: w } => {
+                        waited = w;
+                        if served.cache_hit {
+                            self.cache_hits += 1;
+                            tail = CACHE_HIT_TAIL_SECS;
+                        }
+                        // Cluster provenance: inter-cell hops (spill retries
+                        // or a sibling-cache round trip) add their modeled
+                        // latency to this request's tail.  Zero at
+                        // --cells 1, so the default timing model is
+                        // untouched.
+                        if served.hops > 0 {
+                            self.spill_hops += served.hops as u64;
+                            if served.cache_hit {
+                                self.remote_hits += 1;
+                            }
+                            tail += served.hop_secs;
+                        }
+                        self.cells_mask |= 1u64 << served.cell.min(63);
+                        let logits =
+                            served.resp.mask_logits.as_ref().expect("insight mask");
+                        let s =
+                            mask_iou(logits.as_f32()?, &item.scene.masks[class_id], 0.0);
+                        let mut one = IouAccumulator::default();
+                        one.push(s);
+                        iou = Some(one.giou());
+                        self.acc_all.push(s);
+                        match item.corpus {
+                            Corpus::Generic => self.acc_orig.push(s),
+                            Corpus::Flood => self.acc_ft.push(s),
+                        }
+                        self.executed += 1;
+                        // Per-request virtual latency for the tail-percentile
+                        // telemetry: the full capture->deliver cycle (plus
+                        // any retry backoff) and the final (cache-adjusted)
+                        // cloud tail.
+                        server.observe_latency(pkt.kind, cycle + waited + tail);
                     }
-                    tail += served.hop_secs;
+                    Resolved::Shed { waited: w } => {
+                        waited = w;
+                        tail = 0.0;
+                        server_side = false;
+                        self.shed_lost += 1;
+                    }
+                    Resolved::Degraded { waited: w } => {
+                        // Graceful degradation: the cloud stayed unreachable
+                        // past the retry budget, so the edge answers a
+                        // Context-tier query locally (the paper's functional
+                        // split as a fallback path) instead of losing the
+                        // request.  No IoU sample — the degraded answer is a
+                        // presence summary, not a mask.
+                        waited = w;
+                        let ctx = self.device.context_edge();
+                        self.total_energy += ctx.energy_j;
+                        tail = ctx.latency_s;
+                        server_side = false;
+                        self.degraded += 1;
+                        self.degraded_secs += w + ctx.latency_s;
+                    }
+                    Resolved::Abandoned { waited: w } => {
+                        waited = w;
+                        tail = 0.0;
+                        server_side = false;
+                        self.abandoned += 1;
+                    }
                 }
-                self.cells_mask |= 1u64 << served.cell.min(63);
-                let logits = served.resp.mask_logits.as_ref().expect("insight mask");
-                let s = mask_iou(logits.as_f32()?, &item.scene.masks[class_id], 0.0);
-                let mut one = IouAccumulator::default();
-                one.push(s);
-                iou = Some(one.giou());
-                self.acc_all.push(s);
-                match item.corpus {
-                    Corpus::Generic => self.acc_orig.push(s),
-                    Corpus::Flood => self.acc_ft.push(s),
-                }
-                self.executed += 1;
-                // Per-request virtual latency for the tail-percentile
-                // telemetry: the full capture->deliver cycle plus the final
-                // (cache-adjusted) cloud tail.
-                server.observe_latency(pkt.kind, cycle + tail);
             }
-            self.server_secs += tail;
+            if server_side {
+                self.server_secs += tail;
+            }
         }
-        let t_deliver = t + cycle + tail;
+        let t_deliver = t + cycle + waited + tail;
         self.packets.push(PacketRecord {
             t_send: t,
             t_deliver,
@@ -575,7 +762,7 @@ impl<'a> UavAgent<'a> {
             edge_energy_j: cost.energy_j,
             tx_energy_j: tx_energy,
         });
-        self.t += cycle;
+        self.t += cycle + waited;
         Ok(true)
     }
 
@@ -622,40 +809,69 @@ impl<'a> UavAgent<'a> {
         let cycle = cost.latency_s.max(tx.tx_secs);
         let tx_energy = self.device.tx_energy(tx.tx_secs);
         self.total_energy += cost.energy_j + tx_energy;
+        let mut waited = 0.0;
         if tx.delivered {
             self.delivered += 1;
             let mut tail = CONTEXT_TAIL_SECS;
             let sample = self.cfg.exec_every <= 1
                 || self.probe_noise.below(self.cfg.exec_every) == 0;
+            let mut server_side = true;
             if sample {
-                let served =
-                    server.serve(&pkt, &intent.token_ids, item.corpus.weight_set())?;
-                if served.cache_hit {
-                    self.cache_hits += 1;
-                    tail = CACHE_HIT_TAIL_SECS;
-                }
-                // Same cluster hop charging as the Insight stream.
-                if served.hops > 0 {
-                    self.spill_hops += served.hops as u64;
-                    if served.cache_hit {
-                        self.remote_hits += 1;
+                self.captures += 1;
+                match self.serve_resilient(
+                    server,
+                    &pkt,
+                    &intent.token_ids,
+                    item.corpus.weight_set(),
+                )? {
+                    Resolved::Served { served, waited: w } => {
+                        waited = w;
+                        if served.cache_hit {
+                            self.cache_hits += 1;
+                            tail = CACHE_HIT_TAIL_SECS;
+                        }
+                        // Same cluster hop charging as the Insight stream.
+                        if served.hops > 0 {
+                            self.spill_hops += served.hops as u64;
+                            if served.cache_hit {
+                                self.remote_hits += 1;
+                            }
+                            tail += served.hop_secs;
+                        }
+                        self.cells_mask |= 1u64 << served.cell.min(63);
+                        for (cls, &logit) in served.resp.presence.iter().enumerate() {
+                            let gt = item.scene.masks[cls].iter().any(|&m| m > 0.5);
+                            if (logit > 0.0) == gt {
+                                self.ctx_correct += 1;
+                            }
+                            self.ctx_total += 1;
+                        }
+                        self.executed += 1;
+                        server.observe_latency(pkt.kind, cycle + waited + tail);
                     }
-                    tail += served.hop_secs;
-                }
-                self.cells_mask |= 1u64 << served.cell.min(63);
-                for (cls, &logit) in served.resp.presence.iter().enumerate() {
-                    let gt = item.scene.masks[cls].iter().any(|&m| m > 0.5);
-                    if (logit > 0.0) == gt {
-                        self.ctx_correct += 1;
+                    Resolved::Shed { waited: w } => {
+                        waited = w;
+                        tail = 0.0;
+                        server_side = false;
+                        self.shed_lost += 1;
                     }
-                    self.ctx_total += 1;
+                    // Context requests never degrade (they already run the
+                    // lightest query there is) — `serve_resilient` only
+                    // degrades Insight packets — so an unreachable cloud
+                    // abandons the query.
+                    Resolved::Degraded { waited: w } | Resolved::Abandoned { waited: w } => {
+                        waited = w;
+                        tail = 0.0;
+                        server_side = false;
+                        self.abandoned += 1;
+                    }
                 }
-                self.executed += 1;
-                server.observe_latency(pkt.kind, cycle + tail);
             }
-            self.server_secs += tail;
+            if server_side {
+                self.server_secs += tail;
+            }
         }
-        self.t += cycle;
+        self.t += cycle + waited;
         Ok(true)
     }
 
@@ -698,6 +914,13 @@ impl<'a> UavAgent<'a> {
             spill_hops: self.spill_hops,
             remote_hits: self.remote_hits,
             cells_mask: self.cells_mask,
+            captures: self.captures,
+            retries: self.retries,
+            shed_lost: self.shed_lost,
+            degraded: self.degraded,
+            abandoned: self.abandoned,
+            degraded_secs: self.degraded_secs,
+            retry_wait_secs: self.retry_wait_secs,
         }
     }
 }

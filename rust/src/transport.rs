@@ -22,6 +22,34 @@ pub const MAX_FRAME: usize = 64 << 20;
 /// always carry at least two u32 section counts (8 bytes).
 pub const BUSY_FRAME: &[u8] = b"busy";
 
+/// A frame that ends mid-section: the typed signature of a session dying
+/// mid-frame (or a corrupt length prefix declaring more bytes than are
+/// present).  Both wire decoders ([`decode_request`] here and
+/// [`crate::cloud::decode_reply`]/[`crate::cloud::decode_response`])
+/// surface this instead of a generic error, so retry/failover layers can
+/// downcast and tell a cut stream from a real protocol violation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TruncatedStream {
+    /// Which frame section was cut short.
+    pub section: &'static str,
+    /// Bytes the section header declared.
+    pub wanted: usize,
+    /// Bytes actually remaining in the frame.
+    pub got: usize,
+}
+
+impl std::fmt::Display for TruncatedStream {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "truncated stream: {} section of {} bytes exceeds the {} bytes remaining in the frame",
+            self.section, self.wanted, self.got
+        )
+    }
+}
+
+impl std::error::Error for TruncatedStream {}
+
 /// A bidirectional message transport.
 pub trait Transport {
     fn send(&mut self, frame: &[u8]) -> Result<()>;
@@ -123,23 +151,22 @@ pub fn decode_request(frame: &[u8]) -> Result<(Vec<u8>, String, String)> {
     // declared payload) is rejected here instead of driving downstream
     // allocation or offset arithmetic.  The same guard covers short reply
     // frames (e.g. the 4-byte `busy` frame) mistakenly fed to this decoder.
-    let mut take = |n: usize| -> Result<&[u8]> {
+    // The shortfall surfaces as the typed [`TruncatedStream`], naming the
+    // section the stream died in.
+    let mut take = |n: usize, section: &'static str| -> Result<&[u8]> {
         if n > frame.len() - off {
-            bail!(
-                "request section of {n} bytes exceeds the {} bytes remaining in the frame",
-                frame.len() - off
-            );
+            return Err(TruncatedStream { section, wanted: n, got: frame.len() - off }.into());
         }
         let s = &frame[off..off + n];
         off += n;
         Ok(s)
     };
-    let plen = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
-    let pkt = take(plen)?.to_vec();
-    let slen = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
-    let prompt = String::from_utf8(take(slen)?.to_vec()).context("prompt utf8")?;
-    let klen = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
-    let set = String::from_utf8(take(klen)?.to_vec()).context("set utf8")?;
+    let plen = u32::from_le_bytes(take(4, "packet-length")?.try_into().unwrap()) as usize;
+    let pkt = take(plen, "packet")?.to_vec();
+    let slen = u32::from_le_bytes(take(4, "prompt-length")?.try_into().unwrap()) as usize;
+    let prompt = String::from_utf8(take(slen, "prompt")?.to_vec()).context("prompt utf8")?;
+    let klen = u32::from_le_bytes(take(4, "set-length")?.try_into().unwrap()) as usize;
+    let set = String::from_utf8(take(klen, "set")?.to_vec()).context("set utf8")?;
     Ok((pkt, prompt, set))
 }
 
@@ -259,6 +286,24 @@ mod tests {
     fn truncated_request_rejected() {
         let frame = encode_request(b"abc", "p", "s");
         assert!(decode_request(&frame[..frame.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn every_request_cut_point_surfaces_typed_truncation() {
+        // A session dying mid-frame can cut the stream at ANY byte.  Every
+        // strict prefix must surface the dedicated TruncatedStream error —
+        // never a generic one, never a bogus success.
+        let frame = encode_request(b"\x01\x02\x03\x04\x05", "find people", "ft");
+        for cut in 0..frame.len() {
+            let err = decode_request(&frame[..cut])
+                .expect_err(&format!("prefix of {cut} bytes decoded"));
+            let t = err
+                .downcast_ref::<TruncatedStream>()
+                .unwrap_or_else(|| panic!("cut at {cut}: untyped error {err:#}"));
+            assert!(t.wanted > t.got, "cut at {cut}: {t:?}");
+        }
+        // The full frame still decodes.
+        assert!(decode_request(&frame).is_ok());
     }
 
     #[test]

@@ -1,0 +1,295 @@
+//! Chaos-layer integration tests (DESIGN.md "Chaos & recovery") — no
+//! artifacts required, never skipped.
+//!
+//! * **Ring churn** — removing a cell and re-adding it restores the ring
+//!   byte-for-byte (same points, same routing for every key); removal
+//!   remaps only the victim's keys; the survivor load stays bounded.
+//! * **Worker death** — dropping a pool with queued tickets resolves every
+//!   `Ticket::wait` to the typed [`ServeError::Closed`], never a hang or
+//!   an `Exec` mislabel.
+//! * **End-to-end chaos** — a fault-armed fleet run conserves requests
+//!   (`executed + shed + degraded + abandoned == captures`), replays
+//!   byte-identically for a fixed seed, degrades only Insight requests,
+//!   and resilience knobs with no armed faults are a byte-level no-op.
+
+mod common;
+
+use avery::cloud::{CloudPool, HashRing, ServeError, ServingConfig};
+use avery::coordinator::{classify_intent, Lut, TierId};
+use avery::dataset::{Corpus, Dataset};
+use avery::edge::EdgePipeline;
+use avery::energy::DeviceModel;
+use avery::faults::{FaultKind, FaultSpec};
+use avery::mission::{run_fleet, RunOptions};
+use avery::packet::Packet;
+use avery::report::{to_json, Report};
+use avery::runtime::Engine;
+use avery::streams::fleet::FleetRun;
+
+use common::parse_json;
+
+/// Seeded key stream for ring property tests (xorshift64* — the same
+/// family the library uses, reimplemented locally so the test does not
+/// depend on crate internals).
+fn keys(n: usize, seed: u64) -> Vec<u64> {
+    let mut s = seed | 1;
+    (0..n)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            s.wrapping_mul(0x2545_F491_4F6C_DD1D)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Ring churn properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn remove_then_readd_restores_routing_byte_for_byte() {
+    let ks = keys(4096, 0xC0FFEE);
+    let cells = 5usize;
+    let pristine = HashRing::new(cells);
+    let before: Vec<usize> = ks.iter().map(|&k| pristine.cell_for(k)).collect();
+
+    let mut ring = HashRing::new(cells);
+    for victim in 0..cells {
+        assert!(ring.has_cell(victim));
+        ring.remove_cell(victim);
+        assert!(!ring.has_cell(victim));
+        assert_eq!(ring.live_cells(), cells - 1);
+        // Removal remaps only the victim's keys.
+        for (&k, &home) in ks.iter().zip(&before) {
+            let after = ring.cell_for(k);
+            if home == victim {
+                assert_ne!(after, victim, "key {k:#x} still routes to removed cell");
+            } else {
+                assert_eq!(after, home, "key {k:#x} moved off surviving cell {home}");
+            }
+        }
+        // Re-adding rebuilds the exact same vnode points: every key —
+        // including the remapped ones — routes exactly as before.
+        ring.add_cell(victim);
+        assert!(ring.has_cell(victim));
+        assert_eq!(ring.live_cells(), cells);
+        for (&k, &home) in ks.iter().zip(&before) {
+            assert_eq!(ring.cell_for(k), home, "re-add did not restore key {k:#x}");
+        }
+    }
+    // Re-adding a present cell is a no-op.
+    ring.add_cell(0);
+    for (&k, &home) in ks.iter().zip(&before) {
+        assert_eq!(ring.cell_for(k), home);
+    }
+}
+
+#[test]
+fn survivor_load_stays_bounded_after_removal() {
+    let ks = keys(4096, 0xBA1A);
+    for cells in 3usize..=6 {
+        let mut ring = HashRing::new(cells);
+        ring.remove_cell(cells - 1);
+        let mut load = vec![0usize; cells];
+        for &k in &ks {
+            load[ring.cell_for(k)] += 1;
+        }
+        assert_eq!(load[cells - 1], 0, "removed cell still receives keys");
+        let mean = ks.len() as f64 / (cells - 1) as f64;
+        for (cell, &n) in load.iter().take(cells - 1).enumerate() {
+            assert!(n >= 1, "cell {cell}/{cells} got no keys after removal: {load:?}");
+            assert!(
+                (n as f64) <= 3.0 * mean,
+                "cell {cell}/{cells} holds {n} of {} keys (mean {mean:.1}): {load:?}",
+                ks.len()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker death: queued tickets resolve to the typed Closed error
+// ---------------------------------------------------------------------------
+
+/// Distinct Insight packets (different scene content → different cache /
+/// route keys) to queue against a pool.
+fn sample_packets(n: usize) -> (Vec<Packet>, Vec<i32>) {
+    let engine = Engine::synthetic();
+    let ds = Dataset::synthetic(Corpus::Flood, n, 16, 0xDEAD);
+    let mut edge = EdgePipeline::new(engine, DeviceModel::jetson_mode_30w(8), Lut::paper());
+    let pkts = ds
+        .scenes
+        .iter()
+        .enumerate()
+        .map(|(i, s)| edge.capture_insight(s, 1, TierId::Balanced, i as f64).unwrap().0)
+        .collect();
+    (pkts, classify_intent("highlight the stranded people").token_ids)
+}
+
+#[test]
+fn dropping_a_pool_with_queued_tickets_closes_every_wait() {
+    // A zero-worker pool never drains, so every submission stays queued —
+    // the deterministic worst case of a worker dying mid-flight.
+    let (pkts, ids) = sample_packets(4);
+    let pool = CloudPool::with_config(Vec::new(), ServingConfig::default());
+    let tickets: Vec<_> =
+        pkts.iter().map(|p| pool.submit(p, &ids, "ft").expect("admission is unbounded")).collect();
+    drop(pool);
+    for (i, t) in tickets.into_iter().enumerate() {
+        match t.wait() {
+            Err(ServeError::Closed) => {}
+            Err(e) => panic!("ticket {i}: expected ServeError::Closed after pool death, got {e}"),
+            Ok(_) => panic!("ticket {i}: zero-worker pool served a request"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end chaos: conservation, determinism, degradation, parity
+// ---------------------------------------------------------------------------
+
+fn fleet_json(tag: &str, opts: &RunOptions) -> (FleetRun, Report, String) {
+    let env = common::sim_env("chaos", tag);
+    let (run, report) = run_fleet(&env, opts).unwrap();
+    let json = to_json(&report);
+    parse_json(&json).unwrap_or_else(|e| panic!("fleet report JSON does not parse: {e}"));
+    (run, report, json)
+}
+
+fn base_opts() -> RunOptions {
+    RunOptions {
+        duration_secs: 120.0,
+        uavs: Some(6),
+        workers: Some(2),
+        seed: 7,
+        ..RunOptions::default()
+    }
+}
+
+fn spec(
+    kind: FaultKind,
+    cell: usize,
+    at: f64,
+    duration: f64,
+    rate: f64,
+    stall_secs: f64,
+) -> FaultSpec {
+    FaultSpec { kind, cell, at, duration, rate, stall_secs }
+}
+
+fn conserved(run: &FleetRun) -> bool {
+    run.executed_total + run.shed_lost_total + run.degraded_total + run.abandoned_total
+        == run.captures_total
+}
+
+#[test]
+fn resilience_knobs_without_faults_are_a_byte_level_noop() {
+    let (flagless_run, _, flagless) = fleet_json("flagless", &base_opts());
+    // Explicit off-values for every chaos knob: still a pass-through.
+    let explicit = RunOptions {
+        retry_budget: Some(0),
+        retry_backoff: Some(0.05),
+        degrade: Some(false),
+        ..base_opts()
+    };
+    let (_, report, off) = fleet_json("knobs-off", &explicit);
+    assert_eq!(flagless, off, "resilience knobs at their defaults must be a byte-level no-op");
+    // No chaos telemetry on an unarmed run, and conservation is trivial:
+    // every capture executed.
+    assert!(!off.contains("fleet_chaos"));
+    assert!(report.scalar_value("availability").is_none());
+    assert!(conserved(&flagless_run));
+    assert_eq!(flagless_run.captures_total, flagless_run.executed_total);
+    assert!(flagless_run.captures_total > 0);
+}
+
+#[test]
+fn armed_chaos_conserves_requests_and_replays_byte_identically() {
+    let armed = RunOptions {
+        cells: Some(2),
+        fault_specs: vec![
+            spec(FaultKind::CellCrash, 0, 0.25, 0.25, 0.0, 0.0),
+            spec(FaultKind::ExecError, 1, 0.55, 0.30, 0.4, 0.0),
+            spec(FaultKind::SessionDrop, 0, 0.85, 0.0, 0.0, 0.0),
+        ],
+        ..base_opts()
+    };
+    let (run, report, a) = fleet_json("armed-a", &armed);
+    let (_, _, b) = fleet_json("armed-b", &armed);
+    assert_eq!(a, b, "same-seed chaos replays must be byte-identical");
+
+    assert!(conserved(&run), "conservation violated: {} + {} + {} + {} != {}",
+        run.executed_total, run.shed_lost_total, run.degraded_total, run.abandoned_total,
+        run.captures_total);
+    assert!(run.captures_total > 0);
+    // Faults really fired and the resilience layer really engaged.
+    let injected = common::scalar(&report, "faults_injected");
+    assert!(injected > 0.0, "schedule armed but nothing injected");
+    assert!(run.retries_total + run.degraded_total + run.abandoned_total > 0);
+    let availability = common::scalar(&report, "availability");
+    assert!((0.0..=1.0).contains(&availability));
+    assert_eq!(
+        availability,
+        (run.executed_total + run.degraded_total) as f64 / run.captures_total as f64
+    );
+    // Chaos telemetry rides along: per-kind series + health timeline.
+    assert!(report.series.iter().any(|s| s.name == "fleet_chaos_faults"));
+    assert!(a.contains("fleet_chaos"));
+}
+
+#[test]
+fn total_outage_degrades_insight_and_abandons_context() {
+    // Both cells crashed for the whole mission: no cloud serve can land,
+    // so every Insight capture degrades to edge-local Context-tier
+    // execution and every Context capture is abandoned.
+    let dark = RunOptions {
+        cells: Some(2),
+        fault_specs: vec![
+            spec(FaultKind::CellCrash, 0, 0.0, 1.0, 0.0, 0.0),
+            spec(FaultKind::CellCrash, 1, 0.0, 1.0, 0.0, 0.0),
+        ],
+        retry_budget: Some(1),
+        ..base_opts()
+    };
+    let (run, report, _) = fleet_json("dark", &dark);
+    assert!(conserved(&run));
+    assert_eq!(run.executed_total, 0, "a fully-crashed cluster served a request");
+    assert!(run.degraded_total > 0, "no Insight request degraded to the edge");
+    assert!(run.degraded_secs_total > 0.0);
+    assert!(run.retries_total > 0, "retry budget 1 never consumed");
+    assert_eq!(common::scalar(&report, "availability"),
+        run.degraded_total as f64 / run.captures_total as f64);
+    // The health machine saw the outage: both cells quarantined and —
+    // with crash windows spanning the whole mission — never recovered.
+    assert_eq!(common::scalar(&report, "cells_down_now"), 2.0);
+    assert_eq!(common::scalar(&report, "recoveries"), 0.0);
+}
+
+#[test]
+fn fault_plan_files_arm_the_fleet_like_programmatic_specs() {
+    // The same schedule, once as a standalone [[fault]] manifest and once
+    // as programmatic specs, produces byte-identical reports.
+    let dir = std::path::Path::new("target/test-out/chaos-plan");
+    std::fs::create_dir_all(dir).unwrap();
+    let path = dir.join("plan.toml");
+    std::fs::write(
+        &path,
+        "[[fault]]\nkind = \"exec-error\"\ncell = 0\nat = 0.3\nduration = 0.4\nrate = 0.5\n",
+    )
+    .unwrap();
+    let from_file = RunOptions {
+        cells: Some(2),
+        fault_plan: Some(path.to_string_lossy().into_owned()),
+        ..base_opts()
+    };
+    let programmatic = RunOptions {
+        cells: Some(2),
+        fault_specs: vec![spec(FaultKind::ExecError, 0, 0.3, 0.4, 0.5, 0.0)],
+        ..base_opts()
+    };
+    let (run_f, _, a) = fleet_json("plan-file", &from_file);
+    let (_, _, b) = fleet_json("plan-specs", &programmatic);
+    assert_eq!(a, b, "manifest and programmatic schedules must agree byte-for-byte");
+    assert!(conserved(&run_f));
+}
