@@ -1,0 +1,226 @@
+#!/usr/bin/env python3
+"""Shared bench gate: validate BENCH_*.json files against ci/bench_floor.json.
+
+Usage:
+    python3 ci/check_floors.py [--floors ci/bench_floor.json] [--only SECTION] BENCH_x.json [...]
+
+One script replaces the inline per-job python previously copy-pasted across
+the five bench-smoke CI jobs.  Each BENCH file names its own bench
+(`bench` key), which selects the matching check function below.  Three gate
+kinds, matching the conventions documented in ci/bench_floor.json:
+
+* floors        — wall-clock rates; fail only when the measured value drops
+                  more than 30% below the checked-in floor, so shared-runner
+                  noise cannot trip them (measured >= floor * 0.7).
+* ceilings      — inverted floors for tail latencies; fail when measured
+                  exceeds ceiling * 1.3.
+* virtual gates — byte-stable seeded quantities (availability, MTTR,
+                  parity, byte-identity); no tolerance, because two runs of
+                  the same seed must agree exactly.
+
+`--only SECTION` restricts a bench's checks to one named section (the
+scale-smoke job uses `--only scale` against BENCH_simkernel.json so it does
+not re-gate the dispatch/throughput sections bench-smoke already covers).
+"""
+
+import argparse
+import json
+import sys
+
+
+class GateError(AssertionError):
+    pass
+
+
+def floor_gate(name, measured, floor, tolerance=0.7):
+    limit = floor * tolerance
+    if not (measured >= limit):
+        raise GateError(f"{name} regressed: {measured:.4g} < {limit:.4g} "
+                        f"(floor {floor:.4g} * {tolerance})")
+    return limit
+
+
+def ceiling_gate(name, measured, ceiling, tolerance=1.3):
+    limit = ceiling * tolerance
+    if measured is None or not (0 < measured <= limit):
+        raise GateError(f"{name} breached ceiling: {measured} > {limit:.4g} "
+                        f"(ceiling {ceiling:.4g} * {tolerance})")
+    return limit
+
+
+def virtual_gate(name, ok, detail):
+    if not ok:
+        raise GateError(f"{name}: {detail}")
+
+
+def check_simkernel(bench, floors, only=None):
+    if only in (None, "throughput"):
+        pps = {t["threads"]: t["packets_per_sec"] for t in bench["throughput"]}
+        limit = floor_gate("single-thread packets/sec", pps[1],
+                           floors["packets_per_sec_floor"])
+        virtual_gate("all_missions byte-identity",
+                     bench["all_missions"]["byte_identical"] is True,
+                     "--jobs N reports drifted")
+        virtual_gate("dispatch sanity",
+                     bench["dispatch"]["inline_ns_per_packet"] > 0,
+                     bench["dispatch"])
+        print(f"ok: {pps[1]:.0f} packets/s (floor {limit:.0f}), "
+              f"--jobs 4 speedup {bench['all_missions']['speedup_jobs_4']:.2f}x")
+    if only in (None, "scale"):
+        scale = bench["scale"]
+        sf = floors["scale"]
+        virtual_gate("shard byte-identity",
+                     scale["byte_identical"] is True,
+                     "--shards T output diverged from --shards 1")
+        # Thread-scaling efficiency is wall-clock, so it carries the same
+        # 30% noise tolerance as the throughput floors.
+        limit = floor_gate("thread-scaling efficiency",
+                           scale["thread_scaling_efficiency"],
+                           sf["thread_scaling_efficiency_floor"])
+        ns = [row["uavs"] for row in bench["fleet"]]
+        virtual_gate("megafleet sweep coverage",
+                     {256, 1024, 4096, 16384} <= set(ns),
+                     f"sweep covered only N={ns}")
+        print(f"ok: shards={scale['shards']} byte-identical across "
+              f"N={ns}, efficiency "
+              f"{scale['thread_scaling_efficiency']:.2f} (floor {limit:.2f})")
+
+
+def check_serving(bench, floors, only=None):
+    f = floors["serving"]
+    pps = {b["batch"]: b["packets_per_sec"] for b in bench["batch_sweep"]}
+    p99 = {b["batch"]: b["p99_ms"] for b in bench["batch_sweep"]}
+    limit = floor_gate("batch-8 packets/sec", pps[8],
+                       f["batched_packets_per_sec_floor"])
+    ceil = ceiling_gate("batch-8 p99", p99[8], f["batch8_p99_ms_ceiling"])
+    hit = {c["uavs"]: c["hit_rate"] for c in bench["cache"]}
+    hit_limit = floor_gate("N=16 cache hit rate", hit[16],
+                           f["cache_hit_rate_floor"])
+    virtual_gate("overload shed", bench["overload"]["shed"] > 0,
+                 "bounded queue never shed under flood")
+    dl = bench["deadline"]
+    virtual_gate("deadline completions",
+                 dl["fifo_completed"] > 0 and dl["edf_completed"] > 0, dl)
+    virtual_gate("deadline p99s present",
+                 dl["edf_ctx_p99_ms"] is not None
+                 and dl["fifo_ctx_p99_ms"] is not None, dl)
+    virtual_gate("EDF beats FIFO on ctx p99",
+                 dl["edf_ctx_p99_ms"] < dl["fifo_ctx_p99_ms"],
+                 f"EDF ctx p99 {dl['edf_ctx_p99_ms']} ms not better than "
+                 f"FIFO {dl['fifo_ctx_p99_ms']} ms")
+    print(f"ok: batch-8 {pps[8]:.0f} pkts/s (floor {limit:.0f}), "
+          f"p99 {p99[8]:.2f} ms (ceiling {ceil:.0f}), "
+          f"N=16 hit rate {hit[16]:.3f} (floor {hit_limit:.3f}), "
+          f"shed rate {bench['overload']['shed_rate']:.3f}, "
+          f"ctx p99 FIFO {dl['fifo_ctx_p99_ms']:.2f} -> "
+          f"EDF {dl['edf_ctx_p99_ms']:.2f} ms")
+
+
+def check_cluster(bench, floors, only=None):
+    f = floors["cluster"]
+    over = bench["overload"]
+    virtual_gate("overload sweep shape",
+                 [o["cells"] for o in over] == [1, 2, 4], over)
+    pps = bench["cluster_packets_per_sec"]
+    limit = floor_gate("K=4 cluster packets/sec", pps,
+                       f["cluster_packets_per_sec_floor"])
+    rates = [o["shed_rate"] for o in over]
+    virtual_gate("shed falls with K", rates[-1] < rates[0],
+                 f"shed rate did not fall with K: {rates}")
+    for a, b in zip(rates, rates[1:]):
+        virtual_gate("shed monotone-sane", b <= a + 0.05,
+                     f"shed rate rose with K: {rates}")
+    virtual_gate("overload spills", sum(over[-1]["spill_hops"][1:]) > 0,
+                 "overload never spilled at K=4")
+    rep = bench["replication"]
+    virtual_gate("replication improves hit rate",
+                 rep["hit_rate_with"] > rep["hit_rate_without"], rep)
+    virtual_gate("remote hits", rep["remote_hits"] > 0, rep)
+    print(f"ok: {pps:.0f} pkts/s at K=4 (floor {limit:.0f}), "
+          f"shed rate {rates[0]:.3f} -> {rates[-1]:.3f}, "
+          f"hit rate {rep['hit_rate_without']:.3f} -> "
+          f"{rep['hit_rate_with']:.3f} ({rep['remote_hits']} remote hits)")
+
+
+def check_chaos(bench, floors, only=None):
+    # All virtual (seeded, event-ordered) quantities: no noise tolerance.
+    f = floors["chaos"]
+    avail = bench["availability"]
+    virtual_gate("cell-kill availability", avail >= f["availability_floor"],
+                 f"availability {avail:.3f} < floor {f['availability_floor']}")
+    mttr = bench["mttr_p99_s"]
+    virtual_gate("MTTR p99",
+                 mttr is not None and 0 < mttr <= f["mttr_p99_s_ceiling"],
+                 f"MTTR p99 {mttr} s breached ceiling {f['mttr_p99_s_ceiling']} s")
+    virtual_gate("recoveries", bench["recoveries"] >= 1,
+                 "killed cell never recovered")
+    virtual_gate("baseline availability",
+                 bench["baseline_availability"] == 1.0,
+                 bench["baseline_availability"])
+    sweep = bench["availability_vs_rate"]
+    virtual_gate("rate sweep in range",
+                 all(0 < s["availability"] <= 1 for s in sweep), sweep)
+    virtual_gate("rate sweep retries", sweep[-1]["retries"] > 0,
+                 "rate sweep never engaged the retry layer")
+    print(f"ok: availability {avail:.3f} (floor {f['availability_floor']}), "
+          f"MTTR p99 {mttr:.1f} s (ceiling {f['mttr_p99_s_ceiling']:.0f}), "
+          f"{bench['recoveries']:.0f} recoveries, rate-sweep min availability "
+          f"{bench['min_availability_rate_sweep']:.3f}")
+
+
+def check_scenario_matrix(bench, floors, only=None):
+    f = floors["scenario_matrix"]
+    cps = bench["compile"]["compiles_per_sec"]
+    limit = floor_gate("compile throughput", cps, f["compiles_per_sec_floor"])
+    virtual_gate("corpus size", bench["compile"]["corpus_size"] >= 500,
+                 bench["compile"])
+    virtual_gate("manifest/builtin parity",
+                 bench["parity"]["identical"] is True,
+                 "manifest/builtin parity diverged")
+    virtual_gate("matrix failures", bench["matrix"]["failed"] == 0,
+                 bench["matrix"])
+    print(f"ok: {cps:.0f} compiles/s (floor {limit:.0f}), "
+          f"{bench['matrix']['passed']}/{bench['matrix']['count']} matrix pass, "
+          f"parity identical")
+
+
+CHECKS = {
+    "simkernel": check_simkernel,
+    "serving": check_serving,
+    "cluster": check_cluster,
+    "chaos": check_chaos,
+    "scenario_matrix": check_scenario_matrix,
+}
+
+
+def main(argv):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--floors", default="ci/bench_floor.json")
+    ap.add_argument("--only", default=None,
+                    help="restrict to one section of a bench's checks")
+    ap.add_argument("bench_files", nargs="+")
+    args = ap.parse_args(argv)
+
+    with open(args.floors) as fh:
+        floors = json.load(fh)
+
+    failed = 0
+    for path in args.bench_files:
+        with open(path) as fh:
+            bench = json.load(fh)
+        if bench.get("schema") != 1:
+            raise GateError(f"{path}: unknown schema {bench.get('schema')}")
+        name = bench.get("bench")
+        check = CHECKS.get(name)
+        if check is None:
+            raise GateError(f"{path}: no gate registered for bench `{name}`")
+        try:
+            check(bench, floors, only=args.only)
+        except GateError as e:
+            print(f"FAIL {path}: {e}", file=sys.stderr)
+            failed += 1
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

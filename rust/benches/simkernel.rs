@@ -12,7 +12,10 @@
 //! * **throughput** — aggregate packets/sec over T threads hammering
 //!   clones of ONE inline engine: the scaling the old single-consumer
 //!   engine thread could not deliver.
-//! * **fleet** — `avery fleet` wall time at N ∈ {1, 4, 16, 64} UAVs.
+//! * **fleet** — the megafleet shard sweep: `avery fleet` wall time at
+//!   N ∈ {256, 1024, 4096, 16384} UAVs, `--shards 1` vs `--shards T`,
+//!   with per-N byte-identity checks and thread-scaling efficiency
+//!   (summarized in the `scale` object for the scale-smoke gate).
 //! * **all_missions** — the 8 artifact-free registry missions through the
 //!   parallel runner at `--jobs 1` vs `--jobs 4` vs `--jobs 8`, with a
 //!   byte-identity check over every report's JSON.
@@ -132,7 +135,7 @@ fn main() -> Result<()> {
     let args = parse_args();
     let mode = if args.quick { "quick" } else { "full" };
     let dispatch_iters = if args.quick { 20_000 } else { 200_000 };
-    let fleet_duration = if args.quick { 120.0 } else { 600.0 };
+    let fleet_duration = if args.quick { 60.0 } else { 300.0 };
     let all_duration = if args.quick { 120.0 } else { 600.0 };
     let all_exec_every = if args.quick { 4 } else { 1 };
 
@@ -159,28 +162,52 @@ fn main() -> Result<()> {
         tputs.push((threads, pps));
     }
 
-    // ---- fleet mission wall time at N ------------------------------------
-    header("fleet mission wall time (synthetic env, contended uplink)");
-    let mut fleet_rows: Vec<(usize, f64, u64)> = Vec::new();
-    for &n in &[1usize, 4, 16, 64] {
-        let env = Env::synthetic(Path::new("out/bench-simkernel"))?;
-        let opts = RunOptions {
-            duration_secs: fleet_duration,
-            uavs: Some(n),
-            workers: Some(n.min(4)),
-            seed: 7,
-            ..RunOptions::default()
-        };
-        let t0 = Instant::now();
-        let (run, _report) = run_fleet(&env, &opts)?;
-        let wall = t0.elapsed().as_secs_f64();
+    // ---- megafleet shard sweep -------------------------------------------
+    // The scaling axis this bench exists to watch: the sharded event core
+    // (`--shards T`, DESIGN.md "Megafleet core") at N up to 16k agents.
+    // Each N runs twice — `--shards 1` and `--shards T` — and the two
+    // reports must be byte-identical; the efficiency column is
+    // wall(1) / (wall(T) * T), the fraction of perfect thread scaling.
+    // HLO execution is heavily subsampled (`exec_every`) so the sweep
+    // times the scheduler + contention model, not the synthetic kernel.
+    header("megafleet: sharded event core wall time (synthetic env)");
+    let shard_t = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .clamp(1, 8);
+    let mut fleet_rows: Vec<(usize, f64, f64, u64)> = Vec::new();
+    let mut scale_identical = true;
+    let env = Env::synthetic(Path::new("out/bench-simkernel"))?;
+    for &n in &[256usize, 1024, 4096, 16384] {
+        let mut walls = [0.0f64; 2];
+        let mut jsons: Vec<String> = Vec::new();
+        let mut delivered = 0u64;
+        for (slot, shards) in [(0usize, 1usize), (1, shard_t)] {
+            let opts = RunOptions {
+                duration_secs: fleet_duration,
+                uavs: Some(n),
+                workers: Some(4),
+                exec_every: 200, // scheduler sweep — skip most HLO
+                seed: 7,
+                shards: Some(shards),
+                ..RunOptions::default()
+            };
+            let t0 = Instant::now();
+            let (run, report) = run_fleet(&env, &opts)?;
+            walls[slot] = t0.elapsed().as_secs_f64();
+            delivered = run.delivered_total;
+            jsons.push(to_json(&report));
+        }
+        let identical = jsons[0] == jsons[1];
+        scale_identical &= identical;
+        let eff = walls[0] / (walls[1] * shard_t as f64);
         println!(
-            "N={n:<3} wall {:>10}  ({} packets delivered, {:.0} sim-packets/wall-s)",
-            fmt_secs(wall),
-            run.delivered_total,
-            run.delivered_total as f64 / wall
+            "N={n:<5} shards 1: {:>9}  shards {shard_t}: {:>9}  efficiency {eff:.2}  \
+             ({delivered} packets, byte-identical: {identical})",
+            fmt_secs(walls[0]),
+            fmt_secs(walls[1]),
         );
-        fleet_rows.push((n, wall, run.delivered_total));
+        fleet_rows.push((n, walls[0], walls[1], delivered));
     }
 
     // ---- avery all: --jobs 1 vs --jobs 4 vs --jobs 8 ---------------------
@@ -225,15 +252,26 @@ fn main() -> Result<()> {
     // ---- machine-readable output -----------------------------------------
     let fleet_json: Vec<String> = fleet_rows
         .iter()
-        .map(|(n, wall, pkts)| {
+        .map(|(n, wall1, wall_t, pkts)| {
             format!(
-                "{{\"uavs\":{n},\"wall_secs\":{},\"sim_packets\":{pkts},\
-                 \"packets_per_wall_sec\":{}}}",
-                jf(*wall),
-                jf(*pkts as f64 / wall)
+                "{{\"uavs\":{n},\"wall_secs_shards_1\":{},\"wall_secs_sharded\":{},\
+                 \"sim_packets\":{pkts},\"packets_per_wall_sec\":{},\"efficiency\":{}}}",
+                jf(*wall1),
+                jf(*wall_t),
+                jf(*pkts as f64 / wall_t),
+                jf(wall1 / (wall_t * shard_t as f64))
             )
         })
         .collect();
+    // Scale summary for the scale-smoke gate: efficiency at the largest N
+    // (where per-epoch work dwarfs the barrier cost) plus the sweep-wide
+    // byte-identity verdict.
+    let (_, big_w1, big_wt, _) = *fleet_rows.last().expect("sweep nonempty");
+    let scale_json = format!(
+        "{{\"shards\":{shard_t},\"byte_identical\":{scale_identical},\
+         \"thread_scaling_efficiency\":{}}}",
+        jf(big_w1 / (big_wt * shard_t as f64))
+    );
     let tput_json: Vec<String> = tputs
         .iter()
         .map(|(t, pps)| format!("{{\"threads\":{t},\"packets_per_sec\":{}}}", jf(*pps)))
@@ -244,6 +282,7 @@ fn main() -> Result<()> {
          \"threaded_over_inline\":{}}},\
          \"throughput\":[{}],\
          \"fleet\":[{}],\
+         \"scale\":{scale_json},\
          \"all_missions\":{{\"missions\":{},\"jobs_1_wall_secs\":{},\
          \"jobs_4_wall_secs\":{},\"jobs_8_wall_secs\":{},\
          \"speedup_jobs_4\":{},\"speedup_jobs_8\":{},\

@@ -189,6 +189,11 @@ pub struct RunConfig {
     /// seconds, doubling per failed probe (`--probe-backoff SECS`);
     /// `None` = the health-machine default (0.5).
     pub probe_backoff: Option<f64>,
+    /// Megafleet core: number of scheduler shards for the fleet loop
+    /// (`--shards T`); `None` = the legacy single-threaded event loop.
+    /// Any `Some(T)` selects the epoch-quantized sharded core, whose
+    /// output is identical for every T at a given seed.
+    pub shards: Option<usize>,
     /// `avery scenario --list`.
     pub list: bool,
     /// Report rendering (`--format text|json`); CSVs are always written.
@@ -353,6 +358,16 @@ impl RunConfig {
                 bail!("config probe-backoff={p} must be a finite number of seconds > 0");
             }
         }
+        let shards = match kv.get("shards") {
+            None => None,
+            Some(v) => Some(
+                v.parse::<usize>()
+                    .with_context(|| format!("config shards={v} not an integer"))?,
+            ),
+        };
+        if shards == Some(0) {
+            bail!("config shards=0: the sharded core needs at least one shard");
+        }
         Ok(Self {
             artifacts: kv.get("artifacts").map(|s| s.to_string()),
             out_dir: kv.get("out").unwrap_or("out").to_string(),
@@ -417,6 +432,7 @@ impl RunConfig {
             retry_deadline,
             degrade,
             probe_backoff,
+            shards,
             list: kv.get_bool("list", false)?,
             format,
             jobs: kv.get_usize("jobs", 1)?,
@@ -585,6 +601,17 @@ mod tests {
         // A spill bound of 0 is legal — it means "never spill past home".
         let rcz = RunConfig::from_kv(&Kv::parse("spill-max = 0\n").unwrap()).unwrap();
         assert_eq!(rcz.spill_max, Some(0));
+    }
+
+    #[test]
+    fn shards_key_parses_and_rejects() {
+        let rc = RunConfig::from_kv(&Kv::parse("shards = 8\n").unwrap()).unwrap();
+        assert_eq!(rc.shards, Some(8));
+        // Unset keeps the legacy single-threaded event loop.
+        let rc0 = RunConfig::from_kv(&Kv::default()).unwrap();
+        assert!(rc0.shards.is_none());
+        assert!(RunConfig::from_kv(&Kv::parse("shards = many\n").unwrap()).is_err());
+        assert!(RunConfig::from_kv(&Kv::parse("shards = 0\n").unwrap()).is_err());
     }
 
     #[test]

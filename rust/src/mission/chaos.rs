@@ -145,6 +145,7 @@ pub fn run_chaos(env: &Env, opts: &RunOptions) -> Result<Report> {
             retry_deadline: opts.retry_deadline,
             degrade: opts.degrade,
             probe_backoff: opts.probe_backoff,
+            shards: opts.shards,
             fault_specs: schedule.clone(),
             ..RunOptions::default()
         };

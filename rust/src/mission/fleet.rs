@@ -12,6 +12,7 @@ use crate::coordinator::MissionGoal;
 use crate::netsim::{BandwidthTrace, LinkConfig, SharedLink, TraceConfig};
 use crate::report::{Report, ReportTable, Series};
 use crate::streams::fleet::{run_fleet_mission, FleetConfig, FleetRun};
+use crate::streams::shard::run_fleet_mission_sharded;
 use crate::streams::{MissionConfig, UavRole};
 use crate::telemetry::{f, pct};
 
@@ -74,7 +75,6 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
         };
     let goal = opts.goal.or(scenario_goal).unwrap_or(MissionGoal::PrioritizeAccuracy);
     let trace = BandwidthTrace::generate(&trace_cfg);
-    let mut link = SharedLink::new(trace, link_cfg, uavs);
 
     // Serving layer (micro-batching / response cache / admission): the
     // defaults reproduce the pre-layer pool and timing byte-for-byte.  The
@@ -128,18 +128,46 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
         ..FleetConfig::default()
     };
 
-    let cluster =
-        CloudCluster::with_config(vec![env.engine.clone(); workers], cluster_cfg.clone());
+    // `--shards T` routes through the sharded megafleet core (epoch-
+    // quantized link exchange, identical output for every T at a given
+    // seed); unset keeps the legacy single-threaded event loop byte for
+    // byte (DESIGN.md "Megafleet core").
     let wall0 = std::time::Instant::now();
-    let run = run_fleet_mission(
-        &env.engine,
-        &env.datasets(),
-        &env.lut,
-        &env.device,
-        &mut link,
-        &fleet_cfg,
-        &cluster,
-    )?;
+    let (run, cluster_stats, chaos_stats, sharded_injected) = match opts.shards {
+        Some(t) => {
+            let sharded = run_fleet_mission_sharded(
+                &env.engine,
+                &env.datasets(),
+                &env.lut,
+                &env.device,
+                &trace,
+                &link_cfg,
+                &fleet_cfg,
+                &cluster_cfg,
+                workers,
+                t,
+            )?;
+            (sharded.run, sharded.cluster_stats, None, sharded.injected)
+        }
+        None => {
+            let mut link = SharedLink::new(trace, link_cfg, uavs);
+            let cluster = CloudCluster::with_config(
+                vec![env.engine.clone(); workers],
+                cluster_cfg.clone(),
+            );
+            let run = run_fleet_mission(
+                &env.engine,
+                &env.datasets(),
+                &env.lut,
+                &env.device,
+                &mut link,
+                &fleet_cfg,
+                &cluster,
+            )?;
+            let chaos = cluster.chaos_stats();
+            (run, cluster.stats(), chaos, None)
+        }
+    };
     let wall = wall0.elapsed().as_secs_f64();
 
     let title = format!(
@@ -293,7 +321,6 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
 
     // Serving-layer telemetry only exists when a serving feature is on, so
     // default runs stay byte-identical to the pre-serving-layer reports.
-    let cluster_stats = cluster.stats();
     if serving.enabled() {
         super::push_serving_telemetry(
             &mut report,
@@ -315,11 +342,22 @@ pub fn run_fleet(env: &Env, opts: &RunOptions) -> Result<(FleetRun, Report)> {
             &cluster_stats,
         );
     }
-    // Chaos telemetry only exists when a fault schedule was armed.
+    // Chaos telemetry only exists when a fault schedule was armed.  On the
+    // sharded path injector counts come from the per-agent injectors and
+    // there is no cluster-level health machine (`cs` stays None).
     if chaos_armed {
-        let cs = cluster.chaos_stats();
-        let injected = cs.as_ref().map(|s| s.injected).unwrap_or([0; 5]);
-        super::push_chaos_telemetry(&mut report, "fleet_chaos", &run, &injected, cs.as_ref());
+        let injected = chaos_stats
+            .as_ref()
+            .map(|s| s.injected)
+            .or(sharded_injected)
+            .unwrap_or([0; 5]);
+        super::push_chaos_telemetry(
+            &mut report,
+            "fleet_chaos",
+            &run,
+            &injected,
+            chaos_stats.as_ref(),
+        );
     }
 
     report.push_note(format!(

@@ -96,6 +96,7 @@ pub fn run_matrix(env: &Env, opts: &RunOptions) -> Result<Report> {
         replicas: opts.replicas,
         hop_latency: opts.hop_latency,
         spill_max: opts.spill_max,
+        shards: opts.shards,
         ..RunOptions::default()
     };
 

@@ -195,6 +195,12 @@ pub struct RunOptions {
     /// Cell health (`--probe-backoff SECS`): first re-probe backoff;
     /// `None` = the health-machine default.
     pub probe_backoff: Option<f64>,
+    /// Megafleet core (`--shards T`): run the fleet on the sharded
+    /// epoch-quantized scheduler with T worker shards.  `None` = the
+    /// unsharded event loop (byte-identical to pre-shard output); any
+    /// `Some(T)` takes the epoch-quantized path, whose output is
+    /// identical for every T (see DESIGN.md "Megafleet core").
+    pub shards: Option<usize>,
 }
 
 /// Retry budget the resilience layer defaults to once faults are armed
@@ -234,6 +240,7 @@ impl Default for RunOptions {
             retry_deadline: None,
             degrade: None,
             probe_backoff: None,
+            shards: None,
         }
     }
 }
@@ -272,6 +279,7 @@ impl RunOptions {
             retry_deadline: cfg.retry_deadline,
             degrade: cfg.degrade,
             probe_backoff: cfg.probe_backoff,
+            shards: cfg.shards,
         }
     }
 
@@ -304,6 +312,10 @@ impl RunOptions {
                 .unwrap_or(crate::cloud::DEFAULT_HOP_LATENCY_SECS),
             spill_max: self.spill_max.unwrap_or(1),
             serving: self.serving(),
+            // Chaos arming happens at the mission drivers (they union
+            // scenario + CLI fault specs first); options alone never arm.
+            faults: None,
+            health: crate::cloud::HealthConfig::default(),
         }
     }
 
@@ -680,7 +692,8 @@ mod tests {
              deadline-insight = 2.5\nedf = true\ndeadline-shed = true\n\
              cells = 3\nreplicas = 2\nhop-latency = 0.004\nspill-max = 2\n\
              fault-plan = plans/kill.toml\nretry-budget = 3\nretry-backoff = 0.1\n\
-             retry-deadline = 4\ndegrade = true\nprobe-backoff = 0.25\n",
+             retry-deadline = 4\ndegrade = true\nprobe-backoff = 0.25\n\
+             shards = 4\n",
         )
         .unwrap();
         let cfg = RunConfig::from_kv(&kv).unwrap();
@@ -715,6 +728,7 @@ mod tests {
         assert_eq!(opts.retry_deadline, Some(4.0));
         assert_eq!(opts.degrade, Some(true));
         assert_eq!(opts.probe_backoff, Some(0.25));
+        assert_eq!(opts.shards, Some(4));
         // Explicit knobs win over the chaos-armed fallbacks.
         assert_eq!(opts.resilience(true), (3, 0.1, 4.0, true));
         assert_eq!(opts.health().backoff_base_secs, 0.25);
@@ -742,6 +756,7 @@ mod tests {
         assert_eq!(defaults.matrix_count, None);
         assert_eq!(defaults.uavs, None);
         assert_eq!(defaults.workers, None);
+        assert_eq!(defaults.shards, None);
         assert_eq!(defaults.duration_secs, 1200.0);
         // Serving defaults are the pre-layer behavior (nothing enabled).
         let serving = defaults.serving();

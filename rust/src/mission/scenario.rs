@@ -25,6 +25,7 @@ use crate::report::{Report, ReportTable, Series};
 use crate::scenario::compile::compile_file;
 use crate::scenario::{build, summarize_trace, Scenario};
 use crate::streams::fleet::{run_fleet_mission, FleetConfig, FleetRun};
+use crate::streams::shard::run_fleet_mission_sharded;
 use crate::streams::{MissionConfig, UavRole};
 use crate::telemetry::{f, pct};
 
@@ -91,7 +92,9 @@ pub fn run_compiled_scenario(
 
     let trace = BandwidthTrace::generate(&sc.trace);
     let tsum = summarize_trace(&sc.trace, &trace);
-    let mut link = SharedLink::new(trace, sc.link.clone(), n_uavs);
+    // `--shards` beats the manifest's `[fleet] shards`; both unset keeps
+    // the legacy single-threaded event loop byte for byte.
+    let shards = opts.shards.or(sc.fleet.shards);
 
     // Timing charges the amortized tail per *effective* batch bound —
     // capped by fleet size, since batches can only fill from concurrent
@@ -141,17 +144,41 @@ pub fn run_compiled_scenario(
         schedule: sc.schedule.clone(),
     };
 
-    let cluster =
-        CloudCluster::with_config(vec![env.engine.clone(); workers], cluster_cfg.clone());
-    let run = run_fleet_mission(
-        &env.engine,
-        &env.datasets(),
-        &env.lut,
-        &env.device,
-        &mut link,
-        &fleet_cfg,
-        &cluster,
-    )?;
+    let (run, cluster_stats, chaos_stats, sharded_injected) = match shards {
+        Some(t) => {
+            let sharded = run_fleet_mission_sharded(
+                &env.engine,
+                &env.datasets(),
+                &env.lut,
+                &env.device,
+                &trace,
+                &sc.link,
+                &fleet_cfg,
+                &cluster_cfg,
+                workers,
+                t,
+            )?;
+            (sharded.run, sharded.cluster_stats, None, sharded.injected)
+        }
+        None => {
+            let mut link = SharedLink::new(trace, sc.link.clone(), n_uavs);
+            let cluster = CloudCluster::with_config(
+                vec![env.engine.clone(); workers],
+                cluster_cfg.clone(),
+            );
+            let run = run_fleet_mission(
+                &env.engine,
+                &env.datasets(),
+                &env.lut,
+                &env.device,
+                &mut link,
+                &fleet_cfg,
+                &cluster,
+            )?;
+            let chaos = cluster.chaos_stats();
+            (run, cluster.stats(), chaos, None)
+        }
+    };
 
     let title = format!(
         "Scenario `{}` — {} UAVs, {:.0} min, {:?} | {}",
@@ -312,7 +339,6 @@ pub fn run_compiled_scenario(
     // Serving-layer telemetry, only when a serving feature is enabled —
     // default scenario reports stay byte-identical to the pre-layer ones
     // (pinned by the mission-api golden JSON test).
-    let cluster_stats = cluster.stats();
     if serving.enabled() {
         super::push_serving_telemetry(
             &mut report,
@@ -334,16 +360,21 @@ pub fn run_compiled_scenario(
             &cluster_stats,
         );
     }
-    // Chaos telemetry only exists when a fault schedule was armed.
+    // Chaos telemetry only exists when a fault schedule was armed.  On the
+    // sharded path injector counts come from the per-agent injectors and
+    // there is no cluster-level health machine (`cs` stays None).
     if chaos_armed {
-        let cs = cluster.chaos_stats();
-        let injected = cs.as_ref().map(|s| s.injected).unwrap_or([0; 5]);
+        let injected = chaos_stats
+            .as_ref()
+            .map(|s| s.injected)
+            .or(sharded_injected)
+            .unwrap_or([0; 5]);
         super::push_chaos_telemetry(
             &mut report,
             &format!("{stem}_chaos"),
             &run,
             &injected,
-            cs.as_ref(),
+            chaos_stats.as_ref(),
         );
     }
 

@@ -650,15 +650,28 @@ fn lower(doc: &Doc) -> Result<CompiledScenario, CompileError> {
 
     // ---- [fleet] ---------------------------------------------------------
     let fleet_t = doc.table("fleet").unwrap_or(&empty);
-    audit_keys(fleet_t, "fleet", &["uavs", "context_every", "stagger_secs", "workers"])?;
+    audit_keys(
+        fleet_t,
+        "fleet",
+        &["uavs", "context_every", "stagger_secs", "workers", "shards"],
+    )?;
     let n_uavs = opt_usize(fleet_t, "fleet", "uavs", 1)?;
     let context_every = opt_usize(fleet_t, "fleet", "context_every", 0)?;
     let stagger_secs = opt_num(fleet_t, "fleet", "stagger_secs", 0.0)?;
     let workers = opt_usize(fleet_t, "fleet", "workers", 1)?;
-    if !(1..=1024).contains(&n_uavs) {
+    // Megafleet core: absent = the legacy single-threaded loop; present =
+    // the epoch-quantized sharded scheduler (output identical for every
+    // shard count, so the bound is purely a sanity rail).
+    let shards = match fleet_t.get("shards") {
+        None => None,
+        Some(v) => Some(want_usize(v, "fleet.shards")?),
+    };
+    // Megafleet ceiling: the sharded core sweeps to 16k agents, so the
+    // manifest bound matches the bench envelope.
+    if !(1..=16384).contains(&n_uavs) {
         return Err(CompileError::FleetSpec {
             key: "fleet.uavs".to_string(),
-            msg: format!("fleet size {n_uavs} outside [1, 1024]"),
+            msg: format!("fleet size {n_uavs} outside [1, 16384]"),
         });
     }
     if !(1..=256).contains(&workers) {
@@ -672,6 +685,14 @@ fn lower(doc: &Doc) -> Result<CompiledScenario, CompileError> {
             key: "fleet.stagger_secs".to_string(),
             msg: format!("stagger {stagger_secs} outside [0, 600] s"),
         });
+    }
+    if let Some(t) = shards {
+        if !(1..=256).contains(&t) {
+            return Err(CompileError::FleetSpec {
+                key: "fleet.shards".to_string(),
+                msg: format!("shard count {t} outside [1, 256]"),
+            });
+        }
     }
 
     // ---- [[intent]] schedule --------------------------------------------
@@ -833,7 +854,7 @@ fn lower(doc: &Doc) -> Result<CompiledScenario, CompileError> {
         loss_prob,
         jitter_std,
         extra_latency_s,
-        fleet: FleetSpec { n_uavs, context_every, stagger_secs, workers },
+        fleet: FleetSpec { n_uavs, context_every, stagger_secs, workers, shards },
         schedule,
         faults,
     })
@@ -901,12 +922,30 @@ mod tests {
         assert_eq!((c.loss_prob, c.jitter_std, c.extra_latency_s), (0.0, 0.03, 0.0));
         assert_eq!(c.fleet.n_uavs, 1);
         assert_eq!(c.fleet.workers, 1);
+        assert_eq!(c.fleet.shards, None);
         assert!(c.schedule.is_empty());
         assert!(c.faults.is_empty());
         let sc = c.instantiate(7, 300.0);
         assert_eq!(sc.trace.phases.len(), 1);
         assert!((sc.trace.total_secs() - 300.0).abs() < 1e-9);
         assert_eq!(sc.link.seed, 7);
+    }
+
+    #[test]
+    fn fleet_shards_key_parses_and_rejects() {
+        let c = compile_str(
+            "name = \"x\"\n[fleet]\nuavs = 8\nshards = 4\n[[phase]]\n\
+             kind = \"stable\"\nfrac = 1.0\nlevel_mbps = 16\n",
+        )
+        .unwrap();
+        assert_eq!(c.fleet.shards, Some(4));
+        for bad in ["shards = 0\n", "shards = 300\n", "shards = \"many\"\n"] {
+            let text = format!(
+                "name = \"x\"\n[fleet]\n{bad}[[phase]]\n\
+                 kind = \"stable\"\nfrac = 1.0\nlevel_mbps = 16\n"
+            );
+            assert!(compile_str(&text).is_err(), "{bad:?} should not compile");
+        }
     }
 
     #[test]

@@ -39,6 +39,10 @@ pub struct FleetSpec {
     pub context_every: usize,
     pub stagger_secs: f64,
     pub workers: usize,
+    /// Scheduler shards for the megafleet core (`[fleet] shards` in a
+    /// manifest); `None` = the legacy single-threaded event loop.  A CLI
+    /// `--shards` overrides this.
+    pub shards: Option<usize>,
 }
 
 /// A named disaster/network regime, fully resolved for one (seed, duration).
@@ -125,7 +129,7 @@ pub fn build(name: &str, seed: u64, duration_secs: f64) -> Result<Scenario> {
             summary: summary_of("paper-baseline").to_string(),
             trace: TraceConfig::paper_20min(seed).scaled_to(d),
             link: LinkConfig { seed, ..LinkConfig::default() },
-            fleet: FleetSpec { n_uavs: 1, context_every: 0, stagger_secs: 0.0, workers: 1 },
+            fleet: FleetSpec { n_uavs: 1, context_every: 0, stagger_secs: 0.0, workers: 1, shards: None },
             schedule: Vec::new(),
             goal: MissionGoal::PrioritizeAccuracy,
             hysteresis: 0.0,
@@ -148,7 +152,7 @@ pub fn build(name: &str, seed: u64, duration_secs: f64) -> Result<Scenario> {
                 &[PhaseKind::Stable, PhaseKind::Volatile, PhaseKind::Drop],
             ),
             link: LinkConfig { loss_prob: 0.01, jitter_std: 0.04, seed, ..LinkConfig::default() },
-            fleet: FleetSpec { n_uavs: 4, context_every: 4, stagger_secs: 5.0, workers: 2 },
+            fleet: FleetSpec { n_uavs: 4, context_every: 4, stagger_secs: 5.0, workers: 2, shards: None },
             schedule: vec![
                 IntentSwitch::new(0.55 * d, "give me a quick status of this scene"),
                 IntentSwitch::new(0.75 * d, "mark the submerged vehicles"),
@@ -181,7 +185,7 @@ pub fn build(name: &str, seed: u64, duration_secs: f64) -> Result<Scenario> {
                 seed,
             },
             link: LinkConfig { loss_prob: 0.02, seed, ..LinkConfig::default() },
-            fleet: FleetSpec { n_uavs: 6, context_every: 3, stagger_secs: 8.0, workers: 2 },
+            fleet: FleetSpec { n_uavs: 6, context_every: 3, stagger_secs: 8.0, workers: 2, shards: None },
             schedule: vec![
                 IntentSwitch::new(0.40 * d, "are there any living beings on the rooftops"),
                 IntentSwitch::new(0.60 * d, "highlight the stranded people"),
@@ -213,7 +217,7 @@ pub fn build(name: &str, seed: u64, duration_secs: f64) -> Result<Scenario> {
                 seed,
             },
             link: LinkConfig { loss_prob: 0.03, jitter_std: 0.05, seed, ..LinkConfig::default() },
-            fleet: FleetSpec { n_uavs: 2, context_every: 0, stagger_secs: 10.0, workers: 1 },
+            fleet: FleetSpec { n_uavs: 2, context_every: 0, stagger_secs: 10.0, workers: 1, shards: None },
             schedule: Vec::new(),
             goal: MissionGoal::PrioritizeAccuracy,
             hysteresis: 0.10,
@@ -246,7 +250,7 @@ pub fn build(name: &str, seed: u64, duration_secs: f64) -> Result<Scenario> {
                 seed,
                 ..LinkConfig::default()
             },
-            fleet: FleetSpec { n_uavs: 3, context_every: 3, stagger_secs: 6.0, workers: 2 },
+            fleet: FleetSpec { n_uavs: 3, context_every: 3, stagger_secs: 6.0, workers: 2, shards: None },
             schedule: vec![IntentSwitch::new(0.50 * d, "mark the submerged vehicles")],
             goal: MissionGoal::PrioritizeThroughput,
             hysteresis: 0.10,

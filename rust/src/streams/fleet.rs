@@ -175,8 +175,9 @@ fn uav_seed(cfg: &FleetConfig, i: usize) -> u64 {
     cfg.mission.seed.wrapping_add(i as u64 * 7919)
 }
 
-/// Build the heterogeneous agent fleet.
-fn build_agents<'a>(
+/// Build the heterogeneous agent fleet (shared with the sharded megafleet
+/// core in [`super::shard`], so both paths launch byte-identical fleets).
+pub(crate) fn build_agents<'a>(
     engine: &Engine,
     datasets: &[&'a Dataset],
     lut: &Lut,
@@ -257,11 +258,25 @@ pub fn run_fleet_mission(
         agents[i].step(link, server)?;
     }
 
-    // ---- Fold per-UAV outcomes into the fleet aggregate. ----
+    let lat = server.latency_histograms().unwrap_or_default();
+    Ok(fold_fleet(&agents, duration, cfg.workers, lat))
+}
+
+/// Fold per-UAV outcomes into the fleet aggregate — the single aggregation
+/// path shared by the unsharded loop above and the sharded megafleet core
+/// ([`super::shard`]), so both report identical totals for identical agent
+/// trajectories.  `agents` must be in UAV-id order (the per-UAV series and
+/// epoch telemetry are emitted in iteration order).
+pub(crate) fn fold_fleet(
+    agents: &[UavAgent],
+    duration: f64,
+    workers: usize,
+    (lat_context, lat_insight): (LatencyHistogram, LatencyHistogram),
+) -> FleetRun {
     let mut per_uav = Vec::with_capacity(agents.len());
     let mut epochs = Vec::new();
     let mut server_secs = 0.0f64;
-    for a in &agents {
+    for a in agents {
         epochs.extend(a.epochs.iter().map(|&e| (a.id, e)));
         server_secs += a.server_secs;
         per_uav.push(UavOutcome {
@@ -295,9 +310,7 @@ pub fn run_fleet_mission(
         0.0
     };
 
-    let (lat_context, lat_insight) = server.latency_histograms().unwrap_or_default();
-
-    Ok(FleetRun {
+    FleetRun {
         jain_pps: jain_index(&pps),
         aggregate_pps: delivered_total as f64 / duration.max(1e-9),
         delivered_total,
@@ -313,7 +326,7 @@ pub fn run_fleet_mission(
             .fold(0u64, |m, o| m | o.summary.cells_mask)
             .count_ones(),
         avg_iou,
-        server_utilization: server_secs / (duration.max(1e-9) * cfg.workers.max(1) as f64),
+        server_utilization: server_secs / (duration.max(1e-9) * workers.max(1) as f64),
         total_energy_j: per_uav.iter().map(|o| o.summary.total_energy_j).sum(),
         lat_context,
         lat_insight,
@@ -326,7 +339,7 @@ pub fn run_fleet_mission(
         retry_wait_secs_total: per_uav.iter().map(|o| o.summary.retry_wait_secs).sum(),
         per_uav,
         epochs,
-    })
+    }
 }
 
 #[cfg(test)]

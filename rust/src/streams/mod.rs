@@ -20,6 +20,7 @@
 //! artifacts and scores IoU against the GT mask.
 
 pub mod fleet;
+pub mod shard;
 
 use anyhow::Result;
 

@@ -1,0 +1,763 @@
+//! Megafleet event core: the sharded calendar-queue scheduler that pushes
+//! the fleet loop from tens of agents to 16k+ (DESIGN.md "Megafleet
+//! core").
+//!
+//! The unsharded loop in [`super::fleet`] steps one global min-clock heap
+//! over a mutable [`crate::netsim::SharedLink`]; both are inherently
+//! serial.  This module trades the *continuous* contention model for an
+//! **epoch-quantized** one so the fleet partitions across worker threads:
+//!
+//! * Virtual time is divided into epochs of [`EPOCH_SECS`].  During epoch
+//!   `k` every link query (probe, transfer integration, telemetry
+//!   backfill) sees only occupancy windows **committed in epochs `< k`**
+//!   (the [`FrozenIndex`]).  Windows created during epoch `k` buffer
+//!   shard-locally and merge at the epoch barrier.
+//! * With the link state frozen, agents are mutually independent inside an
+//!   epoch: each shard owns a disjoint agent subset (round-robin by id) in
+//!   dense arrays and steps them wheel-bucket by wheel-bucket with no
+//!   locks, no channels and no per-event allocation.
+//! * Every probabilistic draw — link jitter/loss, probe noise, fault
+//!   injection — comes from a **per-agent** stream keyed on the global
+//!   agent id and consumed in that agent's own request order, so the draw
+//!   sequence is a pure function of the agent's trajectory, never of the
+//!   shard partition.
+//!
+//! Together these make the output a pure function of `(config, seed)`:
+//! `--shards T` is byte-identical to `--shards 1` for every T, which is
+//! the correctness oracle CI's `scale-smoke` job `cmp`-gates.  The
+//! epoch-quantized contention model is *not* byte-identical to the
+//! unsharded path (it sees fleet load one epoch late); the flag-unset
+//! legacy path is untouched and keeps its pinned outputs.
+
+use std::cell::{Cell, RefCell};
+
+use anyhow::{bail, Result};
+
+use crate::cloud::{
+    CloudCluster, ClusterConfig, ClusterStats, Served, ServeError, ServePackets,
+};
+use crate::coordinator::Lut;
+use crate::dataset::Dataset;
+use crate::energy::DeviceModel;
+use crate::faults::{FaultCounts, FaultEvent, FaultInjector, FaultKind, FaultPlan};
+use crate::netsim::{BandwidthTrace, LinkConfig, TxOutcome, Uplink};
+use crate::packet::{Packet, StreamKind};
+use crate::runtime::Engine;
+use crate::telemetry::LatencyHistogram;
+use crate::util::Rng;
+
+use super::fleet::{build_agents, fold_fleet, FleetConfig, FleetRun};
+use super::UavAgent;
+
+/// Epoch length (virtual seconds): the synchronization quantum of the
+/// sharded link exchange.  Small enough that contention feedback lags by
+/// well under one agent cycle; large enough that barrier cost amortizes
+/// over many agent steps.
+pub const EPOCH_SECS: f64 = 0.5;
+
+/// Sorted-bound index over every committed occupancy window `[from,
+/// until)`.  The active count at `t` under the half-open predicate
+/// `from <= t && until > t` (exactly `SharedLink::others_active`'s filter)
+/// is `#(from <= t) - #(until <= t)`, answered with two binary searches —
+/// O(log W) per query instead of the unsharded O(W) scan, which is what
+/// keeps 16k concurrent transfer histories queryable.
+#[derive(Clone, Debug, Default)]
+pub struct FrozenIndex {
+    starts: Vec<f64>,
+    ends: Vec<f64>,
+}
+
+impl FrozenIndex {
+    /// Committed windows covering `t`: `from <= t && until > t`.
+    pub fn active_at(&self, t: f64) -> usize {
+        let begun = self.starts.partition_point(|&s| s <= t);
+        let drained = self.ends.partition_point(|&e| e <= t);
+        begun.saturating_sub(drained)
+    }
+
+    /// Committed windows so far.
+    pub fn len(&self) -> usize {
+        self.starts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.starts.is_empty()
+    }
+
+    /// Commit one epoch's windows: sort the batch bounds and merge into
+    /// the standing sorted arrays (linear in total size — no full resort).
+    pub fn commit(&mut self, batch: &[(f64, f64)]) {
+        if batch.is_empty() {
+            return;
+        }
+        let mut s: Vec<f64> = batch.iter().map(|w| w.0).collect();
+        let mut e: Vec<f64> = batch.iter().map(|w| w.1).collect();
+        s.sort_unstable_by(f64::total_cmp);
+        e.sort_unstable_by(f64::total_cmp);
+        self.starts = merge_sorted(&self.starts, &s);
+        self.ends = merge_sorted(&self.ends, &e);
+    }
+}
+
+fn merge_sorted(a: &[f64], b: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        if a[i] <= b[j] {
+            out.push(a[i]);
+            i += 1;
+        } else {
+            out.push(b[j]);
+            j += 1;
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+    out
+}
+
+/// One agent's own committed windows (small; subtracted from the global
+/// count so an agent never contends with itself, mirroring the unsharded
+/// link's `f.uav != uav` exclusion).
+#[derive(Clone, Debug, Default)]
+struct OwnWindows {
+    starts: Vec<f64>,
+    ends: Vec<f64>,
+}
+
+impl OwnWindows {
+    fn active_at(&self, t: f64) -> usize {
+        let begun = self.starts.partition_point(|&s| s <= t);
+        let drained = self.ends.partition_point(|&e| e <= t);
+        begun.saturating_sub(drained)
+    }
+
+    fn push(&mut self, from: f64, until: f64) {
+        let i = self.starts.partition_point(|&s| s <= from);
+        self.starts.insert(i, from);
+        let j = self.ends.partition_point(|&e| e <= until);
+        self.ends.insert(j, until);
+    }
+}
+
+/// Per-shard mutable link state: the per-agent rng streams (full
+/// fleet-sized so stream identity is a function of the global agent id,
+/// not the shard), per-agent own-window indexes, and the epoch's pending
+/// (uncommitted) windows.
+struct ShardLinkState {
+    cfg: LinkConfig,
+    rngs: Vec<Rng>,
+    own: Vec<OwnWindows>,
+    /// Windows opened this epoch: `(uav, from, until)` — invisible to
+    /// every query until the barrier commits them.
+    pending: Vec<(usize, f64, f64)>,
+}
+
+impl ShardLinkState {
+    fn new(cfg: &LinkConfig, n_uavs: usize) -> Self {
+        // Identical stream derivation to `SharedLink::new`: stream i
+        // belongs to global agent i whichever shard owns it.
+        let rngs = (0..n_uavs)
+            .map(|i| Rng::new(cfg.seed ^ (0xF1EE7 + i as u64).wrapping_mul(0x9E37)))
+            .collect();
+        Self {
+            cfg: cfg.clone(),
+            rngs,
+            own: (0..n_uavs).map(|_| OwnWindows::default()).collect(),
+            pending: Vec::new(),
+        }
+    }
+}
+
+/// The epoch-frozen [`Uplink`] view a shard steps its agents against:
+/// reads come from the shared [`FrozenIndex`], writes buffer into the
+/// shard-local pending list.  The transmit arithmetic mirrors
+/// `SharedLink::transmit` / `transfer_secs` term for term — only the
+/// occupancy-set *snapshot* differs (epoch-frozen instead of live).
+struct ShardLink<'s> {
+    trace: &'s BandwidthTrace,
+    frozen: &'s FrozenIndex,
+    st: &'s mut ShardLinkState,
+}
+
+impl ShardLink<'_> {
+    fn others_active(&self, uav: usize, t: f64) -> usize {
+        self.frozen
+            .active_at(t)
+            .saturating_sub(self.st.own[uav].active_at(t))
+    }
+
+    fn transfer_secs(&mut self, uav: usize, t: f64, wire_bytes: f64) -> f64 {
+        let jitter = 1.0 + self.st.cfg.jitter_std * self.st.rngs[uav].normal();
+        let mut bits = wire_bytes * 8.0 * jitter.max(0.5);
+        let mut now = t;
+        let mut secs = 0.0;
+        for _ in 0..6000 {
+            let n = 1 + self.others_active(uav, now);
+            let bw_bps = self.trace.at(now) * 1e6 / n as f64;
+            let step = self.trace.dt.min(1.0);
+            let can = bw_bps * step;
+            if bits <= can {
+                secs += bits / bw_bps;
+                return secs;
+            }
+            bits -= can;
+            secs += step;
+            now += step;
+        }
+        secs
+    }
+}
+
+impl Uplink for ShardLink<'_> {
+    fn ground_truth(&self, uav: usize, t: f64) -> f64 {
+        let n = 1 + self.others_active(uav, t);
+        self.trace.at(t) / n as f64
+    }
+
+    fn transmit(&mut self, uav: usize, t: f64, wire_bytes: f64) -> TxOutcome {
+        let mut attempts = 1u32;
+        let air_secs = self.transfer_secs(uav, t, wire_bytes);
+        let mut total_secs = air_secs + self.st.cfg.extra_latency_s;
+        let mut delivered = true;
+        let loss = self.st.cfg.loss_prob;
+        self.st.pending.push((uav, t, t + air_secs));
+        if loss > 0.0 && self.st.rngs[uav].f64() < loss {
+            attempts = 2;
+            let retry_from = t + total_secs;
+            let retry = self.transfer_secs(uav, retry_from, wire_bytes);
+            if self.st.rngs[uav].f64() < loss {
+                delivered = false;
+            }
+            self.st.pending.push((uav, retry_from, retry_from + retry));
+            total_secs += retry + self.st.cfg.extra_latency_s;
+        }
+        let goodput = if total_secs > 0.0 {
+            wire_bytes * 8.0 / 1e6 / total_secs
+        } else {
+            f64::INFINITY
+        };
+        TxOutcome { tx_secs: total_secs, goodput_mbps: goodput, delivered, attempts }
+    }
+}
+
+/// Mix for deriving per-agent values from the base fault seed
+/// (splitmix64 finalizer).
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Derive agent `uav`'s fault plan from the mission plan.  Window faults
+/// (crash / stall / exec-error / wire-corrupt) apply to every agent — each
+/// draws against them from its own seeded stream in its own request order.
+/// A one-shot `SessionDrop` keeps the mission-level "one drop per event"
+/// meaning by electing exactly one victim agent per event, chosen by a
+/// seeded hash so the election is a pure function of `(plan seed, event
+/// index, fleet size)` — never of the shard layout.
+fn agent_plan(plan: &FaultPlan, uav: usize, n_uavs: usize) -> FaultPlan {
+    let mut events = Vec::with_capacity(plan.events.len());
+    let mut drop_i = 0u64;
+    for ev in &plan.events {
+        if matches!(ev, FaultEvent::SessionDrop { .. }) {
+            let victim = (mix64(plan.seed ^ (0x5E55_10D0 + drop_i)) % n_uavs.max(1) as u64)
+                as usize;
+            drop_i += 1;
+            if victim != uav {
+                continue;
+            }
+        }
+        events.push(ev.clone());
+    }
+    FaultPlan {
+        events,
+        // Per-agent derived draw stream keyed on the global agent id.
+        seed: plan.seed ^ mix64(uav as u64 ^ 0xA6E1_7),
+    }
+}
+
+/// Per-shard serving front: a shard-local [`CloudCluster`] (consistent-hash
+/// routing and spill are per-request pure, so K cells behave identically
+/// whichever shard's replica of the ring serves the request) plus the
+/// sharded chaos layer — per-agent [`FaultInjector`]s in front of the
+/// static ring.  Virtual latency lands in shard-local histograms and
+/// merges commutatively at the end.
+struct ShardServer {
+    cluster: CloudCluster,
+    /// Per-agent injectors indexed by global id (`Some` only for owned
+    /// agents); `None` entirely when no fault plan is armed.
+    injectors: Option<RefCell<Vec<Option<FaultInjector>>>>,
+    /// Global id of the agent currently stepping — [`Packet`] carries no
+    /// sender identity, so the scheduler pins it before each step.
+    current_uav: Cell<usize>,
+    vlat: [Cell<LatencyHistogram>; 2],
+    /// Chaos-path spill-hop / cluster-shed counters (the wrapper bypasses
+    /// the cluster's own ring walk when injectors are armed).
+    served_at_hop: RefCell<Vec<u64>>,
+    shed: Cell<u64>,
+}
+
+impl ShardServer {
+    fn new(cluster: CloudCluster, injectors: Option<Vec<Option<FaultInjector>>>) -> Self {
+        let cells = cluster.cells();
+        Self {
+            cluster,
+            injectors: injectors.map(RefCell::new),
+            current_uav: Cell::new(0),
+            vlat: [Cell::new(LatencyHistogram::new()), Cell::new(LatencyHistogram::new())],
+            served_at_hop: RefCell::new(vec![0u64; cells]),
+            shed: Cell::new(0),
+        }
+    }
+
+    /// The chaos-armed request path: `CloudCluster::try_process_chaos`'s
+    /// injection ordering (session drop → wire corrupt → per-hop crash /
+    /// exec-error / stall) against the *static* full ring.  The health
+    /// machine (quarantine, re-probe, MTTR/TTD timeline) is a global
+    /// sequential observer and does not shard — a crashed cell here is
+    /// simply skipped while its window is open, so failover behavior is a
+    /// pure function of virtual time and the per-agent draw streams.
+    fn serve_chaos(
+        &self,
+        inj: &mut FaultInjector,
+        pkt: &Packet,
+        prompt_ids: &[i32],
+        set: &str,
+    ) -> Result<Served, ServeError> {
+        let t = pkt.t_capture;
+        if inj.take_session_drop(t) {
+            return Err(ServeError::Fault { kind: FaultKind::SessionDrop });
+        }
+        if inj.draw_wire_corrupt(t) {
+            return Err(ServeError::Fault { kind: FaultKind::WireCorrupt });
+        }
+        let cfg = self.cluster.config();
+        let order = self.cluster.placement(pkt, set);
+        let tries = order.len().min(cfg.spill_max as usize + 1);
+        let mut last_fault: Option<FaultKind> = None;
+        for (hop, &cell) in order.iter().take(tries).enumerate() {
+            if inj.crash_active(cell, t) {
+                inj.record(FaultKind::CellCrash);
+                last_fault = Some(FaultKind::CellCrash);
+                continue;
+            }
+            if inj.draw_exec_error(cell, t) {
+                return Err(ServeError::Fault { kind: FaultKind::ExecError });
+            }
+            match self.cluster.cell(cell).try_process(pkt, prompt_ids, set) {
+                Ok(served) => {
+                    let stall = inj.stall_secs(cell, t);
+                    {
+                        let mut sah = self.served_at_hop.borrow_mut();
+                        let slot = hop.min(sah.len().saturating_sub(1));
+                        sah[slot] += 1;
+                    }
+                    return Ok(Served {
+                        resp: served.resp,
+                        cache_hit: served.cache_hit,
+                        hops: hop as u32,
+                        hop_secs: hop as f64 * cfg.hop_latency_secs + stall,
+                        cell,
+                    });
+                }
+                Err(ServeError::Shed { .. }) => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        if let Some(kind) = last_fault {
+            return Err(ServeError::Fault { kind });
+        }
+        self.shed.set(self.shed.get() + 1);
+        Err(ServeError::Shed { hops: tries.saturating_sub(1) as u32 })
+    }
+}
+
+impl ServePackets for ShardServer {
+    fn serve(&self, pkt: &Packet, prompt_ids: &[i32], set: &str) -> Result<Served> {
+        match &self.injectors {
+            None => self.cluster.process_sync(pkt, prompt_ids, set),
+            Some(all) => {
+                let uav = self.current_uav.get();
+                let mut all = all.borrow_mut();
+                let inj = all[uav]
+                    .as_mut()
+                    .expect("request from an agent this shard does not own");
+                self.serve_chaos(inj, pkt, prompt_ids, set).map_err(anyhow::Error::from)
+            }
+        }
+    }
+
+    fn observe_latency(&self, kind: StreamKind, virtual_secs: f64) {
+        let slot = &self.vlat[kind as usize];
+        let mut h = slot.get();
+        h.record(virtual_secs);
+        slot.set(h);
+    }
+
+    fn latency_histograms(&self) -> Option<(LatencyHistogram, LatencyHistogram)> {
+        Some((self.vlat[0].get(), self.vlat[1].get()))
+    }
+}
+
+/// One scheduler shard: a dense arena of owned agents, the calendar-queue
+/// wheel bucketing them by next-event epoch, the shard-local link state
+/// and the shard-local serving front.
+struct Shard<'a> {
+    agents: Vec<UavAgent<'a>>,
+    link: ShardLinkState,
+    server: ShardServer,
+    /// Wheel: `buckets[k]` holds local indices of agents whose next event
+    /// falls in epoch `k`.  Indices recycle through the Vec storage — no
+    /// per-event allocation once the wheel warms up.
+    buckets: Vec<Vec<u32>>,
+    /// Owned agents that have not yet retired or run out the clock.
+    live: usize,
+}
+
+impl<'a> Shard<'a> {
+    /// Step every agent due in `epoch` until it crosses `epoch_end` (or
+    /// finishes), re-bucketing survivors at their next event epoch.
+    fn run_epoch(
+        &mut self,
+        epoch: usize,
+        epoch_end: f64,
+        duration: f64,
+        trace: &BandwidthTrace,
+        frozen: &FrozenIndex,
+    ) -> Result<()> {
+        let slot = epoch.min(self.buckets.len() - 1);
+        let due = std::mem::take(&mut self.buckets[slot]);
+        let mut link = ShardLink { trace, frozen, st: &mut self.link };
+        for li in due {
+            let (still_active, next_t) = {
+                let a = &mut self.agents[li as usize];
+                self.server.current_uav.set(a.id);
+                while a.active(duration) && a.t < epoch_end {
+                    a.step(&mut link, &self.server)?;
+                }
+                (a.active(duration), a.t)
+            };
+            if still_active {
+                let next = ((next_t / EPOCH_SECS).floor() as usize)
+                    .max(epoch + 1)
+                    .min(self.buckets.len() - 1);
+                self.buckets[next].push(li);
+            } else {
+                self.live -= 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Commit this epoch's pending windows into the per-agent own-window
+    /// indexes and hand them to the coordinator's global batch.
+    fn drain_pending(&mut self, batch: &mut Vec<(f64, f64)>) {
+        for &(uav, from, until) in &self.link.pending {
+            self.link.own[uav].push(from, until);
+            batch.push((from, until));
+        }
+        self.link.pending.clear();
+    }
+}
+
+/// Outcome of a sharded fleet mission: the standard [`FleetRun`] aggregate
+/// plus the cross-shard-merged serving stats and (when a fault plan was
+/// armed) the summed per-agent injection counters.
+pub struct ShardedRun {
+    pub run: FleetRun,
+    pub cluster_stats: ClusterStats,
+    /// Summed per-agent injector counters; `None` when no fault plan was
+    /// armed.  The sharded chaos path has no cluster health machine, so
+    /// there is no [`crate::cloud::ChaosStats`] here.
+    pub injected: Option<FaultCounts>,
+    /// Effective shard count (requested, capped at the fleet size).
+    pub shards: usize,
+}
+
+/// Run a fleet mission on the sharded epoch-quantized core.  Output is a
+/// pure function of `(cfg, cluster_cfg, seed)` — identical for every
+/// `shards` value — which `rust/tests/scale.rs` and CI's `scale-smoke`
+/// job gate.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fleet_mission_sharded(
+    engine: &Engine,
+    datasets: &[&Dataset],
+    lut: &Lut,
+    device: &DeviceModel,
+    trace: &BandwidthTrace,
+    link_cfg: &LinkConfig,
+    cfg: &FleetConfig,
+    cluster_cfg: &ClusterConfig,
+    workers_per_cell: usize,
+    shards: usize,
+) -> Result<ShardedRun> {
+    if shards == 0 {
+        bail!("--shards must be >= 1");
+    }
+    // The response cache (and its replication) couples agents through
+    // shared mutable serving state, which would make outcomes depend on
+    // the shard partition — exactly what the determinism oracle forbids.
+    if cluster_cfg.serving.cache_entries > 0 {
+        bail!(
+            "--shards is incompatible with the response cache (--cache-entries): \
+             cached responses couple agents across shards and break shard-count \
+             determinism"
+        );
+    }
+    if cluster_cfg.replicas > 1 {
+        bail!("--shards is incompatible with cache replication (--replicas > 1)");
+    }
+
+    let duration = cfg.mission.duration_secs;
+    let n = cfg.n_uavs;
+    let shards = shards.min(n.max(1));
+    let n_buckets = (duration / EPOCH_SECS).ceil() as usize + 2;
+
+    let chaos_plan = cluster_cfg.faults.clone();
+    // Shard clusters never arm the cluster-level injector/health machine —
+    // sharded chaos runs through the per-agent injectors instead.
+    let mut shard_cluster_cfg = cluster_cfg.clone();
+    shard_cluster_cfg.faults = None;
+
+    // Round-robin ownership by global id: agent i -> shard i % T.
+    let mut shard_vec: Vec<Shard> = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        let cluster = CloudCluster::with_config(
+            vec![engine.clone(); workers_per_cell.max(1)],
+            shard_cluster_cfg.clone(),
+        );
+        shard_vec.push(Shard {
+            agents: Vec::new(),
+            link: ShardLinkState::new(link_cfg, n),
+            server: ShardServer::new(cluster, None),
+            buckets: vec![Vec::new(); n_buckets],
+            live: 0,
+        });
+    }
+    for (i, agent) in build_agents(engine, datasets, lut, device, cfg)
+        .into_iter()
+        .enumerate()
+    {
+        let sh = &mut shard_vec[i % shards];
+        let bucket = ((agent.start_t / EPOCH_SECS).floor() as usize).min(n_buckets - 1);
+        sh.buckets[bucket].push(sh.agents.len() as u32);
+        sh.agents.push(agent);
+        sh.live += 1;
+    }
+    if let Some(plan) = &chaos_plan {
+        for sh in shard_vec.iter_mut() {
+            let mut injectors: Vec<Option<FaultInjector>> = (0..n).map(|_| None).collect();
+            for a in &sh.agents {
+                injectors[a.id] = Some(FaultInjector::new(agent_plan(plan, a.id, n)));
+            }
+            sh.server.injectors = Some(RefCell::new(injectors));
+        }
+    }
+
+    let mut frozen = FrozenIndex::default();
+
+    // Prime every agent's estimator against the (empty) frozen state —
+    // the same first observation the unsharded path makes against a
+    // fresh link.
+    for sh in shard_vec.iter_mut() {
+        let link = ShardLink { trace, frozen: &frozen, st: &mut sh.link };
+        for a in &mut sh.agents {
+            a.prime(&link);
+        }
+    }
+
+    // ---- Epoch loop: parallel shard advance, then a barrier commit. ----
+    let mut epoch = 0usize;
+    let mut batch: Vec<(f64, f64)> = Vec::new();
+    while shard_vec.iter().any(|sh| sh.live > 0) && epoch < n_buckets {
+        let epoch_end = (epoch + 1) as f64 * EPOCH_SECS;
+        if shard_vec.len() == 1 {
+            shard_vec[0].run_epoch(epoch, epoch_end, duration, trace, &frozen)?;
+        } else {
+            let frozen_ref = &frozen;
+            let results: Vec<Result<()>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = shard_vec
+                    .iter_mut()
+                    .map(|sh| {
+                        scope.spawn(move || {
+                            sh.run_epoch(epoch, epoch_end, duration, trace, frozen_ref)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard thread panicked"))
+                    .collect()
+            });
+            for r in results {
+                r?;
+            }
+        }
+        batch.clear();
+        for sh in shard_vec.iter_mut() {
+            sh.drain_pending(&mut batch);
+        }
+        frozen.commit(&batch);
+        epoch += 1;
+    }
+
+    // ---- Merge: agents back in id order, stats commutatively. ----
+    let mut agents: Vec<UavAgent> = Vec::with_capacity(n);
+    let mut lat = (LatencyHistogram::new(), LatencyHistogram::new());
+    let mut cluster_stats: Option<ClusterStats> = None;
+    let mut injected: Option<FaultCounts> = chaos_plan.as_ref().map(|_| [0u64; 5]);
+    for sh in shard_vec.into_iter() {
+        let (c, i) = sh
+            .server
+            .latency_histograms()
+            .expect("shard server always records latency");
+        lat.0.merge(&c);
+        lat.1.merge(&i);
+        let mut stats = sh.server.cluster.stats();
+        {
+            let sah = sh.server.served_at_hop.borrow();
+            for (acc, &v) in stats.served_at_hop.iter_mut().zip(sah.iter()) {
+                *acc += v;
+            }
+        }
+        stats.shed += sh.server.shed.get();
+        if let (Some(totals), Some(injs)) = (injected.as_mut(), sh.server.injectors.as_ref())
+        {
+            for inj in injs.borrow().iter().flatten() {
+                let c = inj.counts();
+                for (t, v) in totals.iter_mut().zip(c.iter()) {
+                    *t += v;
+                }
+            }
+        }
+        cluster_stats = Some(match cluster_stats.take() {
+            None => stats,
+            Some(mut acc) => {
+                for (a, b) in acc.per_cell.iter_mut().zip(stats.per_cell.iter()) {
+                    a.merge(b);
+                }
+                acc.total.merge(&stats.total);
+                for (a, b) in acc.remote_hits.iter_mut().zip(stats.remote_hits.iter()) {
+                    *a += b;
+                }
+                for (a, b) in acc.served_at_hop.iter_mut().zip(stats.served_at_hop.iter()) {
+                    *a += b;
+                }
+                acc.shed += stats.shed;
+                acc
+            }
+        });
+        agents.extend(sh.agents);
+    }
+    agents.sort_by_key(|a| a.id);
+
+    let mut cluster_stats = cluster_stats.expect("at least one shard");
+    // Virtual latency is agent-facing and recorded at the shard servers;
+    // surface the merged histograms where the unsharded cluster puts its
+    // own (`CloudCluster::stats` fills `total.lat_*` from its vlat).
+    cluster_stats.total.lat_context = lat.0;
+    cluster_stats.total.lat_insight = lat.1;
+
+    let run = fold_fleet(&agents, duration, cfg.workers, lat);
+    Ok(ShardedRun { run, cluster_stats, injected, shards })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Brute-force reference for the frozen-index count: the exact
+    /// half-open predicate `SharedLink::others_active` filters on.
+    fn brute(wins: &[(f64, f64)], t: f64) -> usize {
+        wins.iter().filter(|w| w.0 <= t && w.1 > t).count()
+    }
+
+    #[test]
+    fn frozen_index_matches_brute_force_filter() {
+        let mut rng = Rng::new(0xF00D);
+        let mut idx = FrozenIndex::default();
+        let mut all: Vec<(f64, f64)> = Vec::new();
+        for _ in 0..40 {
+            let batch: Vec<(f64, f64)> = (0..25)
+                .map(|_| {
+                    let from = rng.f64() * 100.0;
+                    (from, from + rng.f64() * 8.0)
+                })
+                .collect();
+            idx.commit(&batch);
+            all.extend_from_slice(&batch);
+            for _ in 0..50 {
+                let t = rng.f64() * 110.0;
+                assert_eq!(idx.active_at(t), brute(&all, t), "t={t}");
+            }
+        }
+        // Boundary semantics: from inclusive, until exclusive.
+        let mut idx = FrozenIndex::default();
+        idx.commit(&[(1.0, 2.0)]);
+        assert_eq!(idx.active_at(1.0), 1);
+        assert_eq!(idx.active_at(2.0), 0);
+        assert_eq!(idx.active_at(2.0 - 1e-9), 1);
+        assert_eq!(idx.active_at(0.5), 0);
+    }
+
+    #[test]
+    fn own_windows_subtract_exactly() {
+        let mut own = OwnWindows::default();
+        own.push(1.0, 3.0);
+        own.push(2.0, 5.0);
+        assert_eq!(own.active_at(2.5), 2);
+        assert_eq!(own.active_at(4.0), 1);
+        assert_eq!(own.active_at(5.0), 0);
+    }
+
+    #[test]
+    fn merge_sorted_preserves_order() {
+        let a = vec![1.0, 3.0, 5.0];
+        let b = vec![0.5, 3.0, 9.0];
+        let m = merge_sorted(&a, &b);
+        assert_eq!(m, vec![0.5, 1.0, 3.0, 3.0, 5.0, 9.0]);
+        assert_eq!(merge_sorted(&[], &b), b);
+    }
+
+    #[test]
+    fn session_drop_elects_exactly_one_victim() {
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent::SessionDrop { at: 10.0 },
+                FaultEvent::CellCrash { cell: 0, at: 20.0, recover_after: 5.0 },
+            ],
+            seed: 42,
+        };
+        let n = 16;
+        let with_drop: Vec<usize> = (0..n)
+            .filter(|&u| {
+                agent_plan(&plan, u, n)
+                    .events
+                    .iter()
+                    .any(|e| matches!(e, FaultEvent::SessionDrop { .. }))
+            })
+            .collect();
+        assert_eq!(with_drop.len(), 1, "exactly one victim: {with_drop:?}");
+        // Window faults reach every agent.
+        for u in 0..n {
+            assert!(agent_plan(&plan, u, n)
+                .events
+                .iter()
+                .any(|e| matches!(e, FaultEvent::CellCrash { .. })));
+        }
+        // Per-agent seeds differ (independent draw streams).
+        assert_ne!(agent_plan(&plan, 0, n).seed, agent_plan(&plan, 1, n).seed);
+        // Victim election is stable across calls.
+        assert_eq!(
+            with_drop,
+            (0..n)
+                .filter(|&u| agent_plan(&plan, u, n)
+                    .events
+                    .iter()
+                    .any(|e| matches!(e, FaultEvent::SessionDrop { .. })))
+                .collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,225 @@
+//! Megafleet sharded-core integration tests (DESIGN.md "Megafleet core")
+//! — no artifacts required, never skipped.
+//!
+//! Determinism is the sharded scheduler's correctness oracle:
+//!
+//! * **Shard-count invariance** — `--shards T` must reproduce `--shards 1`
+//!   byte for byte (JSON report and every derived quantity) for any T,
+//!   plain and with a fault plan armed.
+//! * **Fair-share conservation** — the epoch-frozen window index must
+//!   count exactly the windows the unsharded `SharedLink` would, no
+//!   matter how the commit batches are partitioned across shards.
+//! * **Jain parity** — epoch quantization may move individual transfers,
+//!   but fleet-level fairness must stay in family with the legacy path.
+
+mod common;
+
+use avery::faults::{FaultKind, FaultSpec};
+use avery::mission::{run_fleet, RunOptions};
+use avery::report::to_json;
+use avery::streams::fleet::FleetRun;
+use avery::streams::shard::FrozenIndex;
+
+use common::parse_json;
+
+fn fleet_json(tag: &str, opts: &RunOptions) -> (FleetRun, String) {
+    let env = common::sim_env("scale", tag);
+    let (run, report) = run_fleet(&env, opts).unwrap();
+    let json = to_json(&report);
+    parse_json(&json).unwrap_or_else(|e| panic!("fleet report JSON does not parse: {e}"));
+    (run, json)
+}
+
+fn base_opts() -> RunOptions {
+    RunOptions {
+        duration_secs: 90.0,
+        uavs: Some(12),
+        workers: Some(2),
+        exec_every: 5,
+        seed: 7,
+        ..RunOptions::default()
+    }
+}
+
+/// Seeded xorshift64* for the property tests (reimplemented locally so the
+/// suite does not depend on crate internals).
+fn keys(n: usize, seed: u64) -> Vec<u64> {
+    let mut s = seed | 1;
+    (0..n)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            s.wrapping_mul(0x2545_F491_4F6C_DD1D)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Shard-count determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shard_count_is_invisible_in_the_output() {
+    let sharded = |t: usize| RunOptions { shards: Some(t), ..base_opts() };
+    let (run1, json1) = fleet_json("s1", &sharded(1));
+    let (_, json2) = fleet_json("s2", &sharded(2));
+    let (_, json3) = fleet_json("s3", &sharded(3));
+    let (_, json5) = fleet_json("s5", &sharded(5));
+    assert!(run1.delivered_total > 0, "sharded run delivered nothing");
+    assert_eq!(json1, json2, "--shards 2 diverged from --shards 1");
+    assert_eq!(json1, json3, "--shards 3 diverged from --shards 1");
+    assert_eq!(json1, json5, "--shards 5 diverged from --shards 1");
+    // More shards than agents must degrade gracefully, not panic or drift.
+    let (_, json64) = fleet_json("s64", &sharded(64));
+    assert_eq!(json1, json64, "--shards 64 (> N) diverged from --shards 1");
+}
+
+#[test]
+fn sharded_replay_is_deterministic() {
+    let opts = RunOptions { shards: Some(3), ..base_opts() };
+    let (_, a) = fleet_json("replay-a", &opts);
+    let (_, b) = fleet_json("replay-b", &opts);
+    assert_eq!(a, b, "same-seed sharded replay drifted");
+}
+
+#[test]
+fn fault_armed_runs_are_shard_invariant_and_conserved() {
+    let spec = |kind, cell, at, duration, rate| FaultSpec {
+        kind,
+        cell,
+        at,
+        duration,
+        rate,
+        stall_secs: 0.0,
+    };
+    let armed = |t: usize| RunOptions {
+        shards: Some(t),
+        cells: Some(2),
+        fault_specs: vec![
+            spec(FaultKind::SessionDrop, 0, 0.3, 0.0, 0.0),
+            spec(FaultKind::ExecError, 0, 0.5, 0.3, 0.5),
+            spec(FaultKind::WireCorrupt, 0, 0.2, 0.4, 0.3),
+        ],
+        ..base_opts()
+    };
+    let (run1, json1) = fleet_json("fault-s1", &armed(1));
+    let (run4, json4) = fleet_json("fault-s4", &armed(4));
+    assert_eq!(json1, json4, "fault-armed --shards 4 diverged from --shards 1");
+    // Conservation holds under shards: every capture is accounted for.
+    assert_eq!(
+        run4.executed_total + run4.shed_lost_total + run4.degraded_total
+            + run4.abandoned_total,
+        run4.captures_total,
+        "sharded chaos run lost requests"
+    );
+    // The plan actually bit: the armed run differs from the unarmed one.
+    let (_, plain) = fleet_json("fault-off", &RunOptions {
+        shards: Some(4),
+        cells: Some(2),
+        ..base_opts()
+    });
+    assert_ne!(json4, plain, "fault plan was a no-op");
+    assert_eq!(run1.captures_total, run4.captures_total);
+}
+
+// ---------------------------------------------------------------------------
+// Fair-share conservation: the epoch-frozen window index
+// ---------------------------------------------------------------------------
+
+#[test]
+fn frozen_index_counts_exactly_like_the_shared_link_filter() {
+    // Random air-time windows; the index must reproduce the unsharded
+    // predicate `from <= t && until > t` exactly at every probe.
+    let ks = keys(4096, 0xFA1E);
+    let windows: Vec<(f64, f64)> = ks
+        .chunks(2)
+        .map(|c| {
+            let from = (c[0] % 100_000) as f64 / 100.0;
+            let dur = 0.01 + (c[1] % 2_000) as f64 / 100.0;
+            (from, from + dur)
+        })
+        .collect();
+    let mut idx = FrozenIndex::default();
+    idx.commit(&windows);
+    assert_eq!(idx.len(), windows.len());
+    for &probe in &[0.0, 1.0, 499.5, 500.0, 999.9, 1234.5678] {
+        let brute = windows.iter().filter(|(f, u)| *f <= probe && *u > probe).count();
+        assert_eq!(idx.active_at(probe), brute, "mismatch at t={probe}");
+    }
+    // Boundary semantics: a window is active at its start, gone at its end.
+    let mut b = FrozenIndex::default();
+    b.commit(&[(10.0, 20.0)]);
+    assert_eq!(b.active_at(10.0), 1);
+    assert_eq!(b.active_at(20.0), 0);
+}
+
+#[test]
+fn partitioned_commits_conserve_the_global_allocation() {
+    // Partition one window set across "shards" in several different ways;
+    // every partition must produce the same index as the single-shard
+    // commit — the conservation property behind shard-count invariance.
+    let ks = keys(2048, 0x5EED);
+    let windows: Vec<(f64, f64)> = ks
+        .chunks(2)
+        .map(|c| {
+            let from = (c[0] % 60_000) as f64 / 100.0;
+            (from, from + 0.05 + (c[1] % 500) as f64 / 100.0)
+        })
+        .collect();
+    let mut single = FrozenIndex::default();
+    single.commit(&windows);
+    for shards in [2usize, 3, 7] {
+        let mut parts: Vec<Vec<(f64, f64)>> = vec![Vec::new(); shards];
+        for (i, w) in windows.iter().enumerate() {
+            parts[i % shards].push(*w);
+        }
+        let mut merged = FrozenIndex::default();
+        // One commit per shard per epoch barrier, in shard order.
+        for p in &parts {
+            merged.commit(p);
+        }
+        assert_eq!(merged.len(), single.len());
+        for &probe in &[0.0, 25.0, 100.0, 300.125, 599.99] {
+            assert_eq!(
+                merged.active_at(probe),
+                single.active_at(probe),
+                "{shards}-way partition diverged at t={probe}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Jain parity vs the legacy path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sharded_fairness_stays_in_family_with_the_legacy_path() {
+    // Epoch quantization may move individual transfers, so this is a
+    // tolerance gate, not a byte gate: fleet-level fairness and delivery
+    // must stay in the same family as the unsharded event loop.
+    let (legacy, _) = fleet_json("jain-legacy", &base_opts());
+    let (sharded, _) =
+        fleet_json("jain-sharded", &RunOptions { shards: Some(4), ..base_opts() });
+    assert!(legacy.jain_pps > 0.5 && legacy.jain_pps <= 1.0 + 1e-12, "{}", legacy.jain_pps);
+    assert!(
+        sharded.jain_pps > 0.5 && sharded.jain_pps <= 1.0 + 1e-12,
+        "{}",
+        sharded.jain_pps
+    );
+    assert!(
+        (legacy.jain_pps - sharded.jain_pps).abs() < 0.2,
+        "fairness diverged: legacy {} vs sharded {}",
+        legacy.jain_pps,
+        sharded.jain_pps
+    );
+    assert!(sharded.delivered_total > 0);
+    let ratio = sharded.delivered_total as f64 / legacy.delivered_total.max(1) as f64;
+    assert!(
+        (0.5..=2.0).contains(&ratio),
+        "delivery moved out of family: legacy {} vs sharded {}",
+        legacy.delivered_total,
+        sharded.delivered_total
+    );
+}
